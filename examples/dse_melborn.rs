@@ -1,0 +1,48 @@
+//! Headline-result reproduction: the paper's abstract claims that for
+//! MELBORN, a 4-bit accelerator at 15% sensitivity-guided pruning cuts PDP
+//! by ~50.8% and resources by ~1.2% vs the unpruned 4-bit baseline, with no
+//! noticeable accuracy loss. This example runs that exact configuration
+//! through the full pipeline and prints ours vs paper.
+//!
+//! Run: `cargo run --release --example dse_melborn` (RCX_FULL=1 for
+//! paper-sized splits)
+
+use rcx::config::BenchmarkConfig;
+use rcx::data::Benchmark;
+use rcx::dse::{explore, realize_hw, DseRequest};
+use rcx::pruning::Method;
+use rcx::report::tables::build_hw_rows;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("RCX_FULL").as_deref() == Ok("1");
+    let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
+    let (model, data) = cfg.train(1, !full);
+    println!("float baseline: {}", model.evaluate(&data));
+
+    let req = DseRequest {
+        q_levels: vec![4],
+        pruning_rates: vec![15.0],
+        method: Method::Sensitivity,
+        max_calib: if full { 512 } else { 128 },
+        seed: 7,
+    };
+    let r = explore(&model, &data, &req);
+    let hw = realize_hw(&r, &data);
+    let rows = build_hw_rows(&hw);
+
+    let base = &rows[0];
+    let pruned = &rows[1];
+    println!("\n                     unpruned q4        pruned q4/15%");
+    println!("accuracy             {:<18.4} {:.4}", base.perf.value(), pruned.perf.value());
+    println!("LUTs                 {:<18} {}", base.hw.luts, pruned.hw.luts);
+    println!("FFs                  {:<18} {}", base.hw.ffs, pruned.hw.ffs);
+    println!("latency (ns)         {:<18.3} {:.3}", base.hw.latency_ns, pruned.hw.latency_ns);
+    println!("PDP (nWs)            {:<18.3} {:.3}", base.hw.pdp_nws, pruned.hw.pdp_nws);
+    println!(
+        "\nours : resource saving {:.2}%, PDP saving {:.2}%",
+        pruned.resource_saving_pct.unwrap(),
+        pruned.pdp_saving_pct.unwrap()
+    );
+    println!("paper: resource saving 1.26%, PDP saving 50.88%");
+    Ok(())
+}

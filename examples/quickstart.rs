@@ -1,0 +1,43 @@
+//! Quickstart: the paper's flow end to end on one benchmark, minutes-scale.
+//!
+//! 1. generate HENON (exact Hénon map), train a 50-neuron ESN (stage 1)
+//! 2. quantize to 6 bits with streamlined thresholds (stage 2)
+//! 3. sensitivity-guided pruning at 45% (stage 3, Eq. 4)
+//! 4. hardware-realize and print the Table III-style row (stage 4)
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rcx::config::BenchmarkConfig;
+use rcx::data::Benchmark;
+use rcx::hw::synthesize;
+use rcx::pruning::{prune_with_compensation, Method, Pruner};
+use rcx::quant::{QuantEsn, QuantSpec};
+
+fn main() -> anyhow::Result<()> {
+    // Stage 1: model creation (Table I geometry: N=50, ncrl=250).
+    let cfg = BenchmarkConfig::paper(Benchmark::Henon, 0);
+    let (model, data) = cfg.train(1, true);
+    let float_perf = model.evaluate(&data);
+    println!("float ESN         : {float_perf}");
+
+    // Stage 2: linear quantization + streamline (Eq. 3, multi-threshold).
+    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(6));
+    let q_perf = qm.evaluate(&data);
+    println!("quantized (6-bit) : {q_perf}  [{} reservoir weights]", qm.n_weights());
+
+    // Stage 3: sensitivity-guided pruning (Eq. 4 bit-flip scores).
+    let pruner = Method::Sensitivity.pruner(7);
+    let calib = rcx::dse::calibration_split(&data, 64);
+    let scores = pruner.scores(&qm, calib);
+    let pruned = prune_with_compensation(&qm, &scores, 45.0, calib);
+    let p_perf = pruned.evaluate(&data);
+    println!("pruned 45%        : {p_perf}  [{} live weights]", pruned.live_weights());
+
+    // Stage 4: hardware realization (direct logic, xcvu19p model).
+    let rep = synthesize(&pruned, cfg.topology(&data), &data.test, None)?;
+    println!(
+        "hardware          : {} LUTs, {} FFs, {:.3} ns, {:.1} Msps, {:.3} nWs PDP",
+        rep.hw.luts, rep.hw.ffs, rep.hw.latency_ns, rep.hw.throughput_msps, rep.hw.pdp_nws
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end driver (the proof that all three layers compose):
+//!
+//!   python/jax/Pallas  — AOT-compiled `melborn_pooled.hlo.txt` rollout
+//!   rust runtime       — PJRT CPU client executing the artifact
+//!   rust coordinator   — router + dynamic batcher serving live requests
+//!
+//! Loads the real compiled artifact, deploys TWO DSE variants (4-bit/15%
+//! sensitivity-pruned and 8-bit unpruned) side by side, fires the full test
+//! set as concurrent requests, and reports accuracy, latency percentiles and
+//! throughput. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example serve_accelerator`
+
+use std::time::{Duration, Instant};
+
+use rcx::config::BenchmarkConfig;
+use rcx::coordinator::{BatcherConfig, Prediction, ServeConfig, Server, VariantSpec};
+use rcx::data::Benchmark;
+use rcx::pruning::{prune_with_compensation, Method, Pruner};
+use rcx::quant::{QuantEsn, QuantSpec};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("RCX_FULL").as_deref() == Ok("1");
+    let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
+    println!("training stage-1 model ({})...", if full { "paper-sized" } else { "reduced" });
+    let (model, data) = cfg.train(1, !full);
+
+    // Two deployable variants out of the DSE space.
+    let q8 = QuantEsn::from_model(&model, &data, QuantSpec::bits(8));
+    let q4 = QuantEsn::from_model(&model, &data, QuantSpec::bits(4));
+    println!("scoring weights for the pruned variant (Eq. 4)...");
+    let calib = rcx::dse::calibration_split(&data, 96);
+    let scores = Method::Sensitivity.pruner(7).scores(&q4, calib);
+    let q4p15 = prune_with_compensation(&q4, &scores, 15.0, calib);
+
+    println!("starting coordinator on artifact `{}`...", cfg.artifact);
+    let server = Server::start(
+        ServeConfig {
+            artifact_dir: "artifacts".into(),
+            artifact: cfg.artifact.to_string(),
+            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+        },
+        vec![
+            VariantSpec { key: "q4_p15".into(), model: q4p15 },
+            VariantSpec { key: "q8_unpruned".into(), model: q8 },
+        ],
+    )?;
+    let client = server.client();
+
+    for key in ["q4_p15", "q8_unpruned"] {
+        let v = server.variant_index(key).unwrap();
+        let t0 = Instant::now();
+        let pending: Vec<_> = data
+            .test
+            .iter()
+            .map(|s| client.submit(v, s.clone()).unwrap())
+            .collect();
+        let mut correct = 0usize;
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv()?;
+            let Prediction::Class(c) = resp.prediction;
+            if Some(c) == data.test[i].label {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "[{key}] {} requests in {:.3}s -> {:.0} req/s, accuracy {:.4}",
+            data.test.len(),
+            wall,
+            data.test.len() as f64 / wall,
+            correct as f64 / data.test.len() as f64,
+        );
+    }
+    let m = server.metrics();
+    println!(
+        "coordinator: {} requests over {} batches (mean {:.1}/batch), latency p50 {} us / p95 {} us / p99 {} us",
+        m.requests, m.batches, m.mean_batch, m.p50_us, m.p95_us, m.p99_us
+    );
+    server.shutdown()
+}

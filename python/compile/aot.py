@@ -1,0 +1,97 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+`xla` 0.1.6 crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE here (`make artifacts`); the rust binary is self-contained
+afterwards. Each artifact takes the weights as runtime arguments so one
+artifact per benchmark geometry serves every (q, p, bit-flip) variant.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import (  # noqa: E402
+    THR_PAD,
+    float_rollout,
+    quant_rollout_pooled,
+    quant_rollout_states,
+)
+
+N = 50  # reservoir neurons (Table I)
+
+# (name, builder, B, T, In, integer)
+SPECS = [
+    ("melborn_pooled", quant_rollout_pooled, 32, 24, 1, True),
+    ("pen_pooled", quant_rollout_pooled, 32, 8, 2, True),
+    ("henon_states", quant_rollout_states, 1, 256, 1, True),
+    ("melborn_float", float_rollout, 32, 24, 1, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(name, fn, b, t, in_dim, integer):
+    if integer:
+        i64 = jnp.int64
+        args = (
+            jax.ShapeDtypeStruct((b, t, in_dim), i64),  # u_seq
+            jax.ShapeDtypeStruct((b, N), i64),          # s0
+            jax.ShapeDtypeStruct((N, in_dim), i64),     # w_in
+            jax.ShapeDtypeStruct((N, N), i64),          # w_r
+            jax.ShapeDtypeStruct((1,), i64),            # m_in
+            jax.ShapeDtypeStruct((THR_PAD,), i64),      # thresholds (padded)
+            jax.ShapeDtypeStruct((1,), i64),            # qmax
+        )
+    else:
+        f32 = jnp.float32
+        args = (
+            jax.ShapeDtypeStruct((b, t, in_dim), f32),
+            jax.ShapeDtypeStruct((b, N), f32),
+            jax.ShapeDtypeStruct((N, in_dim), f32),
+            jax.ShapeDtypeStruct((N, N), f32),
+        )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="emit HLO text artifacts")
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, b, t, in_dim, integer in SPECS:
+        if args.only and name != args.only:
+            continue
+        text = lower_spec(name, fn, b, t, in_dim, integer)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} b={b} t={t} in={in_dim} n={N} int={int(integer)} thr_pad={THR_PAD}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

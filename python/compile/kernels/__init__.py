@@ -1,0 +1,13 @@
+"""L1 Pallas kernels + pure-jnp oracles."""
+
+from .ref import F_BITS, float_step_ref, quant_rollout_ref, quant_step_ref
+from .reservoir_step import float_step, quant_step
+
+__all__ = [
+    "F_BITS",
+    "float_step",
+    "float_step_ref",
+    "quant_step",
+    "quant_step_ref",
+    "quant_rollout_ref",
+]

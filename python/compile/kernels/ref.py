@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package is
+checked against the matching function here by pytest + hypothesis. They also
+define the semantics the rust golden model (`rcx::quant::QuantEsn`) mirrors
+bit-exactly.
+"""
+
+import jax.numpy as jnp
+
+F_BITS = 12  # fixed-point fraction bits of the scale-alignment multiplier
+
+
+def float_step_ref(u, s, w_in, w_r):
+    """Float reservoir update (Eq. 1 with lr=1, HardTanh).
+
+    u: (B, In), s: (B, N), w_in: (N, In), w_r: (N, N) -> (B, N)
+    """
+    pre = u @ w_in.T + s @ w_r.T
+    return jnp.clip(pre, -1.0, 1.0)
+
+
+def quant_step_ref(u_int, s_int, w_in_int, w_r_int, m_in, thresholds, qmax):
+    """Streamlined integer reservoir update (the accelerator step).
+
+    acc = m_in * (u @ W_in^T) + ((s @ W_r^T) << F_BITS)
+    lvl = #{thresholds <= acc} - qmax          (multi-threshold HardTanh)
+
+    All integer (i64). `thresholds` is padded to a fixed length with i64::MAX
+    so one artifact serves every bit-width q.
+    """
+    acc_in = u_int @ w_in_int.T
+    acc_r = s_int @ w_r_int.T
+    acc = m_in * acc_in + (acc_r << F_BITS)
+    lvl = jnp.sum(acc[..., None] >= thresholds[None, None, :], axis=-1)
+    return lvl.astype(acc.dtype) - qmax
+
+
+def quant_rollout_ref(u_seq, s0, w_in_int, w_r_int, m_in, thresholds, qmax):
+    """Reference rollout: scan the quant step over time.
+
+    u_seq: (B, T, In) -> (states (B, T, N), pooled sum (B, N), s_final (B, N))
+    """
+    b, t, _ = u_seq.shape
+    n = w_r_int.shape[0]
+    states = jnp.zeros((b, t, n), dtype=u_seq.dtype)
+    s = s0
+    for step in range(t):
+        s = quant_step_ref(u_seq[:, step, :], s, w_in_int, w_r_int, m_in, thresholds, qmax)
+        states = states.at[:, step, :].set(s)
+    pooled = states.sum(axis=1)
+    return states, pooled, s

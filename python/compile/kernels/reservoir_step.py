@@ -1,0 +1,79 @@
+"""L1 Pallas kernels: the reservoir-update hot-spot.
+
+Hardware adaptation (DESIGN.md §4): the FPGA paper hardwires weights into
+LUTs; on TPU the analogue is pinning the whole (tiny: N=50, <=8-bit) weight
+set in VMEM for the entire sequence scan. Both kernels use single-block
+BlockSpecs — model and state fit comfortably in one VMEM tile — and a
+branch-free threshold-ladder activation (vectorized compare+sum, the VPU
+analogue of the comparator ladder).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs on
+the rust PJRT CPU client (and numerics are checked there bit-exactly).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import F_BITS
+
+
+def _float_step_kernel(u_ref, s_ref, w_in_ref, w_r_ref, o_ref):
+    """Fused float reservoir update: matvecs + leaky HardTanh (lr=1)."""
+    u = u_ref[...]
+    s = s_ref[...]
+    # Two MXU-shaped matmuls; weights stay VMEM-resident across the scan.
+    pre = jnp.dot(u, w_in_ref[...].T) + jnp.dot(s, w_r_ref[...].T)
+    o_ref[...] = jnp.clip(pre, -1.0, 1.0)
+
+
+def float_step(u, s, w_in, w_r):
+    """Pallas float reservoir step. u: (B, In), s: (B, N) -> (B, N)."""
+    b, n = s.shape
+    return pl.pallas_call(
+        _float_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), s.dtype),
+        interpret=True,
+    )(u, s, w_in, w_r)
+
+
+def _quant_step_kernel(u_ref, s_ref, w_in_ref, w_r_ref, m_in_ref, thr_ref, qmax_ref, o_ref):
+    """Streamlined integer step: aligned accumulate + threshold ladder.
+
+    The ladder is a vectorized `sum(acc >= T_k)` over the padded threshold
+    vector — branch-free, exactly the comparator semantics of the RTL.
+    """
+    u = u_ref[...]
+    s = s_ref[...]
+    acc_in = jnp.dot(u, w_in_ref[...].T)
+    acc_r = jnp.dot(s, w_r_ref[...].T)
+    acc = m_in_ref[0] * acc_in + (acc_r << F_BITS)
+    thr = thr_ref[...]
+    lvl = jnp.sum(
+        (acc[..., None] >= thr[None, None, :]).astype(acc.dtype), axis=-1
+    )
+    o_ref[...] = lvl - qmax_ref[0]
+
+
+def quant_step(u_int, s_int, w_in_int, w_r_int, m_in, thresholds, qmax):
+    """Pallas streamlined integer reservoir step (i64 end-to-end).
+
+    m_in / qmax are shape-(1,) i64 arrays; thresholds is a fixed-length
+    i64 vector padded with i64::MAX (pad entries never fire).
+    """
+    b, n = s_int.shape
+    return pl.pallas_call(
+        _quant_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), s_int.dtype),
+        interpret=True,
+    )(u_int, s_int, w_in_int, w_r_int, m_in, thresholds, qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("pool",))
+def jit_quant_step(u_int, s_int, w_in_int, w_r_int, m_in, thresholds, qmax, pool=False):
+    """Jitted convenience wrapper used by tests."""
+    out = quant_step(u_int, s_int, w_in_int, w_r_int, m_in, thresholds, qmax)
+    return out.sum(axis=1) if pool else out

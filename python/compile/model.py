@@ -1,0 +1,68 @@
+"""L2: the JAX compute graph — reservoir rollouts built on the L1 kernels.
+
+Weights are *runtime arguments* (not baked constants) so the rust coordinator
+can evaluate any quantized / pruned / bit-flipped weight set against a single
+AOT artifact. The sequence dimension is scanned with `lax.scan`; the state
+carry is donated, weights stay resident across steps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import float_step, quant_step
+
+# Fixed padded threshold-ladder length: 2*qmax(8) = 254 entries covers q <= 8.
+THR_PAD = 254
+
+
+def float_rollout(u_seq, s0, w_in, w_r):
+    """Float rollout. u_seq: (B, T, In) -> (pooled mean (B,N), s_final)."""
+
+    def step(s, u_t):
+        s_next = float_step(u_t, s, w_in, w_r)
+        return s_next, s_next
+
+    u_tbi = jnp.swapaxes(u_seq, 0, 1)  # (T, B, In) for scan
+    s_final, states = jax.lax.scan(step, s0, u_tbi)
+    pooled = states.mean(axis=0)  # (B, N)
+    return pooled, s_final
+
+
+def quant_rollout_pooled(u_seq, s0, w_in, w_r, m_in, thresholds, qmax):
+    """Integer rollout for classification: returns (pooled sum, s_final).
+
+    u_seq: (B, T, In) i64; weights i64; thresholds padded to THR_PAD.
+    """
+
+    def step(carry, u_t):
+        s, acc = carry
+        s_next = quant_step(u_t, s, w_in, w_r, m_in, thresholds, qmax)
+        return (s_next, acc + s_next), None
+
+    u_tbi = jnp.swapaxes(u_seq, 0, 1)
+    (s_final, pooled), _ = jax.lax.scan(step, (s0, jnp.zeros_like(s0)), u_tbi)
+    return pooled, s_final
+
+
+def quant_rollout_states(u_seq, s0, w_in, w_r, m_in, thresholds, qmax):
+    """Integer rollout for regression: returns (states (B,T,N), s_final).
+
+    Chainable: pass the previous chunk's s_final as s0 to stream a long
+    trajectory through a fixed-T artifact.
+    """
+
+    def step(s, u_t):
+        s_next = quant_step(u_t, s, w_in, w_r, m_in, thresholds, qmax)
+        return s_next, s_next
+
+    u_tbi = jnp.swapaxes(u_seq, 0, 1)
+    s_final, states_tbn = jax.lax.scan(step, s0, u_tbi)
+    return jnp.swapaxes(states_tbn, 0, 1), s_final
+
+
+def pad_thresholds(thresholds):
+    """Pad a ladder to THR_PAD entries with i64::MAX (pads never fire)."""
+    t = jnp.asarray(thresholds, dtype=jnp.int64)
+    pad = THR_PAD - t.shape[0]
+    assert pad >= 0, f"ladder longer than THR_PAD: {t.shape[0]}"
+    return jnp.concatenate([t, jnp.full((pad,), jnp.iinfo(jnp.int64).max, dtype=jnp.int64)])

@@ -1,0 +1,38 @@
+"""AOT lowering: artifacts are valid HLO text with the expected interfaces."""
+
+import os
+import subprocess
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_aot_lowers_all_artifacts(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    names = ["melborn_pooled", "pen_pooled", "henon_states", "melborn_float"]
+    for n in names:
+        p = tmp_path / f"{n}.hlo.txt"
+        assert p.exists(), f"missing {n}"
+        text = p.read_text()
+        assert text.startswith("HloModule"), f"{n} is not HLO text"
+        assert "ENTRY" in text
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert all(n in manifest for n in names)
+
+
+def test_integer_artifact_is_s64():
+    """The quant artifacts must be integer end-to-end (bit-exact path)."""
+    p = os.path.join(ART, "melborn_pooled.hlo.txt")
+    if not os.path.exists(p):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    text = open(p).read()
+    assert "s64" in text

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    float_step,
+    float_step_ref,
+    quant_step,
+    quant_step_ref,
+)
+from compile.model import pad_thresholds
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def qmax_of(q: int) -> int:
+    return (1 << (q - 1)) - 1
+
+
+def make_ladder(c: float, q: int):
+    m = qmax_of(q)
+    return np.array([int(np.ceil(c * (l - 0.5))) for l in range(-m + 1, m + 1)], dtype=np.int64)
+
+
+def rand_quant_inputs(rng, b, t_in, n, q):
+    m = qmax_of(q)
+    u = rng.integers(-m, m + 1, size=(b, t_in)).astype(np.int64)
+    s = rng.integers(-m, m + 1, size=(b, n)).astype(np.int64)
+    w_in = rng.integers(-m, m + 1, size=(n, t_in)).astype(np.int64)
+    w_r = rng.integers(-m, m + 1, size=(n, n)).astype(np.int64)
+    # sparsify like a reservoir
+    w_r *= (rng.random((n, n)) < 0.15).astype(np.int64)
+    return u, s, w_in, w_r
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 8),
+    in_dim=st.integers(1, 3),
+    n=st.integers(2, 24),
+    q=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_quant_step_matches_ref(b, in_dim, n, q, seed):
+    rng = np.random.default_rng(seed)
+    u, s, w_in, w_r = rand_quant_inputs(rng, b, in_dim, n, q)
+    m_in = np.array([rng.integers(1, 1 << 14)], dtype=np.int64)
+    c = float(rng.uniform(1.0, 400.0))
+    thr = pad_thresholds(make_ladder(c, q) * (1 << 12))
+    qm = np.array([qmax_of(q)], dtype=np.int64)
+    out = quant_step(u, s, w_in, w_r, m_in, thr, qm)
+    ref = quant_step_ref(u, s, w_in, w_r, m_in, thr, qm)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 8),
+    in_dim=st.integers(1, 3),
+    n=st.integers(2, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_float_step_matches_ref(b, in_dim, n, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(b, in_dim)).astype(np.float32)
+    s = rng.uniform(-1, 1, size=(b, n)).astype(np.float32)
+    w_in = rng.normal(size=(n, in_dim)).astype(np.float32)
+    w_r = (rng.normal(size=(n, n)) * (rng.random((n, n)) < 0.2)).astype(np.float32)
+    out = float_step(u, s, w_in, w_r)
+    ref = float_step_ref(u, s, w_in, w_r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_quant_step_output_bounded():
+    rng = np.random.default_rng(0)
+    q = 4
+    u, s, w_in, w_r = rand_quant_inputs(rng, 4, 1, 10, q)
+    thr = pad_thresholds(make_ladder(300.0, q) * (1 << 12))
+    out = np.asarray(
+        quant_step(u, s, w_in, w_r, np.array([4096], dtype=np.int64), thr,
+                   np.array([qmax_of(q)], dtype=np.int64))
+    )
+    assert np.abs(out).max() <= qmax_of(q)
+
+
+def test_threshold_padding_never_fires():
+    """Padding with i64::MAX must not change the result."""
+    rng = np.random.default_rng(1)
+    q = 4
+    u, s, w_in, w_r = rand_quant_inputs(rng, 3, 1, 8, q)
+    ladder = make_ladder(120.0, q) * (1 << 12)
+    m_in = np.array([2048], dtype=np.int64)
+    qm = np.array([qmax_of(q)], dtype=np.int64)
+    unpadded = quant_step_ref(u, s, w_in, w_r, m_in, jnp.asarray(ladder), qm)
+    padded = quant_step(u, s, w_in, w_r, m_in, pad_thresholds(ladder), qm)
+    np.testing.assert_array_equal(np.asarray(unpadded), np.asarray(padded))
+
+
+def test_zero_state_zero_input_is_fixed_point():
+    """With u=0, s=0 the symmetric ladder must output level 0."""
+    q = 6
+    n = 12
+    w_in = np.ones((n, 1), dtype=np.int64)
+    w_r = np.ones((n, n), dtype=np.int64)
+    thr = pad_thresholds(make_ladder(50.0, q) * (1 << 12))
+    out = quant_step(
+        np.zeros((2, 1), dtype=np.int64),
+        np.zeros((2, n), dtype=np.int64),
+        w_in, w_r,
+        np.array([4096], dtype=np.int64), thr,
+        np.array([qmax_of(q)], dtype=np.int64),
+    )
+    assert np.all(np.asarray(out) == 0)

@@ -1,0 +1,93 @@
+"""L2 correctness: scanned rollouts vs step-by-step references; chaining."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_rollout_ref
+from compile.model import (
+    THR_PAD,
+    float_rollout,
+    pad_thresholds,
+    quant_rollout_pooled,
+    quant_rollout_states,
+)
+from tests.test_kernels import make_ladder, qmax_of, rand_quant_inputs
+
+SET = dict(deadline=None, max_examples=8)
+
+
+def rollout_args(rng, b, t, in_dim, n, q):
+    m = qmax_of(q)
+    u_seq = rng.integers(-m, m + 1, size=(b, t, in_dim)).astype(np.int64)
+    s0 = np.zeros((b, n), dtype=np.int64)
+    w_in = rng.integers(-m, m + 1, size=(n, in_dim)).astype(np.int64)
+    w_r = (rng.integers(-m, m + 1, size=(n, n))
+           * (rng.random((n, n)) < 0.2)).astype(np.int64)
+    m_in = np.array([rng.integers(256, 1 << 14)], dtype=np.int64)
+    thr = pad_thresholds(make_ladder(float(rng.uniform(5.0, 300.0)), q) * (1 << 12))
+    qm = np.array([m], dtype=np.int64)
+    return u_seq, s0, w_in, w_r, m_in, thr, qm
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 10),
+    in_dim=st.integers(1, 2),
+    n=st.integers(2, 16),
+    q=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_pooled_rollout_matches_ref(b, t, in_dim, n, q, seed):
+    rng = np.random.default_rng(seed)
+    args = rollout_args(rng, b, t, in_dim, n, q)
+    pooled, s_final = jax.jit(quant_rollout_pooled)(*args)
+    _, pooled_ref, s_ref = quant_rollout_ref(*args)
+    np.testing.assert_array_equal(np.asarray(pooled), np.asarray(pooled_ref))
+    np.testing.assert_array_equal(np.asarray(s_final), np.asarray(s_ref))
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31))
+def test_states_rollout_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    args = rollout_args(rng, 2, 12, 1, 10, 6)
+    states, s_final = jax.jit(quant_rollout_states)(*args)
+    states_ref, _, s_ref = quant_rollout_ref(*args)
+    np.testing.assert_array_equal(np.asarray(states), np.asarray(states_ref))
+    np.testing.assert_array_equal(np.asarray(s_final), np.asarray(s_ref))
+
+
+def test_chaining_equals_single_rollout():
+    """Streaming chunks through s0 must equal one long rollout."""
+    rng = np.random.default_rng(7)
+    u_seq, s0, w_in, w_r, m_in, thr, qm = rollout_args(rng, 1, 20, 1, 12, 6)
+    full, s_full = quant_rollout_states(u_seq, s0, w_in, w_r, m_in, thr, qm)
+    a, s_mid = quant_rollout_states(u_seq[:, :10], s0, w_in, w_r, m_in, thr, qm)
+    b, s_end = quant_rollout_states(u_seq[:, 10:], s_mid, w_in, w_r, m_in, thr, qm)
+    np.testing.assert_array_equal(np.asarray(full), np.concatenate([a, b], axis=1))
+    np.testing.assert_array_equal(np.asarray(s_full), np.asarray(s_end))
+
+
+def test_float_rollout_shapes_and_bounds():
+    rng = np.random.default_rng(3)
+    b, t, in_dim, n = 3, 9, 1, 14
+    u_seq = rng.normal(size=(b, t, in_dim)).astype(np.float32)
+    s0 = np.zeros((b, n), dtype=np.float32)
+    w_in = rng.normal(size=(n, in_dim)).astype(np.float32)
+    w_r = (rng.normal(size=(n, n)) * 0.2).astype(np.float32)
+    pooled, s_final = jax.jit(float_rollout)(u_seq, s0, w_in, w_r)
+    assert pooled.shape == (b, n)
+    assert s_final.shape == (b, n)
+    assert np.abs(np.asarray(s_final)).max() <= 1.0
+
+
+def test_pad_thresholds_length():
+    t = pad_thresholds(np.array([1, 2, 3], dtype=np.int64))
+    assert t.shape == (THR_PAD,)
+    assert int(t[3]) == np.iinfo(np.int64).max

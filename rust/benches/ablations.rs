@@ -1,0 +1,89 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A1  readout-constant refolding (scale compensation) on/off
+//!   A2  MSE-optimal readout clipping vs plain max-scale quantization
+//!   A3  one-shot vs iterative sensitivity scoring
+//!   A4  magnitude tie-break in the sensitivity score on/off (via a
+//!       magnitude-only scorer as the degenerate case)
+//!
+//! Each prints the metric delta the choice buys on MELBORN @ q6.
+
+use rcx::bench::section;
+use rcx::config::BenchmarkConfig;
+use rcx::data::Benchmark;
+use rcx::dse::calibration_split;
+use rcx::pruning::{
+    iterative_prune, prune_to_rate, prune_with_compensation, IterativeConfig, Method, Pruner,
+    SensitivityConfig,
+};
+use rcx::quant::{QuantEsn, QuantSpec, Quantizer};
+
+fn main() {
+    let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
+    let (model, data) = cfg.train(1, true);
+    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(6));
+    let calib = calibration_split(&data, 96);
+    let scores = Method::Sensitivity.pruner(7).scores(&qm, calib);
+    println!("unpruned q6 accuracy: {:.4}", qm.evaluate(&data).value());
+
+    section("A1 — readout refolding (scale compensation)");
+    for p in [15.0, 45.0, 75.0] {
+        let plain = prune_to_rate(&qm, &scores, p).evaluate(&data).value();
+        let comp = prune_with_compensation(&qm, &scores, p, calib).evaluate(&data).value();
+        println!("  p={p:>4}%: plain {plain:.4} -> refolded {comp:.4} ({:+.4})", comp - plain);
+    }
+
+    section("A2 — MSE-optimal vs max-scale readout quantization");
+    // Degenerate quantizer: max-based scale (no clipping).
+    let mut maxq = qm.clone();
+    {
+        let n = maxq.n;
+        let mut w_out = Vec::with_capacity(maxq.out_dim * n);
+        let mut qz = Vec::with_capacity(maxq.out_dim);
+        for c in 0..maxq.out_dim {
+            let row = &maxq.w_out_f[c * n..(c + 1) * n];
+            let z = Quantizer::symmetric(row, maxq.q);
+            w_out.extend(row.iter().map(|&x| z.quantize(x)));
+            qz.push(z);
+        }
+        let s_min = qz.iter().map(|z| z.scale).fold(f64::INFINITY, f64::min);
+        maxq.m_out = qz
+            .iter()
+            .map(|z| ((1i64 << maxq.f_bits) as f64 * s_min / z.scale).round() as i64)
+            .collect();
+        maxq.w_out = w_out;
+        maxq.qz_wo = qz;
+    }
+    println!(
+        "  mse-clipped {:.4} vs max-scale {:.4}",
+        qm.evaluate(&data).value(),
+        maxq.evaluate(&data).value()
+    );
+
+    section("A3 — one-shot vs iterative sensitivity (target 45%)");
+    let oneshot = prune_with_compensation(&qm, &scores, 45.0, calib).evaluate(&data).value();
+    let (iter_model, rounds) = iterative_prune(
+        &qm,
+        45.0,
+        calib,
+        &IterativeConfig {
+            step_pct: 15.0,
+            scorer: SensitivityConfig { parallelism: 0, max_calib: 96 },
+            refold: true,
+        },
+    );
+    println!(
+        "  one-shot {:.4} vs iterative({rounds} rounds) {:.4}",
+        oneshot,
+        iter_model.evaluate(&data).value()
+    );
+
+    section("A4 — sensitivity vs pure-magnitude scoring (p=45%)");
+    let mag_scores: Vec<f64> =
+        (0..qm.n_weights()).map(|i| qm.w_r_values[i].unsigned_abs() as f64).collect();
+    println!(
+        "  sensitivity {:.4} vs magnitude {:.4}",
+        prune_with_compensation(&qm, &scores, 45.0, calib).evaluate(&data).value(),
+        prune_with_compensation(&qm, &mag_scores, 45.0, calib).evaluate(&data).value()
+    );
+}

@@ -1,0 +1,51 @@
+//! Reproduces **Figure 4**: the performance ↔ resource-consumption
+//! trade-off scatter for quantized+pruned accelerators (joins Fig. 3's
+//! performance data with the hardware model). Also checks the paper's
+//! observation that moving 8→6→4 bits at 15% pruning can *improve*
+//! performance while saving resources.
+
+use rcx::bench::{full_mode, section};
+use rcx::config::{BenchmarkConfig, PAPER_P, PAPER_Q};
+use rcx::data::{save_csv, Benchmark};
+use rcx::dse::{explore, realize_hw, DseRequest};
+use rcx::pruning::Method;
+use rcx::report::{fig4_series, figures::fig4_csv};
+
+fn main() {
+    section("Figure 4 — performance vs resources trade-off");
+    let full = full_mode();
+    for b in [Benchmark::Melborn, Benchmark::Henon] {
+        let cfg = BenchmarkConfig::paper(b, 0);
+        let (model, data) = cfg.train(1, !full);
+        let req = DseRequest {
+            q_levels: PAPER_Q.to_vec(),
+            pruning_rates: PAPER_P.to_vec(),
+            method: Method::Sensitivity,
+            max_calib: if full { 256 } else { 96 },
+            seed: 7,
+        };
+        let r = explore(&model, &data, &req);
+        let hw = realize_hw(&r, &data);
+        let points = fig4_series(&hw);
+        let (h, rows) = fig4_csv(&points);
+        let path = format!("results/fig4_{}.csv", b.name().to_lowercase());
+        save_csv(std::path::Path::new(&path), &h, &rows).unwrap();
+        println!("{}: {} points -> {path}", b.name(), points.len());
+        // Paper observation: resources strictly increase with q at fixed p.
+        for p in [15.0] {
+            let mut at_p: Vec<_> = points.iter().filter(|x| x.p == p).collect();
+            at_p.sort_by_key(|x| x.q);
+            if at_p.len() == 3 {
+                println!(
+                    "  p={p}%: q4 {} LUT+FF (perf {:.3}) | q6 {} ({:.3}) | q8 {} ({:.3})",
+                    at_p[0].luts_plus_ffs, at_p[0].perf,
+                    at_p[1].luts_plus_ffs, at_p[1].perf,
+                    at_p[2].luts_plus_ffs, at_p[2].perf
+                );
+                assert!(at_p[0].luts_plus_ffs < at_p[1].luts_plus_ffs);
+                assert!(at_p[1].luts_plus_ffs < at_p[2].luts_plus_ffs);
+            }
+        }
+    }
+    println!("resource monotonicity in q at fixed p: OK");
+}

@@ -1,0 +1,76 @@
+//! §Perf microbenchmarks: the framework's hot paths across all three layers.
+//!
+//!   L3-a  native integer reservoir step (QuantEsn::run_int)
+//!   L3-b  sensitivity scoring (Eq. 4, the dominant DSE cost)
+//!   L3-c  hardware cost model evaluation
+//!   L3-d  batcher decision loop
+//!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
+//!
+//! Before/after numbers for the optimization pass live in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use rcx::bench::{section, time_it};
+use rcx::config::BenchmarkConfig;
+use rcx::coordinator::{Batcher, BatcherConfig};
+use rcx::data::Benchmark;
+use rcx::dse::calibration_split;
+use rcx::hw::{self, Topology};
+use rcx::pruning::{Pruner, SensitivityConfig, SensitivityPruner};
+use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::runtime::{pooled_states, Runtime};
+
+fn main() {
+    let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
+    let (model, data) = cfg.train(1, true);
+    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(6));
+
+    section("L3-a native integer rollout (one 24-step sequence, N=50)");
+    let s = &data.test[0];
+    let st = time_it(50, 500, || qm.run_int(&s.inputs));
+    println!("{st}  ({:.1} Ksteps/s)", 24.0 / st.median.as_secs_f64() / 1e3);
+
+    section("L3-b sensitivity scoring (Eq.4, 250 weights x 6 bits)");
+    let calib = calibration_split(&data, 64);
+    for workers in [1usize, 4, 0] {
+        let p = SensitivityPruner::new(SensitivityConfig { parallelism: workers, max_calib: 64 });
+        let t0 = Instant::now();
+        let scores = p.scores(&qm, calib);
+        let el = t0.elapsed();
+        assert_eq!(scores.len(), 250);
+        println!(
+            "workers={:<4} {el:?}  ({:.0} evals/s)",
+            if workers == 0 { "all".to_string() } else { workers.to_string() },
+            (250.0 * 6.0) / el.as_secs_f64()
+        );
+    }
+
+    section("L3-c hardware model evaluation (cost+timing+activity+power)");
+    let st = time_it(3, 30, || hw::evaluate(&qm, Topology::Pipelined { t_unroll: 24 }, &data.test));
+    println!("{st}");
+
+    section("L3-d batcher decision (1M push/decide/flush cycles)");
+    let st = time_it(1, 10, || {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        for _ in 0..1_000_000u32 {
+            b.push(now);
+            if let rcx::coordinator::BatchDecision::Flush(n) = b.decide(now) {
+                b.flushed(n, now);
+            }
+        }
+    });
+    println!("{st}  ({:.1} Mops/s)", 1.0 / st.median.as_secs_f64() / 1e6);
+
+    section("L1/L2 PJRT rollout (AOT XLA/Pallas artifact, batch=32, T=24)");
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let rt = Runtime::cpu_subset(std::path::Path::new("artifacts"), &["melborn_pooled"])
+            .expect("artifacts present but runtime failed");
+        let samples: Vec<&_> = data.test.iter().take(32).collect();
+        let st = time_it(5, 50, || pooled_states(&rt, "melborn_pooled", &qm, &samples).unwrap());
+        let seq_per_s = 32.0 / st.median.as_secs_f64();
+        println!("{st}  ({seq_per_s:.0} seq/s through the compiled artifact)");
+    } else {
+        println!("skipped (run `make artifacts`)");
+    }
+}

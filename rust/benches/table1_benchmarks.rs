@@ -1,0 +1,33 @@
+//! Reproduces **Table I**: benchmark parameters and float-baseline
+//! performance for MELBORN / PEN / HENON.
+//!
+//! Default: reduced splits (seconds). `RCX_FULL=1` uses the paper-sized
+//! splits (Table I row counts: 1194/2439, 7494/3498, 4000/1000).
+
+use rcx::bench::{full_mode, section, time_it};
+use rcx::config::BenchmarkConfig;
+use rcx::data::Benchmark;
+use rcx::report::table1;
+
+fn main() {
+    section("Table I — benchmark parameters + float baseline");
+    let full = full_mode();
+    println!("mode: {}", if full { "FULL (paper-sized)" } else { "reduced (RCX_FULL=1 for full)" });
+
+    let mut trained = Vec::new();
+    for b in Benchmark::ALL {
+        let cfg = BenchmarkConfig::paper(b, 0);
+        let stats = time_it(0, 1, || {
+            let (model, data) = cfg.train(1, !full);
+            let perf = model.evaluate(&data);
+            trained.push((b, data, cfg.spec, cfg.readout.lambda, perf));
+        });
+        println!("{}: trained+evaluated in {}", b.name(), stats);
+    }
+    let entries: Vec<_> = trained
+        .iter()
+        .map(|(b, d, s, l, p)| (*b, d, s.sr, s.lr, *l, s.ncrl, *p))
+        .collect();
+    println!("\n{}", table1(&entries));
+    println!("paper reference: MELBORN 87.67% acc | PEN 86.34% acc | HENON 0.27 RMSE");
+}

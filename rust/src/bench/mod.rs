@@ -1,0 +1,73 @@
+//! Minimal benchmarking harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets use [`time_it`] for wall-clock statistics and print
+//! the paper's table/figure rows via [`crate::report`]. Statistics: warmup,
+//! then `n` timed iterations, reporting min/median/mean.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of a benchmarked closure.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:.3?}  median {:.3?}  mean {:.3?}  ({} iters)",
+            self.min, self.median, self.mean, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn time_it<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchStats { iters, min, median, mean }
+}
+
+/// True when the full-fidelity (paper-sized) bench configuration is requested.
+pub fn full_mode() -> bool {
+    std::env::var("RCX_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_ordering() {
+        let s = time_it(1, 9, || std::hint::black_box((0..1000).sum::<u64>()));
+        assert!(s.min <= s.median);
+        assert_eq!(s.iters, 9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny `key = value` config-file parser (one assignment per line, `#`
+//! comments, sections ignored). Enough for experiment configs without serde.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A parsed config file.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    values: HashMap<String, String>,
+}
+
+impl ConfigFile {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed getter with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("config key {key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Comma-separated list getter.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("config key {key}: bad element {x:?}"))
+                })
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_typed_get() {
+        let c = ConfigFile::parse(
+            "# experiment\n[dse]\nq_levels = 4,6,8\nmethod = sensitivity\nmax_calib = 128\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("method"), Some("sensitivity"));
+        assert_eq!(c.get_or("max_calib", 0usize).unwrap(), 128);
+        assert_eq!(c.get_or("missing", 5u8).unwrap(), 5);
+        assert_eq!(c.get_list::<u8>("q_levels").unwrap().unwrap(), vec![4, 6, 8]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse("no equals sign here").is_err());
+        let c = ConfigFile::parse("x = abc").unwrap();
+        assert!(c.get_or("x", 1u32).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Experiment configuration: the paper's per-benchmark settings (Table I)
+//! plus a tiny key=value config-file loader for the CLI (serde is not in the
+//! vendored crate set).
+
+mod file;
+
+pub use file::ConfigFile;
+
+use crate::data::{Benchmark, Dataset};
+#[cfg(test)]
+use crate::data::Task;
+use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+
+/// Full stage-1 configuration of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchmarkConfig {
+    pub benchmark: Benchmark,
+    pub spec: ReservoirSpec,
+    pub readout: ReadoutSpec,
+    /// AOT artifact implementing this benchmark's rollout geometry.
+    pub artifact: &'static str,
+}
+
+impl BenchmarkConfig {
+    /// Paper configuration (Table I geometry: N=50, ncrl=250; sr/lr per
+    /// Table I). λ and the reservoir seed are chosen by our stage-1
+    /// validation for *quantization-robust* readouts (see EXPERIMENTS.md
+    /// §Table I): the paper's λ values are tied to its datasets, ours to the
+    /// synthetic equivalents. `seed = 0` selects the validated default.
+    pub fn paper(benchmark: Benchmark, seed: u64) -> Self {
+        let seed = if seed == 0 {
+            match benchmark {
+                Benchmark::Melborn => 17,
+                Benchmark::Pen => 13,
+                Benchmark::Henon => 17,
+            }
+        } else {
+            seed
+        };
+        match benchmark {
+            Benchmark::Melborn => Self {
+                benchmark,
+                spec: ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, seed),
+                readout: ReadoutSpec { lambda: 0.1, washout: 0, features: Features::MeanState },
+                artifact: "melborn_pooled",
+            },
+            Benchmark::Pen => Self {
+                benchmark,
+                spec: ReservoirSpec::paper(50, 2, 250, 0.6, 1.0, seed),
+                readout: ReadoutSpec { lambda: 0.1, washout: 0, features: Features::MeanState },
+                artifact: "pen_pooled",
+            },
+            Benchmark::Henon => Self {
+                benchmark,
+                spec: ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, seed),
+                readout: ReadoutSpec {
+                    lambda: 1e-4,
+                    washout: 30,
+                    features: Features::MeanState,
+                },
+                artifact: "henon_states",
+            },
+        }
+    }
+
+    /// Generate data and fit the stage-1 float model.
+    /// `small` uses reduced splits (tests, default bench mode).
+    pub fn train(&self, data_seed: u64, small: bool) -> (EsnModel, Dataset) {
+        let data = if small {
+            self.benchmark.generate_small(data_seed)
+        } else {
+            self.benchmark.generate(data_seed)
+        };
+        let res = Reservoir::init(self.spec);
+        let model = EsnModel::fit(res, &data, self.readout);
+        (model, data)
+    }
+
+    /// The hardware topology for this benchmark.
+    pub fn topology(&self, data: &Dataset) -> crate::hw::Topology {
+        let seq = data.test.first().map(|s| s.inputs.rows()).unwrap_or(1);
+        crate::hw::Topology::for_task(data.task, seq)
+    }
+}
+
+/// Paper DSE grids.
+pub const PAPER_Q: [u8; 3] = [4, 6, 8];
+pub const PAPER_P: [f64; 6] = [15.0, 30.0, 45.0, 60.0, 75.0, 90.0];
+/// The pruning rates shown in Tables II/III.
+pub const TABLE_P: [f64; 4] = [15.0, 45.0, 75.0, 90.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_train() {
+        for b in Benchmark::ALL {
+            let cfg = BenchmarkConfig::paper(b, 0);
+            let (model, data) = cfg.train(1, true);
+            let perf = model.evaluate(&data);
+            match data.task {
+                Task::Classification => assert!(perf.value() > 0.5, "{b:?}: {perf}"),
+                Task::Regression => assert!(perf.value() < 0.5, "{b:?}: {perf}"),
+            }
+        }
+    }
+
+    #[test]
+    fn topology_matches_task() {
+        let m = BenchmarkConfig::paper(Benchmark::Melborn, 1);
+        let (_, data) = m.train(1, true);
+        assert!(matches!(m.topology(&data), crate::hw::Topology::Pipelined { t_unroll: 24 }));
+        let h = BenchmarkConfig::paper(Benchmark::Henon, 1);
+        let (_, hdata) = h.train(1, true);
+        assert!(matches!(h.topology(&hdata), crate::hw::Topology::Streaming));
+    }
+}

@@ -1,0 +1,152 @@
+//! Dynamic batching policy: flush a variant's queue when it reaches the
+//! artifact batch capacity or when its oldest request exceeds the wait
+//! budget. Pure logic — fully unit-testable without threads.
+
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Hard batch cap (≤ the AOT artifact's batch dimension).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a forced flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// What the executor should do with a variant queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchDecision {
+    /// Nothing queued.
+    Idle,
+    /// Wait up to the contained duration for more requests.
+    Wait(Duration),
+    /// Flush the first `n` requests now.
+    Flush(usize),
+}
+
+/// Per-variant batching state.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queued: usize,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, queued: 0, oldest: None }
+    }
+
+    /// Record an arrival.
+    pub fn push(&mut self, now: Instant) {
+        if self.queued == 0 {
+            self.oldest = Some(now);
+        }
+        self.queued += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Decide: flush, wait, or idle.
+    pub fn decide(&self, now: Instant) -> BatchDecision {
+        if self.queued == 0 {
+            return BatchDecision::Idle;
+        }
+        if self.queued >= self.cfg.max_batch {
+            return BatchDecision::Flush(self.cfg.max_batch);
+        }
+        let age = now.duration_since(self.oldest.expect("queued > 0 implies oldest"));
+        if age >= self.cfg.max_wait {
+            BatchDecision::Flush(self.queued)
+        } else {
+            BatchDecision::Wait(self.cfg.max_wait - age)
+        }
+    }
+
+    /// Record a flush of `n` requests; the remaining queue restarts its age
+    /// clock at `now` (conservative: slightly early flushes, never starvation).
+    pub fn flushed(&mut self, n: usize, now: Instant) {
+        assert!(n <= self.queued, "flushed more than queued");
+        self.queued -= n;
+        self.oldest = if self.queued > 0 { Some(now) } else { None };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b = Batcher::new(cfg(4, 10));
+        assert_eq!(b.decide(Instant::now()), BatchDecision::Idle);
+    }
+
+    #[test]
+    fn flush_on_capacity() {
+        let mut b = Batcher::new(cfg(3, 1000));
+        let t = Instant::now();
+        for _ in 0..3 {
+            b.push(t);
+        }
+        assert_eq!(b.decide(t), BatchDecision::Flush(3));
+    }
+
+    #[test]
+    fn flush_on_deadline() {
+        let mut b = Batcher::new(cfg(100, 5));
+        let t0 = Instant::now();
+        b.push(t0);
+        b.push(t0);
+        assert!(matches!(b.decide(t0), BatchDecision::Wait(_)));
+        let late = t0 + Duration::from_millis(6);
+        assert_eq!(b.decide(late), BatchDecision::Flush(2));
+    }
+
+    #[test]
+    fn capacity_flush_keeps_remainder() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        let t = Instant::now();
+        for _ in 0..5 {
+            b.push(t);
+        }
+        assert_eq!(b.decide(t), BatchDecision::Flush(2));
+        b.flushed(2, t);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.decide(t), BatchDecision::Flush(2));
+        b.flushed(2, t);
+        b.flushed(1, t);
+        assert!(b.is_empty());
+        assert_eq!(b.decide(t), BatchDecision::Idle);
+    }
+
+    #[test]
+    fn wait_shrinks_with_age() {
+        let mut b = Batcher::new(cfg(10, 10));
+        let t0 = Instant::now();
+        b.push(t0);
+        let BatchDecision::Wait(w1) = b.decide(t0 + Duration::from_millis(2)) else {
+            panic!("expected wait");
+        };
+        let BatchDecision::Wait(w2) = b.decide(t0 + Duration::from_millis(8)) else {
+            panic!("expected wait");
+        };
+        assert!(w2 < w1);
+    }
+}

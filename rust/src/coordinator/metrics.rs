@@ -1,0 +1,100 @@
+//! Serving metrics: counters + latency quantiles, lock-light.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    /// Latency samples in microseconds (bounded reservoir).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_request(&self, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        let mut l = self.latencies_us.lock().expect("metrics poisoned");
+        if l.len() < RESERVOIR {
+            l.push(us);
+        } else {
+            // overwrite pseudo-randomly to keep a bounded reservoir
+            let idx = (us as usize).wrapping_mul(2654435761) % RESERVOIR;
+            l[idx] = us;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().expect("metrics poisoned").clone();
+        l.sort_unstable();
+        let q = |p: f64| -> u64 {
+            if l.is_empty() {
+                0
+            } else {
+                l[((l.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        MetricsSnapshot {
+            requests,
+            batches,
+            mean_batch: if batches > 0 { items as f64 / batches as f64 } else { 0.0 },
+            p50_us: q(0.50),
+            p95_us: q(0.95),
+            p99_us: q(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_quantiles() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i));
+        }
+        m.record_batch(10);
+        m.record_batch(20);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 15.0).abs() < 1e-9);
+        assert!(s.p50_us >= 45 && s.p50_us <= 55, "{}", s.p50_us);
+        assert!(s.p99_us >= 95);
+        assert!(s.p95_us <= s.p99_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_us, 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 serving coordinator: request router + dynamic batcher + PJRT executor.
+//!
+//! Architecture (std threads; the PJRT handles are `!Send`, so a dedicated
+//! executor thread owns the [`crate::runtime::Runtime`]):
+//!
+//! ```text
+//! clients ──mpsc──▶ executor thread
+//!                     ├─ router: group pending requests by model variant
+//!!                    ├─ batcher: flush on max_batch or max_wait deadline
+//!                     ├─ PJRT execute (XLA/Pallas rollout artifact)
+//!                     └─ integer readout + respond via per-request channel
+//! ```
+//!
+//! Python never appears on this path — the artifacts were compiled by
+//! `make artifacts` long before the first request.
+
+mod batcher;
+mod metrics;
+mod server;
+
+pub use batcher::{BatchDecision, Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Client, Prediction, Request, Response, ServeConfig, Server, VariantSpec};

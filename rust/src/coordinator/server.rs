@@ -1,0 +1,256 @@
+//! The serving loop: router over model variants, dynamic batching, PJRT
+//! execution, integer readout, response delivery.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+use crate::runtime::{pooled_states, Runtime};
+
+use super::batcher::{BatchDecision, Batcher, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// A deployable model variant (one point of the DSE space).
+#[derive(Clone)]
+pub struct VariantSpec {
+    /// Routing key, e.g. `"q4_p15"`.
+    pub key: String,
+    pub model: QuantEsn,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifact_dir: PathBuf,
+    /// Rollout artifact name (e.g. `"melborn_pooled"`).
+    pub artifact: String,
+    pub batcher: BatcherConfig,
+}
+
+/// One inference request.
+pub struct Request {
+    pub variant: usize,
+    pub series: TimeSeries,
+    pub submitted: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// Model prediction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Prediction {
+    Class(usize),
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub prediction: Prediction,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+enum Control {
+    Req(Request),
+    Shutdown,
+}
+
+/// Running server: executor thread owning the PJRT runtime.
+pub struct Server {
+    tx: Sender<Control>,
+    metrics: Arc<Metrics>,
+    variants: Vec<String>,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start the executor thread: compiles the artifact inside the thread
+    /// (PJRT handles are `!Send`) and serves until shutdown.
+    pub fn start(cfg: ServeConfig, variants: Vec<VariantSpec>) -> Result<Server> {
+        anyhow::ensure!(!variants.is_empty(), "no variants to serve");
+        let metrics = Arc::new(Metrics::default());
+        let keys: Vec<String> = variants.iter().map(|v| v.key.clone()).collect();
+        let (tx, rx) = mpsc::channel::<Control>();
+        let m2 = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("rcx-executor".into())
+            .spawn(move || executor(cfg, variants, rx, m2, ready_tx))
+            .context("spawn executor")?;
+        // Propagate startup failures (artifact missing, compile error).
+        ready_rx
+            .recv()
+            .context("executor died during startup")??;
+        Ok(Server { tx, metrics, variants: keys, join: Some(join) })
+    }
+
+    /// A cloneable client handle.
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    /// Routing index of a variant key.
+    pub fn variant_index(&self, key: &str) -> Option<usize> {
+        self.variants.iter().position(|k| k == key)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drains the queue, joins the executor.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Cloneable request submitter.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Control>,
+}
+
+impl Client {
+    /// Submit asynchronously; returns the response channel.
+    pub fn submit(&self, variant: usize, series: TimeSeries) -> Result<Receiver<Response>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Control::Req(Request {
+                variant,
+                series,
+                submitted: Instant::now(),
+                respond: resp_tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server is down"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn classify(&self, variant: usize, series: TimeSeries) -> Result<Response> {
+        let rx = self.submit(variant, series)?;
+        rx.recv().context("server dropped the request")
+    }
+}
+
+/// Executor: owns the runtime; routes, batches, executes, responds.
+fn executor(
+    cfg: ServeConfig,
+    variants: Vec<VariantSpec>,
+    rx: Receiver<Control>,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<()>>,
+) -> Result<()> {
+    let rt = match Runtime::cpu_subset(&cfg.artifact_dir, &[cfg.artifact.as_str()]) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+    let art_batch = rt.artifact(&cfg.artifact)?.batch;
+    let max_batch = cfg.batcher.max_batch.min(art_batch);
+    let bcfg = BatcherConfig { max_batch, ..cfg.batcher };
+
+    let nvar = variants.len();
+    let mut queues: Vec<VecDeque<Request>> = (0..nvar).map(|_| VecDeque::new()).collect();
+    let mut batchers: Vec<Batcher> = (0..nvar).map(|_| Batcher::new(bcfg)).collect();
+    let mut running = true;
+
+    while running || queues.iter().any(|q| !q.is_empty()) {
+        // 1. Ingest: wait only as long as the most urgent deadline allows.
+        let now = Instant::now();
+        let mut min_wait: Option<Duration> = None;
+        for b in &batchers {
+            if let BatchDecision::Wait(w) = b.decide(now) {
+                min_wait = Some(min_wait.map_or(w, |m: Duration| m.min(w)));
+            }
+        }
+        let timeout = if running {
+            min_wait.unwrap_or(Duration::from_millis(50))
+        } else {
+            Duration::from_millis(0)
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Control::Req(req)) => {
+                let v = req.variant;
+                anyhow::ensure!(v < nvar, "variant index {v} out of range");
+                batchers[v].push(Instant::now());
+                queues[v].push_back(req);
+                // Drain whatever else is already queued without blocking.
+                while let Ok(c) = rx.try_recv() {
+                    match c {
+                        Control::Req(r) => {
+                            let v = r.variant;
+                            batchers[v].push(Instant::now());
+                            queues[v].push_back(r);
+                        }
+                        Control::Shutdown => running = false,
+                    }
+                }
+            }
+            Ok(Control::Shutdown) => running = false,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => running = false,
+        }
+
+        // 2. Flush every variant whose batcher says so.
+        let now = Instant::now();
+        for v in 0..nvar {
+            while let BatchDecision::Flush(n) = batchers[v].decide(now) {
+                let batch: Vec<Request> = queues[v].drain(..n).collect();
+                batchers[v].flushed(n, now);
+                run_batch(&rt, &cfg.artifact, &variants[v].model, batch, &metrics)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute one batch through PJRT and deliver responses.
+fn run_batch(
+    rt: &Runtime,
+    artifact: &str,
+    model: &QuantEsn,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) -> Result<()> {
+    let n = batch.len();
+    metrics.record_batch(n);
+    let refs: Vec<&TimeSeries> = batch.iter().map(|r| &r.series).collect();
+    let pooled = pooled_states(rt, artifact, model, &refs)?;
+    let done = Instant::now();
+    for (req, p) in batch.into_iter().zip(pooled) {
+        let t = req.series.inputs.rows() as f64;
+        let cls = model.classify_from_pooled(&p, t);
+        let latency = done.duration_since(req.submitted);
+        metrics.record_request(latency);
+        let _ = req.respond.send(Response {
+            prediction: Prediction::Class(cls),
+            latency,
+            batch_size: n,
+        });
+    }
+    Ok(())
+}

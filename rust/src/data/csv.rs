@@ -1,0 +1,67 @@
+//! Minimal CSV I/O (no external deps) — used to export figure/table series
+//! for plotting and to exchange test vectors with the python layer.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Save rows of f64 with a header line.
+pub fn save_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load a CSV of f64s; returns (header, rows). Blank lines are skipped.
+pub fn load_csv(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let text = fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .context("empty csv")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let row: Result<Vec<f64>, _> = line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        rows.push(row.with_context(|| format!("row {} of {path:?}", i + 2))?);
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rcx_csv_test");
+        let p = dir.join("t.csv");
+        let rows = vec![vec![1.0, 2.5], vec![-3.0, 0.125]];
+        save_csv(&p, &["a", "b"], &rows).unwrap();
+        let (h, r) = load_csv(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(r, rows);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("rcx_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "a,b\n1,zzz\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

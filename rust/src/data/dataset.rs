@@ -1,0 +1,138 @@
+//! Core dataset containers shared by all benchmarks.
+
+use crate::linalg::Mat;
+
+/// What kind of task the readout is trained for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Sequence classification: one label per sequence.
+    Classification,
+    /// Per-step regression: one target vector per time step.
+    Regression,
+}
+
+/// One time series sample.
+///
+/// `inputs` is (T × input_dim). For classification `label` is set; for
+/// regression `targets` is (T × target_dim).
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    pub inputs: Mat,
+    pub label: Option<usize>,
+    pub targets: Option<Mat>,
+}
+
+impl TimeSeries {
+    /// Classification sample.
+    pub fn labeled(inputs: Mat, label: usize) -> Self {
+        Self { inputs, label: Some(label), targets: None }
+    }
+
+    /// Regression sample.
+    pub fn with_targets(inputs: Mat, targets: Mat) -> Self {
+        assert_eq!(inputs.rows(), targets.rows(), "T mismatch");
+        Self { inputs, label: None, targets: Some(targets) }
+    }
+
+    /// Sequence length.
+    pub fn len(&self) -> usize {
+        self.inputs.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.rows() == 0
+    }
+}
+
+/// A full benchmark dataset: train and test splits plus task metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub train: Vec<TimeSeries>,
+    pub test: Vec<TimeSeries>,
+    pub input_dim: usize,
+    /// Number of classes (classification) or target dim (regression).
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Input dimensionality sanity check across all samples.
+    pub fn validate(&self) -> Result<(), String> {
+        for (split, samples) in [("train", &self.train), ("test", &self.test)] {
+            for (i, s) in samples.iter().enumerate() {
+                if s.inputs.cols() != self.input_dim {
+                    return Err(format!("{split}[{i}]: input dim {} != {}", s.inputs.cols(), self.input_dim));
+                }
+                match self.task {
+                    Task::Classification => {
+                        let l = s.label.ok_or_else(|| format!("{split}[{i}]: missing label"))?;
+                        if l >= self.n_classes {
+                            return Err(format!("{split}[{i}]: label {l} >= {}", self.n_classes));
+                        }
+                    }
+                    Task::Regression => {
+                        s.targets.as_ref().ok_or_else(|| format!("{split}[{i}]: missing targets"))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A dataset restricted to the first `n_train`/`n_test` samples —
+    /// used for calibration subsets during sensitivity analysis.
+    pub fn head(&self, n_train: usize, n_test: usize) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            task: self.task,
+            train: self.train.iter().take(n_train).cloned().collect(),
+            test: self.test.iter().take(n_test).cloned().collect(),
+            input_dim: self.input_dim,
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            task: Task::Classification,
+            train: vec![TimeSeries::labeled(Mat::zeros(4, 2), 0)],
+            test: vec![TimeSeries::labeled(Mat::zeros(4, 2), 1)],
+            input_dim: 2,
+            n_classes: 2,
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_bad_label() {
+        let mut d = tiny();
+        d.test[0].label = Some(9);
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_dim() {
+        let mut d = tiny();
+        d.input_dim = 3;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn head_truncates() {
+        let d = tiny();
+        let h = d.head(1, 0);
+        assert_eq!(h.train.len(), 1);
+        assert_eq!(h.test.len(), 0);
+    }
+}

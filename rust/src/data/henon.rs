@@ -1,0 +1,103 @@
+//! HENON benchmark — one-step-ahead prediction of the Hénon map (regression).
+//!
+//! Standard chaotic map: `x_{n+1} = 1 − a·x_n² + y_n`, `y_{n+1} = b·x_n`
+//! with a = 1.4, b = 0.3. Input at step t is `x_t`, target is `x_{t+1}`.
+//! Table I: S_length = 5000 total, T_train = 4000, T_test = 1000, RMSE ≈ 0.27
+//! for the float model (the paper reports "0.27%" — we track plain RMSE).
+
+use super::{Dataset, Task, TimeSeries};
+use crate::linalg::Mat;
+use crate::rng::{Pcg64, Rng};
+
+const A: f64 = 1.4;
+const B: f64 = 0.3;
+
+/// Generate the Hénon trajectory of length `n` after a washout of 1000 steps.
+/// Seed perturbs the initial condition (stays on the attractor).
+pub fn trajectory(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed(seed);
+    let mut x = 0.1 + 0.01 * rng.next_f64();
+    let mut y = 0.1 + 0.01 * rng.next_f64();
+    // Washout onto the attractor.
+    for _ in 0..1000 {
+        let nx = 1.0 - A * x * x + y;
+        let ny = B * x;
+        x = nx;
+        y = ny;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(x);
+        let nx = 1.0 - A * x * x + y;
+        let ny = B * x;
+        x = nx;
+        y = ny;
+    }
+    out
+}
+
+/// Paper-sized HENON dataset (4000 train / 1000 test steps).
+pub fn henon(seed: u64) -> Dataset {
+    sized(seed, 4000, 1000)
+}
+
+/// HENON with explicit train/test step counts.
+pub fn sized(seed: u64, t_train: usize, t_test: usize) -> Dataset {
+    let total = t_train + t_test + 1; // +1 so the last step has a target
+    let traj = trajectory(total, seed);
+    let make = |lo: usize, hi: usize| {
+        let t = hi - lo;
+        let inputs = Mat::from_fn(t, 1, |i, _| traj[lo + i]);
+        let targets = Mat::from_fn(t, 1, |i, _| traj[lo + i + 1]);
+        TimeSeries::with_targets(inputs, targets)
+    };
+    Dataset {
+        name: "HENON".into(),
+        task: Task::Regression,
+        train: vec![make(0, t_train)],
+        test: vec![make(t_train, t_train + t_test)],
+        input_dim: 1,
+        n_classes: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectory_is_on_attractor() {
+        let t = trajectory(2000, 0);
+        // Hénon attractor x-range is roughly [-1.285, 1.273].
+        assert!(t.iter().all(|&x| x.abs() < 1.5), "diverged");
+        // and is genuinely chaotic (not a fixed point / short cycle)
+        let var = {
+            let m = t.iter().sum::<f64>() / t.len() as f64;
+            t.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / t.len() as f64
+        };
+        assert!(var > 0.1, "var={var}");
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let d = sized(3, 100, 50);
+        let tr = &d.train[0];
+        let inputs = tr.inputs.as_slice();
+        let targets = tr.targets.as_ref().unwrap().as_slice();
+        for i in 0..inputs.len() - 1 {
+            assert_eq!(targets[i], inputs[i + 1]);
+        }
+        // Test split continues the same trajectory.
+        let te = &d.test[0];
+        assert_eq!(
+            tr.targets.as_ref().unwrap().as_slice()[99],
+            te.inputs.as_slice()[0]
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(trajectory(50, 7), trajectory(50, 7));
+        assert_ne!(trajectory(50, 7), trajectory(50, 8));
+    }
+}

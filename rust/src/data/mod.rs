@@ -1,0 +1,106 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on three time-series benchmarks (Table I):
+//! MELBORN (classification, S=24), PEN (classification, 10 classes, S=8) and
+//! HENON (regression, one-step-ahead prediction of the Hénon map).
+//! The original MELBORN/PEN corpora are not redistributable, so this module
+//! synthesizes equivalents with the same dimensions, splits and difficulty
+//! (see DESIGN.md §5); HENON is the exact standard map.
+
+mod dataset;
+mod henon;
+mod melborn;
+mod pen;
+mod csv;
+
+pub use csv::{load_csv, save_csv};
+pub use dataset::{Dataset, Task, TimeSeries};
+pub use henon::henon;
+pub use melborn::melborn;
+pub use pen::pen;
+
+/// Benchmark identifiers matching the paper's Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    Melborn,
+    Pen,
+    Henon,
+}
+
+impl Benchmark {
+    /// All paper benchmarks.
+    pub const ALL: [Benchmark; 3] = [Benchmark::Melborn, Benchmark::Pen, Benchmark::Henon];
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "melborn" | "melbourne" => Some(Self::Melborn),
+            "pen" | "pendigits" => Some(Self::Pen),
+            "henon" => Some(Self::Henon),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Melborn => "MELBORN",
+            Self::Pen => "PEN",
+            Self::Henon => "HENON",
+        }
+    }
+
+    /// Generate the benchmark dataset with the paper's Table I dimensions.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        match self {
+            Self::Melborn => melborn(seed),
+            Self::Pen => pen(seed),
+            Self::Henon => henon(seed),
+        }
+    }
+
+    /// Generate a reduced-size variant for fast tests / default bench runs.
+    pub fn generate_small(&self, seed: u64) -> Dataset {
+        match self {
+            Self::Melborn => melborn::sized(seed, 200, 300),
+            Self::Pen => pen::sized(seed, 400, 300),
+            Self::Henon => henon::sized(seed, 600, 200),
+        }
+    }
+}
+
+// Re-export generator submodule fns with explicit sizes.
+pub mod generators {
+    pub use super::henon::sized as henon_sized;
+    pub use super::melborn::sized as melborn_sized;
+    pub use super::pen::sized as pen_sized;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Benchmark::parse("MELBORN"), Some(Benchmark::Melborn));
+        assert_eq!(Benchmark::parse("pen"), Some(Benchmark::Pen));
+        assert_eq!(Benchmark::parse("Henon"), Some(Benchmark::Henon));
+        assert_eq!(Benchmark::parse("mnist"), None);
+    }
+
+    #[test]
+    fn table1_dimensions() {
+        let m = melborn(1);
+        assert_eq!(m.train.len(), 1194);
+        assert_eq!(m.test.len(), 2439);
+        assert_eq!(m.train[0].inputs.rows(), 24);
+        let p = pen(1);
+        assert_eq!(p.train.len(), 7494);
+        assert_eq!(p.test.len(), 3498);
+        assert_eq!(p.train[0].inputs.rows(), 8);
+        assert_eq!(p.n_classes, 10);
+        let h = henon(1);
+        assert_eq!(h.train.len(), 1);
+        assert_eq!(h.train[0].inputs.rows(), 4000);
+        assert_eq!(h.test[0].inputs.rows(), 1000);
+    }
+}

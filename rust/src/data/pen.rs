@@ -1,0 +1,126 @@
+//! PEN benchmark — synthetic stand-in for pen-digit trajectory classification
+//! (Table I: 10 classes, S=8, 7494 train / 3498 test, float baseline ≈ 86.3%).
+//!
+//! Each digit class is an 8-point prototype stroke in the unit square
+//! (down-sampled digit shapes); samples are affine-perturbed (scale, rotation,
+//! translation) plus point jitter so classes overlap enough to land near the
+//! paper's ~86% ESN accuracy. Input dim is 2 (x, y), matching UCI PenDigits'
+//! 8-resampled-point variant.
+
+use super::{Dataset, Task, TimeSeries};
+use crate::linalg::Mat;
+use crate::rng::{Pcg64, Rng};
+
+const S_LEN: usize = 8;
+
+/// 8-point (x, y) prototype strokes, one per digit 0–9, in [0,1]².
+/// Hand-laid to be mutually distinct but with natural confusions (1/7, 3/8…).
+const PROTOS: [[(f64, f64); S_LEN]; 10] = [
+    // 0: closed oval
+    [(0.5, 0.95), (0.15, 0.75), (0.1, 0.35), (0.35, 0.05), (0.65, 0.05), (0.9, 0.35), (0.85, 0.75), (0.5, 0.95)],
+    // 1: vertical stroke
+    [(0.45, 0.95), (0.5, 0.8), (0.5, 0.65), (0.5, 0.5), (0.5, 0.35), (0.5, 0.2), (0.5, 0.1), (0.55, 0.0)],
+    // 2: top curve then base sweep
+    [(0.15, 0.8), (0.4, 0.95), (0.75, 0.85), (0.8, 0.6), (0.5, 0.4), (0.2, 0.15), (0.5, 0.1), (0.9, 0.1)],
+    // 3: double bump right side
+    [(0.2, 0.9), (0.6, 0.95), (0.8, 0.75), (0.5, 0.55), (0.8, 0.4), (0.75, 0.15), (0.45, 0.05), (0.15, 0.15)],
+    // 4: down-diagonal, crossbar, vertical
+    [(0.6, 0.95), (0.35, 0.7), (0.15, 0.45), (0.45, 0.45), (0.8, 0.45), (0.65, 0.7), (0.65, 0.3), (0.65, 0.05)],
+    // 5: top bar, left drop, bottom bowl
+    [(0.85, 0.95), (0.3, 0.95), (0.25, 0.6), (0.55, 0.6), (0.85, 0.45), (0.8, 0.15), (0.45, 0.05), (0.15, 0.15)],
+    // 6: sweep down into lower loop
+    [(0.75, 0.95), (0.4, 0.75), (0.2, 0.45), (0.25, 0.15), (0.55, 0.05), (0.8, 0.2), (0.7, 0.45), (0.35, 0.4)],
+    // 7: top bar then diagonal
+    [(0.15, 0.9), (0.5, 0.92), (0.85, 0.95), (0.7, 0.7), (0.55, 0.5), (0.45, 0.3), (0.35, 0.15), (0.3, 0.0)],
+    // 8: figure-eight
+    [(0.5, 0.95), (0.2, 0.75), (0.5, 0.55), (0.8, 0.75), (0.5, 0.95), (0.2, 0.25), (0.5, 0.05), (0.8, 0.25)],
+    // 9: upper loop then tail
+    [(0.7, 0.6), (0.4, 0.8), (0.3, 0.95), (0.6, 0.95), (0.75, 0.75), (0.7, 0.45), (0.65, 0.25), (0.6, 0.0)],
+];
+
+fn sample(rng: &mut Pcg64, class: usize) -> TimeSeries {
+    let scale = rng.uniform(0.85, 1.15);
+    let theta = rng.uniform(-0.22, 0.22);
+    let (dx, dy) = (rng.uniform(-0.08, 0.08), rng.uniform(-0.08, 0.08));
+    let (c, s) = (theta.cos(), theta.sin());
+    let jitter = 0.085;
+    let proto = &PROTOS[class];
+    let inputs = Mat::from_fn(S_LEN, 2, |i, j| {
+        let (px, py) = proto[i];
+        // center, rotate+scale, translate back
+        let (x0, y0) = (px - 0.5, py - 0.5);
+        let x = scale * (c * x0 - s * y0) + 0.5 + dx + jitter * rng.normal();
+        let y = scale * (s * x0 + c * y0) + 0.5 + dy + jitter * rng.normal();
+        // map to [-1, 1] for the reservoir
+        let v = if j == 0 { x } else { y };
+        (2.0 * v - 1.0).clamp(-1.5, 1.5)
+    });
+    TimeSeries::labeled(inputs, class)
+}
+
+/// Paper-sized PEN dataset.
+pub fn pen(seed: u64) -> Dataset {
+    sized(seed, 7494, 3498)
+}
+
+/// PEN with explicit split sizes.
+pub fn sized(seed: u64, n_train: usize, n_test: usize) -> Dataset {
+    let mut rng = Pcg64::seed(seed ^ 0x50454E); // "PEN"
+    let gen_split = |rng: &mut Pcg64, n: usize| {
+        (0..n).map(|i| sample(rng, i % 10)).collect::<Vec<_>>()
+    };
+    let mut train = gen_split(&mut rng, n_train);
+    let mut test = gen_split(&mut rng, n_test);
+    rng.shuffle(&mut train);
+    rng.shuffle(&mut test);
+    Dataset {
+        name: "PEN".into(),
+        task: Task::Classification,
+        train,
+        test,
+        input_dim: 2,
+        n_classes: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_all_classes() {
+        let d = sized(1, 200, 100);
+        assert!(d.validate().is_ok());
+        assert_eq!(d.input_dim, 2);
+        assert_eq!(d.train[0].inputs.rows(), 8);
+        for c in 0..10 {
+            assert!(d.train.iter().any(|s| s.label == Some(c)), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn prototypes_are_distinct() {
+        // Pairwise mean point distance between prototypes is bounded below.
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f64 = (0..S_LEN)
+                    .map(|i| {
+                        let (ax, ay) = PROTOS[a][i];
+                        let (bx, by) = PROTOS[b][i];
+                        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+                    })
+                    .sum::<f64>()
+                    / S_LEN as f64;
+                assert!(d > 0.08, "prototypes {a},{b} too close ({d})");
+            }
+        }
+    }
+
+    #[test]
+    fn inputs_are_bounded() {
+        let d = sized(2, 50, 0);
+        for s in &d.train {
+            assert!(s.inputs.as_slice().iter().all(|x| x.abs() <= 1.5));
+        }
+    }
+}

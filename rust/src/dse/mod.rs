@@ -1,0 +1,172 @@
+//! Design-space exploration (Algorithm 1): iterate quantization bit-widths
+//! `Q` and pruning rates `P`, producing the accelerator configuration set
+//! `S = {s(q, p)}` that the hardware-realization stage consumes.
+//!
+//! For each `q ∈ Q`: quantize → baseline `Perf^base(q)` → score all weights
+//! (sensitivity by default, any [`Method`] for the Fig. 3 comparison) → for
+//! each `p ∈ P`: prune the lowest `p%`, measure `Perf^{(p,q)}`.
+
+use std::time::Instant;
+
+use crate::data::{Dataset, TimeSeries};
+use crate::esn::{EsnModel, Perf};
+use crate::hw::{self, HwReport, Topology};
+use crate::pruning::{prune_with_compensation, Method};
+use crate::quant::{QuantEsn, QuantSpec};
+
+/// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
+#[derive(Clone, Debug)]
+pub struct DseRequest {
+    pub q_levels: Vec<u8>,
+    pub pruning_rates: Vec<f64>,
+    pub method: Method,
+    /// Calibration samples for scoring (subset of train; the test split is
+    /// only used for the reported `Perf`).
+    pub max_calib: usize,
+    pub seed: u64,
+}
+
+impl Default for DseRequest {
+    fn default() -> Self {
+        Self {
+            q_levels: vec![4, 6, 8],
+            pruning_rates: vec![15.0, 30.0, 45.0, 60.0, 75.0, 90.0],
+            method: Method::Sensitivity,
+            max_calib: 192,
+            seed: 7,
+        }
+    }
+}
+
+/// One accelerator configuration `s(q, p)` (Algorithm 1 line 12).
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub q: u8,
+    /// Pruning rate in percent (0 = unpruned baseline).
+    pub p: f64,
+    pub method: Method,
+    pub perf: Perf,
+    /// Baseline (unpruned) performance at this q — `Perf^base(q)`.
+    pub perf_base: Perf,
+    pub model: QuantEsn,
+}
+
+/// DSE result set plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    pub configs: Vec<AccelConfig>,
+    pub scoring_seconds: f64,
+}
+
+/// Run Algorithm 1. `model` is the trained float model from stage 1.
+pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult {
+    let calib = calibration_split(data, req.max_calib);
+    let mut configs = Vec::new();
+    let mut scoring_seconds = 0.0;
+    for &q in &req.q_levels {
+        // Lines 3–4: quantize, baseline performance.
+        let qmodel = QuantEsn::from_model(model, data, QuantSpec::bits(q));
+        let perf_base = qmodel.evaluate(data);
+        configs.push(AccelConfig {
+            q,
+            p: 0.0,
+            method: req.method,
+            perf: perf_base,
+            perf_base,
+            model: qmodel.clone(),
+        });
+        // Lines 5–8: score all weights.
+        let t0 = Instant::now();
+        let pruner = req.method.pruner(req.seed);
+        let scores = pruner.scores(&qmodel, calib);
+        scoring_seconds += t0.elapsed().as_secs_f64();
+        // Lines 9–13: prune at each rate (with synthesis-time readout
+        // constant refolding), measure.
+        for &p in &req.pruning_rates {
+            let pruned = prune_with_compensation(&qmodel, &scores, p, calib);
+            let perf = pruned.evaluate(data);
+            configs.push(AccelConfig { q, p, method: req.method, perf, perf_base, model: pruned });
+        }
+    }
+    DseResult { configs, scoring_seconds }
+}
+
+/// Hardware evaluation of every configuration in a DSE result
+/// (the hardware-realization stage of Fig. 2, feeding Tables II/III).
+pub fn realize_hw(result: &DseResult, data: &Dataset) -> Vec<(AccelConfig, HwReport)> {
+    let seq_len = data.test.first().map(|s| s.inputs.rows()).unwrap_or(1);
+    let topo = Topology::for_task(data.task, seq_len);
+    result
+        .configs
+        .iter()
+        .map(|c| (c.clone(), hw::evaluate(&c.model, topo, &data.test)))
+        .collect()
+}
+
+/// Calibration subset: the scoring stage must not see the test split.
+pub fn calibration_split(data: &Dataset, max: usize) -> &[TimeSeries] {
+    let n = if max == 0 { data.train.len() } else { data.train.len().min(max) };
+    &data.train[..n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{ReadoutSpec, Reservoir, ReservoirSpec};
+
+    fn setup() -> (EsnModel, Dataset) {
+        let data = melborn_sized(1, 80, 60);
+        let res = Reservoir::init(ReservoirSpec::paper(20, 1, 80, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        (m, data)
+    }
+
+    #[test]
+    fn explore_produces_full_grid() {
+        let (m, data) = setup();
+        let req = DseRequest {
+            q_levels: vec![4, 6],
+            pruning_rates: vec![30.0, 60.0],
+            method: Method::Random,
+            max_calib: 40,
+            seed: 1,
+        };
+        let r = explore(&m, &data, &req);
+        // (1 unpruned + 2 rates) × 2 q-levels
+        assert_eq!(r.configs.len(), 6);
+        for c in &r.configs {
+            if c.p == 0.0 {
+                assert_eq!(c.perf.value(), c.perf_base.value());
+            } else {
+                let expect =
+                    ((c.p / 100.0) * c.model.n_weights() as f64).floor() as usize;
+                assert_eq!(c.model.n_weights() - c.model.live_weights() >= expect, true);
+            }
+        }
+    }
+
+    #[test]
+    fn hw_realization_covers_all_configs() {
+        let (m, data) = setup();
+        let req = DseRequest {
+            q_levels: vec![4],
+            pruning_rates: vec![50.0],
+            method: Method::Random,
+            max_calib: 20,
+            seed: 2,
+        };
+        let r = explore(&m, &data, &req);
+        let hw = realize_hw(&r, &data);
+        assert_eq!(hw.len(), 2);
+        // pruned config must not cost more than unpruned
+        assert!(hw[1].1.luts <= hw[0].1.luts);
+    }
+
+    #[test]
+    fn calibration_never_includes_test() {
+        let (_, data) = setup();
+        let c = calibration_split(&data, 10);
+        assert_eq!(c.len(), 10);
+    }
+}

@@ -1,0 +1,80 @@
+//! Task metrics: classification accuracy, RMSE/NRMSE for regression.
+
+/// Fraction of correct predictions.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mse: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+/// RMSE normalized by the standard deviation of the truth.
+pub fn nrmse(pred: &[f64], truth: &[f64]) -> f64 {
+    let r = rmse(pred, truth);
+    let mean = truth.iter().sum::<f64>() / truth.len().max(1) as f64;
+    let var = truth.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / truth.len().max(1) as f64;
+    if var <= 0.0 {
+        return r;
+    }
+    r / var.sqrt()
+}
+
+/// Argmax of a slice (ties broken toward the lower index).
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn rmse_known() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 4.0]) - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[3.0], &[3.0]), 0.0);
+    }
+
+    #[test]
+    fn nrmse_scale_free() {
+        let truth = [0.0, 1.0, 2.0, 3.0];
+        let pred = [0.1, 1.1, 2.1, 3.1];
+        let t2: Vec<f64> = truth.iter().map(|x| x * 10.0).collect();
+        let p2: Vec<f64> = pred.iter().map(|x| x * 10.0).collect();
+        assert!((nrmse(&pred, &truth) - nrmse(&p2, &t2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Reservoir computing (echo-state network) core — Eq. 1 / Eq. 2 of the paper.
+//!
+//! `s(t) = (1−lr)·s(t−1) + lr · f(W_in u(t) + W_r s(t−1))`,  `y(t) = W_out s(t)`
+//! with `f = tanh` for the float model (the streamlined integer model in
+//! [`crate::quant`] uses HardTanh thresholds). Only `W_out` is trained (ridge).
+
+mod reservoir;
+mod readout;
+mod model;
+pub mod metrics;
+
+pub use model::{EsnModel, Features};
+pub use readout::{train_readout, ReadoutSpec};
+pub use reservoir::{Activation, Reservoir, ReservoirSpec};
+
+/// Task performance wrapper: accuracy for classification (higher is better),
+/// RMSE for regression (lower is better). `score()` is the canonical
+/// "bigger = better" form used for ranking in hyperopt and DSE.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Perf {
+    Accuracy(f64),
+    Rmse(f64),
+}
+
+impl Perf {
+    /// Raw metric value.
+    pub fn value(&self) -> f64 {
+        match *self {
+            Perf::Accuracy(a) => a,
+            Perf::Rmse(r) => r,
+        }
+    }
+
+    /// Monotone "higher is better" score.
+    pub fn score(&self) -> f64 {
+        match *self {
+            Perf::Accuracy(a) => a,
+            Perf::Rmse(r) => -r,
+        }
+    }
+
+    /// |self − other| in raw metric units — the deviation used by Eq. 4.
+    pub fn deviation(&self, other: &Perf) -> f64 {
+        (self.value() - other.value()).abs()
+    }
+
+    pub fn is_accuracy(&self) -> bool {
+        matches!(self, Perf::Accuracy(_))
+    }
+}
+
+impl std::fmt::Display for Perf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Perf::Accuracy(a) => write!(f, "acc={:.4}", a),
+            Perf::Rmse(r) => write!(f, "rmse={:.4}", r),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_ordering() {
+        assert!(Perf::Accuracy(0.9).score() > Perf::Accuracy(0.5).score());
+        assert!(Perf::Rmse(0.1).score() > Perf::Rmse(0.5).score());
+        assert!((Perf::Rmse(0.1).deviation(&Perf::Rmse(0.4)) - 0.3).abs() < 1e-12);
+    }
+}

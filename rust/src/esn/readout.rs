@@ -1,0 +1,105 @@
+//! Readout training (Eq. 2): ridge regression from reservoir features to
+//! targets. Only this layer is trained, per the RC paradigm.
+
+use crate::data::{Dataset, Task};
+use crate::linalg::{ridge_solve, Mat};
+
+use super::model::Features;
+use super::Reservoir;
+
+/// Readout configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadoutSpec {
+    /// Ridge coefficient λ (Table I).
+    pub lambda: f64,
+    /// Steps discarded at the start of each regression sequence (washout).
+    pub washout: usize,
+    /// How sequence states are pooled into classification features.
+    pub features: Features,
+}
+
+impl Default for ReadoutSpec {
+    fn default() -> Self {
+        Self { lambda: 1e-8, washout: 0, features: Features::MeanState }
+    }
+}
+
+/// Train `W_out` on a dataset given the (fixed) reservoir.
+///
+/// Classification: one pooled feature vector (+bias) per sequence, one-hot
+/// targets, readout is (classes × n+1).
+/// Regression: per-step states (+bias) after washout, readout is (targets × n+1).
+pub fn train_readout(res: &Reservoir, data: &Dataset, spec: &ReadoutSpec) -> Mat {
+    let n = res.spec.n;
+    match data.task {
+        Task::Classification => {
+            let m = data.train.len();
+            let mut x = Mat::zeros(m, n + 1);
+            let mut y = Mat::zeros(m, data.n_classes);
+            for (i, s) in data.train.iter().enumerate() {
+                let states = res.run(&s.inputs);
+                let feat = spec.features.pool(&states);
+                x.row_mut(i)[..n].copy_from_slice(&feat);
+                x.row_mut(i)[n] = 1.0; // bias
+                y[(i, s.label.expect("classification sample without label"))] = 1.0;
+            }
+            ridge_solve(&x, &y, spec.lambda)
+        }
+        Task::Regression => {
+            let total: usize = data
+                .train
+                .iter()
+                .map(|s| s.len().saturating_sub(spec.washout))
+                .sum();
+            let tdim = data.n_classes;
+            let mut x = Mat::zeros(total, n + 1);
+            let mut y = Mat::zeros(total, tdim);
+            let mut row = 0;
+            for s in &data.train {
+                let states = res.run(&s.inputs);
+                let targets = s.targets.as_ref().expect("regression sample without targets");
+                for t in spec.washout..s.len() {
+                    x.row_mut(row)[..n].copy_from_slice(states.row(t));
+                    x.row_mut(row)[n] = 1.0;
+                    y.row_mut(row).copy_from_slice(targets.row(t));
+                    row += 1;
+                }
+            }
+            ridge_solve(&x, &y, spec.lambda)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::henon_sized;
+    use crate::esn::{ReservoirSpec};
+
+    #[test]
+    fn regression_readout_beats_mean_predictor() {
+        let data = henon_sized(1, 500, 200);
+        let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 7));
+        let spec = ReadoutSpec { lambda: 1e-8, washout: 20, features: Features::MeanState };
+        let w = train_readout(&res, &data, &spec);
+        assert_eq!(w.rows(), 1);
+        assert_eq!(w.cols(), 51);
+        // Predict on train tail and compare against predicting the mean.
+        let s = &data.train[0];
+        let states = res.run(&s.inputs);
+        let targets = s.targets.as_ref().unwrap();
+        let mut se_model = 0.0;
+        let mut se_mean = 0.0;
+        let mean_t: f64 =
+            targets.as_slice().iter().sum::<f64>() / targets.as_slice().len() as f64;
+        for t in 20..s.len() {
+            let mut yhat = w[(0, 50)];
+            for j in 0..50 {
+                yhat += w[(0, j)] * states[(t, j)];
+            }
+            se_model += (yhat - targets[(t, 0)]).powi(2);
+            se_mean += (mean_t - targets[(t, 0)]).powi(2);
+        }
+        assert!(se_model < 0.2 * se_mean, "model {se_model} vs mean {se_mean}");
+    }
+}

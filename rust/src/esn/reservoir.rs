@@ -1,0 +1,197 @@
+//! Reservoir construction and float state evolution (Eq. 1).
+
+use crate::linalg::{spectral_radius, Csr, Mat};
+use crate::rng::{Pcg64, Rng};
+
+/// Reservoir nonlinearity `f` in Eq. 1. The paper's accelerator flow uses
+/// HardTanh (the streamline stage converts it to threshold logic); classic
+/// ESNs use tanh — both are supported, HardTanh is the paper default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Tanh,
+    HardTanh,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Activation::Tanh => x.tanh(),
+            Activation::HardTanh => x.clamp(-1.0, 1.0),
+        }
+    }
+}
+
+/// Hyperparameters of a reservoir (Fig. 2 stage 1 / Table I).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReservoirSpec {
+    /// Number of reservoir neurons (Table I: N = 50).
+    pub n: usize,
+    /// Input dimensionality.
+    pub input_dim: usize,
+    /// Number of nonzero recurrent connections (Table I: ncrl = 250).
+    pub ncrl: usize,
+    /// Spectral radius the recurrent matrix is rescaled to.
+    pub sr: f64,
+    /// Leaking rate (Table I: lr = 1 for all benchmarks).
+    pub lr: f64,
+    /// Input weight scale.
+    pub input_scale: f64,
+    /// Nonlinearity `f` (HardTanh for the paper's accelerator flow).
+    pub act: Activation,
+    /// RNG seed for W_in / W_r.
+    pub seed: u64,
+}
+
+impl ReservoirSpec {
+    /// Paper-default spec for a given benchmark geometry (HardTanh, since the
+    /// streamlined accelerator realizes HardTanh as threshold logic).
+    pub fn paper(n: usize, input_dim: usize, ncrl: usize, sr: f64, lr: f64, seed: u64) -> Self {
+        Self { n, input_dim, ncrl, sr, lr, input_scale: 1.0, act: Activation::HardTanh, seed }
+    }
+}
+
+/// The fixed random part of the ESN: `W_in` (dense) and `W_r` (sparse CSR).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    pub spec: ReservoirSpec,
+    /// Input weights, (n × input_dim), uniform in ±input_scale.
+    pub w_in: Mat,
+    /// Recurrent weights, sparse with exactly `ncrl` nonzeros, rescaled to `sr`.
+    pub w_r: Csr,
+}
+
+impl Reservoir {
+    /// Random initialization per the paper: `W_in`, `W_r` random, fixed; `W_r`
+    /// has exactly `ncrl` nonzeros and is rescaled to spectral radius `sr`.
+    pub fn init(spec: ReservoirSpec) -> Self {
+        assert!(spec.n > 0 && spec.input_dim > 0);
+        assert!(spec.ncrl <= spec.n * spec.n, "ncrl > n²");
+        assert!((0.0..=1.0).contains(&spec.lr), "leak rate in [0,1]");
+        let mut rng = Pcg64::seed(spec.seed);
+        let w_in = Mat::from_fn(spec.n, spec.input_dim, |_, _| {
+            rng.uniform(-spec.input_scale, spec.input_scale)
+        });
+        // Pick ncrl distinct positions in the n×n grid, uniform weights.
+        let pos = rng.sample_indices(spec.n * spec.n, spec.ncrl);
+        let triplets: Vec<(usize, usize, f64)> = pos
+            .into_iter()
+            .map(|p| {
+                let (i, j) = (p / spec.n, p % spec.n);
+                // Avoid exact zeros so nnz stays = ncrl.
+                let mut v = rng.uniform(-1.0, 1.0);
+                if v == 0.0 {
+                    v = 0.5;
+                }
+                (i, j, v)
+            })
+            .collect();
+        let mut w_r = Csr::from_triplets(spec.n, spec.n, &triplets);
+        // Rescale to the requested spectral radius.
+        let rho = spectral_radius(&w_r, 300, spec.seed ^ 0x5EED);
+        if rho > 1e-12 && spec.sr > 0.0 {
+            w_r.scale(spec.sr / rho);
+        }
+        Self { spec, w_in, w_r }
+    }
+
+    /// One float state update (Eq. 1) into `s` in place.
+    /// `pre` is a scratch buffer of length `n` for the pre-activation.
+    #[inline]
+    pub fn step(&self, u: &[f64], s: &mut [f64], pre: &mut [f64]) {
+        debug_assert_eq!(u.len(), self.spec.input_dim);
+        debug_assert_eq!(s.len(), self.spec.n);
+        // pre = W_r s
+        self.w_r.matvec_into(s, pre);
+        // pre += W_in u
+        for i in 0..self.spec.n {
+            let mut acc = pre[i];
+            let wrow = self.w_in.row(i);
+            for (k, &uk) in u.iter().enumerate() {
+                acc += wrow[k] * uk;
+            }
+            pre[i] = acc;
+        }
+        let lr = self.spec.lr;
+        let act = self.spec.act;
+        for i in 0..self.spec.n {
+            s[i] = (1.0 - lr) * s[i] + lr * act.apply(pre[i]);
+        }
+    }
+
+    /// Run a sequence from zero state; returns the (T × n) state trajectory.
+    pub fn run(&self, inputs: &Mat) -> Mat {
+        let t = inputs.rows();
+        let mut states = Mat::zeros(t, self.spec.n);
+        let mut s = vec![0.0; self.spec.n];
+        let mut pre = vec![0.0; self.spec.n];
+        for step in 0..t {
+            self.step(inputs.row(step), &mut s, &mut pre);
+            states.row_mut(step).copy_from_slice(&s);
+        }
+        states
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spectral_radius;
+
+    fn spec() -> ReservoirSpec {
+        ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 42)
+    }
+
+    #[test]
+    fn init_respects_spec() {
+        let r = Reservoir::init(spec());
+        assert_eq!(r.w_r.nnz(), 250);
+        assert_eq!(r.w_in.rows(), 50);
+        let rho = spectral_radius(&r.w_r, 400, 1);
+        assert!((rho - 0.9).abs() < 0.02, "rho={rho}");
+    }
+
+    #[test]
+    fn echo_state_property_fading_memory() {
+        // Two different initial states converge under the same input drive
+        // when sr < 1 (echo state property).
+        let r = Reservoir::init(spec());
+        let mut s1 = vec![0.0; 50];
+        let mut s2 = vec![0.5; 50];
+        let mut pre = vec![0.0; 50];
+        let u = [0.3];
+        for _ in 0..200 {
+            r.step(&u, &mut s1, &mut pre);
+            r.step(&u, &mut s2, &mut pre);
+        }
+        let diff: f64 = s1.iter().zip(&s2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff < 1e-6, "diff={diff}");
+    }
+
+    #[test]
+    fn states_bounded_by_tanh() {
+        let r = Reservoir::init(spec());
+        let inputs = Mat::from_fn(50, 1, |i, _| ((i as f64) * 0.7).sin() * 2.0);
+        let states = r.run(&inputs);
+        assert!(states.as_slice().iter().all(|&x| x.abs() <= 1.0));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = Reservoir::init(spec());
+        let b = Reservoir::init(spec());
+        assert_eq!(a.w_r, b.w_r);
+        assert_eq!(a.w_in.as_slice(), b.w_in.as_slice());
+    }
+
+    #[test]
+    fn leak_rate_zero_freezes_state() {
+        let mut sp = spec();
+        sp.lr = 0.0;
+        let r = Reservoir::init(sp);
+        let mut s = vec![0.25; 50];
+        let mut pre = vec![0.0; 50];
+        r.step(&[1.0], &mut s, &mut pre);
+        assert!(s.iter().all(|&x| (x - 0.25).abs() < 1e-12));
+    }
+}

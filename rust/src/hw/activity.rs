@@ -1,0 +1,120 @@
+//! Switching-activity extraction — the SAIF-equivalent of the paper's flow.
+//!
+//! The paper simulates each synthesized benchmark, dumps SAIF toggle data and
+//! feeds it to Vivado's power estimator. Here the bit-exact integer simulator
+//! plays the testbench: we run the accelerator model over representative
+//! stimulus and count per-neuron state-bit toggles between consecutive steps,
+//! plus input-bit toggles.
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+
+/// Per-net toggle statistics (mean toggle probability per bit per step).
+#[derive(Clone, Debug)]
+pub struct ActivityProfile {
+    /// Per-neuron mean state-bit toggle rate, length n.
+    pub neuron_toggle: Vec<f64>,
+    /// Mean input-bit toggle rate.
+    pub input_toggle: f64,
+    /// Grand mean over all neurons (convenience).
+    pub mean_toggle: f64,
+}
+
+/// Simulate `model` over `stimulus` and extract toggle rates.
+/// `stimulus` is truncated to a bounded number of steps for speed.
+pub fn toggle_rates(model: &QuantEsn, stimulus: &[TimeSeries]) -> ActivityProfile {
+    const MAX_STEPS: usize = 4096;
+    let n = model.n;
+    let q = model.q as u32;
+    let mask = (1u64 << q) - 1;
+    let mut neuron_flips = vec![0u64; n];
+    let mut input_flips = 0u64;
+    let mut input_bits = 0u64;
+    let mut steps = 0usize;
+
+    // Streaming simulation with reused double buffers (§Perf iteration 3):
+    // consecutive states are all we need, so no T×n materialization.
+    let mut s_prev = vec![0i64; n];
+    let mut s_next = vec![0i64; n];
+    let mut u_prev = vec![0i64; model.input_dim];
+    let mut u_cur = vec![0i64; model.input_dim];
+    'outer: for s in stimulus {
+        let t = s.inputs.rows();
+        s_prev.iter_mut().for_each(|v| *v = 0);
+        for step in 0..t {
+            let urow = s.inputs.row(step);
+            for k in 0..model.input_dim {
+                u_cur[k] = model.qz_u.quantize(urow[k]);
+            }
+            if step > 0 {
+                for k in 0..model.input_dim {
+                    input_flips +=
+                        (((u_cur[k] as u64) ^ (u_prev[k] as u64)) & mask).count_ones() as u64;
+                    input_bits += q as u64;
+                }
+            }
+            std::mem::swap(&mut u_prev, &mut u_cur);
+            model.step_int(&u_prev, &s_prev, &mut s_next);
+            if step > 0 {
+                for j in 0..n {
+                    neuron_flips[j] +=
+                        (((s_next[j] as u64) ^ (s_prev[j] as u64)) & mask).count_ones() as u64;
+                }
+            }
+            std::mem::swap(&mut s_prev, &mut s_next);
+            steps += 1;
+            if steps >= MAX_STEPS {
+                break 'outer;
+            }
+        }
+    }
+
+    let denom = (steps.max(2) - 1) as f64 * q as f64;
+    let neuron_toggle: Vec<f64> =
+        neuron_flips.iter().map(|&f| f as f64 / denom).collect();
+    let mean_toggle = neuron_toggle.iter().sum::<f64>() / n.max(1) as f64;
+    let input_toggle = if input_bits > 0 { input_flips as f64 / input_bits as f64 } else { 0.0 };
+    ActivityProfile { neuron_toggle, input_toggle, mean_toggle }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::henon_sized;
+    use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::{QuantEsn, QuantSpec};
+
+    #[test]
+    fn toggles_in_unit_range_and_nonzero() {
+        let data = henon_sized(1, 300, 80);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 7));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 20, features: Features::MeanState },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let act = toggle_rates(&qm, &data.test);
+        assert_eq!(act.neuron_toggle.len(), 30);
+        assert!(act.neuron_toggle.iter().all(|&t| (0.0..=1.0).contains(&t)));
+        assert!(act.mean_toggle > 0.0, "a driven reservoir must toggle");
+        assert!(act.input_toggle > 0.0);
+    }
+
+    #[test]
+    fn fully_pruned_model_toggles_less() {
+        let data = henon_sized(1, 300, 80);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 7));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 20, features: Features::MeanState },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let mut pruned = qm.clone();
+        pruned.prune(&(0..pruned.n_weights()).collect::<Vec<_>>());
+        let a = toggle_rates(&qm, &data.test);
+        let b = toggle_rates(&pruned, &data.test);
+        assert!(b.mean_toggle <= a.mean_toggle + 1e-9);
+    }
+}

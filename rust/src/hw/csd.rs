@@ -1,0 +1,96 @@
+//! Canonical signed-digit (CSD) recoding of hardwired constants.
+//!
+//! Direct-logic accelerators implement `x · w` for a known constant `w` as a
+//! network of shifts and adds/subs; CSD recoding minimizes the nonzero digit
+//! count (each nonzero digit beyond the first costs one adder). CSD has no
+//! two adjacent nonzero digits and is the canonical minimal form.
+
+/// CSD digits of `|v|` as (shift, ±1) pairs, most significant last.
+/// `v = sign(v) · Σ d_k·2^k` with `d_k ∈ {−1, 0, +1}`, no adjacent nonzeros.
+pub fn csd_digits(v: i64) -> Vec<(u32, i8)> {
+    let mut x = v.unsigned_abs();
+    let mut out = Vec::new();
+    let mut k = 0u32;
+    while x != 0 {
+        if x & 1 == 1 {
+            // Look at the two LSBs to decide between +1 and −1 (x mod 4).
+            let d: i8 = if x & 3 == 3 { -1 } else { 1 };
+            out.push((k, d));
+            if d == -1 {
+                x += 1; // borrow handled by carry into the next digit
+            } else {
+                x -= 1;
+            }
+        }
+        x >>= 1;
+        k += 1;
+    }
+    out
+}
+
+/// Number of nonzero CSD digits (adder terms) of the constant.
+pub fn csd_nonzero(v: i64) -> usize {
+    csd_digits(v).len()
+}
+
+/// Adder-tree depth of the CSD network: `⌈log2(terms)⌉`.
+pub fn csd_depth(v: i64) -> u32 {
+    let t = csd_nonzero(v);
+    if t <= 1 {
+        0
+    } else {
+        (usize::BITS - (t - 1).leading_zeros()) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode(v: i64) -> i64 {
+        let s = if v < 0 { -1 } else { 1 };
+        s * csd_digits(v).iter().map(|&(k, d)| d as i64 * (1i64 << k)).sum::<i64>()
+    }
+
+    #[test]
+    fn csd_reconstructs_value() {
+        for v in -300i64..=300 {
+            assert_eq!(decode(v), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn no_adjacent_nonzeros() {
+        for v in 1i64..=1000 {
+            let d = csd_digits(v);
+            for w in d.windows(2) {
+                assert!(w[1].0 > w[0].0 + 1, "adjacent digits in {v}: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_counts() {
+        assert_eq!(csd_nonzero(0), 0);
+        assert_eq!(csd_nonzero(1), 1);
+        assert_eq!(csd_nonzero(7), 2); // 8 - 1
+        assert_eq!(csd_nonzero(15), 2); // 16 - 1
+        assert_eq!(csd_nonzero(5), 2);
+        assert_eq!(csd_nonzero(21), 3); // 10101
+    }
+
+    #[test]
+    fn csd_is_minimal_vs_binary() {
+        for v in 1i64..=2000 {
+            assert!(csd_nonzero(v) <= (v as u64).count_ones() as usize);
+        }
+    }
+
+    #[test]
+    fn depth_values() {
+        assert_eq!(csd_depth(0), 0);
+        assert_eq!(csd_depth(2), 0); // single shift
+        assert_eq!(csd_depth(7), 1); // two terms
+        assert_eq!(csd_depth(21), 2); // three terms
+    }
+}

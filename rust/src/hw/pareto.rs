@@ -1,0 +1,91 @@
+//! Pareto-front extraction over DSE results — the decision support the
+//! paper's §III-B motivates ("bounds on hardware resources or bounds on
+//! acceptable degradation").
+
+use crate::dse::AccelConfig;
+
+use super::HwReport;
+
+/// One candidate point: performance score (higher better) vs cost.
+#[derive(Clone, Copy, Debug)]
+pub struct ParetoPoint {
+    pub idx: usize,
+    pub score: f64,
+    pub cost: f64,
+}
+
+/// Indices of the Pareto-optimal configurations (maximize score, minimize
+/// cost). Stable order: ascending cost.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<usize> {
+    let mut sorted: Vec<&ParetoPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(b.score.partial_cmp(&a.score).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_score = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.score > best_score {
+            best_score = p.score;
+            front.push(p.idx);
+        }
+    }
+    front
+}
+
+/// Pareto front of DSE+hw results using PDP as the cost axis.
+pub fn pareto_configs(results: &[(AccelConfig, HwReport)]) -> Vec<usize> {
+    let points: Vec<ParetoPoint> = results
+        .iter()
+        .enumerate()
+        .map(|(i, (c, h))| ParetoPoint { idx: i, score: c.perf.score(), cost: h.pdp_nws })
+        .collect();
+    pareto_front(&points)
+}
+
+/// Cheapest configuration meeting a performance bound, if any
+/// (the "bounds on acceptable degradation" query).
+pub fn cheapest_meeting(
+    results: &[(AccelConfig, HwReport)],
+    min_score: f64,
+) -> Option<usize> {
+    results
+        .iter()
+        .enumerate()
+        .filter(|(_, (c, _))| c.perf.score() >= min_score)
+        .min_by(|(_, (_, a)), (_, (_, b))| a.pdp_nws.partial_cmp(&b.pdp_nws).unwrap())
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(idx: usize, score: f64, cost: f64) -> ParetoPoint {
+        ParetoPoint { idx, score, cost }
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let pts = vec![
+            pt(0, 0.9, 10.0), // good, expensive
+            pt(1, 0.8, 5.0),  // front
+            pt(2, 0.7, 6.0),  // dominated by 1
+            pt(3, 0.5, 1.0),  // cheapest
+        ];
+        assert_eq!(pareto_front(&pts), vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn ties_keep_higher_score() {
+        let pts = vec![pt(0, 0.5, 2.0), pt(1, 0.9, 2.0)];
+        assert_eq!(pareto_front(&pts), vec![1]);
+    }
+
+    #[test]
+    fn empty_front() {
+        assert!(pareto_front(&[]).is_empty());
+    }
+}

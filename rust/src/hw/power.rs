@@ -1,0 +1,86 @@
+//! Power model: dynamic power from toggle-weighted active logic at a fixed
+//! reference clock, plus a static floor. PDP = power × latency, as in
+//! Tables II/III (the paper's accelerators run at a fixed clock; latency is
+//! the combinational cascade through the design).
+
+use crate::quant::QuantEsn;
+
+use super::activity::ActivityProfile;
+use super::cost::ResourceCount;
+use super::Topology;
+
+/// Calibration constants of the power model.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerParams {
+    /// Dynamic energy coefficient: W per toggle-weighted LUT at f_ref.
+    pub w_per_toggled_lut: f64,
+    /// W per FF at f_ref (clock tree + register power, toggle-independent).
+    pub w_per_ff: f64,
+    /// Static power floor share attributed to the design (W).
+    pub w_static: f64,
+    /// Activity normalization: the toggle rate at which a LUT consumes its
+    /// nominal dynamic power.
+    pub toggle_ref: f64,
+}
+
+impl Default for PowerParams {
+    fn default() -> Self {
+        // Calibrated against Tables II/III PDP columns (EXPERIMENTS.md).
+        Self { w_per_toggled_lut: 1.1e-5, w_per_ff: 4.0e-6, w_static: 0.03, toggle_ref: 0.25 }
+    }
+}
+
+impl PowerParams {
+    /// Total power (W) of the design given its resources and activity.
+    pub fn power_w(
+        &self,
+        model: &QuantEsn,
+        topo: Topology,
+        res: &ResourceCount,
+        act: &ActivityProfile,
+    ) -> f64 {
+        // Weight the LUT population by relative switching: reservoir logic
+        // toggles with the neuron states, stage fabric also sees the input
+        // toggle; fold both into a single effective activity factor.
+        let _ = topo;
+        let eff_toggle =
+            (0.8 * act.mean_toggle + 0.2 * act.input_toggle).max(1e-4) / self.toggle_ref;
+        let dynamic = res.luts as f64 * self.w_per_toggled_lut * eff_toggle
+            + res.ffs as f64 * self.w_per_ff;
+        let _ = model;
+        self.w_static + dynamic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn act(mean: f64) -> ActivityProfile {
+        ActivityProfile { neuron_toggle: vec![mean; 4], input_toggle: mean, mean_toggle: mean }
+    }
+
+    #[test]
+    fn more_luts_more_power() {
+        let p = PowerParams::default();
+        let a = act(0.25);
+        let small = ResourceCount { luts: 1000, ffs: 100 };
+        let big = ResourceCount { luts: 50_000, ffs: 500 };
+        // model/topo unused in the formula: pass via public fn signature in hw::evaluate.
+        let m_dummy = |r: &ResourceCount| {
+            p.w_static
+                + r.luts as f64 * p.w_per_toggled_lut * (0.8 * 0.25 + 0.2 * 0.25) / p.toggle_ref
+                + r.ffs as f64 * p.w_per_ff
+        };
+        assert!(m_dummy(&big) > m_dummy(&small));
+        let _ = a;
+    }
+
+    #[test]
+    fn higher_activity_more_power() {
+        let p = PowerParams::default();
+        let lo = (0.8 * 0.05f64 + 0.2 * 0.05).max(1e-4) / p.toggle_ref;
+        let hi = (0.8 * 0.45f64 + 0.2 * 0.45).max(1e-4) / p.toggle_ref;
+        assert!(hi > lo);
+    }
+}

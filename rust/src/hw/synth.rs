@@ -1,0 +1,93 @@
+//! "Synthesis" driver: bundles cost/timing/power into a utilization report
+//! against the paper's target device (Virtex UltraScale+ xcvu19p) and
+//! optionally writes the generated RTL.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+
+use super::{evaluate, generate_verilog, HwReport, Topology};
+
+/// FPGA device capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCapacity {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+}
+
+impl DeviceCapacity {
+    /// AMD Virtex UltraScale+ VU19P (xcvu19p-fsvb3824-1-e), the paper's part.
+    pub fn xcvu19p() -> Self {
+        Self { name: "xcvu19p-fsvb3824-1-e", luts: 4_085_760, ffs: 8_171_520 }
+    }
+}
+
+/// Post-synthesis report.
+#[derive(Clone, Debug)]
+pub struct SynthReport {
+    pub hw: HwReport,
+    pub device: DeviceCapacity,
+    pub lut_util_pct: f64,
+    pub ff_util_pct: f64,
+}
+
+impl SynthReport {
+    pub fn fits(&self) -> bool {
+        self.lut_util_pct <= 100.0 && self.ff_util_pct <= 100.0
+    }
+}
+
+/// Evaluate the model as hardware and report device utilization.
+/// If `rtl_out` is given, the generated Verilog is written there.
+pub fn synthesize(
+    model: &QuantEsn,
+    topo: Topology,
+    stimulus: &[TimeSeries],
+    rtl_out: Option<&Path>,
+) -> Result<SynthReport> {
+    let hw = evaluate(model, topo, stimulus);
+    if let Some(path) = rtl_out {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, generate_verilog(model, "rc_accel"))?;
+    }
+    let device = DeviceCapacity::xcvu19p();
+    Ok(SynthReport {
+        lut_util_pct: hw.luts as f64 / device.luts as f64 * 100.0,
+        ff_util_pct: hw.ffs as f64 / device.ffs as f64 * 100.0,
+        hw,
+        device,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::henon_sized;
+    use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    #[test]
+    fn report_fits_device_and_writes_rtl() {
+        let data = henon_sized(1, 200, 60);
+        let res = Reservoir::init(ReservoirSpec::paper(20, 1, 80, 0.9, 1.0, 3));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 10, features: Features::MeanState },
+        );
+        let qm = crate::quant::QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let dir = std::env::temp_dir().join("rcx_synth_test");
+        let rtl = dir.join("accel.v");
+        let rep = synthesize(&qm, Topology::Streaming, &data.test, Some(&rtl)).unwrap();
+        assert!(rep.fits());
+        assert!(rep.lut_util_pct > 0.0);
+        assert!(std::fs::read_to_string(&rtl).unwrap().contains("module rc_accel"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! Critical-path timing model.
+//!
+//! The direct-logic accelerator is a combinational cascade; latency is the
+//! deepest logic path: worst CSD multiplier depth → worst neuron adder-tree
+//! depth → activation quantizer → (pipeline factor) → readout tree. Pruning
+//! shrinks the max live fan-in and removes deep multipliers, which is why the
+//! paper's latency falls with pruning rate.
+
+use crate::quant::QuantEsn;
+
+use super::cost::log2_ceil;
+use super::csd::csd_depth;
+use super::Topology;
+
+/// Calibration constants of the delay model.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingParams {
+    /// Fixed route-in/route-out overhead (ns).
+    pub t_base_ns: f64,
+    /// Delay per logic level at q bits: `t_level = a + b·q` (LUT + carry +
+    /// local routing; wider carry chains are slower).
+    pub t_level_a_ns: f64,
+    pub t_level_b_ns: f64,
+    /// Pipeline forwarding penalty per log2(stage count) — inter-stage
+    /// routing across the unrolled sequence.
+    pub pipeline_alpha: f64,
+    /// Congestion coefficient: share of the level delay attributable to
+    /// routing density, which scales with the live-multiplier fraction
+    /// (pruning thins the netlist → shorter routes → lower delay, matching
+    /// the paper's smooth latency drops with p).
+    pub congestion_beta: f64,
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        Self {
+            t_base_ns: 0.45,
+            t_level_a_ns: 0.21,
+            t_level_b_ns: 0.022,
+            pipeline_alpha: 0.42,
+            congestion_beta: 0.45,
+        }
+    }
+}
+
+impl TimingParams {
+    /// Logic depth of the reservoir stage (levels).
+    pub fn reservoir_depth(&self, model: &QuantEsn) -> u32 {
+        let mut worst = 0u32;
+        for i in 0..model.n {
+            let (s, e) = (model.w_r_indptr[i], model.w_r_indptr[i + 1]);
+            let mut mult_depth = 0u32;
+            let mut live = 0usize;
+            for k in s..e {
+                let w = model.w_r_values[k];
+                if w != 0 {
+                    live += 1;
+                    mult_depth = mult_depth.max(csd_depth(w));
+                }
+            }
+            for k in 0..model.input_dim {
+                mult_depth = mult_depth.max(csd_depth(model.w_in[i * model.input_dim + k]));
+            }
+            let fan_in = live + model.input_dim;
+            let tree_depth = log2_ceil(fan_in.max(1));
+            // activation quantizer: saturating compare, ~3 levels
+            let depth = mult_depth + tree_depth + 3;
+            worst = worst.max(depth);
+        }
+        worst
+    }
+
+    /// Readout logic depth (levels).
+    pub fn readout_depth(&self, model: &QuantEsn) -> u32 {
+        let mut mult_depth = 0u32;
+        for &w in &model.w_out {
+            if w != 0 {
+                mult_depth = mult_depth.max(csd_depth(w));
+            }
+        }
+        for &m in &model.m_out {
+            mult_depth = mult_depth.max(csd_depth(m));
+        }
+        let live = model.w_out.iter().filter(|&&w| w != 0).count();
+        let per_class = (live / model.out_dim.max(1)).max(1);
+        mult_depth + log2_ceil(per_class) + 2 // +bias add, +argmax/round
+    }
+
+    /// End-to-end single-sample latency (ns).
+    pub fn latency_ns(&self, model: &QuantEsn, topo: Topology) -> f64 {
+        let t_level = self.t_level_a_ns + self.t_level_b_ns * model.q as f64;
+        let depth = (self.reservoir_depth(model) + self.readout_depth(model)) as f64;
+        let pipeline =
+            1.0 + self.pipeline_alpha * log2_ceil(topo.t_unroll().max(1)) as f64;
+        // Routing congestion tracks how much of the multiplier fabric is
+        // still live; an empty netlist keeps (1 − β) of the nominal level
+        // delay (LUT + carry), a full one pays all of it.
+        let live_frac = model.live_weights() as f64 / model.n_weights().max(1) as f64;
+        let congestion = (1.0 - self.congestion_beta) + self.congestion_beta * live_frac;
+        self.t_base_ns + t_level * depth * pipeline * congestion
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::henon_sized;
+    use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::pruning::{prune_to_rate, Pruner, RandomPruner};
+    use crate::quant::QuantSpec;
+
+    fn model(q: u8) -> (QuantEsn, crate::data::Dataset) {
+        let data = henon_sized(1, 300, 80);
+        let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 17));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 20, features: Features::MeanState },
+        );
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(q)), data)
+    }
+
+    #[test]
+    fn latency_positive_and_scales_with_pipeline() {
+        let (m, _) = model(4);
+        let p = TimingParams::default();
+        let s = p.latency_ns(&m, Topology::Streaming);
+        let pipe = p.latency_ns(&m, Topology::Pipelined { t_unroll: 24 });
+        assert!(s > 0.0);
+        assert!(pipe > 1.5 * s, "pipelined {pipe} vs streaming {s}");
+    }
+
+    #[test]
+    fn pruning_reduces_latency() {
+        let (m, d) = model(6);
+        let scores = RandomPruner::new(5).scores(&m, &d.train);
+        let p = TimingParams::default();
+        let base = p.latency_ns(&m, Topology::Streaming);
+        let pruned = prune_to_rate(&m, &scores, 90.0);
+        let after = p.latency_ns(&pruned, Topology::Streaming);
+        assert!(after < base, "{after} !< {base}");
+    }
+
+    #[test]
+    fn higher_bits_slower() {
+        let (m4, _) = model(4);
+        let (m8, _) = model(8);
+        let p = TimingParams::default();
+        assert!(
+            p.latency_ns(&m8, Topology::Streaming) > p.latency_ns(&m4, Topology::Streaming)
+        );
+    }
+}

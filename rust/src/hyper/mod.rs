@@ -1,0 +1,140 @@
+//! Hyperparameter search (Fig. 2 stage 1) — ReservoirPy-hyperopt equivalent.
+//!
+//! Random search over spectral radius, leaking rate and ridge coefficient
+//! (the three knobs Table I reports), scored on a held-out slice of the
+//! training data so the test split never leaks into model selection.
+
+use crate::data::{Dataset, Task};
+use crate::esn::{EsnModel, Features, Perf, ReadoutSpec, Reservoir, ReservoirSpec};
+use crate::rng::{Pcg64, Rng};
+
+/// Search-space bounds.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub sr: (f64, f64),
+    pub lr: (f64, f64),
+    /// log10 bounds for λ.
+    pub log_lambda: (f64, f64),
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        Self { sr: (0.1, 1.4), lr: (0.1, 1.0), log_lambda: (-11.0, -3.0) }
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub sr: f64,
+    pub lr: f64,
+    pub lambda: f64,
+    pub perf: Perf,
+}
+
+/// Result of a search: best candidate plus the full trace (for reporting).
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub best: Candidate,
+    pub trace: Vec<Candidate>,
+}
+
+/// Random search with `n_iter` samples.
+///
+/// `base` provides the fixed geometry (n, input_dim, ncrl, seed); sr/lr are
+/// overwritten per candidate. Validation is the tail 25% of the train split
+/// (for classification) or the last quarter of steps (regression handled via
+/// the same sample split since HENON has one long sequence — we instead score
+/// on a quarter-length holdout trajectory slice there).
+pub fn random_search(
+    data: &Dataset,
+    base: ReservoirSpec,
+    space: &SearchSpace,
+    n_iter: usize,
+    seed: u64,
+) -> SearchResult {
+    let (fit_data, val_split) = holdout(data);
+    let mut rng = Pcg64::seed(seed);
+    let mut trace = Vec::with_capacity(n_iter);
+    let mut best: Option<Candidate> = None;
+    for _ in 0..n_iter {
+        let sr = rng.uniform(space.sr.0, space.sr.1);
+        let lr = rng.uniform(space.lr.0, space.lr.1);
+        let lambda = 10f64.powf(rng.uniform(space.log_lambda.0, space.log_lambda.1));
+        let spec = ReservoirSpec { sr, lr, ..base };
+        let res = Reservoir::init(spec);
+        let readout = ReadoutSpec {
+            lambda,
+            washout: if data.task == Task::Regression { 20 } else { 0 },
+            features: Features::MeanState,
+        };
+        let model = EsnModel::fit(res, &fit_data, readout);
+        let perf = model.evaluate_split(&val_split);
+        let cand = Candidate { sr, lr, lambda, perf };
+        let better = match &best {
+            None => true,
+            Some(b) => cand.perf.score() > b.perf.score(),
+        };
+        if better {
+            best = Some(cand.clone());
+        }
+        trace.push(cand);
+    }
+    SearchResult { best: best.expect("n_iter == 0"), trace }
+}
+
+/// Split the train set into (fit, validation) — 75/25.
+fn holdout(data: &Dataset) -> (Dataset, Vec<crate::data::TimeSeries>) {
+    match data.task {
+        Task::Classification => {
+            let cut = (data.train.len() * 3) / 4;
+            let mut fit = data.clone();
+            let val = fit.train.split_off(cut.max(1));
+            (fit, val)
+        }
+        Task::Regression => {
+            // Single long sequence: split along time.
+            let s = &data.train[0];
+            let cut = (s.len() * 3) / 4;
+            let take = |lo: usize, hi: usize| {
+                let inputs = crate::linalg::Mat::from_fn(hi - lo, s.inputs.cols(), |i, j| {
+                    s.inputs[(lo + i, j)]
+                });
+                let tg = s.targets.as_ref().unwrap();
+                let targets =
+                    crate::linalg::Mat::from_fn(hi - lo, tg.cols(), |i, j| tg[(lo + i, j)]);
+                crate::data::TimeSeries::with_targets(inputs, targets)
+            };
+            let mut fit = data.clone();
+            fit.train = vec![take(0, cut)];
+            (fit, vec![take(cut, s.len())])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{henon_sized, melborn_sized};
+
+    #[test]
+    fn search_improves_over_worst() {
+        let data = melborn_sized(1, 160, 40);
+        let base = ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3);
+        let r = random_search(&data, base, &SearchSpace::default(), 8, 9);
+        assert_eq!(r.trace.len(), 8);
+        let worst = r.trace.iter().map(|c| c.perf.score()).fold(f64::INFINITY, f64::min);
+        assert!(r.best.perf.score() >= worst);
+        assert!(r.best.perf.value() > 0.5);
+    }
+
+    #[test]
+    fn regression_holdout_is_time_split() {
+        let data = henon_sized(2, 400, 100);
+        let (fit, val) = holdout(&data);
+        assert_eq!(fit.train[0].len(), 300);
+        assert_eq!(val[0].len(), 100);
+        // Continuity: the val inputs start right after fit's.
+        assert_eq!(fit.train[0].targets.as_ref().unwrap()[(299, 0)], val[0].inputs[(0, 0)]);
+    }
+}

@@ -1,0 +1,27 @@
+//! # rcx — sensitivity-guided compression framework for reservoir-computing accelerators
+//!
+//! Reproduction of *"Sensitivity-Guided Framework for Pruned and Quantized
+//! Reservoir Computing Accelerators"* (ICCAI 2026). See DESIGN.md for the
+//! system inventory, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map (three-layer rust + JAX + Pallas architecture):
+//! - L3 (this crate): substrates ([`rng`], [`linalg`], [`data`]), the RC core
+//!   ([`esn`], [`hyper`]), the paper's contribution ([`quant`], [`pruning`],
+//!   [`dse`], [`hw`]), the PJRT bridge ([`runtime`]) and the serving
+//!   [`coordinator`].
+//! - L2/L1 live in `python/compile/` and are consumed as AOT HLO artifacts.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dse;
+pub mod esn;
+pub mod hw;
+pub mod hyper;
+pub mod linalg;
+pub mod pruning;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;

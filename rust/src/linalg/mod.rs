@@ -1,0 +1,58 @@
+//! Dense + sparse linear algebra substrate.
+//!
+//! The framework needs: dense matrices (readout training, PCA baseline),
+//! Cholesky-based ridge solves, power iteration for the spectral radius used in
+//! reservoir rescaling (Eq. 1 setup), and CSR sparse matrices because the
+//! reservoir matrix `W_r` has only `ncrl` (=250 of 2500) nonzeros.
+
+mod mat;
+mod solve;
+mod spectral;
+mod sparse;
+
+pub use mat::Mat;
+pub use solve::{cholesky, cholesky_solve, ridge_solve};
+pub use spectral::spectral_radius;
+pub use sparse::Csr;
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! Cholesky factorization and ridge regression solve.
+//!
+//! Readout training (Eq. 2) is `W_out = Y S^T (S S^T + λI)^{-1}` — a symmetric
+//! positive-definite solve, done here with an in-place Cholesky.
+
+use super::Mat;
+
+/// Cholesky factorization `A = L L^T` of a symmetric positive-definite matrix.
+/// Returns lower-triangular `L`, or `None` if `A` is not SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A` (forward + back subst).
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    // L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Ridge regression: returns `W` (targets × features) minimizing
+/// `||W X^T - Y^T||² + λ||W||²` where `X` is (samples × features) and
+/// `Y` is (samples × targets). This is the ESN readout trainer.
+pub fn ridge_solve(x: &Mat, y: &Mat, lambda: f64) -> Mat {
+    assert_eq!(x.rows(), y.rows(), "sample count mismatch");
+    let nf = x.cols();
+    let nt = y.cols();
+    // G = X^T X + λ I
+    let mut g = x.gram();
+    for i in 0..nf {
+        g[(i, i)] += lambda;
+    }
+    // With λ>0 and finite data G is SPD; escalate λ slightly if degenerate.
+    let l = match cholesky(&g) {
+        Some(l) => l,
+        None => {
+            let mut g2 = g.clone();
+            for i in 0..nf {
+                g2[(i, i)] += 1e-8 + 1e-6 * g[(i, i)].abs();
+            }
+            cholesky(&g2).expect("ridge system not SPD even after jitter")
+        }
+    };
+    // B = X^T Y, one solve per target column; W is (targets × features).
+    let xt_y = x.t().matmul(y);
+    let mut w = Mat::zeros(nt, nf);
+    let mut col = vec![0.0; nf];
+    for t in 0..nt {
+        for i in 0..nf {
+            col[i] = xt_y[(i, t)];
+        }
+        let sol = cholesky_solve(&l, &col);
+        w.row_mut(t).copy_from_slice(&sol);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = Mat::from_vec(3, 3, vec![4., 2., 0., 2., 5., 1., 0., 1., 3.]);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 1.]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = Mat::from_vec(3, 3, vec![4., 2., 0., 2., 5., 1., 0., 1., 3.]);
+        let l = cholesky(&a).unwrap();
+        let b = vec![1.0, -2.0, 0.5];
+        let x = cholesky_solve(&l, &b);
+        let ax = a.matvec(&x);
+        for i in 0..3 {
+            assert!((ax[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        // y = 2*x0 - x1, exactly linear, tiny lambda -> near-exact recovery.
+        let n = 50;
+        let x = Mat::from_fn(n, 2, |i, j| ((i * 7 + j * 3) % 13) as f64 / 13.0);
+        let y = Mat::from_fn(n, 1, |i, _| 2.0 * x[(i, 0)] - x[(i, 1)]);
+        let w = ridge_solve(&x, &y, 1e-10);
+        assert!((w[(0, 0)] - 2.0).abs() < 1e-5, "{w:?}");
+        assert!((w[(0, 1)] + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let n = 30;
+        let x = Mat::from_fn(n, 3, |i, j| ((i * 5 + j) % 7) as f64 - 3.0);
+        let y = Mat::from_fn(n, 1, |i, _| x[(i, 0)] + 0.5 * x[(i, 2)]);
+        let w_small = ridge_solve(&x, &y, 1e-9);
+        let w_big = ridge_solve(&x, &y, 1e3);
+        assert!(w_big.fro() < w_small.fro());
+    }
+}

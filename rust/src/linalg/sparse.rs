@@ -1,0 +1,185 @@
+//! CSR sparse matrix — the reservoir matrix `W_r` has `ncrl` (≈10%) nonzeros,
+//! and pruning zeroes more of them; all hot loops in sensitivity analysis run
+//! over CSR.
+
+use super::Mat;
+
+/// Compressed-sparse-row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array, len = rows + 1.
+    indptr: Vec<usize>,
+    /// Column index per nonzero.
+    indices: Vec<usize>,
+    /// Value per nonzero.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(m: &Mat) -> Self {
+        let mut indptr = Vec::with_capacity(m.rows() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows: m.rows(), cols: m.cols(), indptr, indices, values }
+    }
+
+    /// Build from explicit triplets (must be sorted by row; columns may be unsorted).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut by_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); rows];
+        for &(i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet out of bounds");
+            if v != 0.0 {
+                by_row[i].push((j, v));
+            }
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in by_row.iter_mut() {
+            row.sort_unstable_by_key(|&(j, _)| j);
+            for &(j, v) in row.iter() {
+                indices.push(j);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (column indices, values) of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Stored values (mutable) — used to scale in place.
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
+    }
+
+    /// Stored values.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Iterate all nonzeros as (row, col, value).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter().zip(vals.iter()).map(move |(&j, &v)| (i, j, v))
+        })
+    }
+
+    /// Sparse matvec `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Sparse matvec into a caller-provided buffer (hot path, no alloc).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for k in 0..cols.len() {
+                s += vals[k] * x[cols[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in self.values.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for (i, j, v) in self.iter() {
+            m[(i, j)] = v;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![0., 1., 0., 2., 0., 3.]);
+        let c = Csr::from_dense(&m);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.to_dense(), m);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::seed(42);
+        let m = Mat::from_fn(20, 20, |_, _| {
+            if rng.chance(0.2) { rng.normal() } else { 0.0 }
+        });
+        let c = Csr::from_dense(&m);
+        let x: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let yd = m.matvec(&x);
+        let ys = c.matvec(&x);
+        for i in 0..20 {
+            assert!((yd[i] - ys[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triplets_sorted_and_deduped_zeros() {
+        let c = Csr::from_triplets(3, 3, &[(2, 1, 4.0), (0, 2, 1.0), (0, 0, 0.0), (2, 0, -1.0)]);
+        assert_eq!(c.nnz(), 3);
+        let (cols, vals) = c.row(2);
+        assert_eq!(cols, &[0, 1]);
+        assert_eq!(vals, &[-1.0, 4.0]);
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let m = Mat::from_vec(2, 2, vec![1., 0., 0., 2.]);
+        let mut c = Csr::from_dense(&m);
+        c.scale(0.5);
+        assert_eq!(c.to_dense()[(1, 1)], 1.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! `rcx` CLI — the framework launcher.
+//!
+//! Subcommands mirror the paper's flow (Fig. 2):
+//!   hyperopt  stage 1: random hyperparameter search
+//!   dse       stages 2–3: Algorithm 1 over Q × P (any pruning method)
+//!   synth     stage 4: hardware-realize one configuration (+ optional RTL)
+//!   table1 / table2 / table3 / fig3 / fig4   reproduce the paper's artifacts
+//!   serve     run the batching inference coordinator on a compiled artifact
+//!
+//! `--full` switches from reduced (seconds-scale) to paper-sized workloads.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use rcx::config::{BenchmarkConfig, PAPER_P, PAPER_Q, TABLE_P};
+use rcx::coordinator::{BatcherConfig, ServeConfig, Server, VariantSpec};
+use rcx::data::{save_csv, Benchmark};
+use rcx::dse::{explore, realize_hw, DseRequest};
+use rcx::esn::ReservoirSpec;
+use rcx::hyper::{random_search, SearchSpace};
+use rcx::hw::synthesize;
+use rcx::pruning::Method;
+use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::report::{self, hw_table};
+
+/// Minimal flag parser: `--key value` pairs plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "1".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn flag_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad value {v:?}")),
+        }
+    }
+
+    fn benchmark(&self) -> Result<Benchmark> {
+        let name = self.flag("benchmark").unwrap_or("melborn");
+        Benchmark::parse(name).with_context(|| format!("unknown benchmark {name}"))
+    }
+
+    fn full(&self) -> bool {
+        self.flag("full").is_some()
+    }
+
+    fn out_dir(&self) -> PathBuf {
+        PathBuf::from(self.flag("out").unwrap_or("results"))
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "hyperopt" => cmd_hyperopt(&args),
+        "dse" => cmd_dse(&args),
+        "synth" => cmd_synth(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_hw_table(&args, Benchmark::Melborn, "Table II (MELBORN)"),
+        "table3" => cmd_hw_table(&args, Benchmark::Henon, "Table III (HENON)"),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "rcx — sensitivity-guided RC accelerator framework\n\
+         usage: rcx <command> [--benchmark melborn|pen|henon] [--full] [--out DIR]\n\
+         commands:\n\
+         \u{20}  hyperopt  [--iters N]                 stage-1 random search\n\
+         \u{20}  dse       [--method M] [--q 4,6,8]    Algorithm 1 over Q x P\n\
+         \u{20}  synth     [--q Q] [--p P] [--rtl F]   hardware-realize one config\n\
+         \u{20}  table1 | table2 | table3              reproduce paper tables\n\
+         \u{20}  fig3 | fig4                           reproduce paper figures (CSV)\n\
+         \u{20}  serve     [--q Q] [--requests N]      batching inference coordinator"
+    );
+}
+
+fn cmd_hyperopt(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    let iters: usize = args.flag_or("iters", if args.full() { 1000 } else { 40 })?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let data = if args.full() { b.generate(1) } else { b.generate_small(1) };
+    let base = ReservoirSpec { ..cfg.spec };
+    println!("random search over {iters} candidates on {}...", b.name());
+    let r = random_search(&data, base, &SearchSpace::default(), iters, 99);
+    println!(
+        "best: sr={:.3} lr={:.3} lambda={:.2e} -> {}",
+        r.best.sr, r.best.lr, r.best.lambda, r.best.perf
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    let method = Method::parse(args.flag("method").unwrap_or("sensitivity"))
+        .context("bad --method")?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let q_levels: Vec<u8> = match args.flag("q") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().context("bad --q"))
+            .collect::<Result<_>>()?,
+        None => PAPER_Q.to_vec(),
+    };
+    let req = DseRequest {
+        q_levels,
+        pruning_rates: PAPER_P.to_vec(),
+        method,
+        max_calib: args.flag_or("calib", 128)?,
+        seed: 7,
+    };
+    println!("DSE on {} with {} pruning...", b.name(), method.name());
+    let r = explore(&model, &data, &req);
+    println!("scored in {:.1}s; configurations:", r.scoring_seconds);
+    for c in &r.configs {
+        println!("  s(q={}, p={:>4.0}%): {}", c.q, c.p, c.perf);
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    let q: u8 = args.flag_or("q", 4)?;
+    let p: f64 = args.flag_or("p", 15.0)?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(q));
+    let pruned = if p > 0.0 {
+        let method = Method::parse(args.flag("method").unwrap_or("sensitivity"))
+            .context("bad --method")?;
+        let pruner = method.pruner(7);
+        let calib = rcx::dse::calibration_split(&data, 128);
+        let scores = pruner.scores(&qm, calib);
+        rcx::pruning::prune_to_rate(&qm, &scores, p)
+    } else {
+        qm
+    };
+    let rtl = args.flag("rtl").map(PathBuf::from);
+    let rep = synthesize(&pruned, cfg.topology(&data), &data.test, rtl.as_deref())?;
+    println!(
+        "{} q={q} p={p}%: {} LUTs ({:.4}% of {}), {} FFs, {:.3} ns, {:.2} Msps, {:.3} nWs PDP",
+        b.name(),
+        rep.hw.luts,
+        rep.lut_util_pct,
+        rep.device.name,
+        rep.hw.ffs,
+        rep.hw.latency_ns,
+        rep.hw.throughput_msps,
+        rep.hw.pdp_nws
+    );
+    if let Some(r) = rtl {
+        println!("RTL written to {r:?}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let mut trained = Vec::new();
+    for b in Benchmark::ALL {
+        let cfg = BenchmarkConfig::paper(b, 0);
+        let (model, data) = cfg.train(1, !args.full());
+        let perf = model.evaluate(&data);
+        trained.push((b, data, cfg.spec, cfg.readout.lambda, perf));
+    }
+    let entries: Vec<_> = trained
+        .iter()
+        .map(|(b, data, spec, lambda, perf)| (*b, data, spec.sr, spec.lr, *lambda, spec.ncrl, *perf))
+        .collect();
+    println!("{}", report::table1(&entries));
+    Ok(())
+}
+
+fn cmd_hw_table(args: &Args, b: Benchmark, title: &str) -> Result<()> {
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let req = DseRequest {
+        q_levels: PAPER_Q.to_vec(),
+        pruning_rates: TABLE_P.to_vec(),
+        method: Method::Sensitivity,
+        max_calib: args.flag_or("calib", 128)?,
+        seed: 7,
+    };
+    let r = explore(&model, &data, &req);
+    let hw = realize_hw(&r, &data);
+    let rows = report::tables::build_hw_rows(&hw);
+    println!("{}", hw_table(title, &rows));
+    let (header, csv) = report::hw_table_csv(&rows);
+    let path = args.out_dir().join(format!("{}_hw.csv", b.name().to_lowercase()));
+    save_csv(&path, &header, &csv)?;
+    println!("csv -> {path:?}");
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let mut runs = Vec::new();
+    for method in Method::ALL {
+        let req = DseRequest {
+            q_levels: PAPER_Q.to_vec(),
+            pruning_rates: PAPER_P.to_vec(),
+            method,
+            max_calib: args.flag_or("calib", 96)?,
+            seed: 7,
+        };
+        println!("fig3: scoring with {}...", method.name());
+        let r = explore(&model, &data, &req);
+        runs.push((method, r.configs));
+    }
+    let points = report::fig3_series(&runs);
+    let (header, rows) = report::figures::fig3_csv(&points);
+    let path = args.out_dir().join(format!("fig3_{}.csv", b.name().to_lowercase()));
+    save_csv(&path, &header, &rows)?;
+    println!("fig3 series ({} points) -> {path:?}", points.len());
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let req = DseRequest {
+        q_levels: PAPER_Q.to_vec(),
+        pruning_rates: PAPER_P.to_vec(),
+        method: Method::Sensitivity,
+        max_calib: args.flag_or("calib", 96)?,
+        seed: 7,
+    };
+    let r = explore(&model, &data, &req);
+    let hw = realize_hw(&r, &data);
+    let points = report::fig4_series(&hw);
+    let (header, rows) = report::figures::fig4_csv(&points);
+    let path = args.out_dir().join(format!("fig4_{}.csv", b.name().to_lowercase()));
+    save_csv(&path, &header, &rows)?;
+    println!("fig4 series ({} points) -> {path:?}", points.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let b = args.benchmark()?;
+    if b == Benchmark::Henon {
+        bail!("serve demo targets the classification artifacts (melborn/pen)");
+    }
+    let q: u8 = args.flag_or("q", 4)?;
+    let n_requests: usize = args.flag_or("requests", 512)?;
+    let cfg = BenchmarkConfig::paper(b, 0);
+    let (model, data) = cfg.train(1, !args.full());
+    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(q));
+    let server = Server::start(
+        ServeConfig {
+            artifact_dir: args.flag("artifacts").unwrap_or("artifacts").into(),
+            artifact: cfg.artifact.to_string(),
+            batcher: BatcherConfig::default(),
+        },
+        vec![VariantSpec { key: format!("q{q}"), model: qm }],
+    )?;
+    let client = server.client();
+    println!("serving {n_requests} requests against {} (q={q})...", cfg.artifact);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let s = &data.test[i % data.test.len()];
+        pending.push(client.submit(0, s.clone())?);
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        let rcx::coordinator::Prediction::Class(c) = resp.prediction;
+        if Some(c) == data.test[i % data.test.len()].label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.metrics();
+    println!(
+        "done in {:.3}s: {:.0} req/s, acc {:.3}, mean batch {:.1}, p50 {} us, p99 {} us",
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        correct as f64 / n_requests as f64,
+        m.mean_batch,
+        m.p50_us,
+        m.p99_us
+    );
+    server.shutdown()
+}

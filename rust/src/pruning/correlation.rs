@@ -1,0 +1,218 @@
+//! Correlation-based baselines: mutual information (Wang et al. [7]) and
+//! Spearman rank correlation (Huang et al. [14]).
+//!
+//! Both score weight `(i, j)` by the statistical dependency between the
+//! source neuron's state `s_j` and the destination's `s_i` — the
+//! "output-unaware state-to-state" usage the paper criticizes.
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+
+use super::states::collect_states;
+use super::Pruner;
+
+/// Histogram-estimator mutual information pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct MiPruner {
+    /// Histogram bins per axis.
+    pub bins: usize,
+    /// Row cap for state collection.
+    pub max_rows: usize,
+}
+
+impl Default for MiPruner {
+    fn default() -> Self {
+        Self { bins: 12, max_rows: 4096 }
+    }
+}
+
+/// Mutual information of two equal-length series via a `bins×bins` histogram.
+pub fn mutual_information(x: &[f64], y: &[f64], bins: usize) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let edges = |v: &[f64]| {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &t in v {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        if hi <= lo {
+            (lo, lo + 1.0)
+        } else {
+            (lo, hi)
+        }
+    };
+    let (xlo, xhi) = edges(x);
+    let (ylo, yhi) = edges(y);
+    let bin = |v: f64, lo: f64, hi: f64| {
+        (((v - lo) / (hi - lo) * bins as f64) as usize).min(bins - 1)
+    };
+    let mut joint = vec![0.0f64; bins * bins];
+    let mut px = vec![0.0f64; bins];
+    let mut py = vec![0.0f64; bins];
+    let w = 1.0 / n as f64;
+    for k in 0..n {
+        let bx = bin(x[k], xlo, xhi);
+        let by = bin(y[k], ylo, yhi);
+        joint[bx * bins + by] += w;
+        px[bx] += w;
+        py[by] += w;
+    }
+    let mut mi = 0.0;
+    for bx in 0..bins {
+        for by in 0..bins {
+            let pxy = joint[bx * bins + by];
+            if pxy > 0.0 {
+                mi += pxy * (pxy / (px[bx] * py[by])).ln();
+            }
+        }
+    }
+    mi.max(0.0)
+}
+
+impl Pruner for MiPruner {
+    fn name(&self) -> &'static str {
+        "mi"
+    }
+
+    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
+        let st = collect_states(model, calib, self.max_rows);
+        let col = |j: usize| -> Vec<f64> { (0..st.rows()).map(|r| st[(r, j)]).collect() };
+        let cols: Vec<Vec<f64>> = (0..model.n).map(col).collect();
+        (0..model.n_weights())
+            .map(|idx| {
+                let (i, j) = model.weight_pos(idx);
+                mutual_information(&cols[j], &cols[i], self.bins)
+            })
+            .collect()
+    }
+}
+
+/// Spearman rank-correlation pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct SpearmanPruner {
+    pub max_rows: usize,
+}
+
+impl Default for SpearmanPruner {
+    fn default() -> Self {
+        Self { max_rows: 4096 }
+    }
+}
+
+/// Average ranks (ties get the mean rank).
+pub fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut r = vec![0.0; n];
+    let mut k = 0;
+    while k < n {
+        let mut k2 = k;
+        while k2 + 1 < n && x[idx[k2 + 1]] == x[idx[k]] {
+            k2 += 1;
+        }
+        let avg = (k + k2) as f64 / 2.0 + 1.0;
+        for t in k..=k2 {
+            r[idx[t]] = avg;
+        }
+        k = k2 + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation ρ ∈ [−1, 1].
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let rx = ranks(x);
+    let ry = ranks(y);
+    pearson(&rx, &ry)
+}
+
+fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for k in 0..x.len() {
+        let dx = x[k] - mx;
+        let dy = y[k] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+impl Pruner for SpearmanPruner {
+    fn name(&self) -> &'static str {
+        "spearman"
+    }
+
+    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
+        let st = collect_states(model, calib, self.max_rows);
+        let cols: Vec<Vec<f64>> =
+            (0..model.n).map(|j| (0..st.rows()).map(|r| st[(r, j)]).collect()).collect();
+        (0..model.n_weights())
+            .map(|idx| {
+                let (i, j) = model.weight_pos(idx);
+                spearman(&cols[j], &cols[i]).abs()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi_of_identical_series_is_high() {
+        let x: Vec<f64> = (0..500).map(|i| ((i * 37) % 101) as f64).collect();
+        let indep: Vec<f64> = (0..500).map(|i| ((i * 53 + 11) % 97) as f64).collect();
+        let mi_same = mutual_information(&x, &x, 10);
+        let mi_indep = mutual_information(&x, &indep, 10);
+        assert!(mi_same > 1.5, "{mi_same}");
+        assert!(mi_indep < 0.5 * mi_same, "indep={mi_indep} same={mi_same}");
+    }
+
+    #[test]
+    fn mi_nonnegative_and_symmetric() {
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.1).sin()).collect();
+        let y: Vec<f64> = (0..200).map(|i| (i as f64 * 0.07).cos()).collect();
+        let a = mutual_information(&x, &y, 8);
+        let b = mutual_information(&y, &x, 8);
+        assert!(a >= 0.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_detects_monotone_nonlinear() {
+        let x: Vec<f64> = (1..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v.powi(3)).collect(); // monotone
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg: Vec<f64> = x.iter().map(|v| -v.ln()).collect();
+        assert!((spearman(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_handle_ties() {
+        assert_eq!(ranks(&[2.0, 1.0, 2.0]), vec![2.5, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn spearman_zero_for_constant() {
+        let x = vec![1.0; 50];
+        let y: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        assert_eq!(spearman(&x, &y), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Iterative sensitivity pruning — the natural extension of Eq. 4 (cf. the
+//! iterative fine-tuning of Huang et al. [9], but without retraining):
+//! instead of scoring once and cutting to the target rate, prune in steps of
+//! `step_pct`, re-scoring the surviving weights after each cut. Sensitivities
+//! shift as the network thins (a weight that was redundant next to a strong
+//! sibling becomes critical once the sibling is gone); re-scoring tracks that.
+//!
+//! Used by the ablation bench to quantify what one-shot scoring gives away.
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+
+use super::{SensitivityConfig, SensitivityPruner};
+use super::{prune_with_compensation, select_prune_set, Pruner};
+
+/// Iterative sensitivity pruner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct IterativeConfig {
+    /// Pruning step per round (percent of the *original* weight count).
+    pub step_pct: f64,
+    /// Inner scorer settings.
+    pub scorer: SensitivityConfig,
+    /// Refold readout constants after every round (scale compensation).
+    pub refold: bool,
+}
+
+impl Default for IterativeConfig {
+    fn default() -> Self {
+        Self { step_pct: 15.0, scorer: SensitivityConfig::default(), refold: true }
+    }
+}
+
+/// Prune to `target_pct` in rounds of `cfg.step_pct`, re-scoring each round.
+/// Returns the pruned model and the number of scoring rounds performed.
+pub fn iterative_prune(
+    model: &QuantEsn,
+    target_pct: f64,
+    calib: &[TimeSeries],
+    cfg: &IterativeConfig,
+) -> (QuantEsn, usize) {
+    assert!((0.0..=100.0).contains(&target_pct));
+    let total = model.n_weights();
+    let target_pruned = ((target_pct / 100.0) * total as f64).floor() as usize;
+    let scorer = SensitivityPruner::new(cfg.scorer);
+    let mut current = model.clone();
+    let mut rounds = 0;
+    loop {
+        let already = total - current.live_weights();
+        if already >= target_pruned {
+            break;
+        }
+        let step = (((cfg.step_pct / 100.0) * total as f64).ceil() as usize)
+            .min(target_pruned - already)
+            .max(1);
+        let scores = scorer.scores(&current, calib);
+        rounds += 1;
+        // Only *live* slots are candidates: mask pruned slots to +inf so the
+        // ascending selection never re-picks them.
+        let masked: Vec<f64> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| if current.w_r_values[i] == 0 { f64::INFINITY } else { s })
+            .collect();
+        let frac = 100.0 * step as f64 / total as f64;
+        let slots = select_prune_set(&masked, frac);
+        if cfg.refold {
+            current = prune_with_compensation(
+                &current,
+                &masked,
+                frac,
+                calib,
+            );
+        } else {
+            current.prune(&slots);
+        }
+    }
+    (current, rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    fn tiny() -> (QuantEsn, crate::data::Dataset) {
+        let data = melborn_sized(1, 60, 40);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(4)), data)
+    }
+
+    #[test]
+    fn reaches_target_rate_in_rounds() {
+        let (qm, data) = tiny();
+        let cfg = IterativeConfig {
+            step_pct: 20.0,
+            scorer: SensitivityConfig { parallelism: 1, max_calib: 20 },
+            refold: false,
+        };
+        let initial_live = qm.live_weights();
+        let (pruned, rounds) = iterative_prune(&qm, 60.0, &data.train[..20], &cfg);
+        let target = ((0.6 * qm.n_weights() as f64).floor()) as usize;
+        assert!(qm.n_weights() - pruned.live_weights() >= target.min(initial_live));
+        assert_eq!(rounds, 3); // 60% in 20% steps
+    }
+
+    #[test]
+    fn zero_target_is_identity() {
+        let (qm, data) = tiny();
+        let (pruned, rounds) =
+            iterative_prune(&qm, 0.0, &data.train[..10], &IterativeConfig::default());
+        assert_eq!(pruned.live_weights(), qm.live_weights());
+        assert_eq!(rounds, 0);
+    }
+
+    #[test]
+    fn never_prunes_same_slot_twice() {
+        let (qm, data) = tiny();
+        let cfg = IterativeConfig {
+            step_pct: 25.0,
+            scorer: SensitivityConfig { parallelism: 1, max_calib: 15 },
+            refold: false,
+        };
+        let (pruned, _) = iterative_prune(&qm, 75.0, &data.train[..15], &cfg);
+        // exact count: ⌊0.75·48⌋ = 36 pruned unless some already quantized to 0
+        let pruned_count = pruned.w_r_values.iter().filter(|&&v| v == 0).count();
+        assert!(pruned_count >= 36, "{pruned_count}");
+    }
+}

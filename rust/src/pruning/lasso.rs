@@ -1,0 +1,192 @@
+//! Lasso baseline (Mohammadi et al. [15]): L1-regularized linear regression
+//! from reservoir states to the task targets; neuron importance is the summed
+//! |coefficient| across outputs, weights inherit endpoint importance.
+//! Linear with L1 — again unable to capture the reservoir's nonlinearity,
+//! which is the paper's point.
+
+use crate::data::{Task, TimeSeries};
+use crate::linalg::Mat;
+use crate::quant::QuantEsn;
+
+use super::states::collect_states;
+use super::Pruner;
+
+/// Coordinate-descent Lasso pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct LassoPruner {
+    /// L1 strength as a fraction of λ_max (the smallest λ that zeroes all
+    /// coefficients); 0.01–0.2 are typical.
+    pub alpha_frac: f64,
+    /// Coordinate-descent sweeps.
+    pub sweeps: usize,
+    pub max_rows: usize,
+}
+
+impl Default for LassoPruner {
+    fn default() -> Self {
+        Self { alpha_frac: 0.05, sweeps: 60, max_rows: 2048 }
+    }
+}
+
+/// Coordinate-descent Lasso for one target: minimizes
+/// `½‖y − Xβ‖² + α‖β‖₁` over standardized columns of X.
+pub fn lasso_cd(x: &Mat, y: &[f64], alpha: f64, sweeps: usize) -> Vec<f64> {
+    let (rows, cols) = (x.rows(), x.cols());
+    assert_eq!(y.len(), rows);
+    // Column norms (no standardization here; callers pass bounded states).
+    let mut colsq = vec![0.0f64; cols];
+    for r in 0..rows {
+        for j in 0..cols {
+            colsq[j] += x[(r, j)] * x[(r, j)];
+        }
+    }
+    let mut beta = vec![0.0f64; cols];
+    let mut resid: Vec<f64> = y.to_vec(); // r = y − Xβ (β = 0)
+    for _ in 0..sweeps {
+        let mut max_delta = 0.0f64;
+        for j in 0..cols {
+            if colsq[j] <= 1e-12 {
+                continue;
+            }
+            // ρ = x_jᵀ(r + x_j β_j)
+            let mut rho = 0.0;
+            for r in 0..rows {
+                rho += x[(r, j)] * resid[r];
+            }
+            rho += colsq[j] * beta[j];
+            let new = soft_threshold(rho, alpha) / colsq[j];
+            let delta = new - beta[j];
+            if delta != 0.0 {
+                for r in 0..rows {
+                    resid[r] -= x[(r, j)] * delta;
+                }
+                beta[j] = new;
+                max_delta = max_delta.max(delta.abs());
+            }
+        }
+        if max_delta < 1e-10 {
+            break;
+        }
+    }
+    beta
+}
+
+#[inline]
+fn soft_threshold(x: f64, t: f64) -> f64 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// λ_max: smallest α for which all coefficients are zero (max |xᵀy|).
+pub fn alpha_max(x: &Mat, y: &[f64]) -> f64 {
+    let mut m = 0.0f64;
+    for j in 0..x.cols() {
+        let mut dot = 0.0;
+        for r in 0..x.rows() {
+            dot += x[(r, j)] * y[r];
+        }
+        m = m.max(dot.abs());
+    }
+    m
+}
+
+impl Pruner for LassoPruner {
+    fn name(&self) -> &'static str {
+        "lasso"
+    }
+
+    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
+        // Build the per-step design matrix and per-step targets.
+        let st = collect_states(model, calib, self.max_rows);
+        let rows = st.rows();
+        let n = model.n;
+        // Targets aligned with collect_states' row order.
+        let mut targets: Vec<Vec<f64>> = Vec::new();
+        match model.task {
+            Task::Regression => {
+                let mut t_rows = Vec::with_capacity(rows);
+                'outer: for s in calib {
+                    let tg = s.targets.as_ref().expect("regression needs targets");
+                    for t in 0..s.inputs.rows() {
+                        t_rows.push(tg[(t, 0)]);
+                        if t_rows.len() == rows {
+                            break 'outer;
+                        }
+                    }
+                }
+                targets.push(t_rows);
+            }
+            Task::Classification => {
+                // One-vs-all signal per class, repeated across the steps of
+                // each sequence.
+                let n_classes = model.out_dim;
+                let mut per_class = vec![Vec::with_capacity(rows); n_classes];
+                'outer2: for s in calib {
+                    let label = s.label.expect("classification needs labels");
+                    for _ in 0..s.inputs.rows() {
+                        for (c, col) in per_class.iter_mut().enumerate() {
+                            col.push(if c == label { 1.0 } else { 0.0 });
+                        }
+                        if per_class[0].len() == rows {
+                            break 'outer2;
+                        }
+                    }
+                }
+                targets = per_class;
+            }
+        }
+        // Importance = Σ over targets of |β|.
+        let mut imp = vec![0.0f64; n];
+        for y in &targets {
+            let alpha = self.alpha_frac * alpha_max(&st, y);
+            let beta = lasso_cd(&st, y, alpha, self.sweeps);
+            for j in 0..n {
+                imp[j] += beta[j].abs();
+            }
+        }
+        (0..model.n_weights())
+            .map(|idx| {
+                let (i, j) = model.weight_pos(idx);
+                imp[i] + imp[j]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lasso_recovers_sparse_signal() {
+        // y depends only on columns 0 and 2.
+        let rows = 120;
+        let x = Mat::from_fn(rows, 5, |r, c| (((r * 31 + c * 17) % 23) as f64 / 11.5) - 1.0);
+        let y: Vec<f64> = (0..rows).map(|r| 2.0 * x[(r, 0)] - 1.5 * x[(r, 2)]).collect();
+        let alpha = 0.02 * alpha_max(&x, &y);
+        let beta = lasso_cd(&x, &y, alpha, 200);
+        assert!(beta[0] > 1.0, "{beta:?}");
+        assert!(beta[2] < -0.8, "{beta:?}");
+        assert!(beta[1].abs() < 0.3 && beta[3].abs() < 0.3 && beta[4].abs() < 0.3, "{beta:?}");
+    }
+
+    #[test]
+    fn huge_alpha_zeroes_everything() {
+        let x = Mat::from_fn(50, 4, |r, c| ((r + c) % 7) as f64 - 3.0);
+        let y: Vec<f64> = (0..50).map(|r| x[(r, 1)]).collect();
+        let beta = lasso_cd(&x, &y, 10.0 * alpha_max(&x, &y), 50);
+        assert!(beta.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn soft_threshold_props() {
+        assert_eq!(soft_threshold(5.0, 2.0), 3.0);
+        assert_eq!(soft_threshold(-5.0, 2.0), -3.0);
+        assert_eq!(soft_threshold(1.0, 2.0), 0.0);
+    }
+}

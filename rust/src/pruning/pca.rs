@@ -1,0 +1,149 @@
+//! PCA baseline (Mohammadi et al. [15]): neuron importance from principal-
+//! component loadings of the state covariance; a weight inherits the summed
+//! importance of its endpoints. A linear method — exactly the kind of scorer
+//! the paper argues cannot capture reservoir nonlinearity.
+
+use crate::data::TimeSeries;
+use crate::linalg::Mat;
+use crate::quant::QuantEsn;
+use crate::rng::{Pcg64, Rng};
+
+use super::states::collect_states;
+use super::Pruner;
+
+/// PCA-loading pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct PcaPruner {
+    /// Number of leading components.
+    pub components: usize,
+    pub max_rows: usize,
+}
+
+impl Default for PcaPruner {
+    fn default() -> Self {
+        Self { components: 10, max_rows: 4096 }
+    }
+}
+
+/// Top-k eigenpairs of a symmetric PSD matrix by power iteration + deflation.
+/// Returns (eigenvalue, eigenvector) pairs in descending eigenvalue order.
+pub fn top_eigenpairs(a: &Mat, k: usize, iters: usize, seed: u64) -> Vec<(f64, Vec<f64>)> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut deflated = a.clone();
+    let mut out = Vec::with_capacity(k);
+    let mut rng = Pcg64::seed(seed);
+    for _ in 0..k.min(n) {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut dead = false;
+        for _ in 0..iters {
+            let w = deflated.matvec(&v);
+            let norm = crate::linalg::norm2(&w);
+            if norm < 1e-14 {
+                dead = true;
+                break;
+            }
+            v = w.iter().map(|x| x / norm).collect();
+        }
+        // Rayleigh quotient for the final value (more accurate than norm).
+        let av = deflated.matvec(&v);
+        let lam = if dead { 0.0 } else { crate::linalg::dot(&v, &av).max(0.0) };
+        // Deflate: A ← A − λ v vᵀ.
+        for i in 0..n {
+            for j in 0..n {
+                deflated[(i, j)] -= lam * v[i] * v[j];
+            }
+        }
+        out.push((lam, v));
+    }
+    out
+}
+
+/// Neuron importances: Σ_k λ_k · v_k[i]² (variance explained through neuron i).
+pub fn pca_neuron_importance(states: &Mat, k: usize, seed: u64) -> Vec<f64> {
+    let n = states.cols();
+    let rows = states.rows() as f64;
+    // Covariance (centered).
+    let mut mean = vec![0.0; n];
+    for r in 0..states.rows() {
+        for j in 0..n {
+            mean[j] += states[(r, j)];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows.max(1.0);
+    }
+    let mut cov = Mat::zeros(n, n);
+    for r in 0..states.rows() {
+        for i in 0..n {
+            let di = states[(r, i)] - mean[i];
+            if di == 0.0 {
+                continue;
+            }
+            for j in i..n {
+                cov[(i, j)] += di * (states[(r, j)] - mean[j]);
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            cov[(i, j)] = cov[(j, i)];
+        }
+    }
+    for v in cov.as_mut_slice().iter_mut() {
+        *v /= rows.max(1.0);
+    }
+    let pairs = top_eigenpairs(&cov, k, 100, seed);
+    let mut imp = vec![0.0; n];
+    for (lam, v) in pairs {
+        for i in 0..n {
+            imp[i] += lam * v[i] * v[i];
+        }
+    }
+    imp
+}
+
+impl Pruner for PcaPruner {
+    fn name(&self) -> &'static str {
+        "pca"
+    }
+
+    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
+        let st = collect_states(model, calib, self.max_rows);
+        let imp = pca_neuron_importance(&st, self.components, 0x9CA);
+        (0..model.n_weights())
+            .map(|idx| {
+                let (i, j) = model.weight_pos(idx);
+                imp[i] + imp[j]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eigenpairs_of_diagonal() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0., 0., 0., 2.0, 0., 0., 0., 1.0]);
+        let pairs = top_eigenpairs(&a, 2, 200, 1);
+        assert!((pairs[0].0 - 3.0).abs() < 1e-6);
+        assert!((pairs[1].0 - 2.0).abs() < 1e-6);
+        assert!(pairs[0].1[0].abs() > 0.999);
+    }
+
+    #[test]
+    fn importance_tracks_variance() {
+        // Neuron 0 carries 10x the variance of neuron 2.
+        let mut st = Mat::zeros(400, 3);
+        let mut rng = Pcg64::seed(2);
+        for r in 0..400 {
+            st[(r, 0)] = 10.0 * rng.normal();
+            st[(r, 1)] = 3.0 * rng.normal();
+            st[(r, 2)] = 1.0 * rng.normal();
+        }
+        let imp = pca_neuron_importance(&st, 3, 3);
+        assert!(imp[0] > imp[1] && imp[1] > imp[2], "{imp:?}");
+    }
+}

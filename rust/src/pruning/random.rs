@@ -1,0 +1,53 @@
+//! Random pruning baseline — uniform random scores (the weakest method in
+//! Fig. 3; establishes the floor).
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+use crate::rng::{Pcg64, Rng};
+
+use super::Pruner;
+
+/// Uniform random weight scores, deterministic per seed.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomPruner {
+    pub seed: u64,
+}
+
+impl RandomPruner {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl Pruner for RandomPruner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn scores(&self, model: &QuantEsn, _calib: &[TimeSeries]) -> Vec<f64> {
+        let mut rng = Pcg64::seed(self.seed ^ 0x52414E44);
+        (0..model.n_weights()).map(|_| rng.next_f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    #[test]
+    fn deterministic_and_distinct_per_seed() {
+        let data = melborn_sized(1, 20, 10);
+        let res = Reservoir::init(ReservoirSpec::paper(10, 1, 30, 0.9, 1.0, 1));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let qm = crate::quant::QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let a = RandomPruner::new(7).scores(&qm, &data.train);
+        let b = RandomPruner::new(7).scores(&qm, &data.train);
+        let c = RandomPruner::new(8).scores(&qm, &data.train);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 30);
+    }
+}

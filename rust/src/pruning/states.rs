@@ -1,0 +1,61 @@
+//! Shared helper: collect the (dequantized) reservoir state trajectory of the
+//! quantized model over a calibration split — the statistics substrate every
+//! correlation-based baseline operates on.
+
+use crate::data::TimeSeries;
+use crate::linalg::Mat;
+use crate::quant::QuantEsn;
+
+/// Run `model` over `calib` and stack all per-step dequantized states into a
+/// (total_steps × n) matrix, capped at `max_rows` rows (the baselines only
+/// need stable statistics, not every step).
+pub fn collect_states(model: &QuantEsn, calib: &[TimeSeries], max_rows: usize) -> Mat {
+    let n = model.n;
+    let total: usize = calib.iter().map(|s| s.inputs.rows()).sum();
+    let rows = total.min(max_rows);
+    let mut out = Mat::zeros(rows, n);
+    let mut r = 0;
+    'outer: for s in calib {
+        let states = model.run_int(&s.inputs);
+        for t in 0..s.inputs.rows() {
+            for j in 0..n {
+                out[(r, j)] = model.qz_s.dequantize(states[t * n + j]);
+            }
+            r += 1;
+            if r == rows {
+                break 'outer;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    #[test]
+    fn shapes_and_bounds() {
+        let data = melborn_sized(1, 40, 10);
+        let res = Reservoir::init(ReservoirSpec::paper(20, 1, 80, 0.9, 1.0, 3));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let st = collect_states(&qm, &data.train, 100);
+        assert_eq!(st.rows(), 100);
+        assert_eq!(st.cols(), 20);
+        assert!(st.as_slice().iter().all(|&x| x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn cap_respected_when_data_short() {
+        let data = melborn_sized(2, 2, 1);
+        let res = Reservoir::init(ReservoirSpec::paper(10, 1, 30, 0.9, 1.0, 3));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let st = collect_states(&qm, &data.train, 10_000);
+        assert_eq!(st.rows(), 48); // 2 sequences × 24 steps
+    }
+}

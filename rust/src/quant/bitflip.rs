@@ -1,0 +1,88 @@
+//! Two's-complement bit-flip fault injection on q-bit quantized weights —
+//! the probe used by the sensitivity score (Eq. 4), after Rakin et al.'s
+//! bit-flip attack methodology.
+
+use super::qmax;
+
+/// Flip bit `bit` (0 = LSB, `q−1` = sign bit) of the q-bit two's-complement
+/// encoding of `v`, returning the re-decoded signed value.
+///
+/// The result is clamped to the symmetric range `[−qmax, qmax]` because the
+/// accelerator's weights never hold `−2^(q−1)` (symmetric quantization), and
+/// a flip that would produce it must still map to a representable weight.
+pub fn flip_bit(v: i64, bit: u32, q: u8) -> i64 {
+    assert!((bit as u16) < q as u16, "bit {bit} out of range for q={q}");
+    let m = qmax(q);
+    debug_assert!(v >= -m && v <= m, "weight {v} outside q{q} range");
+    let mask = (1u64 << q) - 1;
+    let enc = (v as u64) & mask; // two's complement within q bits
+    let flipped = enc ^ (1u64 << bit);
+    // Sign-extend back from q bits.
+    let sign = 1u64 << (q - 1);
+    let dec = if flipped & sign != 0 {
+        (flipped | !mask) as i64
+    } else {
+        flipped as i64
+    };
+    dec.clamp(-m, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lsb_flip_toggles_parity() {
+        assert_eq!(flip_bit(4, 0, 4), 5);
+        assert_eq!(flip_bit(5, 0, 4), 4);
+    }
+
+    #[test]
+    fn sign_bit_flip() {
+        // 3 = 0011 (q=4); flipping bit 3 -> 1011 = -5.
+        assert_eq!(flip_bit(3, 3, 4), -5);
+        // -5 = 1011; flip sign -> 0011 = 3.
+        assert_eq!(flip_bit(-5, 3, 4), 3);
+    }
+
+    #[test]
+    fn flip_is_involution_when_unclamped() {
+        for q in [4u8, 6, 8] {
+            let m = qmax(q);
+            for v in -m..=m {
+                for bit in 0..q as u32 {
+                    let f = flip_bit(v, bit, q);
+                    if f > -m {
+                        // not clamped: flipping back restores
+                        assert_eq!(flip_bit(f, bit, q), v, "q={q} v={v} bit={bit}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_at_negative_extreme() {
+        // 0 with sign flip would be -8 for q=4 -> clamped to -7.
+        assert_eq!(flip_bit(0, 3, 4), -7);
+    }
+
+    #[test]
+    fn stays_in_range_always() {
+        for q in [4u8, 6, 8] {
+            let m = qmax(q);
+            for v in -m..=m {
+                for bit in 0..q as u32 {
+                    let f = flip_bit(v, bit, q);
+                    assert!(f >= -m && f <= m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_bit() {
+        flip_bit(0, 4, 4);
+    }
+}

@@ -1,0 +1,163 @@
+//! Linear quantization (Eq. 3): `x_int = scale × (x − b)`, rounded and clamped
+//! to the symmetric q-bit range. Weights and activations use symmetric
+//! quantization (`b = 0`), the hardware-friendly choice the streamline
+//! conversion assumes.
+
+use super::qmax;
+
+/// A linear quantizer for one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    /// Multiplicative scale (Eq. 3).
+    pub scale: f64,
+    /// Bias `b` (0 for symmetric).
+    pub bias: f64,
+    /// Bit width.
+    pub q: u8,
+}
+
+impl Quantizer {
+    /// Symmetric quantizer fitted to the data's max magnitude.
+    pub fn symmetric(data: &[f64], q: u8) -> Self {
+        let maxabs = data.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let scale = if maxabs > 0.0 { qmax(q) as f64 / maxabs } else { 1.0 };
+        Self { scale, bias: 0.0, q }
+    }
+
+    /// Symmetric quantizer for a known dynamic range `[−range, range]`.
+    pub fn for_range(range: f64, q: u8) -> Self {
+        assert!(range > 0.0);
+        Self { scale: qmax(q) as f64 / range, bias: 0.0, q }
+    }
+
+    /// Symmetric quantizer with percentile clipping: the scale covers the
+    /// `pct`-quantile of |x| instead of the max, so a handful of outliers
+    /// (typical for ridge readout weights) don't crush the resolution of the
+    /// bulk. Clipped values saturate at ±qmax.
+    pub fn symmetric_clipped(data: &[f64], q: u8, pct: f64) -> Self {
+        assert!((0.0..=1.0).contains(&pct));
+        if data.is_empty() {
+            return Self { scale: 1.0, bias: 0.0, q };
+        }
+        let mut mags: Vec<f64> = data.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((mags.len() as f64 - 1.0) * pct).round() as usize;
+        let clip = mags[idx].max(mags[0]);
+        if clip <= 0.0 {
+            return Self { scale: 1.0, bias: 0.0, q };
+        }
+        Self { scale: qmax(q) as f64 / clip, bias: 0.0, q }
+    }
+
+    /// Symmetric quantizer with SQNR-optimal clipping: sweeps candidate clip
+    /// points (upper |x| percentiles) and keeps the one minimizing the total
+    /// squared reconstruction error — the right trade between saturating the
+    /// tail and losing resolution in the bulk. Used for ridge readout weights,
+    /// which are heavy-tailed.
+    pub fn symmetric_mse(data: &[f64], q: u8) -> Self {
+        if data.is_empty() {
+            return Self { scale: 1.0, bias: 0.0, q };
+        }
+        let mut mags: Vec<f64> = data.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let candidates: Vec<f64> = [1.0, 0.999, 0.99, 0.97, 0.95, 0.9, 0.8, 0.7]
+            .iter()
+            .map(|&p| mags[((mags.len() as f64 - 1.0) * p).round() as usize])
+            .filter(|&c| c > 0.0)
+            .collect();
+        if candidates.is_empty() {
+            return Self { scale: 1.0, bias: 0.0, q };
+        }
+        let mut best = Self { scale: qmax(q) as f64 / candidates[0], bias: 0.0, q };
+        let mut best_err = f64::INFINITY;
+        for &clip in &candidates {
+            let cand = Self { scale: qmax(q) as f64 / clip, bias: 0.0, q };
+            let err: f64 = data
+                .iter()
+                .map(|&x| {
+                    let d = cand.dequantize(cand.quantize(x)) - x;
+                    d * d
+                })
+                .sum();
+            if err < best_err {
+                best_err = err;
+                best = cand;
+            }
+        }
+        best
+    }
+
+    /// Quantize one value (round-to-nearest, clamp to the q-bit range).
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i64 {
+        let m = qmax(self.q);
+        let v = (self.scale * (x - self.bias)).round() as i64;
+        v.clamp(-m, m)
+    }
+
+    /// Dequantize one value.
+    #[inline]
+    pub fn dequantize(&self, v: i64) -> f64 {
+        v as f64 / self.scale + self.bias
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_all(&self, xs: &[f64]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Worst-case absolute reconstruction error for in-range values.
+    pub fn max_error(&self) -> f64 {
+        0.5 / self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Pcg64::seed(1);
+        let data: Vec<f64> = (0..500).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        for q in [4u8, 6, 8] {
+            let qz = Quantizer::symmetric(&data, q);
+            for &x in &data {
+                let err = (qz.dequantize(qz.quantize(x)) - x).abs();
+                assert!(err <= qz.max_error() + 1e-12, "q={q} x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_hits_extremes() {
+        let data = vec![-1.0, 0.25, 1.0];
+        let qz = Quantizer::symmetric(&data, 4);
+        assert_eq!(qz.quantize(1.0), 7);
+        assert_eq!(qz.quantize(-1.0), -7);
+        assert_eq!(qz.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let qz = Quantizer::for_range(1.0, 4);
+        assert_eq!(qz.quantize(5.0), 7);
+        assert_eq!(qz.quantize(-5.0), -7);
+    }
+
+    #[test]
+    fn zero_data_degenerates_gracefully() {
+        let qz = Quantizer::symmetric(&[0.0, 0.0], 8);
+        assert_eq!(qz.quantize(0.0), 0);
+        assert_eq!(qz.dequantize(0), 0.0);
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64 / 50.0) - 1.0).collect();
+        let e4 = Quantizer::symmetric(&data, 4).max_error();
+        let e8 = Quantizer::symmetric(&data, 8).max_error();
+        assert!(e8 < e4 / 10.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Quantization stage (Fig. 2, stage 2) and the bit-exact integer accelerator
+//! model.
+//!
+//! - [`linear`]: Eq. 3 linear quantization (`x_int = scale·(x − b)`).
+//! - [`streamline`]: the streamline algorithm — HardTanh folded into
+//!   successive multi-threshold integer steps (comparator ladder).
+//! - [`qmodel`]: [`QuantEsn`], the all-integer golden model of the direct-logic
+//!   accelerator; sensitivity analysis, pruning and the RTL generator all
+//!   operate on it.
+//! - [`bitflip`]: two's-complement bit-flip fault injection (Eq. 4 probes).
+
+mod bitflip;
+mod linear;
+mod qmodel;
+mod streamline;
+
+pub use bitflip::flip_bit;
+pub use linear::Quantizer;
+pub use qmodel::{QuantEsn, QuantSpec};
+pub use streamline::ThresholdLadder;
+
+/// Largest magnitude representable by a symmetric signed q-bit integer.
+#[inline]
+pub fn qmax(q: u8) -> i64 {
+    debug_assert!((2..=16).contains(&q), "bit-width {q} out of range");
+    (1i64 << (q - 1)) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(6), 31);
+        assert_eq!(qmax(8), 127);
+    }
+}

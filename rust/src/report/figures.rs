@@ -1,0 +1,90 @@
+//! Figure 3 (performance vs pruning rate per method) and Figure 4
+//! (performance ↔ resource trade-off) data series.
+
+use crate::dse::AccelConfig;
+use crate::hw::HwReport;
+use crate::pruning::Method;
+
+/// One Fig. 3 data point: a (method, q, p) → performance sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig3Point {
+    pub method: Method,
+    pub q: u8,
+    pub p: f64,
+    pub perf: f64,
+}
+
+/// Collect Fig. 3 series from per-method DSE runs.
+pub fn fig3_series(runs: &[(Method, Vec<AccelConfig>)]) -> Vec<Fig3Point> {
+    let mut out = Vec::new();
+    for (method, configs) in runs {
+        for c in configs {
+            out.push(Fig3Point { method: *method, q: c.q, p: c.p, perf: c.perf.value() });
+        }
+    }
+    out
+}
+
+/// One Fig. 4 point: performance vs resources for an accelerator config.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Point {
+    pub q: u8,
+    pub p: f64,
+    pub perf: f64,
+    pub luts_plus_ffs: u64,
+    pub pdp_nws: f64,
+}
+
+/// Join DSE performance with hardware reports (Fig. 4).
+pub fn fig4_series(results: &[(AccelConfig, HwReport)]) -> Vec<Fig4Point> {
+    results
+        .iter()
+        .map(|(c, h)| Fig4Point {
+            q: c.q,
+            p: c.p,
+            perf: c.perf.value(),
+            luts_plus_ffs: h.luts + h.ffs,
+            pdp_nws: h.pdp_nws,
+        })
+        .collect()
+}
+
+/// CSV rows for Fig. 3.
+pub fn fig3_csv(points: &[Fig3Point]) -> (Vec<&'static str>, Vec<Vec<f64>>) {
+    let header = vec!["method_id", "q", "p", "perf"];
+    let rows = points
+        .iter()
+        .map(|pt| {
+            let mid = Method::ALL.iter().position(|m| *m == pt.method).unwrap() as f64;
+            vec![mid, pt.q as f64, pt.p, pt.perf]
+        })
+        .collect();
+    (header, rows)
+}
+
+/// CSV rows for Fig. 4.
+pub fn fig4_csv(points: &[Fig4Point]) -> (Vec<&'static str>, Vec<Vec<f64>>) {
+    let header = vec!["q", "p", "perf", "luts_plus_ffs", "pdp_nws"];
+    let rows = points
+        .iter()
+        .map(|pt| vec![pt.q as f64, pt.p, pt.perf, pt.luts_plus_ffs as f64, pt.pdp_nws])
+        .collect();
+    (header, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_csv_roundtrips_method_ids() {
+        let pts = vec![
+            Fig3Point { method: Method::Sensitivity, q: 4, p: 15.0, perf: 0.9 },
+            Fig3Point { method: Method::Lasso, q: 8, p: 90.0, perf: 0.4 },
+        ];
+        let (h, rows) = fig3_csv(&pts);
+        assert_eq!(h[0], "method_id");
+        assert_eq!(rows[0][0], 0.0); // sensitivity is Method::ALL[0]
+        assert_eq!(rows[1][0], 5.0); // lasso is last
+    }
+}

@@ -1,0 +1,18 @@
+//! Report emitters: the paper's tables and figure series, as aligned text and
+//! CSV. Shared by the CLI and the bench targets so `cargo bench` regenerates
+//! exactly what `rcx table2` prints.
+
+pub mod tables;
+pub mod figures;
+
+pub use figures::{fig3_series, fig4_series, Fig3Point, Fig4Point};
+pub use tables::{hw_table, hw_table_csv, table1, HwRow};
+
+/// Right-pad or truncate a cell to a fixed width.
+pub(crate) fn cell(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s[..w].to_string()
+    } else {
+        format!("{s}{}", " ".repeat(w - s.len()))
+    }
+}

@@ -1,0 +1,212 @@
+//! Table I (benchmark parameters) and Tables II/III (hardware evaluation).
+
+use std::fmt::Write as _;
+
+use crate::data::{Benchmark, Dataset};
+use crate::dse::AccelConfig;
+use crate::esn::Perf;
+use crate::hw::HwReport;
+
+use super::cell;
+
+/// One row of a Table II/III-style hardware table.
+#[derive(Clone, Debug)]
+pub struct HwRow {
+    pub q: u8,
+    /// Pruning rate (0 = unpruned).
+    pub p: f64,
+    pub perf: Perf,
+    pub hw: HwReport,
+    pub resource_saving_pct: Option<f64>,
+    pub pdp_saving_pct: Option<f64>,
+}
+
+/// Build Table II/III rows from DSE+hw results: savings are computed against
+/// the same-q unpruned baseline, exactly as in the paper.
+pub fn hw_rows(results: &[(AccelConfig, HwReport)]) -> Vec<HwRow> {
+    let mut rows = Vec::new();
+    for (cfg, hw) in results {
+        let base = results
+            .iter()
+            .find(|(c, _)| c.q == cfg.q && c.p == 0.0)
+            .map(|(_, h)| h);
+        let (rs, ps) = match (base, cfg.p) {
+            (Some(b), p) if p > 0.0 => {
+                (Some(hw.resource_saving_pct(b)), Some(hw.pdp_saving_pct(b)))
+            }
+            _ => (None, None),
+        };
+        rows.push(HwRow {
+            q: cfg.q,
+            p: cfg.p,
+            perf: cfg.perf,
+            hw: *hw,
+            resource_saving_pct: rs,
+            pdp_saving_pct: ps,
+        });
+    }
+    rows
+}
+
+/// Render a Table II/III-style text table.
+pub fn hw_table(title: &str, rows: &[HwRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(
+        out,
+        "{} {} {} {} {} {} {} {} {}",
+        cell("q", 3),
+        cell("prune", 8),
+        cell("LUTs", 8),
+        cell("FFs", 6),
+        cell("lat(ns)", 9),
+        cell("thr(Msps)", 10),
+        cell("PDP(nWs)", 9),
+        cell("res.sav%", 9),
+        cell("PDP.sav%", 9),
+    );
+    for r in rows {
+        let p = if r.p == 0.0 { "unpruned".to_string() } else { format!("{:.0}%", r.p) };
+        let fmt_opt = |o: Option<f64>| o.map_or("-".to_string(), |v| format!("{v:.2}"));
+        let _ = writeln!(
+            out,
+            "{} {} {} {} {} {} {} {} {}",
+            cell(&r.q.to_string(), 3),
+            cell(&p, 8),
+            cell(&r.hw.luts.to_string(), 8),
+            cell(&r.hw.ffs.to_string(), 6),
+            cell(&format!("{:.3}", r.hw.latency_ns), 9),
+            cell(&format!("{:.2}", r.hw.throughput_msps), 10),
+            cell(&format!("{:.3}", r.hw.pdp_nws), 9),
+            cell(&fmt_opt(r.resource_saving_pct), 9),
+            cell(&fmt_opt(r.pdp_saving_pct), 9),
+        );
+    }
+    out
+}
+
+/// CSV form of the hardware table.
+pub fn hw_table_csv(rows: &[HwRow]) -> (Vec<&'static str>, Vec<Vec<f64>>) {
+    let header = vec![
+        "q", "p", "perf", "luts", "ffs", "latency_ns", "throughput_msps", "pdp_nws",
+        "resource_saving_pct", "pdp_saving_pct",
+    ];
+    let data = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.q as f64,
+                r.p,
+                r.perf.value(),
+                r.hw.luts as f64,
+                r.hw.ffs as f64,
+                r.hw.latency_ns,
+                r.hw.throughput_msps,
+                r.hw.pdp_nws,
+                r.resource_saving_pct.unwrap_or(f64::NAN),
+                r.pdp_saving_pct.unwrap_or(f64::NAN),
+            ]
+        })
+        .collect();
+    (header, data)
+}
+
+/// Table I: benchmark parameters + float baseline performance.
+pub fn table1(entries: &[(Benchmark, &Dataset, f64, f64, f64, usize, Perf)]) -> String {
+    // (benchmark, dataset, sr, lr, lambda, ncrl, perf)
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{} {} {} {} {} {} {} {} {}",
+        cell("bench", 9),
+        cell("N", 4),
+        cell("S_len", 6),
+        cell("#cls", 5),
+        cell("T_train", 8),
+        cell("T_test", 7),
+        cell("sr,lr,lambda", 22),
+        cell("ncrl", 5),
+        cell("Perf", 12),
+    );
+    for (b, d, sr, lr, lambda, ncrl, perf) in entries {
+        let s_len = d.train.first().map(|s| s.inputs.rows()).unwrap_or(0);
+        let (t_train, t_test) = match d.task {
+            crate::data::Task::Classification => (d.train.len(), d.test.len()),
+            crate::data::Task::Regression => (
+                d.train.first().map(|s| s.len()).unwrap_or(0),
+                d.test.first().map(|s| s.len()).unwrap_or(0),
+            ),
+        };
+        let classes = match d.task {
+            crate::data::Task::Classification => d.n_classes.to_string(),
+            crate::data::Task::Regression => "(regr)".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "{} {} {} {} {} {} {} {} {}",
+            cell(b.name(), 9),
+            cell("50", 4),
+            cell(&s_len.to_string(), 6),
+            cell(&classes, 5),
+            cell(&t_train.to_string(), 8),
+            cell(&t_test.to_string(), 7),
+            cell(&format!("{sr:.2},{lr:.1},{lambda:.0e}"), 22),
+            cell(&ncrl.to_string(), 5),
+            cell(&perf.to_string(), 12),
+        );
+    }
+    out
+}
+
+pub use hw_rows as build_hw_rows;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+
+    fn dummy_hw(luts: u64, pdp: f64) -> HwReport {
+        HwReport {
+            luts,
+            ffs: 100,
+            latency_ns: 5.0,
+            throughput_msps: 200.0,
+            power_w: 0.1,
+            pdp_nws: pdp,
+        }
+    }
+
+    #[test]
+    fn savings_vs_same_q_baseline() {
+        let data = crate::data::generators::melborn_sized(1, 10, 5);
+        let res = crate::esn::Reservoir::init(crate::esn::ReservoirSpec::paper(
+            10, 1, 30, 0.9, 1.0, 1,
+        ));
+        let m = crate::esn::EsnModel::fit(
+            res,
+            &data,
+            crate::esn::ReadoutSpec { lambda: 0.1, ..Default::default() },
+        );
+        let qm = crate::quant::QuantEsn::from_model(&m, &data, crate::quant::QuantSpec::bits(4));
+        let mk = |p: f64, perf: f64| AccelConfig {
+            q: 4,
+            p,
+            method: crate::pruning::Method::Random,
+            perf: Perf::Accuracy(perf),
+            perf_base: Perf::Accuracy(0.9),
+            model: qm.clone(),
+        };
+        let results = vec![
+            (mk(0.0, 0.9), dummy_hw(1000, 2.0)),
+            (mk(50.0, 0.85), dummy_hw(800, 1.0)),
+        ];
+        let rows = hw_rows(&results);
+        assert!(rows[0].pdp_saving_pct.is_none());
+        let ps = rows[1].pdp_saving_pct.unwrap();
+        assert!((ps - 50.0).abs() < 1e-9);
+        let text = hw_table("T", &rows);
+        assert!(text.contains("unpruned"));
+        assert!(text.contains("50%"));
+        let _ = data.task == Task::Classification;
+    }
+}

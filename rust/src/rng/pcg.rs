@@ -1,0 +1,51 @@
+//! PCG-XSL-RR 128/64 — the workhorse generator for all stochastic stages.
+
+use super::{Rng, SplitMix64};
+
+/// PCG64 (XSL-RR variant): 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion so low-entropy seeds still give good streams.
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let i0 = sm.next_u64() as u128;
+        let i1 = sm.next_u64() as u128;
+        let mut me = Self {
+            state: (s0 << 64) | s1,
+            // Increment must be odd.
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        me.step();
+        me
+    }
+
+    /// Independent stream `i` derived from a base seed (for parallel workers).
+    pub fn stream(seed: u64, i: u64) -> Self {
+        Self::seed(SplitMix64::child(seed, i))
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.step();
+        let s = self.state;
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}

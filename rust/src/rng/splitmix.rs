@@ -1,0 +1,33 @@
+//! SplitMix64 — tiny generator used to seed [`super::Pcg64`] and to derive
+//! independent per-worker streams from a single experiment seed.
+
+use super::Rng;
+
+/// Vigna's SplitMix64. One 64-bit word of state; passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive the `i`-th independent child seed (for worker streams).
+    pub fn child(seed: u64, i: u64) -> u64 {
+        let mut s = SplitMix64::new(seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(i + 1)));
+        s.next_u64()
+    }
+}
+
+impl Rng for SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact manifest: geometry metadata for each AOT-compiled HLO module.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` with one line per artifact:
+//! `<name> b=<batch> t=<steps> in=<input_dim> n=<neurons> int=<0|1> thr_pad=<len>`
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact's geometry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    pub batch: usize,
+    pub steps: usize,
+    pub input_dim: usize,
+    pub n: usize,
+    pub integer: bool,
+    pub thr_pad: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            artifacts.push(parse_line(line, dir).with_context(|| format!("manifest line {}", lineno + 1))?);
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+fn parse_line(line: &str, dir: &Path) -> Result<Artifact> {
+    let mut parts = line.split_whitespace();
+    let name = parts.next().context("missing artifact name")?.to_string();
+    let mut batch = None;
+    let mut steps = None;
+    let mut input_dim = None;
+    let mut n = None;
+    let mut integer = None;
+    let mut thr_pad = None;
+    for kv in parts {
+        let (k, v) = kv.split_once('=').with_context(|| format!("bad field {kv}"))?;
+        let v: usize = v.parse().with_context(|| format!("bad value in {kv}"))?;
+        match k {
+            "b" => batch = Some(v),
+            "t" => steps = Some(v),
+            "in" => input_dim = Some(v),
+            "n" => n = Some(v),
+            "int" => integer = Some(v != 0),
+            "thr_pad" => thr_pad = Some(v),
+            other => bail!("unknown manifest field {other}"),
+        }
+    }
+    let path = dir.join(format!("{name}.hlo.txt"));
+    if !path.exists() {
+        bail!("artifact file missing: {path:?}");
+    }
+    Ok(Artifact {
+        name,
+        batch: batch.context("missing b=")?,
+        steps: steps.context("missing t=")?,
+        input_dim: input_dim.context("missing in=")?,
+        n: n.context("missing n=")?,
+        integer: integer.context("missing int=")?,
+        thr_pad: thr_pad.context("missing thr_pad=")?,
+        path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("rcx_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "foo b=32 t=24 in=1 n=50 int=1 thr_pad=254\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("foo").unwrap();
+        assert_eq!(a.batch, 32);
+        assert_eq!(a.steps, 24);
+        assert!(a.integer);
+        assert_eq!(a.thr_pad, 254);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("rcx_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "gone b=1 t=1 in=1 n=1 int=1 thr_pad=4\n")
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.get("melborn_pooled").is_some());
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, cache the loaded
+//! executables, execute with rust-side literals.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Artifact, Manifest};
+
+/// A PJRT CPU runtime holding compiled executables for every artifact in the
+/// manifest. Compile once, execute many — nothing Python-side survives here.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime and compile every artifact in `dir`.
+    pub fn cpu(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let exe = Self::compile_one(&client, art)?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(Self { client, manifest, executables })
+    }
+
+    /// Create a runtime with only the named artifacts (faster startup).
+    pub fn cpu_subset(dir: &Path, names: &[&str]) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        let mut executables = HashMap::new();
+        for &name in names {
+            let art = manifest
+                .get(name)
+                .with_context(|| format!("artifact {name} not in manifest"))?;
+            executables.insert(name.to_string(), Self::compile_one(&client, art)?);
+        }
+        Ok(Self { client, manifest, executables })
+    }
+
+    fn compile_one(
+        client: &xla::PjRtClient,
+        art: &Artifact,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", art.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("compile {}", art.name))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Geometry of a compiled artifact.
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.manifest.get(name).with_context(|| format!("unknown artifact {name}"))
+    }
+
+    /// Execute a compiled artifact with the given literals; returns the
+    /// decomposed output tuple (artifacts are lowered with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name} not compiled into this runtime"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {name}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Heavier round-trip tests live in rust/tests/runtime_roundtrip.rs;
+    // here we only check graceful failure paths that need no artifacts.
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = match Runtime::cpu(Path::new("/nonexistent/rcx")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Execution adapters: marshal a [`QuantEsn`] + samples into artifact
+//! literals, execute, and unmarshal. The readout stays rust-side (it is what
+//! the DSE varies); the scanned reservoir rollout — the compute hot-spot —
+//! runs inside the compiled XLA/Pallas module.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::TimeSeries;
+use crate::linalg::Mat;
+use crate::quant::QuantEsn;
+
+use super::client::Runtime;
+
+/// Prepared model-side literals reused across batches of one model variant.
+pub struct RolloutInputs {
+    w_in: xla::Literal,
+    w_r: xla::Literal,
+    m_in: xla::Literal,
+    thresholds: xla::Literal,
+    qmax: xla::Literal,
+}
+
+impl RolloutInputs {
+    /// Build the weight/threshold literals for one quantized model against an
+    /// artifact's geometry.
+    pub fn new(rt: &Runtime, artifact: &str, model: &QuantEsn) -> Result<Self> {
+        let art = rt.artifact(artifact)?;
+        ensure!(art.integer, "artifact {artifact} is not the integer path");
+        ensure!(art.n == model.n, "artifact n={} model n={}", art.n, model.n);
+        ensure!(
+            art.input_dim == model.input_dim,
+            "artifact in={} model in={}",
+            art.input_dim,
+            model.input_dim
+        );
+        // Dense W_r from the CSR slots (pruned slots are zero).
+        let n = model.n;
+        let mut w_r_dense = vec![0i64; n * n];
+        for i in 0..n {
+            for k in model.w_r_indptr[i]..model.w_r_indptr[i + 1] {
+                w_r_dense[i * n + model.w_r_indices[k]] = model.w_r_values[k];
+            }
+        }
+        let mut thr = model.ladder.thresholds.clone();
+        ensure!(thr.len() <= art.thr_pad, "ladder longer than artifact pad");
+        thr.resize(art.thr_pad, i64::MAX);
+        Ok(Self {
+            w_in: xla::Literal::vec1(&model.w_in)
+                .reshape(&[n as i64, model.input_dim as i64])?,
+            w_r: xla::Literal::vec1(&w_r_dense).reshape(&[n as i64, n as i64])?,
+            m_in: xla::Literal::vec1(&[model.m_in]),
+            thresholds: xla::Literal::vec1(&thr),
+            qmax: xla::Literal::vec1(&[model.ladder.qmax]),
+        })
+    }
+}
+
+/// Quantize a batch of fixed-length sequences into a (B, T, In) literal,
+/// padding the batch with zero sequences up to `batch`.
+fn quantize_batch(
+    model: &QuantEsn,
+    samples: &[&TimeSeries],
+    batch: usize,
+    steps: usize,
+    input_dim: usize,
+) -> Result<xla::Literal> {
+    ensure!(samples.len() <= batch, "batch overflow");
+    let mut data = vec![0i64; batch * steps * input_dim];
+    for (bi, s) in samples.iter().enumerate() {
+        ensure!(s.inputs.rows() == steps, "sequence length {} != artifact T {steps}", s.inputs.rows());
+        for t in 0..steps {
+            for k in 0..input_dim {
+                data[(bi * steps + t) * input_dim + k] = model.qz_u.quantize(s.inputs[(t, k)]);
+            }
+        }
+    }
+    Ok(xla::Literal::vec1(&data).reshape(&[batch as i64, steps as i64, input_dim as i64])?)
+}
+
+/// Run the pooled-classification artifact over `samples`; returns one pooled
+/// state-sum vector (length n) per sample, batching internally.
+pub fn pooled_states(
+    rt: &Runtime,
+    artifact: &str,
+    model: &QuantEsn,
+    samples: &[&TimeSeries],
+) -> Result<Vec<Vec<i64>>> {
+    let art = rt.artifact(artifact)?.clone();
+    let inputs = RolloutInputs::new(rt, artifact, model)?;
+    let n = model.n;
+    let mut out = Vec::with_capacity(samples.len());
+    for chunk in samples.chunks(art.batch) {
+        let u = quantize_batch(model, chunk, art.batch, art.steps, art.input_dim)?;
+        let s0 = xla::Literal::vec1(&vec![0i64; art.batch * n])
+            .reshape(&[art.batch as i64, n as i64])?;
+        let results = rt.execute(
+            artifact,
+            &[
+                u,
+                s0,
+                inputs.w_in.clone(),
+                inputs.w_r.clone(),
+                inputs.m_in.clone(),
+                inputs.thresholds.clone(),
+                inputs.qmax.clone(),
+            ],
+        )?;
+        let pooled = results
+            .first()
+            .context("artifact returned no outputs")?
+            .to_vec::<i64>()?;
+        for bi in 0..chunk.len() {
+            out.push(pooled[bi * n..(bi + 1) * n].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// Stream a long trajectory through the fixed-T states artifact, chaining the
+/// state carry across chunks. Returns the (T_total × n) state matrix.
+pub fn rollout_states(
+    rt: &Runtime,
+    artifact: &str,
+    model: &QuantEsn,
+    inputs_mat: &Mat,
+) -> Result<Vec<i64>> {
+    let art = rt.artifact(artifact)?.clone();
+    ensure!(art.batch == 1, "states artifact must have batch=1");
+    let prep = RolloutInputs::new(rt, artifact, model)?;
+    let n = model.n;
+    let t_total = inputs_mat.rows();
+    let mut states = Vec::with_capacity(t_total * n);
+    let mut s_carry = vec![0i64; n];
+    let mut t0 = 0;
+    while t0 < t_total {
+        let take = (t_total - t0).min(art.steps);
+        // Build the chunk, zero-padded to the artifact T.
+        let mut u = vec![0i64; art.steps * art.input_dim];
+        for t in 0..take {
+            for k in 0..art.input_dim {
+                u[t * art.input_dim + k] = model.qz_u.quantize(inputs_mat[(t0 + t, k)]);
+            }
+        }
+        let u_lit = xla::Literal::vec1(&u).reshape(&[1, art.steps as i64, art.input_dim as i64])?;
+        let s0_lit = xla::Literal::vec1(&s_carry).reshape(&[1, n as i64])?;
+        let results = rt.execute(
+            artifact,
+            &[
+                u_lit,
+                s0_lit,
+                prep.w_in.clone(),
+                prep.w_r.clone(),
+                prep.m_in.clone(),
+                prep.thresholds.clone(),
+                prep.qmax.clone(),
+            ],
+        )?;
+        let chunk_states = results[0].to_vec::<i64>()?; // (1, T, n)
+        states.extend_from_slice(&chunk_states[..take * n]);
+        // Carry from the last *real* step (not the zero padding): read it
+        // from the states output rather than s_final when the chunk is short.
+        s_carry = chunk_states[(take - 1) * n..take * n].to_vec();
+        t0 += take;
+    }
+    Ok(states)
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime bridge: load AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the coordinator hot path. Python never runs here.
+
+mod artifacts;
+mod client;
+mod exec;
+
+pub use artifacts::{Artifact, Manifest};
+pub use client::Runtime;
+pub use exec::{pooled_states, rollout_states, RolloutInputs};
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Resolve relative to the executable's working directory; the Makefile
+    // and examples run from the repo root.
+    std::path::PathBuf::from("artifacts")
+}

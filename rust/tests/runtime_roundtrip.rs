@@ -1,0 +1,106 @@
+//! Cross-layer integration: the AOT XLA/Pallas artifacts must reproduce the
+//! rust-native integer golden model **bit-exactly**. Requires
+//! `make artifacts` (tests skip politely when artifacts are absent).
+
+use std::path::Path;
+
+use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
+use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::runtime::{pooled_states, rollout_states, Runtime};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn melborn_pooled_bit_exact_vs_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu_subset(dir, &["melborn_pooled"]).unwrap();
+    let data = melborn_sized(3, 80, 50);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    for q in [4u8, 6, 8] {
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+        let samples: Vec<&_> = data.test.iter().take(40).collect();
+        let pjrt = pooled_states(&rt, "melborn_pooled", &qm, &samples).unwrap();
+        for (si, s) in samples.iter().enumerate() {
+            let states = qm.run_int(&s.inputs);
+            let mut native = vec![0i64; qm.n];
+            for t in 0..s.inputs.rows() {
+                for j in 0..qm.n {
+                    native[j] += states[t * qm.n + j];
+                }
+            }
+            assert_eq!(pjrt[si], native, "q={q} sample {si}: XLA != native");
+        }
+    }
+}
+
+#[test]
+fn pen_pooled_classification_agrees_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu_subset(dir, &["pen_pooled"]).unwrap();
+    let data = pen_sized(3, 300, 60);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 2, 250, 0.6, 1.0, 13));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let samples: Vec<&_> = data.test.iter().collect();
+    let pooled = pooled_states(&rt, "pen_pooled", &qm, &samples).unwrap();
+    let t = data.test[0].inputs.rows() as f64;
+    for (si, s) in samples.iter().enumerate() {
+        let via_pjrt = qm.classify_from_pooled(&pooled[si], t);
+        let native = qm.classify(s);
+        assert_eq!(via_pjrt, native, "sample {si}");
+    }
+}
+
+#[test]
+fn henon_states_chaining_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu_subset(dir, &["henon_states"]).unwrap();
+    // 600 steps: forces chaining across three 256-step artifact invocations.
+    let data = henon_sized(5, 500, 100);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 17));
+    let m = EsnModel::fit(
+        res,
+        &data,
+        ReadoutSpec { lambda: 1e-4, washout: 30, features: Features::MeanState },
+    );
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+    let inputs = &data.test[0].inputs;
+    let pjrt_states = rollout_states(&rt, "henon_states", &qm, inputs).unwrap();
+    let native_states = qm.run_int(inputs);
+    assert_eq!(pjrt_states, native_states, "chained XLA rollout != native");
+}
+
+#[test]
+fn pruned_and_bitflipped_models_roundtrip() {
+    // The whole point of weights-as-arguments: DSE variants reuse the artifact.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu_subset(dir, &["melborn_pooled"]).unwrap();
+    let data = melborn_sized(9, 60, 30);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let mut qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+    qm.prune(&(0..100).collect::<Vec<_>>());
+    qm.flip_weight_bit(200, 2);
+    let samples: Vec<&_> = data.test.iter().take(8).collect();
+    let pjrt = pooled_states(&rt, "melborn_pooled", &qm, &samples).unwrap();
+    for (si, s) in samples.iter().enumerate() {
+        let states = qm.run_int(&s.inputs);
+        let mut native = vec![0i64; qm.n];
+        for t in 0..s.inputs.rows() {
+            for j in 0..qm.n {
+                native[j] += states[t * qm.n + j];
+            }
+        }
+        assert_eq!(pjrt[si], native, "sample {si}");
+    }
+}
