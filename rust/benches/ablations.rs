@@ -53,6 +53,7 @@ fn main() {
             .collect();
         maxq.w_out = w_out;
         maxq.qz_wo = qz;
+        maxq.refresh_bias_fold();
     }
     println!(
         "  mse-clipped {:.4} vs max-scale {:.4}",
@@ -68,7 +69,7 @@ fn main() {
         calib,
         &IterativeConfig {
             step_pct: 15.0,
-            scorer: SensitivityConfig { parallelism: 0, max_calib: 96 },
+            scorer: SensitivityConfig { parallelism: 0, max_calib: 96, ..Default::default() },
             refold: true,
         },
     );

@@ -16,7 +16,7 @@ use rcx::coordinator::{Batcher, BatcherConfig};
 use rcx::data::Benchmark;
 use rcx::dse::calibration_split;
 use rcx::hw::{self, Topology};
-use rcx::pruning::{Pruner, SensitivityConfig, SensitivityPruner};
+use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
 use rcx::quant::{QuantEsn, QuantSpec};
 use rcx::runtime::{pooled_states, Runtime};
 
@@ -30,10 +30,14 @@ fn main() {
     let st = time_it(50, 500, || qm.run_int(&s.inputs));
     println!("{st}  ({:.1} Ksteps/s)", 24.0 / st.median.as_secs_f64() / 1e3);
 
-    section("L3-b sensitivity scoring (Eq.4, 250 weights x 6 bits)");
+    section("L3-b sensitivity scoring (Eq.4, 250 weights x 6 bits, incremental engine)");
     let calib = calibration_split(&data, 64);
     for workers in [1usize, 4, 0] {
-        let p = SensitivityPruner::new(SensitivityConfig { parallelism: workers, max_calib: 64 });
+        let p = SensitivityPruner::new(SensitivityConfig {
+            parallelism: workers,
+            max_calib: 64,
+            ..Default::default()
+        });
         let t0 = Instant::now();
         let scores = p.scores(&qm, calib);
         let el = t0.elapsed();
@@ -42,6 +46,25 @@ fn main() {
             "workers={:<4} {el:?}  ({:.0} evals/s)",
             if workers == 0 { "all".to_string() } else { workers.to_string() },
             (250.0 * 6.0) / el.as_secs_f64()
+        );
+    }
+
+    section("L3-b' scoring engines head-to-head (dense oracle vs incremental, same grid)");
+    for workers in [1usize, 4, 0] {
+        let mk = |engine| {
+            SensitivityPruner::new(SensitivityConfig { parallelism: workers, max_calib: 64, engine })
+        };
+        let t0 = Instant::now();
+        let dense = mk(Engine::Dense).scores(&qm, calib);
+        let t_dense = t0.elapsed();
+        let t0 = Instant::now();
+        let inc = mk(Engine::Incremental).scores(&qm, calib);
+        let t_inc = t0.elapsed();
+        assert_eq!(dense, inc, "engines must be bit-identical");
+        println!(
+            "workers={:<4} dense {t_dense:>10.3?}  incremental {t_inc:>10.3?}  speedup {:.1}x",
+            if workers == 0 { "all".to_string() } else { workers.to_string() },
+            t_dense.as_secs_f64() / t_inc.as_secs_f64()
         );
     }
 

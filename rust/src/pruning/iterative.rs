@@ -96,7 +96,7 @@ mod tests {
         let (qm, data) = tiny();
         let cfg = IterativeConfig {
             step_pct: 20.0,
-            scorer: SensitivityConfig { parallelism: 1, max_calib: 20 },
+            scorer: SensitivityConfig { parallelism: 1, max_calib: 20, ..Default::default() },
             refold: false,
         };
         let initial_live = qm.live_weights();
@@ -120,7 +120,7 @@ mod tests {
         let (qm, data) = tiny();
         let cfg = IterativeConfig {
             step_pct: 25.0,
-            scorer: SensitivityConfig { parallelism: 1, max_calib: 15 },
+            scorer: SensitivityConfig { parallelism: 1, max_calib: 15, ..Default::default() },
             refold: false,
         };
         let (pruned, _) = iterative_prune(&qm, 75.0, &data.train[..15], &cfg);

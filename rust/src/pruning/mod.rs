@@ -25,7 +25,7 @@ pub use iterative::{iterative_prune, IterativeConfig};
 pub use lasso::LassoPruner;
 pub use pca::PcaPruner;
 pub use random::RandomPruner;
-pub use sensitivity::{SensitivityConfig, SensitivityPruner};
+pub use sensitivity::{Engine, SensitivityConfig, SensitivityPruner};
 pub use states::collect_states;
 
 use crate::data::TimeSeries;
@@ -79,7 +79,7 @@ impl Method {
     /// Instantiate the pruner behind this method.
     pub fn pruner(&self, seed: u64) -> Box<dyn Pruner> {
         match self {
-            Method::Sensitivity => Box::new(SensitivityPruner::new(SensitivityConfig::default())),
+            Method::Sensitivity => Box::new(SensitivityPruner::default()),
             Method::Random => Box::new(RandomPruner::new(seed)),
             Method::Mi => Box::new(MiPruner::default()),
             Method::Spearman => Box::new(SpearmanPruner::default()),

@@ -7,16 +7,36 @@
 //! absolute performance deviation over all bit positions. Weights with low
 //! sensitivity barely influence the output and are pruned first.
 //!
-//! This is the framework's dominant compute cost (`n_weights × q` full
-//! evaluations), so the scorer fans the weight slots out over a thread pool;
-//! each worker owns a private clone of the model (flip → evaluate → restore).
+//! This is the framework's dominant compute cost (`n_weights × q`
+//! evaluations), so the scorer fans the weight slots out over a thread pool.
+//! By default each evaluation runs on the **incremental engine**
+//! ([`CalibPlan`]): one immutable calibration plan is shared by every worker
+//! (no per-worker model clones) and each flip is evaluated by sparse delta
+//! propagation instead of a full rollout. The original dense
+//! flip → `evaluate_split` → restore loop is kept as [`Engine::Dense`] — it
+//! is the oracle the incremental path must match bit-for-bit (see the
+//! equivalence tests here and in `tests/incremental_equivalence.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::TimeSeries;
-use crate::quant::QuantEsn;
+use crate::quant::{flip_bit, CalibPlan, FlipScratch, QuantEsn, QuantInputCache};
 
 use super::Pruner;
+
+/// Which evaluation engine backs the Eq. 4 sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Cached calibration plan + sparse delta-propagation rollouts.
+    /// Bit-identical to `Dense`; expected much faster on the paper's sparse
+    /// reservoirs (cost model in EXPERIMENTS.md §Perf — measure with the
+    /// perf_hotpaths L3-b′ section, which asserts the equality either way).
+    #[default]
+    Incremental,
+    /// Flip → full `evaluate_split` → restore on a per-worker model clone.
+    /// Kept as the correctness oracle.
+    Dense,
+}
 
 /// Tuning knobs for the sensitivity scorer.
 #[derive(Clone, Copy, Debug)]
@@ -26,11 +46,13 @@ pub struct SensitivityConfig {
     /// Cap on calibration samples (classification) — keeps the
     /// `n_weights × q` evaluation grid tractable; 0 = use all.
     pub max_calib: usize,
+    /// Evaluation engine (incremental by default; dense is the oracle).
+    pub engine: Engine,
 }
 
 impl Default for SensitivityConfig {
     fn default() -> Self {
-        Self { parallelism: 0, max_calib: 256 }
+        Self { parallelism: 0, max_calib: 256, engine: Engine::Incremental }
     }
 }
 
@@ -52,19 +74,105 @@ impl SensitivityPruner {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         }
     }
-}
 
-impl Pruner for SensitivityPruner {
-    fn name(&self) -> &'static str {
-        "sensitivity"
-    }
-
-    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
-        let calib: &[TimeSeries] = if self.cfg.max_calib > 0 && calib.len() > self.cfg.max_calib {
+    fn calib_slice<'c>(&self, calib: &'c [TimeSeries]) -> &'c [TimeSeries] {
+        if self.cfg.max_calib > 0 && calib.len() > self.cfg.max_calib {
             &calib[..self.cfg.max_calib]
         } else {
             calib
-        };
+        }
+    }
+
+    /// Score with a caller-provided pre-quantized input cache (shared across
+    /// the q-levels of a DSE sweep). The cache must have been built over this
+    /// same `calib` sequence (or a longer sequence it is a prefix of) —
+    /// entry `si` is paired with `calib[si]`; a quantizer match alone cannot
+    /// detect a different sample set (debug builds cross-check entry-by-
+    /// entry). Falls back to building a fresh cache if the provided one does
+    /// not match this model's input quantizer or is too short.
+    pub fn scores_with_inputs(
+        &self,
+        model: &QuantEsn,
+        calib: &[TimeSeries],
+        inputs: Option<&QuantInputCache>,
+    ) -> Vec<f64> {
+        let calib = self.calib_slice(calib);
+        match self.cfg.engine {
+            Engine::Dense => self.scores_dense(model, calib),
+            Engine::Incremental => {
+                let owned;
+                let cache = match inputs {
+                    Some(c) if c.matches(model) && c.len() >= calib.len() => c,
+                    _ => {
+                        owned = QuantInputCache::build(model, calib);
+                        &owned
+                    }
+                };
+                let plan = CalibPlan::build_with_inputs(model, calib, cache);
+                self.scores_incremental(model, &plan)
+            }
+        }
+    }
+
+    /// Incremental sweep: workers share the immutable plan; each owns only a
+    /// small [`FlipScratch`].
+    fn scores_incremental(&self, model: &QuantEsn, plan: &CalibPlan) -> Vec<f64> {
+        let base = plan.base_perf();
+        let q = model.q as u32;
+        let n = model.n_weights();
+        let mut scores = vec![0.0f64; n];
+        let n_workers = self.workers().min(n.max(1));
+        let next = AtomicUsize::new(0);
+        let chunk = 8usize;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                let next = &next;
+                handles.push(scope.spawn(move || {
+                    let mut sc = FlipScratch::for_plan(plan);
+                    let mut out: Vec<(usize, f64)> = Vec::new();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        for idx in start..(start + chunk).min(n) {
+                            let old = plan.slot_value(idx);
+                            let mut dev_sum = 0.0;
+                            for bit in 0..q {
+                                let flipped = flip_bit(old, bit, model.q);
+                                if flipped == old {
+                                    // clamped flip that landed on the same
+                                    // value: zero deviation by definition
+                                    continue;
+                                }
+                                let perf = plan.eval_flip(model, idx, flipped, &mut sc);
+                                dev_sum += base.deviation(&perf);
+                            }
+                            out.push((idx, dev_sum / q as f64 + 1e-9 * tie_break(old)));
+                        }
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                for (idx, s) in h.join().expect("sensitivity worker panicked") {
+                    scores[idx] = s;
+                }
+            }
+        });
+        scores
+    }
+
+    /// Dense oracle: the original flip → full evaluate → restore loop on a
+    /// per-worker model clone.
+    ///
+    /// The worker-pool scaffolding (atomic cursor, chunk size, join/merge)
+    /// deliberately duplicates [`Self::scores_incremental`] rather than
+    /// sharing a helper: this loop is the frozen oracle the equivalence
+    /// tests compare against, kept textually close to the seed
+    /// implementation. Scheduling changes must be mirrored in both.
+    fn scores_dense(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
         let base = model.evaluate_split(calib);
         let q = model.q as u32;
         let n = model.n_weights();
@@ -98,13 +206,7 @@ impl Pruner for SensitivityPruner {
                                 local.set_weight(idx, old);
                                 dev_sum += base.deviation(&perf);
                             }
-                            // Primary: Eq. 4 mean deviation. Secondary: an
-                            // infinitesimal magnitude term so weights that
-                            // tie at zero measured deviation (finite calib
-                            // set ⇒ quantized accuracy) are pruned smallest-
-                            // magnitude-first rather than arbitrarily.
-                            let mag = local.w_r_values[idx].unsigned_abs() as f64;
-                            out.push((idx, dev_sum / q as f64 + 1e-9 * mag));
+                            out.push((idx, dev_sum / q as f64 + 1e-9 * tie_break(local.w_r_values[idx])));
                         }
                     }
                     out
@@ -117,6 +219,25 @@ impl Pruner for SensitivityPruner {
             }
         });
         scores
+    }
+}
+
+/// Secondary score term: an infinitesimal magnitude component so weights that
+/// tie at zero measured deviation (finite calib set ⇒ quantized accuracy) are
+/// pruned smallest-magnitude-first rather than arbitrarily. (Primary term is
+/// the Eq. 4 mean deviation.)
+#[inline]
+fn tie_break(w: i64) -> f64 {
+    w.unsigned_abs() as f64
+}
+
+impl Pruner for SensitivityPruner {
+    fn name(&self) -> &'static str {
+        "sensitivity"
+    }
+
+    fn scores(&self, model: &QuantEsn, calib: &[TimeSeries]) -> Vec<f64> {
+        self.scores_with_inputs(model, calib, None)
     }
 }
 
@@ -138,7 +259,11 @@ mod tests {
     #[test]
     fn scores_cover_all_slots_and_are_nonnegative() {
         let (qm, data) = tiny_model();
-        let p = SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib: 30 });
+        let p = SensitivityPruner::new(SensitivityConfig {
+            parallelism: 2,
+            max_calib: 30,
+            ..Default::default()
+        });
         let s = p.scores(&qm, &data.train);
         assert_eq!(s.len(), qm.n_weights());
         assert!(s.iter().all(|&v| v >= 0.0));
@@ -149,11 +274,30 @@ mod tests {
     #[test]
     fn deterministic_across_parallelism() {
         let (qm, data) = tiny_model();
-        let s1 = SensitivityPruner::new(SensitivityConfig { parallelism: 1, max_calib: 25 })
-            .scores(&qm, &data.train);
-        let s4 = SensitivityPruner::new(SensitivityConfig { parallelism: 4, max_calib: 25 })
-            .scores(&qm, &data.train);
+        let s1 = SensitivityPruner::new(SensitivityConfig {
+            parallelism: 1,
+            max_calib: 25,
+            ..Default::default()
+        })
+        .scores(&qm, &data.train);
+        let s4 = SensitivityPruner::new(SensitivityConfig {
+            parallelism: 4,
+            max_calib: 25,
+            ..Default::default()
+        })
+        .scores(&qm, &data.train);
         assert_eq!(s1, s4);
+    }
+
+    #[test]
+    fn incremental_matches_dense_oracle_exactly() {
+        let (qm, data) = tiny_model();
+        let mk = |engine| {
+            SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib: 25, engine })
+        };
+        let inc = mk(Engine::Incremental).scores(&qm, &data.train);
+        let dense = mk(Engine::Dense).scores(&qm, &data.train);
+        assert_eq!(inc, dense, "incremental engine must be bit-identical to the dense oracle");
     }
 
     #[test]
@@ -162,7 +306,11 @@ mod tests {
         // to both sides (isolating selection quality from the state-scale
         // shift that any 30% prune causes — see prune_with_compensation).
         let (qm, data) = tiny_model();
-        let p = SensitivityPruner::new(SensitivityConfig { parallelism: 0, max_calib: 40 });
+        let p = SensitivityPruner::new(SensitivityConfig {
+            parallelism: 0,
+            max_calib: 40,
+            ..Default::default()
+        });
         let calib = &data.train[..40];
         let scores = p.scores(&qm, calib);
         let low = crate::pruning::prune_with_compensation(&qm, &scores, 30.0, calib);

@@ -8,15 +8,20 @@
 //!   accelerator; sensitivity analysis, pruning and the RTL generator all
 //!   operate on it.
 //! - [`bitflip`]: two's-complement bit-flip fault injection (Eq. 4 probes).
+//! - [`rollout`]: the incremental sensitivity engine — cached calibration
+//!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation,
+//!   bit-identical to the dense flip → evaluate → restore loop.
 
 mod bitflip;
 mod linear;
 mod qmodel;
+mod rollout;
 mod streamline;
 
 pub use bitflip::flip_bit;
 pub use linear::Quantizer;
 pub use qmodel::{QuantEsn, QuantSpec};
+pub use rollout::{CalibPlan, FlipScratch, QuantInputCache};
 pub use streamline::ThresholdLadder;
 
 /// Largest magnitude representable by a symmetric signed q-bit integer.

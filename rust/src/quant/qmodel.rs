@@ -67,6 +67,11 @@ pub struct QuantEsn {
     pub qz_wo: Vec<Quantizer>,
     /// Per-class fixed-point alignment multipliers (`2^F·s_min/s_wo_c`).
     pub m_out: Vec<i64>,
+    /// Per-class folded bias constants `bias_f[c]·2^F·s_min·s_s` — hardwired
+    /// at construction/refold time so the readout hot path only multiplies by
+    /// the pooling length (§Perf iteration 3; previously the `s_min` fold and
+    /// the four-factor product ran once per sample per evaluation).
+    pub bias_fold: Vec<f64>,
 
     /// Streamline constants: `acc = m_in·acc_in + acc_r·2^F ≈ 2^F·s_wr·s_s·a`.
     pub m_in: i64,
@@ -142,6 +147,7 @@ impl QuantEsn {
             .iter()
             .map(|z| ((1i64 << spec.f_bits) as f64 * s_min / z.scale).round() as i64)
             .collect();
+        let bias_fold = fold_bias(&bias_f, spec.f_bits, s_min, qz_s.scale);
 
         let w_in = qz_wi.quantize_all(model.reservoir.w_in.as_slice());
         // CSR copy with quantized values.
@@ -186,6 +192,7 @@ impl QuantEsn {
             qz_wr,
             qz_wo,
             m_out,
+            bias_fold,
             m_in,
             f_bits: spec.f_bits,
             ladder,
@@ -264,6 +271,15 @@ impl QuantEsn {
             .collect();
         self.w_out = w_out;
         self.qz_wo = qz_wo;
+        self.refresh_bias_fold();
+    }
+
+    /// Recompute the folded readout bias constants from the current per-class
+    /// quantizers. Call after swapping `qz_wo`/`bias_f` by hand (the
+    /// constructor and [`Self::refold_readout`] do it automatically).
+    pub fn refresh_bias_fold(&mut self) {
+        let s_min = self.qz_wo.iter().map(|z| z.scale).fold(f64::INFINITY, f64::min);
+        self.bias_fold = fold_bias(&self.bias_f, self.f_bits, s_min, self.qz_s.scale);
     }
 
     /// Mean absolute integer state per neuron over a calibration split —
@@ -288,6 +304,31 @@ impl QuantEsn {
         acc
     }
 
+    /// Input projection of neuron `i` for one step: `m_in·(Σ_k Wq_in[i,k]·u_int[k])`.
+    /// Invariant under any reservoir-weight change — the part of the
+    /// pre-activation that [`crate::quant::CalibPlan`] caches per step.
+    #[inline]
+    pub fn input_projection(&self, i: usize, u_int: &[i64]) -> i64 {
+        let mut acc_in: i64 = 0;
+        let wrow = &self.w_in[i * self.input_dim..(i + 1) * self.input_dim];
+        for k in 0..self.input_dim {
+            acc_in += wrow[k] * u_int[k];
+        }
+        self.m_in * acc_in
+    }
+
+    /// Recurrence accumulator of neuron `i`: `Σ_j Wq_r[i,j]·s_prev[j]`
+    /// (pre-shift; the full pre-activation is `in_proj + (acc_r << F)`).
+    #[inline]
+    pub fn recurrence_acc(&self, i: usize, s_prev: &[i64]) -> i64 {
+        let (s, e) = (self.w_r_indptr[i], self.w_r_indptr[i + 1]);
+        let mut acc_r: i64 = 0;
+        for k in s..e {
+            acc_r += self.w_r_values[k] * s_prev[self.w_r_indices[k]];
+        }
+        acc_r
+    }
+
     /// One integer reservoir step: read `s_prev`, write `s_next`.
     #[inline]
     pub fn step_int(&self, u_int: &[i64], s_prev: &[i64], s_next: &mut [i64]) {
@@ -295,17 +336,7 @@ impl QuantEsn {
         debug_assert_eq!(s_prev.len(), self.n);
         let f = self.f_bits;
         for i in 0..self.n {
-            let mut acc_in: i64 = 0;
-            let wrow = &self.w_in[i * self.input_dim..(i + 1) * self.input_dim];
-            for k in 0..self.input_dim {
-                acc_in += wrow[k] * u_int[k];
-            }
-            let (s, e) = (self.w_r_indptr[i], self.w_r_indptr[i + 1]);
-            let mut acc_r: i64 = 0;
-            for k in s..e {
-                acc_r += self.w_r_values[k] * s_prev[self.w_r_indices[k]];
-            }
-            let acc = self.m_in * acc_in + (acc_r << f);
+            let acc = self.input_projection(i, u_int) + (self.recurrence_acc(i, s_prev) << f);
             s_next[i] = self.ladder.apply(acc);
         }
     }
@@ -359,8 +390,17 @@ impl QuantEsn {
     /// scale the hardwired bias constants. Exposed so the PJRT runtime path
     /// (which computes pooled sums in XLA) shares the exact same readout.
     pub fn classify_from_pooled(&self, pooled: &[i64], t_factor: f64) -> usize {
+        let scores = self.readout_scores(pooled, t_factor);
+        let scores_f: Vec<f64> = scores.iter().map(|&v| v as f64).collect();
+        argmax(&scores_f)
+    }
+
+    /// Per-class integer readout scores for a pooled feature vector — the
+    /// values [`Self::classify_from_pooled`] takes the argmax of. Exposed so
+    /// the incremental scoring engine ([`crate::quant::CalibPlan`]) can cache
+    /// baseline scores and patch them with sparse deltas.
+    pub fn readout_scores(&self, pooled: &[i64], t_factor: f64) -> Vec<i64> {
         debug_assert_eq!(pooled.len(), self.n);
-        let s_min = self.qz_wo.iter().map(|z| z.scale).fold(f64::INFINITY, f64::min);
         let mut scores = vec![0i64; self.out_dim];
         for c in 0..self.out_dim {
             let wrow = &self.w_out[c * self.n..(c + 1) * self.n];
@@ -369,17 +409,12 @@ impl QuantEsn {
                 acc += wrow[j] * pooled[j];
             }
             // Align class scales (one hardwired constant multiply per class)
-            // and add the hardwired integer bias.
-            let b_int = (self.bias_f[c]
-                * (1i64 << self.f_bits) as f64
-                * s_min
-                * self.qz_s.scale
-                * t_factor)
-                .round() as i64;
+            // and add the hardwired integer bias (constants folded at
+            // construction/refold time — see `bias_fold`).
+            let b_int = (self.bias_fold[c] * t_factor).round() as i64;
             scores[c] = self.m_out[c] * acc + b_int;
         }
-        let scores_f: Vec<f64> = scores.iter().map(|&v| v as f64).collect();
-        argmax(&scores_f)
+        scores
     }
 
     /// Per-step regression readout from a raw integer state row (dequantized).
@@ -518,6 +553,17 @@ impl QuantEsn {
     }
 }
 
+/// Fold the per-class bias constants `bias_f[c]·2^F·s_min·s_s` (everything in
+/// the hardwired integer bias except the pooling length). The factor order
+/// matches the original per-call expression exactly so the hoisting is
+/// bit-transparent.
+fn fold_bias(bias_f: &[f64], f_bits: u32, s_min: f64, s_s_scale: f64) -> Vec<f64> {
+    bias_f
+        .iter()
+        .map(|&b| b * (1i64 << f_bits) as f64 * s_min * s_s_scale)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -638,6 +684,33 @@ mod tests {
         let ra = qh.evaluate_split(&hd.test);
         let rb = qh.evaluate_split_reference(&hd.test);
         assert!((ra.value() - rb.value()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn folded_bias_matches_per_call_computation() {
+        // The hoisted constants must reproduce the historical per-call
+        // expression bit-for-bit, both at construction and after a refold.
+        let (m, data) = trained_melborn();
+        let mut qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let check = |qm: &QuantEsn| {
+            let s_min = qm.qz_wo.iter().map(|z| z.scale).fold(f64::INFINITY, f64::min);
+            for (c, &fold) in qm.bias_fold.iter().enumerate() {
+                for t_factor in [1.0, 24.0, 250.0] {
+                    let b_ref = (qm.bias_f[c]
+                        * (1i64 << qm.f_bits) as f64
+                        * s_min
+                        * qm.qz_s.scale
+                        * t_factor)
+                        .round() as i64;
+                    assert_eq!((fold * t_factor).round() as i64, b_ref, "class {c}");
+                }
+            }
+        };
+        check(&qm);
+        qm.prune(&[0, 3, 7, 20]);
+        let gamma = vec![0.9; qm.n];
+        qm.refold_readout(&gamma);
+        check(&qm);
     }
 
     #[test]

@@ -1,0 +1,757 @@
+//! Event-driven incremental sensitivity engine: cached calibration plans +
+//! sparse delta-propagation rollouts.
+//!
+//! Sensitivity scoring (Eq. 4) evaluates `n_weights × q` single-bit
+//! perturbations of the reservoir matrix, and the seed implementation paid a
+//! **full** calibration rollout for each one. Two observations make that
+//! almost entirely redundant:
+//!
+//! 1. **Calibration plans.** A single bit-flip changes one reservoir weight
+//!    and nothing else. The quantized inputs `u_int`, the per-step input
+//!    projections `m_in·(Σ_k Wq_in[i,k]·u_int[k])`, the baseline state
+//!    trajectory, the baseline pre-activations, the baseline readout scores
+//!    and the baseline per-step squared errors are all invariant across the
+//!    whole scoring sweep. [`CalibPlan`] precomputes them once; every flip
+//!    evaluation starts from the cached baseline instead of from zero.
+//!
+//! 2. **Sparse delta propagation.** Flipping `w_r[i0,j0]` first perturbs only
+//!    row `i0`'s recurrence accumulator by `Δw·s_prev[j0]`. A perturbed
+//!    accumulator changes the next state only if it crosses a threshold of
+//!    the comparator ladder — and quantized states snap back to the baseline
+//!    level whenever it does not. [`CalibPlan::eval_flip`] therefore tracks a
+//!    *dirty-neuron frontier* per timestep: only rows whose inputs intersect
+//!    the frontier (found via a column→rows reverse index on the CSR
+//!    structure) are re-evaluated, and neurons whose ladder output lands on
+//!    the baseline value drop out. With the paper's sparse reservoirs
+//!    (~5 nonzeros/row) most perturbations stay localized or die out
+//!    entirely.
+//!
+//! # Exactness invariants
+//!
+//! The engine is **bit-identical** to flip → [`QuantEsn::evaluate_split`] →
+//! restore, not an approximation:
+//!
+//! - All state/accumulator arithmetic is `i64`; a patched accumulator
+//!   `acc_base + (Δacc_r << F)` equals the fully recomputed one exactly
+//!   (integer addition is associative), and identical accumulators produce
+//!   identical ladder outputs.
+//! - Classification scores are patched in integer space
+//!   (`base_score + m_out·Σ w_out[c,j]·Δpooled[j]`), so the argmax sees the
+//!   exact same `i64` scores the dense path computes.
+//! - Regression replays the squared-error accumulation in the dense path's
+//!   exact (sample, step, dim) order, substituting recomputed values only at
+//!   steps with a non-empty frontier; every `f64` added to the accumulator is
+//!   the same value the dense path adds, so the final RMSE is bit-identical
+//!   (floating-point addition is order-sensitive, hence the replay instead of
+//!   per-sample subtotals).
+//!
+//! # What survives a flip (and what does not)
+//!
+//! A plan is built against one baseline model (one `(q, w_r)` pair). Caches
+//! keyed only on inputs + `W_in` (`u_int`, input projections) survive any
+//! reservoir-weight change; caches involving `w_r` (baseline trajectory,
+//! accumulators, scores) are valid exactly because `eval_flip` never mutates
+//! the model — it evaluates the *hypothetical* flipped model against the
+//! baseline caches. After actually pruning or requantizing, build a new plan.
+//! [`QuantInputCache`] additionally survives *across bit-widths*: input
+//! quantization is 8-bit for every `q ≤ 8` (fixed-width sensor words), so one
+//! cache serves the whole `Q = {4,6,8}` DSE sweep (`matches` guards this).
+
+use crate::data::{Task, TimeSeries};
+use crate::esn::{Features, Perf};
+
+use super::QuantEsn;
+
+/// Pre-quantized calibration inputs, shareable across every model whose input
+/// quantizer is identical — in particular across all q-levels of a DSE sweep
+/// (inputs arrive as 8-bit sensor words for any q ≤ 8).
+#[derive(Clone, Debug)]
+pub struct QuantInputCache {
+    /// Per sample: `T × input_dim` quantized inputs, row-major.
+    u_int: Vec<Vec<i64>>,
+    scale: f64,
+    bias: f64,
+    q: u8,
+}
+
+impl QuantInputCache {
+    /// Quantize every calibration sample's inputs once with `model`'s input
+    /// quantizer.
+    pub fn build(model: &QuantEsn, calib: &[TimeSeries]) -> Self {
+        let mut u_int = Vec::with_capacity(calib.len());
+        for s in calib {
+            let t = s.inputs.rows();
+            let mut v = Vec::with_capacity(t * model.input_dim);
+            for step in 0..t {
+                let row = s.inputs.row(step);
+                for k in 0..model.input_dim {
+                    v.push(model.qz_u.quantize(row[k]));
+                }
+            }
+            u_int.push(v);
+        }
+        Self { u_int, scale: model.qz_u.scale, bias: model.qz_u.bias, q: model.qz_u.q }
+    }
+
+    /// True when this cache was produced by a quantizer identical to
+    /// `model`'s — i.e. reusing it is bit-exact.
+    pub fn matches(&self, model: &QuantEsn) -> bool {
+        self.scale == model.qz_u.scale && self.bias == model.qz_u.bias && self.q == model.qz_u.q
+    }
+
+    /// Number of cached samples.
+    pub fn len(&self) -> usize {
+        self.u_int.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.u_int.is_empty()
+    }
+}
+
+/// Per-sample baseline caches (see module docs for the invariants).
+#[derive(Clone, Debug)]
+struct SamplePlan {
+    /// Sequence length T.
+    t: usize,
+    /// Baseline pre-activations `in_proj + (acc_r << F)`, `T × n`. The
+    /// flip-invariant input projections are computed once at build time and
+    /// folded in here (recover one as `acc − (recurrence_acc << F)` if the
+    /// batched multi-flip follow-on ever needs them standalone).
+    acc: Vec<i64>,
+    /// Baseline integer states, `T × n`.
+    s: Vec<i64>,
+    /// Classification: baseline per-class integer readout scores.
+    base_scores: Vec<i64>,
+    /// Classification: whether the baseline prediction matches the label.
+    base_correct: bool,
+    /// Regression: baseline readout accumulators, `(T − washout) × out_dim`.
+    racc: Vec<i64>,
+    /// Regression: baseline per-step squared errors, same layout as `racc`.
+    se: Vec<f64>,
+}
+
+/// Immutable calibration plan shared by all scoring workers. Build once per
+/// `(model, calibration split)` pair; evaluate any number of single-weight
+/// perturbations against it via [`CalibPlan::eval_flip`] with one
+/// [`FlipScratch`] per worker.
+pub struct CalibPlan<'a> {
+    n: usize,
+    out_dim: usize,
+    f_bits: u32,
+    task: Task,
+    features: Features,
+    washout: usize,
+    /// Baseline reservoir values (copy — guards against the model mutating).
+    w_vals: Vec<i64>,
+    /// Slot → (row, col) of the CSR structure.
+    slot_row: Vec<usize>,
+    slot_col: Vec<usize>,
+    /// Column → rows reverse index (CSC view of the CSR structure):
+    /// `col_rows/col_slots[col_indptr[j]..col_indptr[j+1]]` are the rows that
+    /// read state `j`, and the weight slots they read it through.
+    col_indptr: Vec<usize>,
+    col_rows: Vec<usize>,
+    col_slots: Vec<usize>,
+    /// Regression: per-class dequantization denominator
+    /// `qz_wo[c].scale · qz_s.scale`.
+    readout_denom: Vec<f64>,
+    samples: Vec<SamplePlan>,
+    calib: &'a [TimeSeries],
+    base_perf: Perf,
+}
+
+/// Reusable per-worker scratch for [`CalibPlan::eval_flip`]. Epoch-stamped
+/// dense arrays give O(frontier) resets instead of O(n).
+pub struct FlipScratch {
+    row_delta: Vec<i64>,
+    row_stamp: Vec<u64>,
+    rows: Vec<usize>,
+    dirty: Vec<(usize, i64)>,
+    next: Vec<(usize, i64)>,
+    pooled_dev: Vec<i64>,
+    pooled_stamp: Vec<u64>,
+    pooled_touched: Vec<usize>,
+    scores: Vec<i64>,
+    epoch: u64,
+    pooled_epoch: u64,
+}
+
+impl FlipScratch {
+    pub fn new(n: usize, out_dim: usize) -> Self {
+        Self {
+            row_delta: vec![0; n],
+            row_stamp: vec![0; n],
+            rows: Vec::with_capacity(n),
+            dirty: Vec::with_capacity(n),
+            next: Vec::with_capacity(n),
+            pooled_dev: vec![0; n],
+            pooled_stamp: vec![0; n],
+            pooled_touched: Vec::with_capacity(n),
+            scores: vec![0; out_dim],
+            epoch: 0,
+            pooled_epoch: 0,
+        }
+    }
+
+    pub fn for_plan(plan: &CalibPlan) -> Self {
+        Self::new(plan.n, plan.out_dim)
+    }
+}
+
+impl<'a> CalibPlan<'a> {
+    /// Build a plan, quantizing the calibration inputs with `model`'s input
+    /// quantizer.
+    pub fn build(model: &QuantEsn, calib: &'a [TimeSeries]) -> Self {
+        let inputs = QuantInputCache::build(model, calib);
+        Self::build_with_inputs(model, calib, &inputs)
+    }
+
+    /// Build a plan from pre-quantized inputs (one [`QuantInputCache`] can
+    /// serve every q-level of a DSE sweep).
+    pub fn build_with_inputs(
+        model: &QuantEsn,
+        calib: &'a [TimeSeries],
+        inputs: &QuantInputCache,
+    ) -> Self {
+        assert!(inputs.matches(model), "input cache quantizer mismatch");
+        // A cache longer than the split is fine: sample `si` of the split is
+        // cache entry `si` (scorers may sub-slice a shared cache's split).
+        // The cache MUST have been built over (a superset prefix of) the same
+        // split — a quantizer match alone cannot detect a different sample
+        // set, so debug builds cross-check every entry against requantization.
+        assert!(inputs.len() >= calib.len(), "input cache sample-count mismatch");
+        debug_assert!(
+            calib.iter().enumerate().all(|(si, sample)| {
+                let t = sample.inputs.rows();
+                inputs.u_int[si].len() == t * model.input_dim
+                    && (0..t).all(|step| {
+                        let row = sample.inputs.row(step);
+                        (0..model.input_dim).all(|k| {
+                            inputs.u_int[si][step * model.input_dim + k]
+                                == model.qz_u.quantize(row[k])
+                        })
+                    })
+            }),
+            "input cache entries do not correspond to this calibration split"
+        );
+        let n = model.n;
+        let f = model.f_bits;
+
+        // Column → rows reverse index over the CSR structure.
+        let nnz = model.w_r_values.len();
+        let mut slot_row = vec![0usize; nnz];
+        let mut slot_col = vec![0usize; nnz];
+        let mut counts = vec![0usize; n];
+        for i in 0..n {
+            for k in model.w_r_indptr[i]..model.w_r_indptr[i + 1] {
+                slot_row[k] = i;
+                slot_col[k] = model.w_r_indices[k];
+                counts[model.w_r_indices[k]] += 1;
+            }
+        }
+        let mut col_indptr = vec![0usize; n + 1];
+        for j in 0..n {
+            col_indptr[j + 1] = col_indptr[j] + counts[j];
+        }
+        let mut cursor = col_indptr[..n].to_vec();
+        let mut col_rows = vec![0usize; nnz];
+        let mut col_slots = vec![0usize; nnz];
+        for k in 0..nnz {
+            let j = slot_col[k];
+            col_rows[cursor[j]] = slot_row[k];
+            col_slots[cursor[j]] = k;
+            cursor[j] += 1;
+        }
+
+        let readout_denom: Vec<f64> =
+            model.qz_wo.iter().map(|z| z.scale * model.qz_s.scale).collect();
+
+        // Baseline rollouts: record input projections, pre-activations and
+        // states per step, then the task-specific readout baselines.
+        let mut samples = Vec::with_capacity(calib.len());
+        for (si, sample) in calib.iter().enumerate() {
+            let t_steps = sample.inputs.rows();
+            let u = &inputs.u_int[si];
+            let mut acc = vec![0i64; t_steps * n];
+            let mut s = vec![0i64; t_steps * n];
+            let mut s_prev = vec![0i64; n];
+            for t in 0..t_steps {
+                let urow = &u[t * model.input_dim..(t + 1) * model.input_dim];
+                for i in 0..n {
+                    // The input projection is flip-invariant; computing it
+                    // here once (instead of per flip) is cache (1) of the
+                    // module docs.
+                    let p = model.input_projection(i, urow);
+                    let a = p + (model.recurrence_acc(i, &s_prev) << f);
+                    acc[t * n + i] = a;
+                    s[t * n + i] = model.ladder.apply(a);
+                }
+                s_prev.copy_from_slice(&s[t * n..(t + 1) * n]);
+            }
+
+            let mut base_scores = Vec::new();
+            let mut base_correct = false;
+            let mut racc = Vec::new();
+            let mut se = Vec::new();
+            match model.task {
+                Task::Classification => {
+                    let mut pooled = vec![0i64; n];
+                    match model.features {
+                        Features::MeanState => {
+                            for t in 0..t_steps {
+                                for j in 0..n {
+                                    pooled[j] += s[t * n + j];
+                                }
+                            }
+                        }
+                        Features::LastState => {
+                            if t_steps > 0 {
+                                pooled.copy_from_slice(&s[(t_steps - 1) * n..t_steps * n]);
+                            }
+                        }
+                    }
+                    let t_factor = match model.features {
+                        Features::MeanState => t_steps as f64,
+                        Features::LastState => 1.0,
+                    };
+                    base_scores = model.readout_scores(&pooled, t_factor);
+                    let pred = argmax_scores(&base_scores);
+                    base_correct = Some(pred) == sample.label;
+                }
+                Task::Regression => {
+                    let targets = sample.targets.as_ref().expect("regression sample w/o targets");
+                    for t in model.washout..t_steps {
+                        for c in 0..model.out_dim {
+                            let wrow = &model.w_out[c * n..(c + 1) * n];
+                            let mut a: i64 = 0;
+                            for j in 0..n {
+                                a += wrow[j] * s[t * n + j];
+                            }
+                            let v = a as f64 / readout_denom[c] + model.bias_f[c];
+                            let e = v - targets[(t, c)];
+                            racc.push(a);
+                            se.push(e * e);
+                        }
+                    }
+                }
+            }
+            samples.push(SamplePlan { t: t_steps, acc, s, base_scores, base_correct, racc, se });
+        }
+
+        // Baseline performance straight from the caches just built — the
+        // per-sample values are the exact ones `evaluate_split` computes and
+        // the fold order matches its (sample, step, dim) stream, so this is
+        // bit-identical to `model.evaluate_split(calib)` without paying a
+        // second full calibration rollout (debug builds cross-check).
+        let base_perf = base_perf_from_samples(model.task, &samples);
+
+        let plan = Self {
+            n,
+            out_dim: model.out_dim,
+            f_bits: f,
+            task: model.task,
+            features: model.features,
+            washout: model.washout,
+            w_vals: model.w_r_values.clone(),
+            slot_row,
+            slot_col,
+            col_indptr,
+            col_rows,
+            col_slots,
+            readout_denom,
+            samples,
+            calib,
+            base_perf,
+        };
+        debug_assert_eq!(
+            base_perf,
+            model.evaluate_split(calib),
+            "plan baseline diverged from evaluate_split"
+        );
+        plan
+    }
+
+    /// Baseline (unflipped) performance on the calibration split —
+    /// bit-identical to `model.evaluate_split(calib)`.
+    pub fn base_perf(&self) -> Perf {
+        self.base_perf
+    }
+
+    /// Number of reservoir weight slots the plan covers.
+    pub fn n_slots(&self) -> usize {
+        self.w_vals.len()
+    }
+
+    /// Baseline value of weight slot `slot`.
+    pub fn slot_value(&self, slot: usize) -> i64 {
+        self.w_vals[slot]
+    }
+
+    /// Evaluate calibration performance with weight slot `slot` set to
+    /// `new_val` (everything else at baseline). Bit-identical to
+    /// flip → `model.evaluate_split(calib)` → restore on the dense path.
+    ///
+    /// `model` must be the same baseline model the plan was built from (the
+    /// plan never mutates it; a debug assertion cross-checks the values).
+    pub fn eval_flip(
+        &self,
+        model: &QuantEsn,
+        slot: usize,
+        new_val: i64,
+        sc: &mut FlipScratch,
+    ) -> Perf {
+        debug_assert_eq!(model.n, self.n);
+        debug_assert_eq!(model.w_r_values, self.w_vals, "plan built for a different baseline");
+        let old = self.w_vals[slot];
+        if new_val == old {
+            return self.base_perf;
+        }
+        let dw = new_val - old;
+        let (i0, j0) = (self.slot_row[slot], self.slot_col[slot]);
+        match self.task {
+            Task::Classification => self.eval_flip_cls(model, i0, j0, dw, sc),
+            Task::Regression => self.eval_flip_reg(model, i0, j0, dw, sc),
+        }
+    }
+
+    /// One frontier step: scatter the previous-state deviations into the rows
+    /// that read them (via the reverse index), add the flipped-slot
+    /// correction, and re-ladder only the touched rows. `dirty` holds
+    /// `(neuron, s'_prev − s_prev)` deviations at step `t−1`; `next` receives
+    /// the deviations at step `t`.
+    ///
+    /// Correctness: for a row `i` with accumulator delta
+    /// `Δ = Σ_{j∈dirty} w[i,j]·dev[j] (+ Δw·s'_prev[j0] if i == i0)`, the
+    /// patched pre-activation `acc_base + (Δ << F)` equals the full
+    /// recomputation with the flipped weight exactly (`i64` linearity), and
+    /// rows with `Δ = 0` — as well as rows whose ladder output lands back on
+    /// the baseline level — contribute no deviation, which is what lets the
+    /// frontier die out.
+    #[allow(clippy::too_many_arguments)]
+    fn step_frontier(
+        &self,
+        model: &QuantEsn,
+        sp: &SamplePlan,
+        t: usize,
+        i0: usize,
+        j0: usize,
+        dw: i64,
+        dirty: &[(usize, i64)],
+        next: &mut Vec<(usize, i64)>,
+        sc: &mut FlipScratch,
+    ) {
+        let n = self.n;
+        sc.epoch += 1;
+        sc.rows.clear();
+        for &(j, dj) in dirty {
+            for k in self.col_indptr[j]..self.col_indptr[j + 1] {
+                let row = self.col_rows[k];
+                if sc.row_stamp[row] != sc.epoch {
+                    sc.row_stamp[row] = sc.epoch;
+                    sc.row_delta[row] = 0;
+                    sc.rows.push(row);
+                }
+                sc.row_delta[row] += self.w_vals[self.col_slots[k]] * dj;
+            }
+        }
+        // The scatter above used the *baseline* weight for the flipped slot;
+        // adding Δw·s'_prev[j0] completes row i0's delta to
+        // w'·s'_prev[j0] − w·s_prev[j0] exactly.
+        let s_prev_j0 = if t == 0 { 0 } else { sp.s[(t - 1) * n + j0] };
+        let dev_j0 = dirty.iter().find(|&&(j, _)| j == j0).map_or(0, |&(_, d)| d);
+        let corr = dw * (s_prev_j0 + dev_j0);
+        if corr != 0 {
+            if sc.row_stamp[i0] != sc.epoch {
+                sc.row_stamp[i0] = sc.epoch;
+                sc.row_delta[i0] = 0;
+                sc.rows.push(i0);
+            }
+            sc.row_delta[i0] += corr;
+        }
+        next.clear();
+        for &row in &sc.rows {
+            let rd = sc.row_delta[row];
+            if rd == 0 {
+                continue;
+            }
+            let acc = sp.acc[t * n + row] + (rd << self.f_bits);
+            let s_new = model.ladder.apply(acc);
+            let d = s_new - sp.s[t * n + row];
+            if d != 0 {
+                next.push((row, d));
+            }
+        }
+    }
+
+    fn eval_flip_cls(
+        &self,
+        model: &QuantEsn,
+        i0: usize,
+        j0: usize,
+        dw: i64,
+        sc: &mut FlipScratch,
+    ) -> Perf {
+        let n = self.n;
+        let mut dirty = std::mem::take(&mut sc.dirty);
+        let mut next = std::mem::take(&mut sc.next);
+        let mut correct = 0usize;
+        for (si, sp) in self.samples.iter().enumerate() {
+            dirty.clear();
+            sc.pooled_epoch += 1;
+            sc.pooled_touched.clear();
+            let last_only = self.features == Features::LastState;
+            for t in 0..sp.t {
+                self.step_frontier(model, sp, t, i0, j0, dw, &dirty, &mut next, sc);
+                if !last_only {
+                    for &(j, d) in &next {
+                        if sc.pooled_stamp[j] != sc.pooled_epoch {
+                            sc.pooled_stamp[j] = sc.pooled_epoch;
+                            sc.pooled_dev[j] = 0;
+                            sc.pooled_touched.push(j);
+                        }
+                        sc.pooled_dev[j] += d;
+                    }
+                } else if t + 1 == sp.t {
+                    for &(j, d) in &next {
+                        sc.pooled_stamp[j] = sc.pooled_epoch;
+                        sc.pooled_dev[j] = d;
+                        sc.pooled_touched.push(j);
+                    }
+                }
+                std::mem::swap(&mut dirty, &mut next);
+            }
+            if sc.pooled_touched.is_empty() {
+                // Trajectory (or at least the pooled feature) never deviated:
+                // the baseline verdict stands.
+                if sp.base_correct {
+                    correct += 1;
+                }
+                continue;
+            }
+            // Patch the integer class scores with the sparse pooled deltas.
+            for c in 0..self.out_dim {
+                let wrow = &model.w_out[c * n..(c + 1) * n];
+                let mut dacc: i64 = 0;
+                for &j in &sc.pooled_touched {
+                    dacc += wrow[j] * sc.pooled_dev[j];
+                }
+                sc.scores[c] = sp.base_scores[c] + model.m_out[c] * dacc;
+            }
+            if Some(argmax_scores(&sc.scores)) == self.calib[si].label {
+                correct += 1;
+            }
+        }
+        sc.dirty = dirty;
+        sc.next = next;
+        Perf::Accuracy(correct as f64 / self.samples.len().max(1) as f64)
+    }
+
+    fn eval_flip_reg(
+        &self,
+        model: &QuantEsn,
+        i0: usize,
+        j0: usize,
+        dw: i64,
+        sc: &mut FlipScratch,
+    ) -> Perf {
+        let n = self.n;
+        let mut dirty = std::mem::take(&mut sc.dirty);
+        let mut next = std::mem::take(&mut sc.next);
+        let mut se = 0.0f64;
+        let mut count = 0usize;
+        for (si, sp) in self.samples.iter().enumerate() {
+            dirty.clear();
+            let targets = self.calib[si].targets.as_ref().expect("regression sample w/o targets");
+            for t in 0..sp.t {
+                self.step_frontier(model, sp, t, i0, j0, dw, &dirty, &mut next, sc);
+                if t >= self.washout {
+                    // Replay the dense path's squared-error accumulation in
+                    // its exact order; recompute only frontier steps.
+                    let base = (t - self.washout) * self.out_dim;
+                    if next.is_empty() {
+                        for c in 0..self.out_dim {
+                            se += sp.se[base + c];
+                            count += 1;
+                        }
+                    } else {
+                        for c in 0..self.out_dim {
+                            let wrow = &model.w_out[c * n..(c + 1) * n];
+                            let mut dacc: i64 = 0;
+                            for &(j, dj) in &next {
+                                dacc += wrow[j] * dj;
+                            }
+                            let v = (sp.racc[base + c] + dacc) as f64 / self.readout_denom[c]
+                                + model.bias_f[c];
+                            let e = v - targets[(t, c)];
+                            se += e * e;
+                            count += 1;
+                        }
+                    }
+                }
+                std::mem::swap(&mut dirty, &mut next);
+            }
+        }
+        sc.dirty = dirty;
+        sc.next = next;
+        Perf::Rmse((se / count.max(1) as f64).sqrt())
+    }
+}
+
+/// Baseline performance from the per-sample caches, replaying the exact
+/// accumulation order of [`QuantEsn::evaluate_split`].
+fn base_perf_from_samples(task: Task, samples: &[SamplePlan]) -> Perf {
+    match task {
+        Task::Classification => {
+            let correct = samples.iter().filter(|sp| sp.base_correct).count();
+            Perf::Accuracy(correct as f64 / samples.len().max(1) as f64)
+        }
+        Task::Regression => {
+            let mut se = 0.0f64;
+            let mut count = 0usize;
+            for sp in samples {
+                for &e2 in &sp.se {
+                    se += e2;
+                    count += 1;
+                }
+            }
+            Perf::Rmse((se / count.max(1) as f64).sqrt())
+        }
+    }
+}
+
+/// Argmax over integer scores with the exact tie semantics of
+/// [`crate::esn::metrics::argmax`] on the `f64`-converted scores.
+fn argmax_scores(scores: &[i64]) -> usize {
+    let mut best = 0usize;
+    for c in 1..scores.len() {
+        if (scores[c] as f64) > (scores[best] as f64) {
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{henon_sized, melborn_sized};
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::{flip_bit, QuantSpec};
+
+    fn melborn_model(q: u8) -> (QuantEsn, crate::data::Dataset) {
+        let data = melborn_sized(1, 60, 40);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(q)), data)
+    }
+
+    fn henon_model(q: u8) -> (QuantEsn, crate::data::Dataset) {
+        let data = henon_sized(2, 300, 120);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
+        );
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(q)), data)
+    }
+
+    /// Every (slot, bit) flip must match the dense flip→evaluate→restore loop
+    /// bit-for-bit.
+    fn assert_all_flips_match(model: &QuantEsn, calib: &[TimeSeries]) {
+        let plan = CalibPlan::build(model, calib);
+        let mut sc = FlipScratch::for_plan(&plan);
+        let mut dense = model.clone();
+        assert_eq!(plan.base_perf(), model.evaluate_split(calib));
+        for slot in 0..model.n_weights() {
+            for bit in 0..model.q as u32 {
+                let old = dense.flip_weight_bit(slot, bit);
+                let flipped = dense.w_r_values[slot];
+                let reference = if flipped == old {
+                    plan.base_perf()
+                } else {
+                    dense.evaluate_split(calib)
+                };
+                dense.set_weight(slot, old);
+                let incremental = plan.eval_flip(model, slot, flip_bit(old, bit, model.q), &mut sc);
+                assert_eq!(
+                    incremental, reference,
+                    "slot {slot} bit {bit}: incremental != dense"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn classification_flips_bit_identical() {
+        let (qm, data) = melborn_model(4);
+        assert_all_flips_match(&qm, &data.train[..30]);
+    }
+
+    #[test]
+    fn classification_q6_bit_identical() {
+        let (qm, data) = melborn_model(6);
+        assert_all_flips_match(&qm, &data.train[..20]);
+    }
+
+    #[test]
+    fn regression_flips_bit_identical() {
+        let (qm, data) = henon_model(8);
+        assert_all_flips_match(&qm, &data.train);
+    }
+
+    #[test]
+    fn last_state_features_bit_identical() {
+        let data = melborn_sized(3, 50, 30);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 7));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 0.1, features: Features::LastState, ..Default::default() },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        assert_all_flips_match(&qm, &data.train[..20]);
+    }
+
+    #[test]
+    fn input_cache_is_shareable_across_q_levels() {
+        let data = melborn_sized(1, 40, 20);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let calib = &data.train[..16];
+        let q4 = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let cache = QuantInputCache::build(&q4, calib);
+        for q in [4u8, 6, 8] {
+            let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+            assert!(cache.matches(&qm), "q={q}: input quantizer must be q-invariant (8-bit)");
+            let plan = CalibPlan::build_with_inputs(&qm, calib, &cache);
+            assert_eq!(plan.base_perf(), qm.evaluate_split(calib));
+        }
+    }
+
+    #[test]
+    fn unchanged_value_short_circuits_to_base() {
+        let (qm, data) = melborn_model(4);
+        let calib = &data.train[..10];
+        let plan = CalibPlan::build(&qm, calib);
+        let mut sc = FlipScratch::for_plan(&plan);
+        let v = plan.slot_value(0);
+        assert_eq!(plan.eval_flip(&qm, 0, v, &mut sc), plan.base_perf());
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // Evaluating the same flip twice through one scratch (with an
+        // unrelated flip in between) must give identical results.
+        let (qm, data) = melborn_model(6);
+        let calib = &data.train[..20];
+        let plan = CalibPlan::build(&qm, calib);
+        let mut sc = FlipScratch::for_plan(&plan);
+        let w0 = flip_bit(plan.slot_value(5), 3, qm.q);
+        let a = plan.eval_flip(&qm, 5, w0, &mut sc);
+        let _ = plan.eval_flip(&qm, 17, flip_bit(plan.slot_value(17), 1, qm.q), &mut sc);
+        let b = plan.eval_flip(&qm, 5, w0, &mut sc);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,319 @@
+"""Faithful Python mirror of the Rust incremental engine vs dense reference.
+
+Mirrors: ThresholdLadder.apply, step_int, evaluate_split (classification +
+regression), CalibPlan caches, step_frontier, eval_flip_cls/reg, flip_bit.
+Asserts bit-identical Perf for every (slot, bit) flip on random sparse models.
+"""
+import math
+import random
+import bisect
+
+
+def qmax(q):
+    return (1 << (q - 1)) - 1
+
+
+def flip_bit(v, bit, q):
+    m = qmax(q)
+    mask = (1 << q) - 1
+    enc = v & mask
+    flipped = enc ^ (1 << bit)
+    sign = 1 << (q - 1)
+    dec = flipped - (1 << q) if flipped & sign else flipped
+    return max(-m, min(m, dec))
+
+
+class Ladder:
+    def __init__(self, c, q):
+        m = qmax(q)
+        self.qmax = m
+        self.thr = [math.ceil(c * (l - 0.5)) for l in range(-m + 1, m + 1)]
+
+    def apply(self, acc):
+        # partition_point(|t| t <= acc) == bisect_right(thr, acc)
+        return -self.qmax + bisect.bisect_right(self.thr, acc)
+
+
+class Model:
+    def __init__(self, rng, n, q, task, features, washout, out_dim, nnz_per_row, T, n_samples):
+        self.n, self.q, self.task, self.features, self.washout = n, q, task, features, washout
+        self.out_dim = out_dim
+        self.f = 12
+        m = qmax(q)
+        self.w_in = [rng.randint(-m, m) for _ in range(n)]  # input_dim = 1
+        self.m_in = rng.randint(1, 5000)
+        indptr, indices, values = [0], [], []
+        for i in range(n):
+            cols = rng.sample(range(n), nnz_per_row)
+            for j in sorted(cols):
+                indices.append(j)
+                values.append(rng.randint(-m, m))
+            indptr.append(len(indices))
+        self.indptr, self.indices, self.values = indptr, indices, values
+        self.ladder = Ladder(rng.uniform(500.0, 5000.0), q)
+        self.w_out = [[rng.randint(-m, m) for _ in range(n)] for _ in range(out_dim)]
+        self.m_out = [rng.randint(1, 4096) for _ in range(out_dim)]
+        self.bias_fold = [rng.uniform(-100.0, 100.0) for _ in range(out_dim)]
+        self.bias_f = [rng.uniform(-0.5, 0.5) for _ in range(out_dim)]
+        self.denom = [rng.uniform(1e3, 1e5) for _ in range(out_dim)]
+        # samples: u_int sequences + labels/targets
+        self.samples = []
+        for _ in range(n_samples):
+            u = [rng.randint(-127, 127) for _ in range(T)]
+            if task == "cls":
+                self.samples.append((u, rng.randrange(out_dim), None))
+            else:
+                tgt = [[rng.uniform(-1, 1) for _ in range(out_dim)] for _ in range(T)]
+                self.samples.append((u, None, tgt))
+
+    def step(self, u_t, s_prev, values):
+        out = []
+        for i in range(self.n):
+            acc_in = self.w_in[i] * u_t
+            acc_r = 0
+            for k in range(self.indptr[i], self.indptr[i + 1]):
+                acc_r += values[k] * s_prev[self.indices[k]]
+            acc = self.m_in * acc_in + (acc_r << self.f)
+            out.append(self.ladder.apply(acc))
+        return out
+
+    def readout_scores(self, pooled, t_factor):
+        scores = []
+        for c in range(self.out_dim):
+            a = sum(self.w_out[c][j] * pooled[j] for j in range(self.n))
+            b_int = int_round(self.bias_fold[c] * t_factor)
+            scores.append(self.m_out[c] * a + b_int)
+        return scores
+
+    def evaluate(self, values):
+        if self.task == "cls":
+            correct = 0
+            for u, label, _ in self.samples:
+                s_prev = [0] * self.n
+                pooled = [0] * self.n
+                for t, u_t in enumerate(u):
+                    s_prev = self.step(u_t, s_prev, values)
+                    if self.features == "mean":
+                        for j in range(self.n):
+                            pooled[j] += s_prev[j]
+                    elif t == len(u) - 1:
+                        pooled = list(s_prev)
+                t_factor = float(len(u)) if self.features == "mean" else 1.0
+                scores = self.readout_scores(pooled, t_factor)
+                if argmax(scores) == label:
+                    correct += 1
+            return ("acc", correct / max(len(self.samples), 1))
+        else:
+            se, count = 0.0, 0
+            for u, _, tgt in self.samples:
+                s_prev = [0] * self.n
+                for t, u_t in enumerate(u):
+                    s_prev = self.step(u_t, s_prev, values)
+                    if t >= self.washout:
+                        for c in range(self.out_dim):
+                            a = sum(self.w_out[c][j] * s_prev[j] for j in range(self.n))
+                            v = a / self.denom[c] + self.bias_f[c]
+                            e = v - tgt[t][c]
+                            se += e * e
+                            count += 1
+            return ("rmse", math.sqrt(se / max(count, 1)))
+
+
+def int_round(x):
+    # Rust f64::round — round half away from zero
+    return int(math.floor(x + 0.5)) if x >= 0 else int(math.ceil(x - 0.5))
+
+
+def argmax(scores):
+    best = 0
+    for c in range(1, len(scores)):
+        if float(scores[c]) > float(scores[best]):
+            best = c
+    return best
+
+
+class Plan:
+    def __init__(self, model):
+        self.m = model
+        n = model.n
+        # reverse index
+        self.col = [[] for _ in range(n)]
+        self.slot_rc = []
+        for i in range(n):
+            for k in range(model.indptr[i], model.indptr[i + 1]):
+                j = model.indices[k]
+                self.col[j].append((i, k))
+                self.slot_rc.append((i, j))
+        # per-sample caches
+        self.sp = []
+        for u, label, tgt in model.samples:
+            T = len(u)
+            acc, s = [], []
+            s_prev = [0] * n
+            for t in range(T):
+                acc_t, s_t = [], []
+                for i in range(n):
+                    acc_in = model.w_in[i] * u[t]
+                    acc_r = 0
+                    for k in range(model.indptr[i], model.indptr[i + 1]):
+                        acc_r += model.values[k] * s_prev[model.indices[k]]
+                    a = model.m_in * acc_in + (acc_r << model.f)
+                    acc_t.append(a)
+                    s_t.append(model.ladder.apply(a))
+                acc.append(acc_t)
+                s.append(s_t)
+                s_prev = s_t
+            entry = {"acc": acc, "s": s, "T": T}
+            if model.task == "cls":
+                pooled = [0] * n
+                if model.features == "mean":
+                    for t in range(T):
+                        for j in range(n):
+                            pooled[j] += s[t][j]
+                elif T > 0:
+                    pooled = list(s[T - 1])
+                t_factor = float(T) if model.features == "mean" else 1.0
+                scores = model.readout_scores(pooled, t_factor)
+                entry["base_scores"] = scores
+                entry["base_correct"] = argmax(scores) == label
+            else:
+                racc, se = [], []
+                for t in range(model.washout, T):
+                    for c in range(model.out_dim):
+                        a = sum(model.w_out[c][j] * s[t][j] for j in range(n))
+                        v = a / model.denom[c] + model.bias_f[c]
+                        e = v - tgt[t][c]
+                        racc.append(a)
+                        se.append(e * e)
+                entry["racc"] = racc
+                entry["se"] = se
+            self.sp.append(entry)
+
+    def step_frontier(self, sp, t, i0, j0, dw, dirty):
+        m = self.m
+        n = m.n
+        delta = {}
+        for (j, dj) in dirty:
+            for (row, k) in self.col[j]:
+                delta[row] = delta.get(row, 0) + m.values[k] * dj
+        s_prev_j0 = 0 if t == 0 else sp["s"][t - 1][j0]
+        dev_j0 = next((d for (j, d) in dirty if j == j0), 0)
+        corr = dw * (s_prev_j0 + dev_j0)
+        if corr != 0:
+            delta[i0] = delta.get(i0, 0) + corr
+        nxt = []
+        for row, rd in delta.items():
+            if rd == 0:
+                continue
+            acc = sp["acc"][t][row] + (rd << m.f)
+            s_new = m.ladder.apply(acc)
+            d = s_new - sp["s"][t][row]
+            if d != 0:
+                nxt.append((row, d))
+        return nxt
+
+    def eval_flip(self, slot, new_val):
+        m = self.m
+        old = m.values[slot]
+        dw = new_val - old
+        i0, j0 = self.slot_rc[slot]
+        n = m.n
+        if m.task == "cls":
+            correct = 0
+            for sp, (u, label, _) in zip(self.sp, m.samples):
+                dirty = []
+                pooled_dev = {}
+                for t in range(sp["T"]):
+                    nxt = self.step_frontier(sp, t, i0, j0, dw, dirty)
+                    if m.features == "mean":
+                        for (j, d) in nxt:
+                            pooled_dev[j] = pooled_dev.get(j, 0) + d
+                    elif t + 1 == sp["T"]:
+                        for (j, d) in nxt:
+                            pooled_dev[j] = d
+                    dirty = nxt
+                if not pooled_dev:
+                    correct += 1 if sp["base_correct"] else 0
+                    continue
+                scores = []
+                for c in range(m.out_dim):
+                    dacc = sum(m.w_out[c][j] * dv for j, dv in pooled_dev.items())
+                    scores.append(sp["base_scores"][c] + m.m_out[c] * dacc)
+                if argmax(scores) == label:
+                    correct += 1
+            return ("acc", correct / max(len(m.samples), 1))
+        else:
+            se, count = 0.0, 0
+            for sp, (u, _, tgt) in zip(self.sp, m.samples):
+                dirty = []
+                for t in range(sp["T"]):
+                    nxt = self.step_frontier(sp, t, i0, j0, dw, dirty)
+                    if t >= m.washout:
+                        base = (t - m.washout) * m.out_dim
+                        if not nxt:
+                            for c in range(m.out_dim):
+                                se += sp["se"][base + c]
+                                count += 1
+                        else:
+                            for c in range(m.out_dim):
+                                dacc = sum(m.w_out[c][j] * d for (j, d) in nxt)
+                                v = (sp["racc"][base + c] + dacc) / m.denom[c] + m.bias_f[c]
+                                e = v - tgt[t][c]
+                                se += e * e
+                                count += 1
+                    dirty = nxt
+            return ("rmse", math.sqrt(se / max(count, 1)))
+
+
+def run_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3, nnz=4):
+    rng = random.Random(seed)
+    model = Model(rng, n, q, task, features, washout, out_dim, nnz, T, n_samples)
+    plan = Plan(model)
+    # base agreement
+    assert plan_base(plan, model) == model.evaluate(model.values), "base mismatch"
+    mismatches = 0
+    total = 0
+    for slot in range(len(model.values)):
+        for bit in range(q):
+            old = model.values[slot]
+            newv = flip_bit(old, bit, q)
+            if newv == old:
+                continue
+            total += 1
+            vals = list(model.values)
+            vals[slot] = newv
+            dense = model.evaluate(vals)
+            inc = plan.eval_flip(slot, newv)
+            if dense != inc:
+                mismatches += 1
+                if mismatches <= 3:
+                    print(f"  MISMATCH seed={seed} slot={slot} bit={bit}: dense={dense} inc={inc}")
+    print(f"case(task={task}, feat={features}, n={n}, q={q}, T={T}, ns={n_samples}, wo={washout}): "
+          f"{total} flips, {mismatches} mismatches")
+    return mismatches
+
+
+def plan_base(plan, model):
+    if model.task == "cls":
+        c = sum(1 for sp in plan.sp if sp["base_correct"])
+        return ("acc", c / max(len(plan.sp), 1))
+    se, count = 0.0, 0
+    for sp in plan.sp:
+        for e2 in sp["se"]:
+            se += e2
+            count += 1
+    return ("rmse", math.sqrt(se / max(count, 1)))
+
+
+bad = 0
+bad += run_case(1, "cls", "mean", n=12, q=4, T=10, n_samples=8)
+bad += run_case(2, "cls", "mean", n=16, q=6, T=8, n_samples=6)
+bad += run_case(3, "cls", "last", n=12, q=4, T=10, n_samples=8)
+bad += run_case(4, "cls", "last", n=10, q=8, T=6, n_samples=5)
+bad += run_case(5, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
+bad += run_case(6, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
+bad += run_case(7, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
+bad += run_case(8, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)  # washout == T edge
+print("TOTAL MISMATCHES:", bad)
+assert bad == 0, "frontier algorithm diverges from dense reference"
+print("OK: incremental == dense on all cases")
