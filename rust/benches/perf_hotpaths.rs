@@ -2,15 +2,20 @@
 //!
 //!   L3-a  native integer reservoir step (QuantEsn::run_int)
 //!   L3-b  sensitivity scoring (Eq. 4, the dominant DSE cost)
+//!   L3-b' scoring engines head-to-head: dense oracle vs sequential
+//!         incremental vs batched incremental (bit-identity asserted)
 //!   L3-c  hardware cost model evaluation
 //!   L3-d  batcher decision loop
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
-//! Before/after numbers for the optimization pass live in EXPERIMENTS.md §Perf.
+//! Before/after numbers for the optimization pass live in EXPERIMENTS.md
+//! §Perf. `RCX_BENCH_SMOKE=1` shrinks the grid for the CI `bench-smoke` job;
+//! `RCX_BENCH_JSON=path` additionally writes the L3-b' timings as JSON
+//! (`BENCH_ci.json` in CI, uploaded as an artifact).
 
 use std::time::Instant;
 
-use rcx::bench::{section, time_it};
+use rcx::bench::{json_out_path, section, smoke_mode, time_it};
 use rcx::config::BenchmarkConfig;
 use rcx::coordinator::{Batcher, BatcherConfig};
 use rcx::data::Benchmark;
@@ -21,21 +26,24 @@ use rcx::quant::{QuantEsn, QuantSpec};
 use rcx::runtime::{pooled_states, Runtime};
 
 fn main() {
+    let smoke = smoke_mode();
     let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
     let (model, data) = cfg.train(1, true);
     let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(6));
+    let max_calib = if smoke { 24 } else { 64 };
+    let worker_grid: &[usize] = if smoke { &[1, 0] } else { &[1, 4, 0] };
 
     section("L3-a native integer rollout (one 24-step sequence, N=50)");
     let s = &data.test[0];
     let st = time_it(50, 500, || qm.run_int(&s.inputs));
     println!("{st}  ({:.1} Ksteps/s)", 24.0 / st.median.as_secs_f64() / 1e3);
 
-    section("L3-b sensitivity scoring (Eq.4, 250 weights x 6 bits, incremental engine)");
-    let calib = calibration_split(&data, 64);
-    for workers in [1usize, 4, 0] {
+    section("L3-b sensitivity scoring (Eq.4, 250 weights x 6 bits, batched engine)");
+    let calib = calibration_split(&data, max_calib);
+    for &workers in worker_grid {
         let p = SensitivityPruner::new(SensitivityConfig {
             parallelism: workers,
-            max_calib: 64,
+            max_calib,
             ..Default::default()
         });
         let t0 = Instant::now();
@@ -49,10 +57,11 @@ fn main() {
         );
     }
 
-    section("L3-b' scoring engines head-to-head (dense oracle vs incremental, same grid)");
-    for workers in [1usize, 4, 0] {
+    section("L3-b' scoring engines head-to-head (dense vs incremental vs batched, same grid)");
+    let mut json_rows = String::new();
+    for &workers in worker_grid {
         let mk = |engine| {
-            SensitivityPruner::new(SensitivityConfig { parallelism: workers, max_calib: 64, engine })
+            SensitivityPruner::new(SensitivityConfig { parallelism: workers, max_calib, engine })
         };
         let t0 = Instant::now();
         let dense = mk(Engine::Dense).scores(&qm, calib);
@@ -60,12 +69,49 @@ fn main() {
         let t0 = Instant::now();
         let inc = mk(Engine::Incremental).scores(&qm, calib);
         let t_inc = t0.elapsed();
-        assert_eq!(dense, inc, "engines must be bit-identical");
+        let t0 = Instant::now();
+        let batched = mk(Engine::IncrementalBatched).scores(&qm, calib);
+        let t_bat = t0.elapsed();
+        assert_eq!(dense, inc, "incremental engine must be bit-identical to dense");
+        assert_eq!(dense, batched, "batched engine must be bit-identical to dense");
         println!(
-            "workers={:<4} dense {t_dense:>10.3?}  incremental {t_inc:>10.3?}  speedup {:.1}x",
+            "workers={:<4} dense {t_dense:>10.3?}  incremental {t_inc:>10.3?}  batched {t_bat:>10.3?}  inc/dense {:.1}x  batched/inc {:.2}x",
             if workers == 0 { "all".to_string() } else { workers.to_string() },
-            t_dense.as_secs_f64() / t_inc.as_secs_f64()
+            t_dense.as_secs_f64() / t_inc.as_secs_f64(),
+            t_inc.as_secs_f64() / t_bat.as_secs_f64()
         );
+        if !json_rows.is_empty() {
+            json_rows.push(',');
+        }
+        json_rows.push_str(&format!(
+            concat!(
+                "\n    {{\"workers\": {}, \"dense_s\": {:.6}, \"incremental_s\": {:.6}, ",
+                "\"batched_s\": {:.6}, \"speedup_incremental_vs_dense\": {:.3}, ",
+                "\"speedup_batched_vs_incremental\": {:.3}}}"
+            ),
+            workers,
+            t_dense.as_secs_f64(),
+            t_inc.as_secs_f64(),
+            t_bat.as_secs_f64(),
+            t_dense.as_secs_f64() / t_inc.as_secs_f64(),
+            t_inc.as_secs_f64() / t_bat.as_secs_f64(),
+        ));
+    }
+    if let Some(path) = json_out_path() {
+        // `workers: 0` means "one per available core"; bit_identical is true
+        // by construction — the assert_eq above aborts the bench otherwise.
+        let json = format!(
+            concat!(
+                "{{\n  \"bench\": \"perf_hotpaths/L3-b'\",\n",
+                "  \"config\": {{\"benchmark\": \"melborn\", \"n_weights\": 250, \"q\": 6, ",
+                "\"max_calib\": {}, \"smoke\": {}}},\n",
+                "  \"bit_identical\": true,\n",
+                "  \"rows\": [{}\n  ]\n}}\n"
+            ),
+            max_calib, smoke, json_rows
+        );
+        std::fs::write(&path, json).expect("write RCX_BENCH_JSON output");
+        println!("wrote {}", path.display());
     }
 
     section("L3-c hardware model evaluation (cost+timing+activity+power)");

@@ -55,6 +55,19 @@ pub fn full_mode() -> bool {
     std::env::var("RCX_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// True when the CI-reduced bench configuration is requested (the
+/// `bench-smoke` job: smaller calibration splits / fewer grid points, all
+/// bit-identity assertions kept).
+pub fn smoke_mode() -> bool {
+    std::env::var("RCX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Path to write machine-readable bench results to (the `bench-smoke` CI job
+/// sets this to `BENCH_ci.json` and uploads it as an artifact), if requested.
+pub fn json_out_path() -> Option<std::path::PathBuf> {
+    std::env::var_os("RCX_BENCH_JSON").map(std::path::PathBuf::from)
+}
+
 /// Print a bench section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");

@@ -11,7 +11,7 @@ use std::time::Instant;
 use crate::data::{Dataset, TimeSeries};
 use crate::esn::{EsnModel, Perf};
 use crate::hw::{self, HwReport, Topology};
-use crate::pruning::{prune_with_compensation, Method, SensitivityPruner};
+use crate::pruning::{prune_with_compensation, Engine, Method, SensitivityConfig, SensitivityPruner};
 use crate::quant::{QuantEsn, QuantInputCache, QuantSpec};
 
 /// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
@@ -86,9 +86,16 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             if !input_cache.as_ref().is_some_and(|c| c.matches(&qmodel)) {
                 input_cache = Some(QuantInputCache::build(&qmodel, calib));
             }
-            // Same construction point as Method::pruner (the Default impl) —
-            // this branch only adds the cache injection.
-            SensitivityPruner::default().scores_with_inputs(&qmodel, calib, input_cache.as_ref())
+            // Same knobs as Method::pruner (the Default impl) with the engine
+            // pinned to the batched path explicitly — this branch adds the
+            // cache injection and the DSE's engine choice. Bit-identical to
+            // the sequential/dense oracles, so the produced configuration set
+            // is unchanged; only the sweep wall-clock differs.
+            SensitivityPruner::new(SensitivityConfig {
+                engine: Engine::IncrementalBatched,
+                ..Default::default()
+            })
+            .scores_with_inputs(&qmodel, calib, input_cache.as_ref())
         } else {
             req.method.pruner(req.seed).scores(&qmodel, calib)
         };

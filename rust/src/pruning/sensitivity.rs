@@ -8,33 +8,44 @@
 //! sensitivity barely influence the output and are pruned first.
 //!
 //! This is the framework's dominant compute cost (`n_weights × q`
-//! evaluations), so the scorer fans the weight slots out over a thread pool.
-//! By default each evaluation runs on the **incremental engine**
-//! ([`CalibPlan`]): one immutable calibration plan is shared by every worker
-//! (no per-worker model clones) and each flip is evaluated by sparse delta
-//! propagation instead of a full rollout. The original dense
-//! flip → `evaluate_split` → restore loop is kept as [`Engine::Dense`] — it
-//! is the oracle the incremental path must match bit-for-bit (see the
+//! evaluations), so the scorer fans the work out over a thread pool.
+//! By default it runs the **batched incremental engine**
+//! ([`Engine::IncrementalBatched`]): candidate flips are locality-sorted by
+//! their support row span, greedily packed into lane batches with pairwise
+//! disjoint 1-step supports ([`CalibPlan::pack_batches`]), and each batch is
+//! evaluated in one pass over the shared immutable plan
+//! ([`CalibPlan::eval_flips_batched`]). The sequential incremental path
+//! ([`Engine::Incremental`], one [`CalibPlan::eval_flip`] per flip) and the
+//! original dense flip → `evaluate_split` → restore loop ([`Engine::Dense`])
+//! are kept as oracles the batched path must match bit-for-bit (see the
 //! equivalence tests here and in `tests/incremental_equivalence.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::TimeSeries;
-use crate::quant::{flip_bit, CalibPlan, FlipScratch, QuantEsn, QuantInputCache};
+use crate::quant::{
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantEsn, QuantInputCache,
+};
 
 use super::Pruner;
 
 /// Which evaluation engine backs the Eq. 4 sweep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// Cached calibration plan + sparse delta-propagation rollouts.
-    /// Bit-identical to `Dense`; expected much faster on the paper's sparse
-    /// reservoirs (cost model in EXPERIMENTS.md §Perf — measure with the
-    /// perf_hotpaths L3-b′ section, which asserts the equality either way).
+    /// Batched multi-flip scoring: support-disjoint flips are greedily packed
+    /// into [`crate::quant::BATCH_LANES`]-wide batches that share one pass
+    /// over the cached plan, with the frontier scatter vectorized over batch
+    /// lanes. Bit-identical to both oracles below (asserted in
+    /// `tests/incremental_equivalence.rs` and at bench time); measured in the
+    /// perf_hotpaths L3-b′/L3-c sections (EXPERIMENTS.md §Perf).
     #[default]
+    IncrementalBatched,
+    /// Cached calibration plan + sparse delta-propagation rollouts, one flip
+    /// per [`CalibPlan::eval_flip`] call. Kept as the sequential oracle the
+    /// batched path must match bit-for-bit.
     Incremental,
     /// Flip → full `evaluate_split` → restore on a per-worker model clone.
-    /// Kept as the correctness oracle.
+    /// Kept as the ground-truth correctness oracle.
     Dense,
 }
 
@@ -99,7 +110,7 @@ impl SensitivityPruner {
         let calib = self.calib_slice(calib);
         match self.cfg.engine {
             Engine::Dense => self.scores_dense(model, calib),
-            Engine::Incremental => {
+            Engine::Incremental | Engine::IncrementalBatched => {
                 let owned;
                 let cache = match inputs {
                     Some(c) if c.matches(model) && c.len() >= calib.len() => c,
@@ -109,9 +120,98 @@ impl SensitivityPruner {
                     }
                 };
                 let plan = CalibPlan::build_with_inputs(model, calib, cache);
-                self.scores_incremental(model, &plan)
+                if self.cfg.engine == Engine::IncrementalBatched {
+                    self.scores_incremental_batched(model, &plan)
+                } else {
+                    self.scores_incremental(model, &plan)
+                }
             }
         }
+    }
+
+    /// Batched sweep: enumerate the non-no-op `(slot, bit)` candidates,
+    /// locality-sort them by the support row span (the old round-robin slot
+    /// chunking handed workers row-interleaved candidates, so batch packing
+    /// never saw neighbouring rows together), greedily pack support-disjoint
+    /// candidates into lane batches, and let workers pull *whole batches*
+    /// through one shared plan.
+    ///
+    /// Scores are folded per slot in `(slot, bit)` order — the exact f64
+    /// accumulation order of the sequential sweep — so the result is
+    /// bit-identical to both oracles and independent of worker count.
+    fn scores_incremental_batched(&self, model: &QuantEsn, plan: &CalibPlan) -> Vec<f64> {
+        let base = plan.base_perf();
+        let q = model.q as u32;
+        let n = plan.n_slots();
+        // Candidate flips in canonical (slot, bit) order; `cand_order[i]`
+        // maps the locality-sorted position back to the canonical index.
+        let mut cands: Vec<FlipCandidate> = Vec::with_capacity(n * q as usize);
+        for slot in 0..n {
+            let old = plan.slot_value(slot);
+            for bit in 0..q {
+                let new_val = flip_bit(old, bit, model.q);
+                if new_val != old {
+                    cands.push(FlipCandidate { slot, new_val });
+                }
+            }
+        }
+        let mut cand_order: Vec<usize> = (0..cands.len()).collect();
+        cand_order.sort_by_key(|&i| {
+            let span = plan.support_row_span(cands[i].slot);
+            (span.0, span.1, i)
+        });
+        let sorted: Vec<FlipCandidate> = cand_order.iter().map(|&i| cands[i]).collect();
+        let batches = plan.pack_batches(&sorted);
+
+        let mut devs = vec![0.0f64; cands.len()];
+        let n_workers = self.workers().min(batches.len().max(1));
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                let next = &next;
+                let (batches, sorted, cand_order) = (&batches, &sorted, &cand_order);
+                handles.push(scope.spawn(move || {
+                    let mut sc = BatchScratch::for_plan(plan);
+                    let mut flips: Vec<FlipCandidate> = Vec::new();
+                    let mut out: Vec<(usize, f64)> = Vec::new();
+                    loop {
+                        let bi = next.fetch_add(1, Ordering::Relaxed);
+                        if bi >= batches.len() {
+                            break;
+                        }
+                        flips.clear();
+                        flips.extend(batches[bi].iter().map(|&si| sorted[si]));
+                        let perfs = plan.eval_flips_batched(model, &flips, &mut sc);
+                        for (&si, perf) in batches[bi].iter().zip(&perfs) {
+                            out.push((cand_order[si], base.deviation(perf)));
+                        }
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                for (ci, d) in h.join().expect("sensitivity worker panicked") {
+                    devs[ci] = d;
+                }
+            }
+        });
+
+        let mut scores = vec![0.0f64; n];
+        let mut ci = 0usize;
+        for (slot, score) in scores.iter_mut().enumerate() {
+            let old = plan.slot_value(slot);
+            let mut dev_sum = 0.0;
+            for bit in 0..q {
+                if flip_bit(old, bit, model.q) != old {
+                    dev_sum += devs[ci];
+                    ci += 1;
+                }
+            }
+            *score = dev_sum / q as f64 + 1e-9 * tie_break(old);
+        }
+        debug_assert_eq!(ci, devs.len());
+        scores
     }
 
     /// Incremental sweep: workers share the immutable plan; each owns only a
@@ -298,6 +398,25 @@ mod tests {
         let inc = mk(Engine::Incremental).scores(&qm, &data.train);
         let dense = mk(Engine::Dense).scores(&qm, &data.train);
         assert_eq!(inc, dense, "incremental engine must be bit-identical to the dense oracle");
+        let batched = mk(Engine::IncrementalBatched).scores(&qm, &data.train);
+        assert_eq!(batched, dense, "batched engine must be bit-identical to the dense oracle");
+    }
+
+    #[test]
+    fn batched_deterministic_across_parallelism() {
+        let (qm, data) = tiny_model();
+        let score_with = |workers: usize| {
+            SensitivityPruner::new(SensitivityConfig {
+                parallelism: workers,
+                max_calib: 25,
+                engine: Engine::IncrementalBatched,
+            })
+            .scores(&qm, &data.train)
+        };
+        let s1 = score_with(1);
+        for workers in [2usize, 4, 8] {
+            assert_eq!(s1, score_with(workers), "workers={workers}");
+        }
     }
 
     #[test]

@@ -9,8 +9,9 @@
 //!   operate on it.
 //! - [`bitflip`]: two's-complement bit-flip fault injection (Eq. 4 probes).
 //! - [`rollout`]: the incremental sensitivity engine — cached calibration
-//!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation,
-//!   bit-identical to the dense flip → evaluate → restore loop.
+//!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation
+//!   (single-flip and [`BATCH_LANES`]-wide batched multi-flip), bit-identical
+//!   to the dense flip → evaluate → restore loop.
 
 mod bitflip;
 mod linear;
@@ -21,7 +22,9 @@ mod streamline;
 pub use bitflip::flip_bit;
 pub use linear::Quantizer;
 pub use qmodel::{QuantEsn, QuantSpec};
-pub use rollout::{CalibPlan, FlipScratch, QuantInputCache};
+pub use rollout::{
+    BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantInputCache, BATCH_LANES,
+};
 pub use streamline::ThresholdLadder;
 
 /// Largest magnitude representable by a symmetric signed q-bit integer.

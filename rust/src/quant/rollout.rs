@@ -56,6 +56,30 @@
 //! [`QuantInputCache`] additionally survives *across bit-widths*: input
 //! quantization is 8-bit for every `q ≤ 8` (fixed-width sensor words), so one
 //! cache serves the whole `Q = {4,6,8}` DSE sweep (`matches` guards this).
+//!
+//! # Batched multi-flip evaluation
+//!
+//! [`CalibPlan::eval_flips_batched`] evaluates up to [`BATCH_LANES`]
+//! *independent* flips in one pass over the cached plan. Each flip is a lane:
+//! the dirty-neuron frontier stores a `BATCH_LANES`-wide deviation vector per
+//! neuron, the reverse-index scatter traverses each dirty column once and
+//! multiply-adds into all lanes (a fixed-width loop the compiler unrolls /
+//! auto-vectorizes — `std::simd` is not stable, so the lanes are manual), and
+//! the per-step bookkeeping (baseline loads, epoch resets, readout replay) is
+//! amortized across the whole batch. Lanes never interact — every lane is a
+//! hypothetical single-weight perturbation of the *same* baseline — so the
+//! results are bit-identical to [`CalibPlan::eval_flip`] lane by lane
+//! regardless of how flips are packed. Packing flips whose 1-step supports
+//! are disjoint ([`CalibPlan::pack_batches`]) is purely a locality heuristic:
+//! it keeps the union frontier small so the shared scatter stays sparse.
+//!
+//! The batched path additionally retires a lane for the rest of a sample once
+//! its frontier is empty *and* the flipped weight can never re-ignite it —
+//! i.e. the baseline source state `s[t'][j0]` is zero at every remaining step
+//! (`SamplePlan::last_prev_nz`). A retired lane's remaining steps contribute
+//! exactly the baseline values, which the evaluator replays from the caches
+//! (element-by-element for regression, preserving the dense path's f64
+//! accumulation order), so early exit does not break bit-identity.
 
 use crate::data::{Task, TimeSeries};
 use crate::esn::{Features, Perf};
@@ -129,6 +153,12 @@ struct SamplePlan {
     racc: Vec<i64>,
     /// Regression: baseline per-step squared errors, same layout as `racc`.
     se: Vec<f64>,
+    /// Per neuron `j`: the last step index `t ≤ T−2` with a nonzero baseline
+    /// state `s[t][j]` (−1 if none). A flip of weight `(i0, j0)` whose
+    /// frontier is empty can only re-ignite at a step whose *previous* state
+    /// `s[t−1][j0]` is nonzero, so once `t > last_prev_nz[j0]` the lane is
+    /// dead for the rest of the sample — the batched evaluator's early exit.
+    last_prev_nz: Vec<i32>,
 }
 
 /// Immutable calibration plan shared by all scoring workers. Build once per
@@ -197,6 +227,124 @@ impl FlipScratch {
     pub fn for_plan(plan: &CalibPlan) -> Self {
         Self::new(plan.n, plan.out_dim)
     }
+}
+
+/// Lane width of [`CalibPlan::eval_flips_batched`]: how many independent
+/// flips share one pass over the plan. 8 i64 lanes fill two AVX2 registers
+/// per multiply-add; the inner lane loops are fixed-width so the compiler
+/// unrolls/vectorizes them (`std::simd` is not stable).
+pub const BATCH_LANES: usize = 8;
+
+/// One hypothetical single-weight perturbation, as consumed by the batched
+/// evaluator and the greedy packer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlipCandidate {
+    /// Reservoir weight slot (CSR value index).
+    pub slot: usize,
+    /// Hypothetical new value of that slot.
+    pub new_val: i64,
+}
+
+/// Epoch-stamped lane-vector frontier: per dirty neuron a `BATCH_LANES`-wide
+/// vector of state deviations. Two of these double-buffer the batched
+/// frontier stepping.
+struct LaneFrontier {
+    /// `n × BATCH_LANES` deviations, valid where `stamp[j] == epoch`.
+    dev: Vec<i64>,
+    stamp: Vec<u64>,
+    /// Per dirty neuron: bitmask of lanes with a nonzero deviation. With
+    /// support-disjoint packing most dirty neurons belong to a single lane,
+    /// so the scatter iterates set bits instead of all `BATCH_LANES`.
+    mask: Vec<u8>,
+    /// Dirty neurons (some lane has a nonzero deviation).
+    list: Vec<usize>,
+    epoch: u64,
+}
+
+// The per-neuron lane mask is a u8.
+const _: () = assert!(BATCH_LANES <= 8);
+
+impl LaneFrontier {
+    fn new(n: usize) -> Self {
+        Self {
+            dev: vec![0; n * BATCH_LANES],
+            stamp: vec![0; n],
+            mask: vec![0; n],
+            list: Vec::with_capacity(n),
+            epoch: 0,
+        }
+    }
+
+    /// Reset to an empty frontier (O(1): stamps invalidate lazily).
+    fn begin(&mut self) {
+        self.epoch += 1;
+        self.list.clear();
+    }
+
+    /// Lane `l`'s deviation at neuron `j` (zero when `j` is clean).
+    #[inline]
+    fn lane(&self, j: usize, l: usize) -> i64 {
+        if self.stamp[j] == self.epoch {
+            self.dev[j * BATCH_LANES + l]
+        } else {
+            0
+        }
+    }
+}
+
+/// Reusable per-worker scratch for [`CalibPlan::eval_flips_batched`] — the
+/// lane-vector counterpart of [`FlipScratch`].
+pub struct BatchScratch {
+    /// `n × BATCH_LANES` per-row accumulator deltas for the current step.
+    row_delta: Vec<i64>,
+    row_stamp: Vec<u64>,
+    rows: Vec<usize>,
+    row_epoch: u64,
+    cur: LaneFrontier,
+    next: LaneFrontier,
+    /// Per lane: number of nonzero deviations in the most recently produced
+    /// frontier (empty lane ⇔ the sequential path's `next.is_empty()`).
+    lane_nnz: [u32; BATCH_LANES],
+    /// `n × BATCH_LANES` pooled-feature deviations (classification).
+    pooled_dev: Vec<i64>,
+    pooled_stamp: Vec<u64>,
+    pooled_touched: Vec<usize>,
+    pooled_epoch: u64,
+    /// Per lane: whether any pooled deviation was ever recorded this sample
+    /// (the lane-wise mirror of `pooled_touched.is_empty()`).
+    lane_pooled_any: [bool; BATCH_LANES],
+    scores: Vec<i64>,
+}
+
+impl BatchScratch {
+    pub fn new(n: usize, out_dim: usize) -> Self {
+        Self {
+            row_delta: vec![0; n * BATCH_LANES],
+            row_stamp: vec![0; n],
+            rows: Vec::with_capacity(n),
+            row_epoch: 0,
+            cur: LaneFrontier::new(n),
+            next: LaneFrontier::new(n),
+            lane_nnz: [0; BATCH_LANES],
+            pooled_dev: vec![0; n * BATCH_LANES],
+            pooled_stamp: vec![0; n],
+            pooled_touched: Vec::with_capacity(n),
+            pooled_epoch: 0,
+            lane_pooled_any: [false; BATCH_LANES],
+            scores: vec![0; out_dim],
+        }
+    }
+
+    pub fn for_plan(plan: &CalibPlan) -> Self {
+        Self::new(plan.n, plan.out_dim)
+    }
+}
+
+/// Per-batch lane constants: the (row, col, Δw) of each packed flip.
+struct BatchLanes {
+    dw: [i64; BATCH_LANES],
+    i0: [usize; BATCH_LANES],
+    j0: [usize; BATCH_LANES],
 }
 
 impl<'a> CalibPlan<'a> {
@@ -289,6 +437,14 @@ impl<'a> CalibPlan<'a> {
                 }
                 s_prev.copy_from_slice(&s[t * n..(t + 1) * n]);
             }
+            let mut last_prev_nz = vec![-1i32; n];
+            for t in 0..t_steps.saturating_sub(1) {
+                for j in 0..n {
+                    if s[t * n + j] != 0 {
+                        last_prev_nz[j] = t as i32;
+                    }
+                }
+            }
 
             let mut base_scores = Vec::new();
             let mut base_correct = false;
@@ -336,7 +492,16 @@ impl<'a> CalibPlan<'a> {
                     }
                 }
             }
-            samples.push(SamplePlan { t: t_steps, acc, s, base_scores, base_correct, racc, se });
+            samples.push(SamplePlan {
+                t: t_steps,
+                acc,
+                s,
+                base_scores,
+                base_correct,
+                racc,
+                se,
+                last_prev_nz,
+            });
         }
 
         // Baseline performance straight from the caches just built — the
@@ -596,6 +761,427 @@ impl<'a> CalibPlan<'a> {
         sc.next = next;
         Perf::Rmse((se / count.max(1) as f64).sqrt())
     }
+
+    /// Evaluate up to [`BATCH_LANES`] flips in one pass over the cached plan.
+    /// Returns one `Perf` per flip, each bit-identical to the corresponding
+    /// [`CalibPlan::eval_flip`] (and hence to the dense
+    /// flip → evaluate → restore loop) — lanes never interact, so correctness
+    /// does not depend on how the caller packed the batch.
+    ///
+    /// `model` must be the same baseline model the plan was built from.
+    pub fn eval_flips_batched(
+        &self,
+        model: &QuantEsn,
+        flips: &[FlipCandidate],
+        sc: &mut BatchScratch,
+    ) -> Vec<Perf> {
+        assert!(flips.len() <= BATCH_LANES, "batch wider than BATCH_LANES");
+        debug_assert_eq!(model.n, self.n);
+        debug_assert_eq!(model.w_r_values, self.w_vals, "plan built for a different baseline");
+        let mut lanes =
+            BatchLanes { dw: [0; BATCH_LANES], i0: [0; BATCH_LANES], j0: [0; BATCH_LANES] };
+        for (l, f) in flips.iter().enumerate() {
+            lanes.dw[l] = f.new_val - self.w_vals[f.slot];
+            lanes.i0[l] = self.slot_row[f.slot];
+            lanes.j0[l] = self.slot_col[f.slot];
+        }
+        let b = flips.len();
+        match self.task {
+            Task::Classification => self.eval_batch_cls(model, b, &lanes, sc),
+            Task::Regression => self.eval_batch_reg(model, b, &lanes, sc),
+        }
+    }
+
+    /// Lane-vectorized frontier step: one traversal of the reverse index per
+    /// dirty neuron serves every lane (fixed-width multiply-add over
+    /// `BATCH_LANES`), then per-lane flipped-slot corrections and one ladder
+    /// re-evaluation per touched `(row, lane)` with a nonzero delta. The
+    /// produced frontier lands in `sc.cur` (buffers swap at the end) with
+    /// `sc.lane_nnz` counting each lane's nonzero deviations.
+    ///
+    /// Per lane this computes exactly what [`CalibPlan::step_frontier`]
+    /// computes: a retired (`!alive`) or absent lane has all-zero deviations,
+    /// so the shared scatter contributes nothing for it.
+    #[allow(clippy::too_many_arguments)]
+    fn step_frontier_batched(
+        &self,
+        model: &QuantEsn,
+        sp: &SamplePlan,
+        t: usize,
+        b: usize,
+        lanes: &BatchLanes,
+        alive: &[bool; BATCH_LANES],
+        sc: &mut BatchScratch,
+    ) {
+        let n = self.n;
+        sc.row_epoch += 1;
+        sc.rows.clear();
+        for &j in &sc.cur.list {
+            let dv = &sc.cur.dev[j * BATCH_LANES..(j + 1) * BATCH_LANES];
+            let jmask = sc.cur.mask[j];
+            // Support-disjoint packing makes single-lane dirty neurons the
+            // common case: iterate set bits then, full unrolled width when
+            // the lanes are dense enough to vectorize profitably.
+            let dense = jmask.count_ones() >= 4;
+            for k in self.col_indptr[j]..self.col_indptr[j + 1] {
+                let row = self.col_rows[k];
+                let w = self.w_vals[self.col_slots[k]];
+                if sc.row_stamp[row] != sc.row_epoch {
+                    sc.row_stamp[row] = sc.row_epoch;
+                    sc.row_delta[row * BATCH_LANES..(row + 1) * BATCH_LANES].fill(0);
+                    sc.rows.push(row);
+                }
+                let rd = &mut sc.row_delta[row * BATCH_LANES..(row + 1) * BATCH_LANES];
+                if dense {
+                    for l in 0..BATCH_LANES {
+                        rd[l] += w * dv[l];
+                    }
+                } else {
+                    let mut m = jmask;
+                    while m != 0 {
+                        let l = m.trailing_zeros() as usize;
+                        rd[l] += w * dv[l];
+                        m &= m - 1;
+                    }
+                }
+            }
+        }
+        // The scatter used the baseline weight for every slot; per lane, add
+        // Δw·s'_prev[j0] to complete the flipped row's delta (see
+        // `step_frontier` for the exactness argument).
+        for l in 0..b {
+            if !alive[l] {
+                continue;
+            }
+            let j0 = lanes.j0[l];
+            let s_prev_j0 = if t == 0 { 0 } else { sp.s[(t - 1) * n + j0] };
+            let corr = lanes.dw[l] * (s_prev_j0 + sc.cur.lane(j0, l));
+            if corr != 0 {
+                let i0 = lanes.i0[l];
+                if sc.row_stamp[i0] != sc.row_epoch {
+                    sc.row_stamp[i0] = sc.row_epoch;
+                    sc.row_delta[i0 * BATCH_LANES..(i0 + 1) * BATCH_LANES].fill(0);
+                    sc.rows.push(i0);
+                }
+                sc.row_delta[i0 * BATCH_LANES + l] += corr;
+            }
+        }
+        sc.next.begin();
+        sc.lane_nnz = [0; BATCH_LANES];
+        for &row in &sc.rows {
+            let acc_base = sp.acc[t * n + row];
+            let s_base = sp.s[t * n + row];
+            let rd = &sc.row_delta[row * BATCH_LANES..(row + 1) * BATCH_LANES];
+            for (l, &delta) in rd.iter().enumerate().take(b) {
+                if delta == 0 {
+                    continue;
+                }
+                // Bracket check at the cached baseline level with binary-
+                // search fallback (exact — see `ThresholdLadder::apply_from`):
+                // the ladder is the scoring sweep's dominant operation and
+                // ~71% of perturbed levels land back on the baseline.
+                let d = model.ladder.apply_from(acc_base + (delta << self.f_bits), s_base)
+                    - s_base;
+                if d != 0 {
+                    if sc.next.stamp[row] != sc.next.epoch {
+                        sc.next.stamp[row] = sc.next.epoch;
+                        sc.next.dev[row * BATCH_LANES..(row + 1) * BATCH_LANES].fill(0);
+                        sc.next.mask[row] = 0;
+                        sc.next.list.push(row);
+                    }
+                    sc.next.dev[row * BATCH_LANES + l] = d;
+                    sc.next.mask[row] |= 1 << l;
+                    sc.lane_nnz[l] += 1;
+                }
+            }
+        }
+        std::mem::swap(&mut sc.cur, &mut sc.next);
+    }
+
+    /// Initial per-sample lane liveness: a lane whose `Δw` is zero, or whose
+    /// source state `j0` is zero at every step of the sample, can never
+    /// ignite — mark it dead up front.
+    fn init_alive(sp: &SamplePlan, b: usize, lanes: &BatchLanes) -> ([bool; BATCH_LANES], usize) {
+        let mut alive = [false; BATCH_LANES];
+        let mut n_alive = 0usize;
+        for l in 0..b {
+            if lanes.dw[l] != 0 && sp.last_prev_nz[lanes.j0[l]] >= 0 {
+                alive[l] = true;
+                n_alive += 1;
+            }
+        }
+        (alive, n_alive)
+    }
+
+    /// Retire lanes whose frontier just came back empty and whose source
+    /// state stays zero for every remaining step (reignition impossible, see
+    /// `SamplePlan::last_prev_nz`). Returns the updated live count.
+    fn retire_dead_lanes(
+        sp: &SamplePlan,
+        t: usize,
+        b: usize,
+        lanes: &BatchLanes,
+        lane_nnz: &[u32; BATCH_LANES],
+        alive: &mut [bool; BATCH_LANES],
+        mut n_alive: usize,
+    ) -> usize {
+        for l in 0..b {
+            if alive[l] && lane_nnz[l] == 0 && (sp.last_prev_nz[lanes.j0[l]] as i64) < t as i64 {
+                alive[l] = false;
+                n_alive -= 1;
+            }
+        }
+        n_alive
+    }
+
+    fn eval_batch_cls(
+        &self,
+        model: &QuantEsn,
+        b: usize,
+        lanes: &BatchLanes,
+        sc: &mut BatchScratch,
+    ) -> Vec<Perf> {
+        let n = self.n;
+        let last_only = self.features == Features::LastState;
+        let mut correct = [0usize; BATCH_LANES];
+        for (si, sp) in self.samples.iter().enumerate() {
+            sc.cur.begin();
+            sc.pooled_epoch += 1;
+            sc.pooled_touched.clear();
+            sc.lane_pooled_any = [false; BATCH_LANES];
+            let (mut alive, mut n_alive) = Self::init_alive(sp, b, lanes);
+            for t in 0..sp.t {
+                if n_alive == 0 {
+                    // Every lane is at baseline for the rest of the sample;
+                    // pooled deviations (if any) are final.
+                    break;
+                }
+                self.step_frontier_batched(model, sp, t, b, lanes, &alive, sc);
+                if !last_only {
+                    for &j in &sc.cur.list {
+                        if sc.pooled_stamp[j] != sc.pooled_epoch {
+                            sc.pooled_stamp[j] = sc.pooled_epoch;
+                            sc.pooled_dev[j * BATCH_LANES..(j + 1) * BATCH_LANES].fill(0);
+                            sc.pooled_touched.push(j);
+                        }
+                        let dv = &sc.cur.dev[j * BATCH_LANES..(j + 1) * BATCH_LANES];
+                        let pd = &mut sc.pooled_dev[j * BATCH_LANES..(j + 1) * BATCH_LANES];
+                        for l in 0..BATCH_LANES {
+                            pd[l] += dv[l];
+                        }
+                        for (l, &d) in dv.iter().enumerate().take(b) {
+                            if d != 0 {
+                                sc.lane_pooled_any[l] = true;
+                            }
+                        }
+                    }
+                } else if t + 1 == sp.t {
+                    for &j in &sc.cur.list {
+                        sc.pooled_stamp[j] = sc.pooled_epoch;
+                        sc.pooled_touched.push(j);
+                        let dv = &sc.cur.dev[j * BATCH_LANES..(j + 1) * BATCH_LANES];
+                        sc.pooled_dev[j * BATCH_LANES..(j + 1) * BATCH_LANES].copy_from_slice(dv);
+                        for (l, &d) in dv.iter().enumerate().take(b) {
+                            if d != 0 {
+                                sc.lane_pooled_any[l] = true;
+                            }
+                        }
+                    }
+                }
+                n_alive =
+                    Self::retire_dead_lanes(sp, t, b, lanes, &sc.lane_nnz, &mut alive, n_alive);
+            }
+            for l in 0..b {
+                if !sc.lane_pooled_any[l] {
+                    // The lane's pooled feature never deviated: the baseline
+                    // verdict stands (same shortcut as the sequential path;
+                    // a zero-delta patch would reproduce base_scores anyway).
+                    if sp.base_correct {
+                        correct[l] += 1;
+                    }
+                    continue;
+                }
+                for c in 0..self.out_dim {
+                    let wrow = &model.w_out[c * n..(c + 1) * n];
+                    let mut dacc: i64 = 0;
+                    for &j in &sc.pooled_touched {
+                        dacc += wrow[j] * sc.pooled_dev[j * BATCH_LANES + l];
+                    }
+                    sc.scores[c] = sp.base_scores[c] + model.m_out[c] * dacc;
+                }
+                if Some(argmax_scores(&sc.scores)) == self.calib[si].label {
+                    correct[l] += 1;
+                }
+            }
+        }
+        (0..b)
+            .map(|l| {
+                if lanes.dw[l] == 0 {
+                    self.base_perf
+                } else {
+                    Perf::Accuracy(correct[l] as f64 / self.samples.len().max(1) as f64)
+                }
+            })
+            .collect()
+    }
+
+    fn eval_batch_reg(
+        &self,
+        model: &QuantEsn,
+        b: usize,
+        lanes: &BatchLanes,
+        sc: &mut BatchScratch,
+    ) -> Vec<Perf> {
+        let n = self.n;
+        let mut se = [0.0f64; BATCH_LANES];
+        let mut count = 0usize;
+        for (si, sp) in self.samples.iter().enumerate() {
+            let targets = self.calib[si].targets.as_ref().expect("regression sample w/o targets");
+            sc.cur.begin();
+            let (mut alive, mut n_alive) = Self::init_alive(sp, b, lanes);
+            let mut t = 0usize;
+            while t < sp.t {
+                if n_alive == 0 {
+                    break;
+                }
+                self.step_frontier_batched(model, sp, t, b, lanes, &alive, sc);
+                if t >= self.washout {
+                    // Replay the dense path's squared-error accumulation in
+                    // its exact (step, dim) order, per lane; lanes with an
+                    // empty frontier take the cached baseline value.
+                    let base = (t - self.washout) * self.out_dim;
+                    if sc.cur.list.is_empty() {
+                        for c in 0..self.out_dim {
+                            let cached = sp.se[base + c];
+                            for acc in se.iter_mut().take(b) {
+                                *acc += cached;
+                            }
+                            count += 1;
+                        }
+                    } else {
+                        for c in 0..self.out_dim {
+                            let wrow = &model.w_out[c * n..(c + 1) * n];
+                            let mut dacc = [0i64; BATCH_LANES];
+                            for &j in &sc.cur.list {
+                                let w = wrow[j];
+                                let dv = &sc.cur.dev[j * BATCH_LANES..(j + 1) * BATCH_LANES];
+                                for l in 0..BATCH_LANES {
+                                    dacc[l] += w * dv[l];
+                                }
+                            }
+                            let cached = sp.se[base + c];
+                            for l in 0..b {
+                                if sc.lane_nnz[l] == 0 {
+                                    se[l] += cached;
+                                } else {
+                                    let v = (sp.racc[base + c] + dacc[l]) as f64
+                                        / self.readout_denom[c]
+                                        + model.bias_f[c];
+                                    let e = v - targets[(t, c)];
+                                    se[l] += e * e;
+                                }
+                            }
+                            count += 1;
+                        }
+                    }
+                }
+                n_alive =
+                    Self::retire_dead_lanes(sp, t, b, lanes, &sc.lane_nnz, &mut alive, n_alive);
+                t += 1;
+            }
+            // Every lane is at baseline for the remaining steps: replay the
+            // cached squared errors element-by-element (f64 addition order
+            // must match the dense path exactly).
+            let start = t.max(self.washout);
+            if start < sp.t {
+                let lo = (start - self.washout) * self.out_dim;
+                let hi = (sp.t - self.washout) * self.out_dim;
+                for &cached in &sp.se[lo..hi] {
+                    for acc in se.iter_mut().take(b) {
+                        *acc += cached;
+                    }
+                    count += 1;
+                }
+            }
+        }
+        (0..b)
+            .map(|l| {
+                if lanes.dw[l] == 0 {
+                    self.base_perf
+                } else {
+                    Perf::Rmse((se[l] / count.max(1) as f64).sqrt())
+                }
+            })
+            .collect()
+    }
+
+    /// 1-step dirty-neuron support of a flip in row `i0`: the row itself plus
+    /// every row whose recurrence reads state `i0` (via the reverse index).
+    /// Flips with disjoint supports perturb disjoint row sets for at least
+    /// the first two frontier steps — the packing heuristic's independence
+    /// criterion.
+    fn flip_support(&self, slot: usize, out: &mut Vec<usize>) {
+        let i0 = self.slot_row[slot];
+        out.clear();
+        out.push(i0);
+        out.extend_from_slice(&self.col_rows[self.col_indptr[i0]..self.col_indptr[i0 + 1]]);
+    }
+
+    /// `(min, max)` rows covered by the flip's 1-step support — the locality
+    /// sort key the scorer orders candidates by before packing, so batches
+    /// are built from row-neighbouring flips instead of interleaved ones.
+    pub fn support_row_span(&self, slot: usize) -> (usize, usize) {
+        let i0 = self.slot_row[slot];
+        let (mut lo, mut hi) = (i0, i0);
+        for &r in &self.col_rows[self.col_indptr[i0]..self.col_indptr[i0 + 1]] {
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        (lo, hi)
+    }
+
+    /// Greedily pack `cands` (scanned in the given order — callers pre-sort
+    /// by [`CalibPlan::support_row_span`]) into batches of at most
+    /// [`BATCH_LANES`] flips with pairwise-disjoint 1-step supports:
+    /// first-fit over the open batches, closing a batch when it fills.
+    /// Returns index lists into `cands`. Purely a locality heuristic —
+    /// [`CalibPlan::eval_flips_batched`] is exact for any packing.
+    pub fn pack_batches(&self, cands: &[FlipCandidate]) -> Vec<Vec<usize>> {
+        let words = self.n.div_ceil(64);
+        struct OpenBatch {
+            mask: Vec<u64>,
+            members: Vec<usize>,
+        }
+        let mut open: Vec<OpenBatch> = Vec::new();
+        let mut closed: Vec<Vec<usize>> = Vec::new();
+        let mut support = Vec::new();
+        let mut cand_mask = vec![0u64; words];
+        for (ci, cand) in cands.iter().enumerate() {
+            self.flip_support(cand.slot, &mut support);
+            cand_mask.fill(0);
+            for &r in &support {
+                cand_mask[r / 64] |= 1 << (r % 64);
+            }
+            let fit = open
+                .iter()
+                .position(|o| o.mask.iter().zip(&cand_mask).all(|(&a, &b)| a & b == 0));
+            match fit {
+                Some(oi) => {
+                    let o = &mut open[oi];
+                    for (w, &m) in o.mask.iter_mut().zip(&cand_mask) {
+                        *w |= m;
+                    }
+                    o.members.push(ci);
+                    if o.members.len() == BATCH_LANES {
+                        closed.push(open.remove(oi).members);
+                    }
+                }
+                None => open.push(OpenBatch { mask: cand_mask.clone(), members: vec![ci] }),
+            }
+        }
+        closed.extend(open.into_iter().map(|o| o.members));
+        closed
+    }
 }
 
 /// Baseline performance from the per-sample caches, replaying the exact
@@ -738,6 +1324,141 @@ mod tests {
         let mut sc = FlipScratch::for_plan(&plan);
         let v = plan.slot_value(0);
         assert_eq!(plan.eval_flip(&qm, 0, v, &mut sc), plan.base_perf());
+    }
+
+    /// Pack every (slot, bit) flip with the greedy packer and evaluate the
+    /// batches; each lane must match the sequential `eval_flip` bit-for-bit.
+    fn assert_batched_matches_sequential(model: &QuantEsn, calib: &[TimeSeries]) {
+        let plan = CalibPlan::build(model, calib);
+        let mut seq = FlipScratch::for_plan(&plan);
+        let mut bat = BatchScratch::for_plan(&plan);
+        let cands: Vec<FlipCandidate> = (0..plan.n_slots())
+            .flat_map(|slot| {
+                (0..model.q as u32).map(move |bit| (slot, bit))
+            })
+            .map(|(slot, bit)| FlipCandidate {
+                slot,
+                new_val: flip_bit(plan.slot_value(slot), bit, model.q),
+            })
+            .collect();
+        let batches = plan.pack_batches(&cands);
+        let mut seen = vec![false; cands.len()];
+        for batch in &batches {
+            assert!(!batch.is_empty() && batch.len() <= BATCH_LANES);
+            let flips: Vec<FlipCandidate> = batch.iter().map(|&ci| cands[ci]).collect();
+            let perfs = plan.eval_flips_batched(model, &flips, &mut bat);
+            assert_eq!(perfs.len(), flips.len());
+            for (&ci, perf) in batch.iter().zip(&perfs) {
+                assert!(!std::mem::replace(&mut seen[ci], true), "candidate {ci} packed twice");
+                let reference = plan.eval_flip(model, cands[ci].slot, cands[ci].new_val, &mut seq);
+                assert_eq!(*perf, reference, "cand {ci}: batched != sequential");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "packer dropped candidates");
+    }
+
+    #[test]
+    fn batched_classification_bit_identical() {
+        let (qm, data) = melborn_model(4);
+        assert_batched_matches_sequential(&qm, &data.train[..25]);
+    }
+
+    #[test]
+    fn batched_regression_bit_identical() {
+        let (qm, data) = henon_model(8);
+        assert_batched_matches_sequential(&qm, &data.train);
+    }
+
+    #[test]
+    fn batched_last_state_bit_identical() {
+        let data = melborn_sized(3, 50, 30);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 7));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 0.1, features: Features::LastState, ..Default::default() },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        assert_batched_matches_sequential(&qm, &data.train[..18]);
+    }
+
+    /// Batching must not *require* disjoint supports: a batch of conflicting
+    /// flips (same row, same slot, duplicate flips) is still exact lane by
+    /// lane.
+    #[test]
+    fn overlapping_batch_is_still_exact() {
+        let (qm, data) = melborn_model(6);
+        let calib = &data.train[..15];
+        let plan = CalibPlan::build(&qm, calib);
+        let mut seq = FlipScratch::for_plan(&plan);
+        let mut bat = BatchScratch::for_plan(&plan);
+        // Slots 0..4 live in row 0 (and neighbours): maximal support overlap,
+        // plus a duplicate flip and a clamped no-op flip in the same batch.
+        let mut flips: Vec<FlipCandidate> = (0..4)
+            .map(|slot| FlipCandidate {
+                slot,
+                new_val: flip_bit(plan.slot_value(slot), 0, qm.q),
+            })
+            .collect();
+        flips.push(flips[0]);
+        flips.push(FlipCandidate { slot: 9, new_val: plan.slot_value(9) }); // no-op lane
+        let perfs = plan.eval_flips_batched(&qm, &flips, &mut bat);
+        for (f, perf) in flips.iter().zip(&perfs) {
+            assert_eq!(*perf, plan.eval_flip(&qm, f.slot, f.new_val, &mut seq));
+        }
+        assert_eq!(perfs[5], plan.base_perf());
+    }
+
+    #[test]
+    fn pack_batches_supports_are_disjoint() {
+        let (qm, data) = melborn_model(6);
+        let plan = CalibPlan::build(&qm, &data.train[..10]);
+        let cands: Vec<FlipCandidate> = (0..plan.n_slots())
+            .map(|slot| FlipCandidate { slot, new_val: 0 })
+            .collect();
+        let batches = plan.pack_batches(&cands);
+        assert_eq!(batches.iter().map(|b| b.len()).sum::<usize>(), cands.len());
+        for batch in &batches {
+            assert!(batch.len() <= BATCH_LANES);
+            let mut rows = std::collections::HashSet::new();
+            for &ci in batch {
+                let mut sup = Vec::new();
+                plan.flip_support(cands[ci].slot, &mut sup);
+                sup.sort_unstable();
+                sup.dedup();
+                for r in sup {
+                    assert!(rows.insert(r), "support overlap inside a batch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_scratch_reuse_is_stateless() {
+        // Same batch evaluated twice through one scratch (with an unrelated
+        // batch in between) must give identical results.
+        let (qm, data) = melborn_model(6);
+        let calib = &data.train[..20];
+        let plan = CalibPlan::build(&qm, calib);
+        let mut sc = BatchScratch::for_plan(&plan);
+        let batch: Vec<FlipCandidate> = [5usize, 17, 40]
+            .iter()
+            .map(|&slot| FlipCandidate {
+                slot,
+                new_val: flip_bit(plan.slot_value(slot), 3, qm.q),
+            })
+            .collect();
+        let a = plan.eval_flips_batched(&qm, &batch, &mut sc);
+        let other: Vec<FlipCandidate> = [2usize, 33]
+            .iter()
+            .map(|&slot| FlipCandidate {
+                slot,
+                new_val: flip_bit(plan.slot_value(slot), 1, qm.q),
+            })
+            .collect();
+        let _ = plan.eval_flips_batched(&qm, &other, &mut sc);
+        let b = plan.eval_flips_batched(&qm, &batch, &mut sc);
+        assert_eq!(a, b);
     }
 
     #[test]

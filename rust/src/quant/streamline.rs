@@ -46,6 +46,32 @@ impl ThresholdLadder {
         -self.qmax + count
     }
 
+    /// Apply the ladder with a known nearby output level as a hint — exact:
+    /// returns the same value as [`Self::apply`] for **every** `(acc, hint)`
+    /// pair. If `acc` still lies inside the hint level's threshold bracket
+    /// the answer is the hint (two comparisons); otherwise fall back to the
+    /// full binary search.
+    ///
+    /// The batched sensitivity engine calls this with the cached baseline
+    /// level of the *same* pre-activation before a sparse perturbation — the
+    /// sweep's dominant operation. Measured on the Melborn sweep mirror
+    /// (EXPERIMENTS.md §Perf iteration 4), the perturbed level is *exactly*
+    /// the baseline level in ~71% of calls, and the remainder are mostly
+    /// large saturating jumps (sign flips) — which is why this is a bracket
+    /// check + fallback rather than a local walk: a walk pays
+    /// `O(|Δlevel|)` precisely on the jumpy 29%.
+    #[inline]
+    pub fn apply_from(&self, acc: i64, hint: i64) -> i64 {
+        let n = self.thresholds.len();
+        let idx = (hint + self.qmax).clamp(0, n as i64) as usize;
+        let below_ok = idx == 0 || self.thresholds[idx - 1] <= acc;
+        let above_ok = idx == n || acc < self.thresholds[idx];
+        if below_ok && above_ok {
+            return -self.qmax + idx as i64;
+        }
+        self.apply(acc)
+    }
+
     /// Number of comparators the direct-logic realization needs.
     pub fn n_comparators(&self) -> usize {
         self.thresholds.len()
@@ -109,6 +135,29 @@ mod tests {
             assert!(out >= prev_out || prev == i64::MIN);
             prev_out = out;
             prev = acc;
+        }
+    }
+
+    #[test]
+    fn apply_from_matches_apply_for_every_hint() {
+        // Exhaustive over a dense acc sweep × every possible hint level,
+        // including duplicate-threshold ladders (small c).
+        for q in [4u8, 6] {
+            for &c in &[0.7, 1.0, 9.3, 120.0] {
+                let ladder = ThresholdLadder::build(c, q);
+                let m = qmax(q);
+                let lim = (c * (m as f64 + 2.0)) as i64 + 2;
+                for acc in -lim..=lim {
+                    let expect = ladder.apply(acc);
+                    for hint in -m..=m {
+                        assert_eq!(
+                            ladder.apply_from(acc, hint),
+                            expect,
+                            "q={q} c={c} acc={acc} hint={hint}"
+                        );
+                    }
+                }
+            }
         }
     }
 

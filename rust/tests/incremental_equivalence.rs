@@ -1,15 +1,21 @@
-//! Exact-equivalence property tests for the incremental sensitivity engine:
+//! Exact-equivalence property tests for the incremental sensitivity engines:
 //! on every benchmark task, both feature-pooling modes and every paper
-//! bit-width, the incremental engine's Eq. 4 scores must be **bit-identical**
-//! (assert_eq on `f64`, no tolerance) to the dense
-//! flip → `evaluate_split` → restore oracle — which in turn must agree with
-//! the allocating `evaluate_split_reference` path under perturbed weights.
+//! bit-width, the sequential-incremental AND batched-incremental engines'
+//! Eq. 4 scores must be **bit-identical** (assert_eq on `f64`, no tolerance)
+//! to the dense flip → `evaluate_split` → restore oracle — which in turn must
+//! agree with the allocating `evaluate_split_reference` path under perturbed
+//! weights. Property tests additionally pin lane-level batched evaluation to
+//! sequential `eval_flip` under random (possibly support-overlapping) batch
+//! compositions.
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
 use rcx::data::Dataset;
 use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
 use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
-use rcx::quant::{flip_bit, QuantEsn, QuantSpec};
+use rcx::quant::{
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantEsn, QuantSpec, BATCH_LANES,
+};
+use rcx::rng::{Pcg64, Rng};
 
 fn melborn(features: Features) -> (EsnModel, Dataset) {
     let data = melborn_sized(1, 60, 30);
@@ -36,7 +42,7 @@ fn henon() -> (EsnModel, Dataset) {
     (m, data)
 }
 
-/// Full Eq. 4 sweep on both engines; exact equality required.
+/// Full Eq. 4 sweep on all three engines; exact equality required.
 fn assert_engines_agree(model: &EsnModel, data: &Dataset, q: u8, max_calib: usize, tag: &str) {
     let qm = QuantEsn::from_model(model, data, QuantSpec::bits(q));
     let mk = |engine| {
@@ -46,6 +52,8 @@ fn assert_engines_agree(model: &EsnModel, data: &Dataset, q: u8, max_calib: usiz
     let dense = mk(Engine::Dense).scores(&qm, &data.train);
     assert_eq!(inc.len(), qm.n_weights());
     assert_eq!(inc, dense, "{tag} q={q}: incremental != dense oracle");
+    let batched = mk(Engine::IncrementalBatched).scores(&qm, &data.train);
+    assert_eq!(batched, dense, "{tag} q={q}: batched != dense oracle");
 }
 
 #[test]
@@ -158,4 +166,63 @@ fn clamped_noop_flips_are_skipped_identically() {
     let inc = mk(Engine::Incremental).scores(&qm, &data.train);
     let dense = mk(Engine::Dense).scores(&qm, &data.train);
     assert_eq!(inc, dense);
+    let batched = mk(Engine::IncrementalBatched).scores(&qm, &data.train);
+    assert_eq!(batched, dense);
+}
+
+/// Property: ANY random flip subset, packed into batches by the greedy
+/// packer, scores identically to sequential `eval_flip` — lane by lane,
+/// including duplicate slots, overlapping supports and clamped no-op flips
+/// that the packer was never promised to avoid.
+fn assert_random_batches_match(model: &QuantEsn, calib: &[rcx::data::TimeSeries], seed: u64) {
+    let plan = CalibPlan::build(model, calib);
+    let mut seq = FlipScratch::for_plan(&plan);
+    let mut bat = BatchScratch::for_plan(&plan);
+    let mut rng = Pcg64::seed(seed);
+    for round in 0..30 {
+        let n_cands = 1 + rng.below(2 * BATCH_LANES as u64) as usize;
+        let cands: Vec<FlipCandidate> = (0..n_cands)
+            .map(|_| {
+                let slot = rng.below(plan.n_slots() as u64) as usize;
+                let bit = rng.below(model.q as u64) as u32;
+                FlipCandidate { slot, new_val: flip_bit(plan.slot_value(slot), bit, model.q) }
+            })
+            .collect();
+        let batches = plan.pack_batches(&cands);
+        assert_eq!(batches.iter().map(|b| b.len()).sum::<usize>(), cands.len());
+        for batch in &batches {
+            let flips: Vec<FlipCandidate> = batch.iter().map(|&ci| cands[ci]).collect();
+            let perfs = plan.eval_flips_batched(model, &flips, &mut bat);
+            for (f, perf) in flips.iter().zip(&perfs) {
+                let reference = plan.eval_flip(model, f.slot, f.new_val, &mut seq);
+                assert_eq!(
+                    *perf, reference,
+                    "round {round}: slot {} -> {} batched != sequential",
+                    f.slot, f.new_val
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_flip_batches_match_sequential_classification() {
+    let (m, data) = melborn(Features::MeanState);
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    assert_random_batches_match(&qm, &data.train[..15], 11);
+}
+
+#[test]
+fn random_flip_batches_match_sequential_last_state() {
+    let (m, data) = melborn(Features::LastState);
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+    assert_random_batches_match(&qm, &data.train[..15], 12);
+}
+
+#[test]
+fn random_flip_batches_match_sequential_regression() {
+    let (m, data) = henon();
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+    // (henon's train split is one long sequence, not a sample list)
+    assert_random_batches_match(&qm, &data.train, 13);
 }

@@ -1,12 +1,23 @@
 """Faithful Python mirror of the Rust incremental engine vs dense reference.
 
 Mirrors: ThresholdLadder.apply, step_int, evaluate_split (classification +
-regression), CalibPlan caches, step_frontier, eval_flip_cls/reg, flip_bit.
-Asserts bit-identical Perf for every (slot, bit) flip on random sparse models.
+regression), CalibPlan caches, step_frontier, eval_flip_cls/reg, flip_bit,
+and the batched multi-flip path (eval_flips_batched lane algebra, the greedy
+support-disjoint packer, the dead-lane early exit via last_prev_nz).
+Asserts bit-identical Perf for every (slot, bit) flip on random sparse
+models, sequentially and through packed batches.
+
+Usage:
+    python tools/frontier_mirror.py --check   # CI gate: all correctness cases
+    python tools/frontier_mirror.py --perf    # timing: sequential vs batched
 """
 import math
 import random
 import bisect
+import sys
+import time
+
+BATCH_LANES = 8
 
 
 def qmax(q):
@@ -32,6 +43,15 @@ class Ladder:
     def apply(self, acc):
         # partition_point(|t| t <= acc) == bisect_right(thr, acc)
         return -self.qmax + bisect.bisect_right(self.thr, acc)
+
+    def apply_from(self, acc, hint):
+        """Bracket check at the hint level, binary-search fallback — exact
+        for every (acc, hint); mirror of ThresholdLadder::apply_from."""
+        n = len(self.thr)
+        idx = min(max(hint + self.qmax, 0), n)
+        if (idx == 0 or self.thr[idx - 1] <= acc) and (idx == n or acc < self.thr[idx]):
+            return -self.qmax + idx
+        return self.apply(acc)
 
 
 class Model:
@@ -163,7 +183,12 @@ class Plan:
                 acc.append(acc_t)
                 s.append(s_t)
                 s_prev = s_t
-            entry = {"acc": acc, "s": s, "T": T}
+            last_prev_nz = [-1] * n
+            for t in range(max(T - 1, 0)):
+                for j in range(n):
+                    if s[t][j] != 0:
+                        last_prev_nz[j] = t
+            entry = {"acc": acc, "s": s, "T": T, "last_prev_nz": last_prev_nz}
             if model.task == "cls":
                 pooled = [0] * n
                 if model.features == "mean":
@@ -264,6 +289,200 @@ class Plan:
                     dirty = nxt
             return ("rmse", math.sqrt(se / max(count, 1)))
 
+    # ---- batched multi-flip mirror (rollout.rs eval_flips_batched) ----
+
+    def flip_support(self, slot):
+        """1-step dirty-neuron support: the flip's row plus its readers."""
+        i0 = self.slot_rc[slot][0]
+        return {i0} | {row for (row, _k) in self.col[i0]}
+
+    def support_row_span(self, slot):
+        sup = self.flip_support(slot)
+        return (min(sup), max(sup))
+
+    def pack_batches(self, cands):
+        """Greedy first-fit packing of support-disjoint flips (mirror of
+        CalibPlan::pack_batches): scan candidates in the given order, place
+        each into the first open batch whose accumulated support it does not
+        intersect, close batches at BATCH_LANES flips."""
+        open_batches = []  # (support_set, member_indices)
+        closed = []
+        for ci, (slot, _nv) in enumerate(cands):
+            sup = self.flip_support(slot)
+            for oi, (mask, members) in enumerate(open_batches):
+                if not (mask & sup):
+                    mask |= sup
+                    members.append(ci)
+                    if len(members) == BATCH_LANES:
+                        closed.append(members)
+                        open_batches.pop(oi)
+                    break
+            else:
+                open_batches.append((set(sup), [ci]))
+        closed.extend(members for (_mask, members) in open_batches)
+        return closed
+
+    def _step_batched(self, sp, t, b, dw, i0, j0, alive, cur):
+        """Lane-vectorized frontier step: `cur` maps dirty neuron -> lane
+        deviation vector; returns (next frontier, per-lane nonzero count)."""
+        m = self.m
+        delta = {}
+        for j, dv in cur.items():
+            # mirror of the Rust lane mask: scatter only lanes with a nonzero
+            # deviation at this neuron (adding w*0 would be identical)
+            nz = [l for l in range(BATCH_LANES) if dv[l] != 0]
+            for (row, k) in self.col[j]:
+                rd = delta.get(row)
+                if rd is None:
+                    rd = delta[row] = [0] * BATCH_LANES
+                w = m.values[k]
+                for l in nz:
+                    rd[l] += w * dv[l]
+        for l in range(b):
+            if not alive[l]:
+                continue
+            s_prev_j0 = 0 if t == 0 else sp["s"][t - 1][j0[l]]
+            dev = cur.get(j0[l])
+            corr = dw[l] * (s_prev_j0 + (dev[l] if dev is not None else 0))
+            if corr != 0:
+                rd = delta.get(i0[l])
+                if rd is None:
+                    rd = delta[i0[l]] = [0] * BATCH_LANES
+                rd[l] += corr
+        nxt = {}
+        lane_nnz = [0] * BATCH_LANES
+        for row, rd in delta.items():
+            for l in range(b):
+                if rd[l] == 0:
+                    continue
+                # per-lane ladder re-evaluation: local walk from the cached
+                # baseline level (exact; mirror of the Rust batched path)
+                acc = sp["acc"][t][row] + (rd[l] << m.f)
+                d = m.ladder.apply_from(acc, sp["s"][t][row]) - sp["s"][t][row]
+                if d != 0:
+                    out = nxt.get(row)
+                    if out is None:
+                        out = nxt[row] = [0] * BATCH_LANES
+                    out[l] = d
+                    lane_nnz[l] += 1
+        return nxt, lane_nnz
+
+    @staticmethod
+    def _init_alive(sp, b, dw, j0):
+        alive = [dw[l] != 0 and sp["last_prev_nz"][j0[l]] >= 0 for l in range(b)]
+        return alive, sum(alive)
+
+    @staticmethod
+    def _retire_dead(sp, t, b, j0, lane_nnz, alive, n_alive):
+        for l in range(b):
+            if alive[l] and lane_nnz[l] == 0 and sp["last_prev_nz"][j0[l]] < t:
+                alive[l] = False
+                n_alive -= 1
+        return n_alive
+
+    def eval_flips_batched(self, flips):
+        """Mirror of CalibPlan::eval_flips_batched: up to BATCH_LANES
+        independent flips in one pass, bit-identical to eval_flip per lane."""
+        m = self.m
+        b = len(flips)
+        assert b <= BATCH_LANES
+        dw = [nv - m.values[slot] for (slot, nv) in flips]
+        i0 = [self.slot_rc[slot][0] for (slot, _nv) in flips]
+        j0 = [self.slot_rc[slot][1] for (slot, _nv) in flips]
+        base = plan_base(self, m)
+        if m.task == "cls":
+            correct = [0] * b
+            for sp, (u, label, _) in zip(self.sp, m.samples):
+                cur = {}
+                lane_any = [False] * b
+                pooled = {}  # j -> lane vector
+                alive, n_alive = self._init_alive(sp, b, dw, j0)
+                for t in range(sp["T"]):
+                    if n_alive == 0:
+                        break
+                    cur, lane_nnz = self._step_batched(sp, t, b, dw, i0, j0, alive, cur)
+                    if m.features == "mean":
+                        for j, dv in cur.items():
+                            pd = pooled.get(j)
+                            if pd is None:
+                                pd = pooled[j] = [0] * BATCH_LANES
+                            for l in range(BATCH_LANES):
+                                pd[l] += dv[l]
+                            for l in range(b):
+                                if dv[l] != 0:
+                                    lane_any[l] = True
+                    elif t + 1 == sp["T"]:
+                        for j, dv in cur.items():
+                            pooled[j] = list(dv)
+                            for l in range(b):
+                                if dv[l] != 0:
+                                    lane_any[l] = True
+                    n_alive = self._retire_dead(sp, t, b, j0, lane_nnz, alive, n_alive)
+                for l in range(b):
+                    if not lane_any[l]:
+                        correct[l] += 1 if sp["base_correct"] else 0
+                        continue
+                    scores = []
+                    for c in range(m.out_dim):
+                        dacc = sum(m.w_out[c][j] * dv[l] for j, dv in pooled.items())
+                        scores.append(sp["base_scores"][c] + m.m_out[c] * dacc)
+                    if argmax(scores) == label:
+                        correct[l] += 1
+            return [
+                base if dw[l] == 0 else ("acc", correct[l] / max(len(m.samples), 1))
+                for l in range(b)
+            ]
+        else:
+            se = [0.0] * b
+            count = 0
+            for sp, (u, _, tgt) in zip(self.sp, m.samples):
+                cur = {}
+                alive, n_alive = self._init_alive(sp, b, dw, j0)
+                t = 0
+                while t < sp["T"]:
+                    if n_alive == 0:
+                        break
+                    cur, lane_nnz = self._step_batched(sp, t, b, dw, i0, j0, alive, cur)
+                    if t >= m.washout:
+                        bidx = (t - m.washout) * m.out_dim
+                        if not cur:
+                            for c in range(m.out_dim):
+                                cached = sp["se"][bidx + c]
+                                for l in range(b):
+                                    se[l] += cached
+                                count += 1
+                        else:
+                            for c in range(m.out_dim):
+                                dacc = [0] * BATCH_LANES
+                                for j, dv in cur.items():
+                                    w = m.w_out[c][j]
+                                    for l in range(BATCH_LANES):
+                                        dacc[l] += w * dv[l]
+                                cached = sp["se"][bidx + c]
+                                for l in range(b):
+                                    if lane_nnz[l] == 0:
+                                        se[l] += cached
+                                    else:
+                                        v = (sp["racc"][bidx + c] + dacc[l]) / m.denom[c] \
+                                            + m.bias_f[c]
+                                        e = v - tgt[t][c]
+                                        se[l] += e * e
+                                count += 1
+                    n_alive = self._retire_dead(sp, t, b, j0, lane_nnz, alive, n_alive)
+                    t += 1
+                start = max(t, m.washout)
+                if start < sp["T"]:
+                    lo = (start - m.washout) * m.out_dim
+                    hi = (sp["T"] - m.washout) * m.out_dim
+                    for cached in sp["se"][lo:hi]:
+                        for l in range(b):
+                            se[l] += cached
+                        count += 1
+            return [
+                base if dw[l] == 0 else ("rmse", math.sqrt(se[l] / max(count, 1)))
+                for l in range(b)
+            ]
+
 
 def run_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3, nnz=4):
     rng = random.Random(seed)
@@ -305,15 +524,131 @@ def plan_base(plan, model):
     return ("rmse", math.sqrt(se / max(count, 1)))
 
 
-bad = 0
-bad += run_case(1, "cls", "mean", n=12, q=4, T=10, n_samples=8)
-bad += run_case(2, "cls", "mean", n=16, q=6, T=8, n_samples=6)
-bad += run_case(3, "cls", "last", n=12, q=4, T=10, n_samples=8)
-bad += run_case(4, "cls", "last", n=10, q=8, T=6, n_samples=5)
-bad += run_case(5, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
-bad += run_case(6, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
-bad += run_case(7, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
-bad += run_case(8, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)  # washout == T edge
-print("TOTAL MISMATCHES:", bad)
-assert bad == 0, "frontier algorithm diverges from dense reference"
-print("OK: incremental == dense on all cases")
+def all_candidates(model):
+    """Every non-no-op (slot, new_val) candidate, canonical (slot, bit) order."""
+    cands = []
+    for slot in range(len(model.values)):
+        old = model.values[slot]
+        for bit in range(model.q):
+            nv = flip_bit(old, bit, model.q)
+            if nv != old:
+                cands.append((slot, nv))
+    return cands
+
+
+def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3, nnz=4):
+    """Mirror of the Rust batched scorer's pipeline: locality-sort all
+    candidates by support row span, greedily pack support-disjoint batches,
+    evaluate each batch through the lane algebra, and compare every lane
+    against sequential eval_flip — plus random (overlapping, duplicate,
+    no-op-containing) batches that the packer never promises to produce."""
+    rng = random.Random(seed)
+    model = Model(rng, n, q, task, features, washout, out_dim, nnz, T, n_samples)
+    plan = Plan(model)
+    cands = all_candidates(model)
+    order = sorted(range(len(cands)), key=lambda i: plan.support_row_span(cands[i][0]) + (i,))
+    sorted_cands = [cands[i] for i in order]
+    batches = plan.pack_batches(sorted_cands)
+    assert sorted(ci for batch in batches for ci in batch) == list(range(len(cands)))
+    mismatches = 0
+    total = 0
+    for batch in batches:
+        assert 0 < len(batch) <= BATCH_LANES
+        flips = [sorted_cands[ci] for ci in batch]
+        perfs = plan.eval_flips_batched(flips)
+        for (slot, nv), perf in zip(flips, perfs):
+            total += 1
+            seq = plan.eval_flip(slot, nv)
+            if perf != seq:
+                mismatches += 1
+                if mismatches <= 3:
+                    print(f"  BATCH MISMATCH seed={seed} slot={slot} nv={nv}: "
+                          f"batched={perf} seq={seq}")
+    # adversarial compositions: random batches with support overlap,
+    # duplicates and clamped no-op flips
+    for _ in range(12):
+        bsz = 1 + rng.randrange(BATCH_LANES)
+        flips = []
+        for _ in range(bsz):
+            slot = rng.randrange(len(model.values))
+            bit = rng.randrange(q)
+            flips.append((slot, flip_bit(model.values[slot], bit, q)))
+        perfs = plan.eval_flips_batched(flips)
+        for (slot, nv), perf in zip(flips, perfs):
+            total += 1
+            seq = plan.eval_flip(slot, nv) if nv != model.values[slot] else plan_base(plan, model)
+            if perf != seq:
+                mismatches += 1
+                if mismatches <= 3:
+                    print(f"  RANDOM-BATCH MISMATCH seed={seed} slot={slot} nv={nv}: "
+                          f"batched={perf} seq={seq}")
+    print(f"batched(task={task}, feat={features}, n={n}, q={q}, T={T}, ns={n_samples}, "
+          f"wo={washout}): {len(batches)} batches, {total} lanes, {mismatches} mismatches")
+    return mismatches
+
+
+def run_checks():
+    bad = 0
+    bad += run_case(1, "cls", "mean", n=12, q=4, T=10, n_samples=8)
+    bad += run_case(2, "cls", "mean", n=16, q=6, T=8, n_samples=6)
+    bad += run_case(3, "cls", "last", n=12, q=4, T=10, n_samples=8)
+    bad += run_case(4, "cls", "last", n=10, q=8, T=6, n_samples=5)
+    bad += run_case(5, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
+    bad += run_case(6, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
+    bad += run_case(7, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
+    bad += run_case(8, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)  # washout == T edge
+    bad += run_batched_case(11, "cls", "mean", n=12, q=4, T=10, n_samples=8)
+    bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6)
+    bad += run_batched_case(13, "cls", "last", n=12, q=4, T=10, n_samples=8)
+    bad += run_batched_case(14, "cls", "last", n=10, q=8, T=6, n_samples=5)
+    bad += run_batched_case(15, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
+    bad += run_batched_case(16, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
+    bad += run_batched_case(17, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
+    bad += run_batched_case(18, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)
+    print("TOTAL MISMATCHES:", bad)
+    assert bad == 0, "frontier algorithm diverges from dense reference"
+    print("OK: incremental == batched == dense on all cases")
+
+
+def run_perf():
+    """Timing: sequential eval_flip sweep vs packed batched sweep on a mirror
+    of the Melborn sweep config (n=50 neurons, ~5 nnz/row, T=24, 64 samples,
+    q=6, mean-state classification). Python constant factors differ from
+    Rust, but the ratio tracks the algorithmic win (shared passes + dead-lane
+    early exit); the Rust wall-clock is recorded by CI's bench-smoke job into
+    BENCH_ci.json."""
+    rng = random.Random(42)
+    model = Model(rng, 50, 6, "cls", "mean", 0, 10, 5, 24, 64)
+    plan = Plan(model)
+    cands = all_candidates(model)
+    print(f"perf config: n=50 nnz/row=5 T=24 samples=64 q=6, {len(cands)} candidate flips")
+
+    t0 = time.perf_counter()
+    seq = [plan.eval_flip(slot, nv) for (slot, nv) in cands]
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    order = sorted(range(len(cands)), key=lambda i: plan.support_row_span(cands[i][0]) + (i,))
+    sorted_cands = [cands[i] for i in order]
+    batches = plan.pack_batches(sorted_cands)
+    bat = [None] * len(cands)
+    for batch in batches:
+        perfs = plan.eval_flips_batched([sorted_cands[ci] for ci in batch])
+        for ci, perf in zip(batch, perfs):
+            bat[order[ci]] = perf
+    t_bat = time.perf_counter() - t0
+
+    assert bat == seq, "batched sweep diverged from sequential"
+    sizes = [len(b) for b in batches]
+    print(f"batches: {len(batches)} (mean lane fill {sum(sizes) / len(sizes):.2f})")
+    print(f"sequential incremental: {t_seq:.3f}s  ({len(cands) / t_seq:.0f} flips/s)")
+    print(f"batched incremental:    {t_bat:.3f}s  ({len(cands) / t_bat:.0f} flips/s)")
+    print(f"speedup (batched vs sequential): {t_seq / t_bat:.2f}x")
+
+
+if __name__ == "__main__":
+    if "--perf" in sys.argv:
+        run_perf()
+    else:
+        # default and `--check` (the CI gate) both run the full suite
+        run_checks()
