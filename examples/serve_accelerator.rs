@@ -1,23 +1,24 @@
-//! End-to-end driver (the proof that all three layers compose):
+//! End-to-end serving driver (the proof that the whole stack composes):
 //!
-//!   python/jax/Pallas  — AOT-compiled `melborn_pooled.hlo.txt` rollout
-//!   rust runtime       — PJRT CPU client executing the artifact
-//!   rust coordinator   — router + dynamic batcher serving live requests
+//!   stage 1–3  train, quantize, sensitivity-prune (a reduced DSE sweep)
+//!   hw         realize every configuration, extract the Pareto front
+//!   serve      hot-load the front as routable variants and serve the full
+//!              test set through the batching coordinator on the **native
+//!              backend** — lane-batched, bit-exact, no compiled artifacts
 //!
-//! Loads the real compiled artifact, deploys TWO DSE variants (4-bit/15%
-//! sensitivity-pruned and 8-bit unpruned) side by side, fires the full test
-//! set as concurrent requests, and reports accuracy, latency percentiles and
-//! throughput. Requires `make artifacts`.
+//! Set `RCX_BACKEND=pjrt` to execute through the compiled XLA/Pallas
+//! artifact instead (requires `make artifacts` and a real PJRT runtime).
 //!
 //! Run: `cargo run --release --example serve_accelerator`
 
 use std::time::{Duration, Instant};
 
 use rcx::config::BenchmarkConfig;
-use rcx::coordinator::{BatcherConfig, Prediction, ServeConfig, Server, VariantSpec};
+use rcx::coordinator::{BackendConfig, BatcherConfig, Prediction, ServeConfig, Server};
 use rcx::data::Benchmark;
-use rcx::pruning::{prune_with_compensation, Method, Pruner};
-use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::dse::{explore, pareto_variants, realize_hw, DseRequest};
+use rcx::pruning::Method;
+use rcx::runtime::NativeConfig;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("RCX_FULL").as_deref() == Ok("1");
@@ -25,30 +26,38 @@ fn main() -> anyhow::Result<()> {
     println!("training stage-1 model ({})...", if full { "paper-sized" } else { "reduced" });
     let (model, data) = cfg.train(1, !full);
 
-    // Two deployable variants out of the DSE space.
-    let q8 = QuantEsn::from_model(&model, &data, QuantSpec::bits(8));
-    let q4 = QuantEsn::from_model(&model, &data, QuantSpec::bits(4));
-    println!("scoring weights for the pruned variant (Eq. 4)...");
-    let calib = rcx::dse::calibration_split(&data, 96);
-    let scores = Method::Sensitivity.pruner(7).scores(&q4, calib);
-    let q4p15 = prune_with_compensation(&q4, &scores, 15.0, calib);
+    // Stages 2–3 + hw realization: the DSE result set is a variant registry —
+    // the Pareto front deploys directly, sharing model storage with the
+    // result set (no weight copies).
+    println!("exploring Q x P and extracting the hardware Pareto front...");
+    let req = DseRequest { method: Method::Sensitivity, max_calib: 96, ..Default::default() };
+    let result = explore(&model, &data, &req);
+    let hw = realize_hw(&result, &data);
+    let registry = pareto_variants(&hw);
+    println!(
+        "Pareto front: {} of {} configurations -> serving variants [{}]",
+        registry.len(),
+        result.configs.len(),
+        registry.keys().collect::<Vec<_>>().join(", ")
+    );
 
-    println!("starting coordinator on artifact `{}`...", cfg.artifact);
+    let backend = if std::env::var("RCX_BACKEND").as_deref() == Ok("pjrt") {
+        BackendConfig::Pjrt { artifact_dir: "artifacts".into(), artifact: cfg.artifact.to_string() }
+    } else {
+        BackendConfig::Native(NativeConfig { max_batch: 32, workers: 2 })
+    };
+    println!("starting coordinator on the {} backend...", backend.name());
     let server = Server::start(
         ServeConfig {
-            artifact_dir: "artifacts".into(),
-            artifact: cfg.artifact.to_string(),
+            backend,
             batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
         },
-        vec![
-            VariantSpec { key: "q4_p15".into(), model: q4p15 },
-            VariantSpec { key: "q8_unpruned".into(), model: q8 },
-        ],
+        registry.specs(),
     )?;
     let client = server.client();
 
-    for key in ["q4_p15", "q8_unpruned"] {
-        let v = server.variant_index(key).unwrap();
+    for key in server.variant_keys().to_vec() {
+        let v = server.variant_index(&key).unwrap();
         let t0 = Instant::now();
         let pending: Vec<_> = data
             .test
@@ -58,9 +67,10 @@ fn main() -> anyhow::Result<()> {
         let mut correct = 0usize;
         for (i, rx) in pending.into_iter().enumerate() {
             let resp = rx.recv()?;
-            let Prediction::Class(c) = resp.prediction;
-            if Some(c) == data.test[i].label {
-                correct += 1;
+            if let Prediction::Class(c) = resp.prediction {
+                if Some(c) == data.test[i].label {
+                    correct += 1;
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();

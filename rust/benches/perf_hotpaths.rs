@@ -4,29 +4,36 @@
 //!   L3-b  sensitivity scoring (Eq. 4, the dominant DSE cost)
 //!   L3-b' scoring engines head-to-head: dense oracle vs sequential
 //!         incremental vs batched incremental (bit-identity asserted)
+//!   L3-b″ batch packer mean lane fill (the ROADMAP headroom metric)
 //!   L3-c  hardware cost model evaluation
 //!   L3-d  batcher decision loop
+//!   L3-e  native lane-batched inference kernel vs scalar loop
+//!   L3-f  closed-loop native serving: throughput/latency vs batch size and
+//!         worker count through the full coordinator (serve smoke)
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
 //! §Perf. `RCX_BENCH_SMOKE=1` shrinks the grid for the CI `bench-smoke` job;
-//! `RCX_BENCH_JSON=path` additionally writes the L3-b' timings as JSON
+//! `RCX_BENCH_JSON=path` additionally writes the measured sections as JSON
 //! (`BENCH_ci.json` in CI, uploaded as an artifact).
 
 use std::time::Instant;
 
-use rcx::bench::{json_out_path, section, smoke_mode, time_it};
+use rcx::bench::{section, smoke_mode, time_it, JsonReport};
 use rcx::config::BenchmarkConfig;
-use rcx::coordinator::{Batcher, BatcherConfig};
+use rcx::coordinator::{
+    BackendConfig, Batcher, BatcherConfig, Prediction, ServeConfig, Server, VariantSpec,
+};
 use rcx::data::Benchmark;
 use rcx::dse::calibration_split;
 use rcx::hw::{self, Topology};
 use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
-use rcx::quant::{QuantEsn, QuantSpec};
-use rcx::runtime::{pooled_states, Runtime};
+use rcx::quant::{flip_bit, CalibPlan, FlipCandidate, LaneScratch, QuantEsn, QuantSpec};
+use rcx::runtime::{pooled_states, NativeConfig, Runtime};
 
 fn main() {
     let smoke = smoke_mode();
+    let mut report = JsonReport::new();
     let cfg = BenchmarkConfig::paper(Benchmark::Melborn, 0);
     let (model, data) = cfg.train(1, true);
     let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(6));
@@ -97,21 +104,55 @@ fn main() {
             t_inc.as_secs_f64() / t_bat.as_secs_f64(),
         ));
     }
-    if let Some(path) = json_out_path() {
-        // `workers: 0` means "one per available core"; bit_identical is true
-        // by construction — the assert_eq above aborts the bench otherwise.
-        let json = format!(
+    // `workers: 0` means "one per available core"; bit_identical is true by
+    // construction — the assert_eq above aborts the bench otherwise.
+    report.add(
+        "l3b_engines",
+        format!(
             concat!(
-                "{{\n  \"bench\": \"perf_hotpaths/L3-b'\",\n",
-                "  \"config\": {{\"benchmark\": \"melborn\", \"n_weights\": 250, \"q\": 6, ",
-                "\"max_calib\": {}, \"smoke\": {}}},\n",
-                "  \"bit_identical\": true,\n",
-                "  \"rows\": [{}\n  ]\n}}\n"
+                "{{\"config\": {{\"benchmark\": \"melborn\", \"n_weights\": 250, \"q\": 6, ",
+                "\"max_calib\": {}, \"smoke\": {}}}, \"bit_identical\": true, ",
+                "\"rows\": [{}\n  ]}}"
             ),
             max_calib, smoke, json_rows
+        ),
+    );
+
+    section("L3-b\u{2033} batch packer mean lane fill (same-support grouping + disjoint FF)");
+    {
+        let plan = CalibPlan::build(&qm, calib);
+        let mut cands: Vec<FlipCandidate> = Vec::new();
+        for slot in 0..plan.n_slots() {
+            let old = plan.slot_value(slot);
+            for bit in 0..qm.q as u32 {
+                let nv = flip_bit(old, bit, qm.q);
+                if nv != old {
+                    cands.push(FlipCandidate { slot, new_val: nv });
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by_key(|&i| {
+            let span = plan.support_row_span(cands[i].slot);
+            (span.0, span.1, i)
+        });
+        let sorted: Vec<FlipCandidate> = order.iter().map(|&i| cands[i]).collect();
+        let batches = plan.pack_batches(&sorted);
+        let fill = cands.len() as f64 / batches.len() as f64;
+        println!(
+            "{} candidate flips -> {} batches, mean lane fill {fill:.2} of 8 \
+             (first-fit measured 4.16 on this config — EXPERIMENTS.md §Perf iteration 5)",
+            cands.len(),
+            batches.len()
         );
-        std::fs::write(&path, json).expect("write RCX_BENCH_JSON output");
-        println!("wrote {}", path.display());
+        report.add(
+            "pack_fill",
+            format!(
+                "{{\"candidates\": {}, \"batches\": {}, \"mean_lane_fill\": {fill:.3}}}",
+                cands.len(),
+                batches.len()
+            ),
+        );
     }
 
     section("L3-c hardware model evaluation (cost+timing+activity+power)");
@@ -131,6 +172,98 @@ fn main() {
     });
     println!("{st}  ({:.1} Mops/s)", 1.0 / st.median.as_secs_f64() / 1e6);
 
+    section("L3-e native lane-batched inference kernel (8 samples/pass vs scalar loop)");
+    {
+        let refs: Vec<&_> = data.test.iter().take(64).collect();
+        let mut sc = LaneScratch::for_model(&qm);
+        let st_lane = time_it(5, 50, || qm.classify_batch(&refs, &mut sc));
+        let st_scalar = time_it(5, 50, || -> Vec<usize> {
+            refs.iter().map(|s| qm.classify(s)).collect()
+        });
+        let speedup = st_scalar.median.as_secs_f64() / st_lane.median.as_secs_f64();
+        println!(
+            "lane-batched {st_lane}\nscalar       {st_scalar}\nspeedup {speedup:.2}x over 64 samples"
+        );
+        report.add(
+            "native_kernel",
+            format!(
+                concat!(
+                    "{{\"samples\": 64, \"lane_batched_us\": {:.1}, \"scalar_us\": {:.1}, ",
+                    "\"speedup\": {:.3}}}"
+                ),
+                st_lane.median.as_secs_f64() * 1e6,
+                st_scalar.median.as_secs_f64() * 1e6,
+                speedup
+            ),
+        );
+    }
+
+    section("L3-f closed-loop native serving (coordinator end-to-end)");
+    {
+        let n_requests: usize = if smoke { 256 } else { 2048 };
+        let grid: &[(usize, usize)] =
+            if smoke { &[(8, 1), (32, 2)] } else { &[(1, 1), (8, 1), (32, 1), (32, 2)] };
+        let mut rows = String::new();
+        for &(max_batch, workers) in grid {
+            let server = Server::start(
+                ServeConfig {
+                    backend: BackendConfig::Native(NativeConfig { max_batch, workers }),
+                    batcher: BatcherConfig {
+                        max_batch,
+                        max_wait: std::time::Duration::from_millis(2),
+                    },
+                },
+                vec![VariantSpec::new("q6", qm.clone())],
+            )
+            .expect("native server start");
+            let client = server.client();
+            let t0 = Instant::now();
+            // Closed loop: enough client threads to saturate the batch cap
+            // (2× max_batch), so flushes happen at capacity and the grid
+            // actually measures batch-size/worker scaling rather than the
+            // 2 ms deadline.
+            let n_clients = (2 * max_batch).clamp(4, 64);
+            std::thread::scope(|scope| {
+                for c in 0..n_clients {
+                    let client = client.clone();
+                    let data = &data;
+                    scope.spawn(move || {
+                        for i in (c..n_requests).step_by(n_clients) {
+                            let s = &data.test[i % data.test.len()];
+                            let resp = client.infer(0, s.clone()).expect("request failed");
+                            let Prediction::Class(_) = resp.prediction else {
+                                panic!("unexpected prediction kind")
+                            };
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let m = server.metrics();
+            assert_eq!(m.requests, n_requests as u64, "lost responses");
+            assert!(m.p99_us >= m.p50_us && m.p99_us > 0, "degenerate latency percentiles");
+            server.shutdown().expect("shutdown");
+            let rps = n_requests as f64 / wall;
+            println!(
+                "max_batch={max_batch:<3} workers={workers}  {n_requests} reqs in {wall:.3}s  \
+                 {rps:>7.0} req/s  mean batch {:.1}  p50 {} us  p99 {} us",
+                m.mean_batch, m.p50_us, m.p99_us
+            );
+            if !rows.is_empty() {
+                rows.push(',');
+            }
+            rows.push_str(&format!(
+                concat!(
+                    "\n    {{\"max_batch\": {}, \"workers\": {}, \"clients\": {}, ",
+                    "\"requests\": {}, \"req_per_s\": {:.1}, \"mean_batch\": {:.2}, ",
+                    "\"p50_us\": {}, \"p99_us\": {}}}"
+                ),
+                max_batch, workers, n_clients, n_requests, rps, m.mean_batch, m.p50_us, m.p99_us
+            ));
+        }
+        report.add("serve_native", format!("{{\"rows\": [{rows}\n  ]}}"));
+    }
+
     section("L1/L2 PJRT rollout (AOT XLA/Pallas artifact, batch=32, T=24)");
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         let rt = Runtime::cpu_subset(std::path::Path::new("artifacts"), &["melborn_pooled"])
@@ -142,4 +275,6 @@ fn main() {
     } else {
         println!("skipped (run `make artifacts`)");
     }
+
+    report.write_if_requested();
 }

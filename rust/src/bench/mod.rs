@@ -73,6 +73,46 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench report: named JSON sections accumulated across a
+/// bench run, written as one object to [`json_out_path`] (the `bench-smoke`
+/// CI job's `BENCH_ci.json` artifact).
+#[derive(Default)]
+pub struct JsonReport {
+    sections: Vec<(String, String)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a section; `value_json` must already be a valid JSON value.
+    pub fn add(&mut self, key: &str, value_json: String) {
+        self.sections.push((key.to_string(), value_json));
+    }
+
+    /// Render `{"key": value, ...}` in insertion order.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in self.sections.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n  \"{k}\": {v}"));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    /// Write to the `RCX_BENCH_JSON` path if one was requested.
+    pub fn write_if_requested(&self) {
+        if let Some(path) = json_out_path() {
+            std::fs::write(&path, self.render()).expect("write RCX_BENCH_JSON output");
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +122,16 @@ mod tests {
         let s = time_it(1, 9, || std::hint::black_box((0..1000).sum::<u64>()));
         assert!(s.min <= s.median);
         assert_eq!(s.iters, 9);
+    }
+
+    #[test]
+    fn json_report_renders_sections_in_order() {
+        let mut r = JsonReport::new();
+        r.add("a", "{\"x\": 1}".to_string());
+        r.add("b", "[1,2]".to_string());
+        let s = r.render();
+        assert!(s.starts_with('{') && s.trim_end().ends_with('}'));
+        assert!(s.find("\"a\"").unwrap() < s.find("\"b\"").unwrap());
+        assert!(s.contains("\"b\": [1,2]"));
     }
 }

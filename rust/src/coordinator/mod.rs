@@ -1,23 +1,38 @@
-//! L3 serving coordinator: request router + dynamic batcher + PJRT executor.
+//! L3 serving coordinator: request router + dynamic batcher over a pluggable
+//! execution backend.
 //!
-//! Architecture (std threads; the PJRT handles are `!Send`, so a dedicated
-//! executor thread owns the [`crate::runtime::Runtime`]):
+//! Architecture (std threads; a dedicated executor thread owns the
+//! [`crate::runtime::ExecBackend`] — built in-thread because the PJRT
+//! backend's handles are `!Send`):
 //!
 //! ```text
 //! clients ──mpsc──▶ executor thread
 //!                     ├─ router: group pending requests by model variant
-//!!                    ├─ batcher: flush on max_batch or max_wait deadline
-//!                     ├─ PJRT execute (XLA/Pallas rollout artifact)
-//!                     └─ integer readout + respond via per-request channel
+//!                     ├─ batcher: flush on max_batch or max_wait deadline
+//!                     ├─ backend.execute_batch
+//!                     │    ├─ native: lane-batched bit-exact QuantEsn
+//!                     │    │          rollouts (SAMPLE_LANES-wide, optional
+//!                     │    │          intra-batch workers) — the default
+//!                     │    └─ pjrt:   AOT XLA/Pallas rollout artifact
+//!                     └─ respond via per-request channel
 //! ```
 //!
-//! Python never appears on this path — the artifacts were compiled by
-//! `make artifacts` long before the first request.
+//! Variants are shared handles ([`VariantSpec`]/[`VariantRegistry`]): a DSE
+//! run's whole Pareto front hot-loads as routable variants without cloning
+//! weights (`DseResult::variant_registry`, `dse::pareto_variants`). The
+//! native backend serves classification ([`Prediction::Class`]) and per-step
+//! regression ([`Prediction::Values`]), so all three paper benchmarks are
+//! servable with no compiled artifacts present.
 
 mod batcher;
 mod metrics;
+mod registry;
 mod server;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Client, Prediction, Request, Response, ServeConfig, Server, VariantSpec};
+pub use registry::VariantRegistry;
+pub use server::{Client, Request, Response, ServeConfig, Server, VariantSpec};
+
+// Re-exported so serving call-sites need only this module.
+pub use crate::runtime::{BackendConfig, Prediction};

@@ -1,0 +1,88 @@
+//! Variant registry: a keyed store of deployable model variants backed by
+//! shared handles, so registering a whole DSE result set (or its Pareto
+//! front) never clones weight arrays. `rcx serve` and the integration tests
+//! consume [`VariantRegistry::specs`] directly.
+
+use std::sync::Arc;
+
+use crate::quant::QuantEsn;
+
+use super::server::VariantSpec;
+
+/// Keyed, insertion-ordered collection of serving variants.
+#[derive(Clone, Default)]
+pub struct VariantRegistry {
+    entries: Vec<VariantSpec>,
+}
+
+impl VariantRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a variant; returns its routing index.
+    pub fn insert(&mut self, key: impl Into<String>, model: Arc<QuantEsn>) -> usize {
+        let key = key.into();
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            self.entries[i].model = model;
+            i
+        } else {
+            self.entries.push(VariantSpec::shared(key, model));
+            self.entries.len() - 1
+        }
+    }
+
+    /// Shared model handle for a routing key.
+    pub fn get(&self, key: &str) -> Option<&Arc<QuantEsn>> {
+        self.entries.iter().find(|e| e.key == key).map(|e| &e.model)
+    }
+
+    /// Routing keys in index order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.key.as_str())
+    }
+
+    /// Specs for [`super::Server::start`] (cheap: clones handles, not models).
+    pub fn specs(&self) -> Vec<VariantSpec> {
+        self.entries.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    #[test]
+    fn insert_replace_and_lookup() {
+        let data = melborn_sized(1, 20, 10);
+        let res = Reservoir::init(ReservoirSpec::paper(10, 1, 30, 0.9, 1.0, 1));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
+        let q8 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(8)));
+
+        let mut reg = VariantRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.insert("q4", Arc::clone(&q4)), 0);
+        assert_eq!(reg.insert("q8", Arc::clone(&q8)), 1);
+        // Replacement keeps the routing index.
+        assert_eq!(reg.insert("q4", Arc::clone(&q8)), 0);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get("q4").unwrap().q, 8);
+        assert!(reg.get("missing").is_none());
+        assert_eq!(reg.keys().collect::<Vec<_>>(), vec!["q4", "q8"]);
+        // Specs share, not clone: same allocation behind both handles.
+        let specs = reg.specs();
+        assert!(Arc::ptr_eq(&specs[1].model, &q8));
+    }
+}

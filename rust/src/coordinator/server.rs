@@ -1,8 +1,7 @@
-//! The serving loop: router over model variants, dynamic batching, PJRT
-//! execution, integer readout, response delivery.
+//! The serving loop: router over model variants, dynamic batching, execution
+//! through the pluggable [`ExecBackend`], response delivery.
 
 use std::collections::VecDeque;
-use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -12,25 +11,36 @@ use anyhow::{Context, Result};
 
 use crate::data::TimeSeries;
 use crate::quant::QuantEsn;
-use crate::runtime::{pooled_states, Runtime};
+use crate::runtime::{BackendConfig, ExecBackend, Prediction};
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 
-/// A deployable model variant (one point of the DSE space).
+/// A deployable model variant (one point of the DSE space). The model is a
+/// shared handle — a [`super::VariantRegistry`] (or a whole DSE Pareto
+/// front) hands out specs without cloning weights.
 #[derive(Clone)]
 pub struct VariantSpec {
     /// Routing key, e.g. `"q4_p15"`.
     pub key: String,
-    pub model: QuantEsn,
+    pub model: Arc<QuantEsn>,
 }
 
-/// Server configuration.
-#[derive(Clone, Debug)]
+impl VariantSpec {
+    pub fn new(key: impl Into<String>, model: QuantEsn) -> Self {
+        Self { key: key.into(), model: Arc::new(model) }
+    }
+
+    /// Wrap an already-shared model handle.
+    pub fn shared(key: impl Into<String>, model: Arc<QuantEsn>) -> Self {
+        Self { key: key.into(), model }
+    }
+}
+
+/// Server configuration: which engine to execute on, and how to batch.
+#[derive(Clone, Debug, Default)]
 pub struct ServeConfig {
-    pub artifact_dir: PathBuf,
-    /// Rollout artifact name (e.g. `"melborn_pooled"`).
-    pub artifact: String,
+    pub backend: BackendConfig,
     pub batcher: BatcherConfig,
 }
 
@@ -40,12 +50,6 @@ pub struct Request {
     pub series: TimeSeries,
     pub submitted: Instant,
     pub respond: Sender<Response>,
-}
-
-/// Model prediction.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Prediction {
-    Class(usize),
 }
 
 /// One inference response.
@@ -61,7 +65,7 @@ enum Control {
     Shutdown,
 }
 
-/// Running server: executor thread owning the PJRT runtime.
+/// Running server: executor thread owning the execution backend.
 pub struct Server {
     tx: Sender<Control>,
     metrics: Arc<Metrics>,
@@ -70,8 +74,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the executor thread: compiles the artifact inside the thread
-    /// (PJRT handles are `!Send`) and serves until shutdown.
+    /// Start the executor thread. The backend is built *inside* the thread
+    /// (PJRT handles are `!Send`); startup failures (missing artifacts,
+    /// compile errors) propagate out of this call.
     pub fn start(cfg: ServeConfig, variants: Vec<VariantSpec>) -> Result<Server> {
         anyhow::ensure!(!variants.is_empty(), "no variants to serve");
         let metrics = Arc::new(Metrics::default());
@@ -98,6 +103,11 @@ impl Server {
     /// Routing index of a variant key.
     pub fn variant_index(&self, key: &str) -> Option<usize> {
         self.variants.iter().position(|k| k == key)
+    }
+
+    /// Routing keys in variant-index order.
+    pub fn variant_keys(&self) -> &[String] {
+        &self.variants
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -144,14 +154,14 @@ impl Client {
         Ok(resp_rx)
     }
 
-    /// Submit and block for the response.
-    pub fn classify(&self, variant: usize, series: TimeSeries) -> Result<Response> {
+    /// Submit and block for the response (classification or regression).
+    pub fn infer(&self, variant: usize, series: TimeSeries) -> Result<Response> {
         let rx = self.submit(variant, series)?;
         rx.recv().context("server dropped the request")
     }
 }
 
-/// Executor: owns the runtime; routes, batches, executes, responds.
+/// Executor: owns the backend; routes, batches, executes, responds.
 fn executor(
     cfg: ServeConfig,
     variants: Vec<VariantSpec>,
@@ -159,18 +169,17 @@ fn executor(
     metrics: Arc<Metrics>,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
-    let rt = match Runtime::cpu_subset(&cfg.artifact_dir, &[cfg.artifact.as_str()]) {
-        Ok(rt) => {
+    let mut backend = match cfg.backend.build() {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            rt
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return Ok(());
         }
     };
-    let art_batch = rt.artifact(&cfg.artifact)?.batch;
-    let max_batch = cfg.batcher.max_batch.min(art_batch);
+    let max_batch = cfg.batcher.max_batch.min(backend.max_batch());
     let bcfg = BatcherConfig { max_batch, ..cfg.batcher };
 
     let nvar = variants.len();
@@ -194,18 +203,11 @@ fn executor(
         };
         match rx.recv_timeout(timeout) {
             Ok(Control::Req(req)) => {
-                let v = req.variant;
-                anyhow::ensure!(v < nvar, "variant index {v} out of range");
-                batchers[v].push(Instant::now());
-                queues[v].push_back(req);
+                ingest(req, &mut queues, &mut batchers);
                 // Drain whatever else is already queued without blocking.
                 while let Ok(c) = rx.try_recv() {
                     match c {
-                        Control::Req(r) => {
-                            let v = r.variant;
-                            batchers[v].push(Instant::now());
-                            queues[v].push_back(r);
-                        }
+                        Control::Req(r) => ingest(r, &mut queues, &mut batchers),
                         Control::Shutdown => running = false,
                     }
                 }
@@ -221,17 +223,28 @@ fn executor(
             while let BatchDecision::Flush(n) = batchers[v].decide(now) {
                 let batch: Vec<Request> = queues[v].drain(..n).collect();
                 batchers[v].flushed(n, now);
-                run_batch(&rt, &cfg.artifact, &variants[v].model, batch, &metrics)?;
+                run_batch(backend.as_mut(), &variants[v].model, batch, &metrics)?;
             }
         }
     }
     Ok(())
 }
 
-/// Execute one batch through PJRT and deliver responses.
+/// Enqueue one request. A request routed at a nonexistent variant is
+/// rejected alone — dropping its response sender fails that caller's recv
+/// with "server dropped the request" — rather than killing the executor and
+/// with it every other client's in-flight work.
+fn ingest(req: Request, queues: &mut [VecDeque<Request>], batchers: &mut [Batcher]) {
+    let v = req.variant;
+    if v < queues.len() {
+        batchers[v].push(Instant::now());
+        queues[v].push_back(req);
+    }
+}
+
+/// Execute one batch through the backend and deliver responses.
 fn run_batch(
-    rt: &Runtime,
-    artifact: &str,
+    backend: &mut dyn ExecBackend,
     model: &QuantEsn,
     batch: Vec<Request>,
     metrics: &Metrics,
@@ -239,18 +252,13 @@ fn run_batch(
     let n = batch.len();
     metrics.record_batch(n);
     let refs: Vec<&TimeSeries> = batch.iter().map(|r| &r.series).collect();
-    let pooled = pooled_states(rt, artifact, model, &refs)?;
+    let preds = backend.execute_batch(model, &refs)?;
+    anyhow::ensure!(preds.len() == n, "backend returned {} predictions for {n}", preds.len());
     let done = Instant::now();
-    for (req, p) in batch.into_iter().zip(pooled) {
-        let t = req.series.inputs.rows() as f64;
-        let cls = model.classify_from_pooled(&p, t);
+    for (req, prediction) in batch.into_iter().zip(preds) {
         let latency = done.duration_since(req.submitted);
         metrics.record_request(latency);
-        let _ = req.respond.send(Response {
-            prediction: Prediction::Class(cls),
-            latency,
-            batch_size: n,
-        });
+        let _ = req.respond.send(Response { prediction, latency, batch_size: n });
     }
     Ok(())
 }

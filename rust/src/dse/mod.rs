@@ -6,12 +6,14 @@
 //! (sensitivity by default, any [`Method`] for the Fig. 3 comparison) → for
 //! each `p ∈ P`: prune the lowest `p%`, measure `Perf^{(p,q)}`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::VariantRegistry;
 use crate::data::{Dataset, TimeSeries};
 use crate::esn::{EsnModel, Perf};
 use crate::hw::{self, HwReport, Topology};
-use crate::pruning::{prune_with_compensation, Engine, Method, SensitivityConfig, SensitivityPruner};
+use crate::pruning::{prune_with_compensation, Method, SensitivityPruner};
 use crate::quant::{QuantEsn, QuantInputCache, QuantSpec};
 
 /// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
@@ -39,6 +41,10 @@ impl Default for DseRequest {
 }
 
 /// One accelerator configuration `s(q, p)` (Algorithm 1 line 12).
+///
+/// The model is a shared handle: a DSE result doubles as a variant registry
+/// for the serving stack, and cloning a config (e.g. into `realize_hw`
+/// tuples or `VariantSpec`s) must not copy weight arrays.
 #[derive(Clone, Debug)]
 pub struct AccelConfig {
     pub q: u8,
@@ -48,7 +54,14 @@ pub struct AccelConfig {
     pub perf: Perf,
     /// Baseline (unpruned) performance at this q — `Perf^base(q)`.
     pub perf_base: Perf,
-    pub model: QuantEsn,
+    pub model: Arc<QuantEsn>,
+}
+
+impl AccelConfig {
+    /// Serving routing key for this configuration, e.g. `"q4_p15"`.
+    pub fn variant_key(&self) -> String {
+        format!("q{}_p{:.0}", self.q, self.p)
+    }
 }
 
 /// DSE result set plus bookkeeping.
@@ -56,6 +69,29 @@ pub struct AccelConfig {
 pub struct DseResult {
     pub configs: Vec<AccelConfig>,
     pub scoring_seconds: f64,
+}
+
+impl DseResult {
+    /// Every explored configuration as a routable serving variant (shared
+    /// handles — no weight copies). Keys follow [`AccelConfig::variant_key`].
+    pub fn variant_registry(&self) -> VariantRegistry {
+        let mut reg = VariantRegistry::new();
+        for c in &self.configs {
+            reg.insert(c.variant_key(), Arc::clone(&c.model));
+        }
+        reg
+    }
+}
+
+/// The hardware Pareto front of a realized DSE result as a variant registry —
+/// what `rcx serve --variants pareto` hot-loads.
+pub fn pareto_variants(results: &[(AccelConfig, HwReport)]) -> VariantRegistry {
+    let mut reg = VariantRegistry::new();
+    for i in hw::pareto_configs(results) {
+        let c = &results[i].0;
+        reg.insert(c.variant_key(), Arc::clone(&c.model));
+    }
+    reg
 }
 
 /// Run Algorithm 1. `model` is the trained float model from stage 1.
@@ -69,8 +105,10 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
     // per q-level and rebuilds on the (q > 8) off-grid case.
     let mut input_cache: Option<QuantInputCache> = None;
     for &q in &req.q_levels {
-        // Lines 3–4: quantize, baseline performance.
-        let qmodel = QuantEsn::from_model(model, data, QuantSpec::bits(q));
+        // Lines 3–4: quantize, baseline performance. Shared handle from the
+        // start: the unpruned baseline enters the result set without copying
+        // its weight arrays.
+        let qmodel = Arc::new(QuantEsn::from_model(model, data, QuantSpec::bits(q)));
         let perf_base = qmodel.evaluate(data);
         configs.push(AccelConfig {
             q,
@@ -78,7 +116,7 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             method: req.method,
             perf: perf_base,
             perf_base,
-            model: qmodel.clone(),
+            model: Arc::clone(&qmodel),
         });
         // Lines 5–8: score all weights.
         let t0 = Instant::now();
@@ -86,16 +124,11 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             if !input_cache.as_ref().is_some_and(|c| c.matches(&qmodel)) {
                 input_cache = Some(QuantInputCache::build(&qmodel, calib));
             }
-            // Same knobs as Method::pruner (the Default impl) with the engine
-            // pinned to the batched path explicitly — this branch adds the
-            // cache injection and the DSE's engine choice. Bit-identical to
-            // the sequential/dense oracles, so the produced configuration set
-            // is unchanged; only the sweep wall-clock differs.
-            SensitivityPruner::new(SensitivityConfig {
-                engine: Engine::IncrementalBatched,
-                ..Default::default()
-            })
-            .scores_with_inputs(&qmodel, calib, input_cache.as_ref())
+            // Default knobs (batched incremental engine) plus the DSE's
+            // q-level-shared input-cache injection. Bit-identical to the
+            // sequential/dense oracles, so the produced configuration set is
+            // unchanged; only the sweep wall-clock differs.
+            SensitivityPruner::default().scores_with_inputs(&qmodel, calib, input_cache.as_ref())
         } else {
             req.method.pruner(req.seed).scores(&qmodel, calib)
         };
@@ -103,7 +136,7 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
         // Lines 9–13: prune at each rate (with synthesis-time readout
         // constant refolding), measure.
         for &p in &req.pruning_rates {
-            let pruned = prune_with_compensation(&qmodel, &scores, p, calib);
+            let pruned = Arc::new(prune_with_compensation(&qmodel, &scores, p, calib));
             let perf = pruned.evaluate(data);
             configs.push(AccelConfig { q, p, method: req.method, perf, perf_base, model: pruned });
         }
@@ -188,5 +221,34 @@ mod tests {
         let (_, data) = setup();
         let c = calibration_split(&data, 10);
         assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn dse_results_hot_load_as_serving_variants() {
+        let (m, data) = setup();
+        let req = DseRequest {
+            q_levels: vec![4, 6],
+            pruning_rates: vec![50.0],
+            method: Method::Random,
+            max_calib: 20,
+            seed: 3,
+        };
+        let r = explore(&m, &data, &req);
+        let reg = r.variant_registry();
+        assert_eq!(reg.len(), r.configs.len());
+        // Registry entries share the exact model allocations — no copies.
+        let q4 = reg.get("q4_p0").expect("unpruned q4 variant registered");
+        assert!(Arc::ptr_eq(q4, &r.configs[0].model));
+        assert_eq!(reg.get("q4_p50").unwrap().q, 4);
+
+        // Pareto subset: a registry over the front only, still shared.
+        let hw = realize_hw(&r, &data);
+        let front = hw::pareto_configs(&hw);
+        let preg = pareto_variants(&hw);
+        assert_eq!(preg.len(), front.len());
+        assert!(!preg.is_empty());
+        for (key, &i) in preg.keys().zip(front.iter()) {
+            assert_eq!(key, hw[i].0.variant_key());
+        }
     }
 }

@@ -5,7 +5,10 @@
 //!   dse       stages 2–3: Algorithm 1 over Q × P (any pruning method)
 //!   synth     stage 4: hardware-realize one configuration (+ optional RTL)
 //!   table1 / table2 / table3 / fig3 / fig4   reproduce the paper's artifacts
-//!   serve     run the batching inference coordinator on a compiled artifact
+//!   serve     run the batching inference coordinator — `--backend native`
+//!             (default: lane-batched bit-exact CPU engine, all three
+//!             benchmarks, no artifacts needed) or `--backend pjrt`
+//!             (compiled XLA/Pallas artifacts, classification)
 //!
 //! `--full` switches from reduced (seconds-scale) to paper-sized workloads.
 
@@ -14,9 +17,12 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use rcx::config::{BenchmarkConfig, PAPER_P, PAPER_Q, TABLE_P};
-use rcx::coordinator::{BatcherConfig, ServeConfig, Server, VariantSpec};
-use rcx::data::{save_csv, Benchmark};
-use rcx::dse::{explore, realize_hw, DseRequest};
+use rcx::coordinator::{
+    BackendConfig, BatcherConfig, Prediction, ServeConfig, Server, VariantRegistry,
+};
+use rcx::data::{save_csv, Benchmark, Task};
+use rcx::dse::{explore, pareto_variants, realize_hw, DseRequest};
+use rcx::runtime::NativeConfig;
 use rcx::esn::ReservoirSpec;
 use rcx::hyper::{random_search, SearchSpace};
 use rcx::hw::synthesize;
@@ -104,7 +110,11 @@ fn print_help() {
          \u{20}  synth     [--q Q] [--p P] [--rtl F]   hardware-realize one config\n\
          \u{20}  table1 | table2 | table3              reproduce paper tables\n\
          \u{20}  fig3 | fig4                           reproduce paper figures (CSV)\n\
-         \u{20}  serve     [--q Q] [--requests N]      batching inference coordinator"
+         \u{20}  serve     [--backend native|pjrt] [--q 4,8 | --variants pareto]\n\
+         \u{20}            [--requests N] [--max-batch B] [--workers W]\n\
+         \u{20}            batching inference coordinator; the native backend\n\
+         \u{20}            serves every benchmark bit-exactly with no artifacts,\n\
+         \u{20}            `--variants pareto` hot-loads a DSE Pareto front"
     );
 }
 
@@ -273,45 +283,121 @@ fn cmd_fig4(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let b = args.benchmark()?;
-    if b == Benchmark::Henon {
-        bail!("serve demo targets the classification artifacts (melborn/pen)");
-    }
-    let q: u8 = args.flag_or("q", 4)?;
     let n_requests: usize = args.flag_or("requests", 512)?;
     let cfg = BenchmarkConfig::paper(b, 0);
     let (model, data) = cfg.train(1, !args.full());
-    let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(q));
+
+    // Variants: either the hardware Pareto front of a DSE run
+    // (`--variants pareto`) hot-loaded as routable models, or one variant
+    // per requested bit-width (`--q 4,8`; default q=4).
+    let registry: VariantRegistry = match args.flag("variants") {
+        Some("pareto") => {
+            if args.flag("q").is_some() {
+                bail!("--variants pareto serves the whole front; it conflicts with --q");
+            }
+            println!("running DSE to hot-load the hardware Pareto front...");
+            let req = DseRequest {
+                method: Method::Sensitivity,
+                max_calib: args.flag_or("calib", 96)?,
+                ..Default::default()
+            };
+            let r = explore(&model, &data, &req);
+            let hw = realize_hw(&r, &data);
+            pareto_variants(&hw)
+        }
+        Some(other) => bail!("--variants: expected `pareto`, got {other:?}"),
+        None => {
+            let mut reg = VariantRegistry::new();
+            for q in args
+                .flag("q")
+                .unwrap_or("4")
+                .split(',')
+                .map(|x| x.trim().parse::<u8>().context("bad --q"))
+            {
+                let q = q?;
+                let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(q));
+                reg.insert(format!("q{q}"), std::sync::Arc::new(qm));
+            }
+            reg
+        }
+    };
+
+    // One --max-batch knob feeds both the backend cap and the batcher cap
+    // (the executor serves at the min of the two).
+    let max_batch: usize = args.flag_or("max-batch", 64)?;
+    let backend = match args.flag("backend").unwrap_or("native") {
+        "native" => BackendConfig::Native(NativeConfig {
+            max_batch,
+            workers: args.flag_or("workers", 1)?,
+        }),
+        "pjrt" => {
+            if data.task == Task::Regression {
+                bail!("the PJRT backend serves classification artifacts; use --backend native");
+            }
+            BackendConfig::Pjrt {
+                artifact_dir: args.flag("artifacts").unwrap_or("artifacts").into(),
+                artifact: cfg.artifact.to_string(),
+            }
+        }
+        other => bail!("--backend: expected native|pjrt, got {other:?}"),
+    };
+    let backend_name = backend.name();
+
     let server = Server::start(
-        ServeConfig {
-            artifact_dir: args.flag("artifacts").unwrap_or("artifacts").into(),
-            artifact: cfg.artifact.to_string(),
-            batcher: BatcherConfig::default(),
-        },
-        vec![VariantSpec { key: format!("q{q}"), model: qm }],
+        ServeConfig { backend, batcher: BatcherConfig { max_batch, ..Default::default() } },
+        registry.specs(),
     )?;
     let client = server.client();
-    println!("serving {n_requests} requests against {} (q={q})...", cfg.artifact);
+    let keys: Vec<String> = server.variant_keys().to_vec();
+    println!(
+        "serving {n_requests} requests on the {backend_name} backend ({}, variants: {})...",
+        b.name(),
+        keys.join(",")
+    );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..n_requests {
         let s = &data.test[i % data.test.len()];
-        pending.push(client.submit(0, s.clone())?);
+        // Round-robin the variants so multi-variant routing is exercised.
+        pending.push(client.submit(i % keys.len(), s.clone())?);
     }
+    // Score classification by accuracy, regression by RMSE.
     let mut correct = 0usize;
+    let (mut se, mut count) = (0.0f64, 0usize);
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv()?;
-        let rcx::coordinator::Prediction::Class(c) = resp.prediction;
-        if Some(c) == data.test[i % data.test.len()].label {
-            correct += 1;
+        let sample = &data.test[i % data.test.len()];
+        match rx.recv()?.prediction {
+            Prediction::Class(c) => {
+                if Some(c) == sample.label {
+                    correct += 1;
+                }
+            }
+            Prediction::Values(rows) => {
+                let targets = sample.targets.as_ref().context("regression sample lacks targets")?;
+                let washout = sample.inputs.rows() - rows.len();
+                for (k, row) in rows.iter().enumerate() {
+                    for (d, v) in row.iter().enumerate() {
+                        let e = v - targets[(washout + k, d)];
+                        se += e * e;
+                        count += 1;
+                    }
+                }
+            }
         }
     }
     let wall = t0.elapsed();
     let m = server.metrics();
+    // Sanity gates (the CI serve-smoke step relies on a nonzero exit here).
+    anyhow::ensure!(m.requests == n_requests as u64, "lost responses: {}", m.requests);
+    anyhow::ensure!(m.p99_us >= m.p50_us && m.p99_us > 0, "degenerate latency percentiles");
+    let quality = match data.task {
+        Task::Classification => format!("acc {:.3}", correct as f64 / n_requests as f64),
+        Task::Regression => format!("rmse {:.4}", (se / count.max(1) as f64).sqrt()),
+    };
     println!(
-        "done in {:.3}s: {:.0} req/s, acc {:.3}, mean batch {:.1}, p50 {} us, p99 {} us",
+        "done in {:.3}s: {:.0} req/s, {quality}, mean batch {:.1}, p50 {} us, p99 {} us",
         wall.as_secs_f64(),
         n_requests as f64 / wall.as_secs_f64(),
-        correct as f64 / n_requests as f64,
         m.mean_batch,
         m.p50_us,
         m.p99_us

@@ -11,8 +11,9 @@
 //! evaluations), so the scorer fans the work out over a thread pool.
 //! By default it runs the **batched incremental engine**
 //! ([`Engine::IncrementalBatched`]): candidate flips are locality-sorted by
-//! their support row span, greedily packed into lane batches with pairwise
-//! disjoint 1-step supports ([`CalibPlan::pack_batches`]), and each batch is
+//! their support row span, packed into lane batches — full same-support
+//! lanes first, disjoint first-fit over the remainders
+//! ([`CalibPlan::pack_batches`]) — and each batch is
 //! evaluated in one pass over the shared immutable plan
 //! ([`CalibPlan::eval_flips_batched`]). The sequential incremental path
 //! ([`Engine::Incremental`], one [`CalibPlan::eval_flip`] per flip) and the
@@ -32,10 +33,10 @@ use super::Pruner;
 /// Which evaluation engine backs the Eq. 4 sweep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// Batched multi-flip scoring: support-disjoint flips are greedily packed
-    /// into [`crate::quant::BATCH_LANES`]-wide batches that share one pass
-    /// over the cached plan, with the frontier scatter vectorized over batch
-    /// lanes. Bit-identical to both oracles below (asserted in
+    /// Batched multi-flip scoring: flips are packed into
+    /// [`crate::quant::BATCH_LANES`]-wide batches (full same-support lanes
+    /// first, disjoint first-fit remainders) that share one pass over the
+    /// cached plan, with the frontier scatter vectorized over batch lanes. Bit-identical to both oracles below (asserted in
     /// `tests/incremental_equivalence.rs` and at bench time); measured in the
     /// perf_hotpaths L3-b′/L3-c sections (EXPERIMENTS.md §Perf).
     #[default]
@@ -57,13 +58,15 @@ pub struct SensitivityConfig {
     /// Cap on calibration samples (classification) — keeps the
     /// `n_weights × q` evaluation grid tractable; 0 = use all.
     pub max_calib: usize,
-    /// Evaluation engine (incremental by default; dense is the oracle).
+    /// Evaluation engine: [`Engine::IncrementalBatched`] by default (the
+    /// module default, so `Method::Sensitivity.pruner()` users get the fast
+    /// path); the sequential and dense oracles remain selectable.
     pub engine: Engine,
 }
 
 impl Default for SensitivityConfig {
     fn default() -> Self {
-        Self { parallelism: 0, max_calib: 256, engine: Engine::Incremental }
+        Self { parallelism: 0, max_calib: 256, engine: Engine::default() }
     }
 }
 
@@ -132,8 +135,9 @@ impl SensitivityPruner {
     /// Batched sweep: enumerate the non-no-op `(slot, bit)` candidates,
     /// locality-sort them by the support row span (the old round-robin slot
     /// chunking handed workers row-interleaved candidates, so batch packing
-    /// never saw neighbouring rows together), greedily pack support-disjoint
-    /// candidates into lane batches, and let workers pull *whole batches*
+    /// never saw neighbouring rows together), pack them into lane batches
+    /// (same-support lanes first, then disjoint first-fit — see
+    /// [`CalibPlan::pack_batches`]), and let workers pull *whole batches*
     /// through one shared plan.
     ///
     /// Scores are folded per slot in `(slot, bit)` order — the exact f64
@@ -354,6 +358,15 @@ mod tests {
         let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 5));
         let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
         (QuantEsn::from_model(&m, &data, QuantSpec::bits(4)), data)
+    }
+
+    #[test]
+    fn config_default_engine_is_the_module_default() {
+        // Guards the documented invariant: `SensitivityConfig::default()`
+        // (what `Method::Sensitivity.pruner()` uses) must track the
+        // `#[default]` engine — the batched fast path.
+        assert_eq!(SensitivityConfig::default().engine, Engine::default());
+        assert_eq!(Engine::default(), Engine::IncrementalBatched);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Lane-batched native inference: run up to [`SAMPLE_LANES`] *samples*
+//! through the streamlined integer step in one pass, the way
+//! [`CalibPlan::eval_flips_batched`](super::CalibPlan::eval_flips_batched)
+//! lane-batches *flips*.
+//!
+//! States are stored lane-major (`s[j * SAMPLE_LANES + l]` is neuron `j` of
+//! sample lane `l`), so the per-neuron accumulator loops run across the lane
+//! dimension — contiguous 8-wide i64 strips the compiler can vectorize —
+//! while each lane's arithmetic stays the exact integer sequence of
+//! [`QuantEsn::step_int`]. Per-lane results are therefore **bit-identical**
+//! to the scalar [`QuantEsn::classify`] / [`QuantEsn::predict`] paths (no
+//! float reassociation: lanes never mix). Ragged batches are handled with a
+//! per-lane active mask: a lane retires at its own sequence end, its pooled
+//! feature / emitted predictions frozen at that point.
+//!
+//! This kernel is the compute core of the serving stack's
+//! [`NativeBackend`](crate::runtime::NativeBackend).
+
+use crate::data::TimeSeries;
+use crate::esn::Features;
+
+use super::QuantEsn;
+
+/// Samples processed per lane-batched rollout pass. Mirrors
+/// [`super::BATCH_LANES`] (8 × i64 = two AVX2 vectors per strip).
+pub const SAMPLE_LANES: usize = 8;
+
+/// Reusable lane-major scratch for [`QuantEsn::classify_batch`] /
+/// [`QuantEsn::predict_batch`]. Allocate once per worker, reuse across
+/// batches of the same model geometry.
+pub struct LaneScratch {
+    n: usize,
+    input_dim: usize,
+    /// Lane-major state double buffer (`n × SAMPLE_LANES`).
+    s_prev: Vec<i64>,
+    s_next: Vec<i64>,
+    /// Lane-major quantized inputs for the current step (`input_dim × SAMPLE_LANES`).
+    u_int: Vec<i64>,
+    /// Lane-major pooled feature accumulator (`n × SAMPLE_LANES`).
+    pooled: Vec<i64>,
+    /// Gather buffer for one lane's state column (`n`).
+    col: Vec<i64>,
+}
+
+impl LaneScratch {
+    pub fn new(n: usize, input_dim: usize) -> Self {
+        Self {
+            n,
+            input_dim,
+            s_prev: vec![0; n * SAMPLE_LANES],
+            s_next: vec![0; n * SAMPLE_LANES],
+            u_int: vec![0; input_dim * SAMPLE_LANES],
+            pooled: vec![0; n * SAMPLE_LANES],
+            col: vec![0; n],
+        }
+    }
+
+    pub fn for_model(model: &QuantEsn) -> Self {
+        Self::new(model.n, model.input_dim)
+    }
+
+    fn reset(&mut self) {
+        self.s_prev.fill(0);
+        self.s_next.fill(0);
+        self.u_int.fill(0);
+        self.pooled.fill(0);
+    }
+}
+
+impl QuantEsn {
+    /// One lane-batched integer reservoir step: for every neuron `i`, compute
+    /// the per-lane pre-activation `m_in·(Σ_k Wq_in[i,k]·u[k,l]) +
+    /// (Σ_j Wq_r[i,j]·s_prev[j,l]) << F` and apply the threshold ladder —
+    /// writing only lanes still inside their sequence. Each lane replays
+    /// [`QuantEsn::step_int`] exactly (integer ops, no cross-lane mixing).
+    /// The accumulator loops run over the first `width` lanes only, so a
+    /// partial chunk (deadline flush of 2–7 requests) pays for the lanes it
+    /// occupies, not all [`SAMPLE_LANES`].
+    fn step_lanes(
+        &self,
+        width: usize,
+        u_int: &[i64],
+        s_prev: &[i64],
+        s_next: &mut [i64],
+        active: &[bool; SAMPLE_LANES],
+    ) {
+        const L: usize = SAMPLE_LANES;
+        debug_assert!(width <= L);
+        let f = self.f_bits;
+        for i in 0..self.n {
+            // Input projection, lane-wide.
+            let mut acc_in = [0i64; L];
+            let wrow = &self.w_in[i * self.input_dim..(i + 1) * self.input_dim];
+            for k in 0..self.input_dim {
+                let w = wrow[k];
+                let urow = &u_int[k * L..(k + 1) * L];
+                for l in 0..width {
+                    acc_in[l] += w * urow[l];
+                }
+            }
+            // Recurrence over the CSR row, lane-wide.
+            let mut acc_r = [0i64; L];
+            for k in self.w_r_indptr[i]..self.w_r_indptr[i + 1] {
+                let w = self.w_r_values[k];
+                let srow = &s_prev[self.w_r_indices[k] * L..self.w_r_indices[k] * L + L];
+                for l in 0..width {
+                    acc_r[l] += w * srow[l];
+                }
+            }
+            let out = &mut s_next[i * L..(i + 1) * L];
+            for l in 0..width {
+                if active[l] {
+                    out[l] = self.ladder.apply(self.m_in * acc_in[l] + (acc_r[l] << f));
+                }
+            }
+        }
+    }
+
+    /// Run one chunk of ≤ [`SAMPLE_LANES`] samples. When `emit` is present it
+    /// is called per (step, lane) with that lane's freshly written state
+    /// column gathered into `sc.col` — after the per-feature pooled
+    /// accumulation has run. Pass `None` (classification) to skip the
+    /// per-step column gathers entirely; only `sc.pooled` is produced.
+    fn rollout_lanes(
+        &self,
+        chunk: &[&TimeSeries],
+        sc: &mut LaneScratch,
+        mut emit: Option<&mut dyn FnMut(usize, usize, &[i64])>,
+    ) {
+        const L: usize = SAMPLE_LANES;
+        assert!(chunk.len() <= L, "chunk wider than SAMPLE_LANES");
+        assert_eq!((sc.n, sc.input_dim), (self.n, self.input_dim), "scratch geometry mismatch");
+        sc.reset();
+        let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
+        let mut active = [false; L];
+        for t in 0..t_max {
+            for (l, s) in chunk.iter().enumerate() {
+                active[l] = t < s.inputs.rows();
+                if active[l] {
+                    let urow = s.inputs.row(t);
+                    for k in 0..self.input_dim {
+                        sc.u_int[k * L + l] = self.qz_u.quantize(urow[k]);
+                    }
+                }
+            }
+            self.step_lanes(chunk.len(), &sc.u_int, &sc.s_prev, &mut sc.s_next, &active);
+            match self.features {
+                Features::MeanState => {
+                    for j in 0..self.n {
+                        let srow = &sc.s_next[j * L..(j + 1) * L];
+                        let prow = &mut sc.pooled[j * L..(j + 1) * L];
+                        for l in 0..chunk.len() {
+                            if active[l] {
+                                prow[l] += srow[l];
+                            }
+                        }
+                    }
+                }
+                Features::LastState => {
+                    for (l, s) in chunk.iter().enumerate() {
+                        if t + 1 == s.inputs.rows() {
+                            for j in 0..self.n {
+                                sc.pooled[j * L + l] = sc.s_next[j * L + l];
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(emit) = emit.as_mut() {
+                for l in 0..chunk.len() {
+                    if active[l] {
+                        for j in 0..self.n {
+                            sc.col[j] = sc.s_next[j * L + l];
+                        }
+                        emit(t, l, &sc.col);
+                    }
+                }
+            }
+            std::mem::swap(&mut sc.s_prev, &mut sc.s_next);
+        }
+    }
+
+    /// Lane-batched classification: one class index per sample, bit-identical
+    /// to calling [`QuantEsn::classify`] on each sample. Any batch length —
+    /// chunked internally into [`SAMPLE_LANES`]-wide passes.
+    pub fn classify_batch(&self, samples: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<usize> {
+        const L: usize = SAMPLE_LANES;
+        let mut out = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(L) {
+            // A lone sample (low-load flush, or the tail chunk) would pay
+            // all 8 lanes of MAC work for one lane of output — the scalar
+            // path is bit-identical and ~8× cheaper there.
+            if chunk.len() == 1 {
+                out.push(self.classify(chunk[0]));
+                continue;
+            }
+            self.rollout_lanes(chunk, sc, None);
+            for (l, s) in chunk.iter().enumerate() {
+                for j in 0..self.n {
+                    sc.col[j] = sc.pooled[j * L + l];
+                }
+                let t_factor = match self.features {
+                    Features::MeanState => s.inputs.rows() as f64,
+                    Features::LastState => 1.0,
+                };
+                out.push(self.classify_from_pooled(&sc.col, t_factor));
+            }
+        }
+        out
+    }
+
+    /// Lane-batched per-step regression: one `(T − washout) × out_dim`
+    /// prediction list per sample, bit-identical to [`QuantEsn::predict`].
+    pub fn predict_batch(
+        &self,
+        samples: &[&TimeSeries],
+        sc: &mut LaneScratch,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let mut out: Vec<Vec<Vec<f64>>> = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(SAMPLE_LANES) {
+            if chunk.len() == 1 {
+                out.push(self.predict(chunk[0]));
+                continue;
+            }
+            let base = out.len();
+            for s in chunk {
+                out.push(Vec::with_capacity(s.inputs.rows().saturating_sub(self.washout)));
+            }
+            let washout = self.washout;
+            // `emit` borrows `self` immutably alongside the rollout — fine.
+            let mut emit = |t: usize, l: usize, col: &[i64]| {
+                if t >= washout {
+                    out[base + l].push(self.readout_from_state(col));
+                }
+            };
+            self.rollout_lanes(chunk, sc, Some(&mut emit));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{henon_sized, melborn_sized, pen_sized};
+    use crate::data::Dataset;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::linalg::Mat;
+    use crate::quant::QuantSpec;
+
+    fn trained_cls(data: &Dataset, input_dim: usize, seed: u64) -> EsnModel {
+        let res = Reservoir::init(ReservoirSpec::paper(30, input_dim, 150, 0.9, 1.0, seed));
+        EsnModel::fit(res, data, ReadoutSpec { lambda: 0.1, ..Default::default() })
+    }
+
+    /// Truncate a sample to its first `t` steps (ragged-batch construction).
+    fn truncated(s: &TimeSeries, t: usize) -> TimeSeries {
+        let dim = s.inputs.cols();
+        let data: Vec<f64> = s.inputs.as_slice()[..t * dim].to_vec();
+        TimeSeries { inputs: Mat::from_vec(t, dim, data), label: s.label, targets: None }
+    }
+
+    #[test]
+    fn classify_batch_matches_scalar_all_benchmark_shapes() {
+        for (data, dim, seed) in
+            [(melborn_sized(1, 60, 40), 1, 11u64), (pen_sized(2, 60, 40), 2, 13)]
+        {
+            let m = trained_cls(&data, dim, seed);
+            for q in [4u8, 8] {
+                let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+                let mut sc = LaneScratch::for_model(&qm);
+                // Batch widths crossing the lane boundary, including 1.
+                for take in [1usize, 3, 8, 9, 17] {
+                    let refs: Vec<&TimeSeries> = data.test.iter().take(take).collect();
+                    let batched = qm.classify_batch(&refs, &mut sc);
+                    let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+                    assert_eq!(batched, scalar, "benchmark dim={dim} q={q} take={take}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn classify_batch_handles_ragged_lengths() {
+        let data = melborn_sized(3, 40, 30);
+        let m = trained_cls(&data, 1, 7);
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let mut sc = LaneScratch::for_model(&qm);
+        // Mixed sequence lengths within one lane pass.
+        let ragged: Vec<TimeSeries> = data
+            .test
+            .iter()
+            .take(9)
+            .enumerate()
+            .map(|(i, s)| truncated(s, 4 + 2 * (i % 8)))
+            .collect();
+        let refs: Vec<&TimeSeries> = ragged.iter().collect();
+        let batched = qm.classify_batch(&refs, &mut sc);
+        let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+        assert_eq!(batched, scalar);
+    }
+
+    #[test]
+    fn predict_batch_matches_scalar_including_ragged() {
+        let data = henon_sized(2, 300, 120);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+        let mut sc = LaneScratch::for_model(&qm);
+        let long = &data.test[0];
+        // Mixed lengths, some shorter than washout (empty prediction lists).
+        let ragged: Vec<TimeSeries> =
+            [120usize, 40, 10, 80, 33].iter().map(|&t| truncated(long, t)).collect();
+        let refs: Vec<&TimeSeries> = ragged.iter().collect();
+        let batched = qm.predict_batch(&refs, &mut sc);
+        for (s, got) in refs.iter().zip(&batched) {
+            let want = qm.predict(s);
+            assert_eq!(got, &want, "T={}", s.inputs.rows());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let data = melborn_sized(1, 20, 10);
+        let m = trained_cls(&data, 1, 1);
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let mut sc = LaneScratch::for_model(&qm);
+        assert!(qm.classify_batch(&[], &mut sc).is_empty());
+    }
+}

@@ -12,13 +12,18 @@
 //!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation
 //!   (single-flip and [`BATCH_LANES`]-wide batched multi-flip), bit-identical
 //!   to the dense flip → evaluate → restore loop.
+//! - [`batch`]: lane-batched native *inference* — [`SAMPLE_LANES`] samples
+//!   per pass through the streamlined step, bit-identical per lane to the
+//!   scalar paths; the kernel behind the serving stack's native backend.
 
+mod batch;
 mod bitflip;
 mod linear;
 mod qmodel;
 mod rollout;
 mod streamline;
 
+pub use batch::{LaneScratch, SAMPLE_LANES};
 pub use bitflip::flip_bit;
 pub use linear::Quantizer;
 pub use qmodel::{QuantEsn, QuantSpec};

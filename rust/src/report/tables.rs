@@ -187,7 +187,11 @@ mod tests {
             &data,
             crate::esn::ReadoutSpec { lambda: 0.1, ..Default::default() },
         );
-        let qm = crate::quant::QuantEsn::from_model(&m, &data, crate::quant::QuantSpec::bits(4));
+        let qm = std::sync::Arc::new(crate::quant::QuantEsn::from_model(
+            &m,
+            &data,
+            crate::quant::QuantSpec::bits(4),
+        ));
         let mk = |p: f64, perf: f64| AccelConfig {
             q: 4,
             p,

@@ -1,0 +1,97 @@
+//! The execution-backend abstraction the serving coordinator runs on.
+//!
+//! A backend turns `(model variant, batch of samples)` into one
+//! [`Prediction`] per sample. The coordinator is engine-agnostic: it owns a
+//! `Box<dyn ExecBackend>` built from a [`BackendConfig`] *inside* its
+//! executor thread (some backends — PJRT — hold `!Send` handles), and never
+//! touches artifact or kernel details itself.
+//!
+//! Two implementations ship:
+//! - [`NativeBackend`](super::NativeBackend): lane-batched bit-exact
+//!   [`QuantEsn`] rollouts on CPU — no artifacts, serves classification and
+//!   regression, the default.
+//! - [`PjrtBackend`](super::PjrtBackend): AOT HLO artifacts executed on the
+//!   PJRT client (classification geometries), kept behind the same trait.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::TimeSeries;
+use crate::quant::QuantEsn;
+
+use super::native::{NativeBackend, NativeConfig};
+use super::pjrt::PjrtBackend;
+
+/// One model output, matching the benchmark task.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prediction {
+    /// Classification: argmax class index.
+    Class(usize),
+    /// Per-step regression outputs (`washout..T`, `out_dim` values each) —
+    /// the exact shape of [`QuantEsn::predict`].
+    Values(Vec<Vec<f64>>),
+}
+
+/// An inference engine the coordinator can execute batches on.
+pub trait ExecBackend {
+    /// Short identifier for logs/metrics (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Largest batch one [`ExecBackend::execute_batch`] call accepts — the
+    /// dynamic batcher caps its flushes at this.
+    fn max_batch(&self) -> usize;
+
+    /// Run one model variant over a batch of samples; returns exactly one
+    /// prediction per sample, in order.
+    fn execute_batch(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+    ) -> Result<Vec<Prediction>>;
+}
+
+/// Serializable backend choice: built into a live [`ExecBackend`] inside the
+/// thread that will own it.
+#[derive(Clone, Debug)]
+pub enum BackendConfig {
+    /// Lane-batched bit-exact `QuantEsn` execution on CPU.
+    Native(NativeConfig),
+    /// AOT HLO artifact on the PJRT client.
+    Pjrt {
+        artifact_dir: PathBuf,
+        /// Artifact name (e.g. `"melborn_pooled"`).
+        artifact: String,
+    },
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig::Native(NativeConfig::default())
+    }
+}
+
+impl BackendConfig {
+    /// The default native backend.
+    pub fn native() -> Self {
+        Self::default()
+    }
+
+    /// Instantiate the backend (compiles artifacts for PJRT). Call from the
+    /// thread that will own it — PJRT handles are `!Send`.
+    pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendConfig::Native(cfg) => Ok(Box::new(NativeBackend::new(*cfg))),
+            BackendConfig::Pjrt { artifact_dir, artifact } => {
+                Ok(Box::new(PjrtBackend::start(artifact_dir, artifact)?))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendConfig::Native(_) => "native",
+            BackendConfig::Pjrt { .. } => "pjrt",
+        }
+    }
+}

@@ -1,14 +1,38 @@
-//! PJRT runtime bridge: load AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
-//! execute them from the coordinator hot path. Python never runs here.
+//! Execution backends for the serving coordinator.
+//!
+//! The coordinator is engine-agnostic: it executes batches through the
+//! [`ExecBackend`] trait and picks an engine via [`BackendConfig`]. Two
+//! backends ship:
+//!
+//! - **Native** ([`NativeBackend`]) — lane-batched, bit-exact [`QuantEsn`]
+//!   rollouts on CPU ([`crate::quant::SAMPLE_LANES`] samples per pass,
+//!   optional intra-batch workers). No artifacts, no Python, serves
+//!   classification *and* regression; the default, and what CI exercises.
+//! - **PJRT** ([`PjrtBackend`]) — AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py`, compiled once on the CPU PJRT client
+//!   ([`Runtime`]) and executed from the hot path ([`pooled_states`] /
+//!   [`rollout_states`]). Requires `make artifacts` and a real XLA runtime
+//!   (the vendored `xla` crate is an API stub that fails at compile time, so
+//!   this path degrades into a clean startup error — see ROADMAP.md).
+//!
+//! Both backends share the rust-side integer readout, so their predictions
+//! are directly comparable (and the native path is the golden reference).
+//!
+//! [`QuantEsn`]: crate::quant::QuantEsn
 
 mod artifacts;
+mod backend;
 mod client;
 mod exec;
+mod native;
+mod pjrt;
 
 pub use artifacts::{Artifact, Manifest};
+pub use backend::{BackendConfig, ExecBackend, Prediction};
 pub use client::Runtime;
 pub use exec::{pooled_states, rollout_states, RolloutInputs};
+pub use native::{NativeBackend, NativeConfig};
+pub use pjrt::PjrtBackend;
 
 /// Default artifact directory relative to the repo root.
 pub fn default_artifact_dir() -> std::path::PathBuf {

@@ -1,0 +1,190 @@
+//! The native execution backend: lane-batched, bit-exact [`QuantEsn`]
+//! rollouts on CPU — no compiled artifacts, no Python, no PJRT.
+//!
+//! Batches are split into [`SAMPLE_LANES`]-wide lane chunks
+//! ([`QuantEsn::classify_batch`] / [`QuantEsn::predict_batch`]); with
+//! `workers > 1` the chunks are distributed round-robin over scoped threads,
+//! each owning one reusable [`LaneScratch`]. Chunk results are placed by
+//! index, so output order — and every bit of every prediction — is
+//! independent of the worker count.
+
+use anyhow::{ensure, Result};
+
+use crate::data::{Task, TimeSeries};
+use crate::quant::{LaneScratch, QuantEsn, SAMPLE_LANES};
+
+use super::backend::{ExecBackend, Prediction};
+
+/// Native backend knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeConfig {
+    /// Largest batch accepted per execute call (the dynamic batcher's cap).
+    pub max_batch: usize,
+    /// Worker threads for intra-batch chunk parallelism (min 1). One worker
+    /// serves a lane chunk at a time; more overlap chunks of large batches.
+    pub workers: usize,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, workers: 1 }
+    }
+}
+
+/// Lane-batched CPU backend. See the module docs.
+pub struct NativeBackend {
+    cfg: NativeConfig,
+    /// One reusable scratch per worker; re-allocated when the served model
+    /// geometry changes (multi-variant serving swaps models per batch).
+    scratches: Vec<LaneScratch>,
+    geometry: (usize, usize),
+}
+
+impl NativeBackend {
+    pub fn new(cfg: NativeConfig) -> Self {
+        Self { cfg, scratches: Vec::new(), geometry: (0, 0) }
+    }
+
+    fn ensure_scratches(&mut self, model: &QuantEsn, workers: usize) {
+        let geom = (model.n, model.input_dim);
+        if self.geometry != geom {
+            self.scratches.clear();
+            self.geometry = geom;
+        }
+        while self.scratches.len() < workers {
+            self.scratches.push(LaneScratch::for_model(model));
+        }
+    }
+
+    /// Effective worker count for a batch of `chunks` lane chunks.
+    fn workers_for(&self, chunks: usize) -> usize {
+        self.cfg.workers.max(1).min(chunks.max(1))
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.cfg.max_batch
+    }
+
+    fn execute_batch(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+    ) -> Result<Vec<Prediction>> {
+        ensure!(samples.len() <= self.cfg.max_batch, "batch overflows native backend cap");
+        let n_chunks = samples.len().div_ceil(SAMPLE_LANES);
+        let workers = self.workers_for(n_chunks);
+        self.ensure_scratches(model, workers);
+        if workers <= 1 {
+            let sc = &mut self.scratches[0];
+            return Ok(predict_chunk(model, samples, sc));
+        }
+        // Round-robin the lane chunks over scoped workers; merge by index.
+        let chunks: Vec<&[&TimeSeries]> = samples.chunks(SAMPLE_LANES).collect();
+        let mut merged: Vec<Vec<Prediction>> = Vec::with_capacity(n_chunks);
+        merged.resize_with(n_chunks, Vec::new);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for (w, sc) in self.scratches.iter_mut().enumerate().take(workers) {
+                let chunks = &chunks;
+                handles.push(scope.spawn(move || {
+                    let mut out: Vec<(usize, Vec<Prediction>)> = Vec::new();
+                    for ci in (w..chunks.len()).step_by(workers) {
+                        out.push((ci, predict_chunk(model, chunks[ci], sc)));
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                for (ci, preds) in h.join().expect("native backend worker panicked") {
+                    merged[ci] = preds;
+                }
+            }
+        });
+        Ok(merged.into_iter().flatten().collect())
+    }
+}
+
+/// One lane chunk through the task-appropriate kernel.
+fn predict_chunk(model: &QuantEsn, chunk: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<Prediction> {
+    match model.task {
+        Task::Classification => {
+            model.classify_batch(chunk, sc).into_iter().map(Prediction::Class).collect()
+        }
+        Task::Regression => {
+            model.predict_batch(chunk, sc).into_iter().map(Prediction::Values).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{henon_sized, melborn_sized};
+    use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    fn melborn_model() -> (QuantEsn, crate::data::Dataset) {
+        let data = melborn_sized(1, 60, 40);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 150, 0.9, 1.0, 11));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(6)), data)
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let (qm, data) = melborn_model();
+        let refs: Vec<&_> = data.test.iter().collect();
+        let mut base: Option<Vec<Prediction>> = None;
+        for workers in [1usize, 2, 4] {
+            let mut b = NativeBackend::new(NativeConfig { max_batch: 64, workers });
+            let got = b.execute_batch(&qm, &refs).unwrap();
+            match &base {
+                None => base = Some(got),
+                Some(want) => assert_eq!(&got, want, "workers={workers}"),
+            }
+        }
+    }
+
+    #[test]
+    fn classification_matches_scalar_model() {
+        let (qm, data) = melborn_model();
+        let mut b = NativeBackend::new(NativeConfig { max_batch: 64, workers: 2 });
+        let refs: Vec<&_> = data.test.iter().take(20).collect();
+        let preds = b.execute_batch(&qm, &refs).unwrap();
+        for (s, p) in refs.iter().zip(&preds) {
+            assert_eq!(*p, Prediction::Class(qm.classify(s)));
+        }
+    }
+
+    #[test]
+    fn regression_matches_scalar_model() {
+        let data = henon_sized(2, 300, 120);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3));
+        let m = EsnModel::fit(
+            res,
+            &data,
+            ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
+        );
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+        let mut b = NativeBackend::new(NativeConfig::default());
+        let refs: Vec<&_> = data.test.iter().collect();
+        let preds = b.execute_batch(&qm, &refs).unwrap();
+        for (s, p) in refs.iter().zip(&preds) {
+            assert_eq!(*p, Prediction::Values(qm.predict(s)));
+        }
+    }
+
+    #[test]
+    fn batch_cap_is_enforced() {
+        let (qm, data) = melborn_model();
+        let mut b = NativeBackend::new(NativeConfig { max_batch: 4, workers: 1 });
+        let refs: Vec<&_> = data.test.iter().take(5).collect();
+        assert!(b.execute_batch(&qm, &refs).is_err());
+    }
+}

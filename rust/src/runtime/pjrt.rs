@@ -1,0 +1,67 @@
+//! The PJRT execution backend: AOT HLO artifacts compiled once on the PJRT
+//! CPU client, executed per batch — [`ExecBackend`] over the pre-existing
+//! [`Runtime`]/[`pooled_states`] plumbing.
+//!
+//! Serves the pooled-classification artifact geometries; the integer readout
+//! (argmax over [`QuantEsn::classify_from_pooled`]) stays rust-side so PJRT
+//! and native predictions are directly comparable. Construct from the thread
+//! that will own it — PJRT handles are `!Send`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::data::{Task, TimeSeries};
+use crate::quant::QuantEsn;
+
+use super::backend::{ExecBackend, Prediction};
+use super::exec::pooled_states;
+use super::Runtime;
+
+/// PJRT-artifact backend (see module docs).
+pub struct PjrtBackend {
+    rt: Runtime,
+    artifact: String,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Compile `artifact` from `dir` and wrap it as a backend.
+    pub fn start(dir: &Path, artifact: &str) -> Result<Self> {
+        let rt = Runtime::cpu_subset(dir, &[artifact])?;
+        let batch = rt.artifact(artifact)?.batch;
+        Ok(Self { rt, artifact: artifact.to_string(), batch })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn execute_batch(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+    ) -> Result<Vec<Prediction>> {
+        if model.task != Task::Classification {
+            bail!(
+                "PJRT backend serves pooled classification artifacts; \
+                 use --backend native for regression"
+            );
+        }
+        let pooled = pooled_states(&self.rt, &self.artifact, model, samples)?;
+        Ok(samples
+            .iter()
+            .zip(pooled)
+            .map(|(s, p)| {
+                let t = s.inputs.rows() as f64;
+                Prediction::Class(model.classify_from_pooled(&p, t))
+            })
+            .collect())
+    }
+}

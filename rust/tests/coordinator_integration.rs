@@ -1,48 +1,55 @@
-//! Coordinator integration: serve real batched inference over the compiled
-//! PJRT artifact; verify no request is lost, predictions match the native
-//! golden model, and batching actually happens. Skips without artifacts.
+//! Coordinator integration on the **native backend**: real batched serving
+//! with no compiled artifacts — these tests always run (the PJRT variants at
+//! the bottom still skip without `make artifacts`). Covers request → batched
+//! execute → response end-to-end, mixed-variant routing, the forced-flush
+//! deadline, regression serving, graceful shutdown, and bit-identity of the
+//! served predictions against the golden `QuantEsn` evaluation.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
-use rcx::coordinator::{BatcherConfig, Prediction, ServeConfig, Server, VariantSpec};
-use rcx::data::generators::melborn_sized;
-use rcx::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+use rcx::coordinator::{
+    BackendConfig, BatcherConfig, Prediction, ServeConfig, Server, VariantSpec,
+};
+use rcx::data::generators::{henon_sized, melborn_sized};
+use rcx::data::Dataset;
+use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
 use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::runtime::NativeConfig;
 
-fn setup() -> Option<(Server, rcx::data::Dataset, Vec<QuantEsn>)> {
-    if !Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("skipping coordinator test: run `make artifacts`");
-        return None;
+fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
+    ServeConfig {
+        backend: BackendConfig::Native(NativeConfig { max_batch, workers }),
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
     }
+}
+
+fn classification_setup(workers: usize) -> (Server, Dataset, Vec<Arc<QuantEsn>>) {
     let data = melborn_sized(21, 100, 60);
     let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
     let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
-    let q4 = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
-    let q8 = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+    let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
+    let q8 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(8)));
     let server = Server::start(
-        ServeConfig {
-            artifact_dir: "artifacts".into(),
-            artifact: "melborn_pooled".into(),
-            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
-        },
+        native_cfg(16, workers),
         vec![
-            VariantSpec { key: "q4".into(), model: q4.clone() },
-            VariantSpec { key: "q8".into(), model: q8.clone() },
+            VariantSpec::shared("q4", Arc::clone(&q4)),
+            VariantSpec::shared("q8", Arc::clone(&q8)),
         ],
     )
     .unwrap();
-    Some((server, data, vec![q4, q8]))
+    (server, data, vec![q4, q8])
 }
 
 #[test]
 fn serves_correct_predictions_for_all_requests() {
-    let Some((server, data, models)) = setup() else { return };
+    let (server, data, models) = classification_setup(2);
     let client = server.client();
     let v4 = server.variant_index("q4").unwrap();
     let v8 = server.variant_index("q8").unwrap();
 
-    // Fire all test samples concurrently at both variants.
+    // Fire all test samples concurrently at both variants (mixed routing).
     let mut pending = Vec::new();
     for (i, s) in data.test.iter().enumerate() {
         let v = if i % 2 == 0 { v4 } else { v8 };
@@ -61,8 +68,105 @@ fn serves_correct_predictions_for_all_requests() {
 }
 
 #[test]
+fn native_serving_is_bit_identical_to_golden_evaluate() {
+    // The accuracy computed from served responses must equal
+    // `QuantEsn::evaluate` on the same split exactly — not approximately.
+    let (server, data, models) = classification_setup(1);
+    let client = server.client();
+    let pending: Vec<_> =
+        data.test.iter().map(|s| client.submit(0, s.clone()).unwrap()).collect();
+    let mut correct = 0usize;
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        if resp.prediction == Prediction::Class(data.test[i].label.unwrap()) {
+            correct += 1;
+        }
+    }
+    let served_acc = correct as f64 / data.test.len() as f64;
+    assert_eq!(served_acc, models[0].evaluate(&data).value());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn forced_flush_deadline_answers_partial_batches() {
+    // Fewer requests than max_batch: only the max_wait deadline can flush.
+    let (server, data, _) = classification_setup(1);
+    let client = server.client();
+    let pending: Vec<_> =
+        data.test.iter().take(3).map(|s| client.submit(0, s.clone()).unwrap()).collect();
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
+        assert!(resp.batch_size <= 3, "impossible batch size {}", resp.batch_size);
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.requests, 3);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn regression_serving_end_to_end() {
+    // Henon on the native backend: per-step predictions, bit-identical to
+    // `QuantEsn::predict`, and served RMSE equal to the golden evaluation.
+    let data = henon_sized(2, 400, 150);
+    let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3));
+    let m = EsnModel::fit(
+        res,
+        &data,
+        ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
+    );
+    let qm = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(8)));
+    let server =
+        Server::start(native_cfg(8, 2), vec![VariantSpec::shared("q8", Arc::clone(&qm))])
+            .unwrap();
+    let client = server.client();
+
+    // Several concurrent copies of the test trajectory → batched execution.
+    let reps = 6usize;
+    let sample = data.test[0].clone();
+    let pending: Vec<_> =
+        (0..reps).map(|_| client.submit(0, sample.clone()).unwrap()).collect();
+    let want = qm.predict(&sample);
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        let Prediction::Values(rows) = resp.prediction else {
+            panic!("regression served a class prediction")
+        };
+        assert_eq!(rows, want, "served values differ from QuantEsn::predict");
+    }
+    // RMSE from the served values must equal the golden split evaluation
+    // bit-for-bit (same accumulation order) — the test split is this single
+    // trajectory.
+    let targets = sample.targets.as_ref().unwrap();
+    let mut se = 0.0f64;
+    let mut count = 0usize;
+    for (k, row) in want.iter().enumerate() {
+        for (d, v) in row.iter().enumerate() {
+            let e = v - targets[(15 + k, d)];
+            se += e * e;
+            count += 1;
+        }
+    }
+    let rmse = (se / count.max(1) as f64).sqrt();
+    assert_eq!(rmse, qm.evaluate(&data).value());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn out_of_range_variant_is_rejected_without_killing_the_server() {
+    let (server, data, models) = classification_setup(1);
+    let client = server.client();
+    // The bad request alone is rejected (its response channel is dropped)...
+    let bad = client.submit(99, data.test[0].clone()).unwrap();
+    assert!(bad.recv_timeout(Duration::from_secs(5)).is_err(), "bad variant must be rejected");
+    // ...while the server keeps serving well-behaved clients.
+    let resp = client.infer(0, data.test[0].clone()).unwrap();
+    assert_eq!(resp.prediction, Prediction::Class(models[0].classify(&data.test[0])));
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn graceful_shutdown_drains_queue() {
-    let Some((server, data, _)) = setup() else { return };
+    let (server, data, _) = classification_setup(2);
     let client = server.client();
     let mut pending = Vec::new();
     for s in data.test.iter().take(20) {
@@ -77,17 +181,54 @@ fn graceful_shutdown_drains_queue() {
 
 #[test]
 fn startup_fails_cleanly_without_artifacts() {
+    // The PJRT backend must propagate artifact/compile failures out of
+    // Server::start instead of wedging the executor.
     let data = melborn_sized(1, 10, 5);
     let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 1));
     let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
     let model = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
     let err = Server::start(
         ServeConfig {
-            artifact_dir: "/nonexistent".into(),
-            artifact: "melborn_pooled".into(),
+            backend: BackendConfig::Pjrt {
+                artifact_dir: "/nonexistent".into(),
+                artifact: "melborn_pooled".into(),
+            },
             batcher: BatcherConfig::default(),
         },
-        vec![VariantSpec { key: "x".into(), model }],
+        vec![VariantSpec::new("x", model)],
     );
     assert!(err.is_err());
+}
+
+#[test]
+fn pjrt_backend_serves_if_artifacts_present() {
+    // The PJRT path behind the same trait — still skips without artifacts
+    // (ROADMAP: the vendored xla crate is an API stub).
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping PJRT coordinator test: run `make artifacts`");
+        return;
+    }
+    let data = melborn_sized(21, 60, 30);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
+    let server = Server::start(
+        ServeConfig {
+            backend: BackendConfig::Pjrt {
+                artifact_dir: "artifacts".into(),
+                artifact: "melborn_pooled".into(),
+            },
+            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+        },
+        vec![VariantSpec::shared("q4", Arc::clone(&q4))],
+    )
+    .unwrap();
+    let client = server.client();
+    let pending: Vec<_> =
+        data.test.iter().map(|s| client.submit(0, s.clone()).unwrap()).collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        assert_eq!(resp.prediction, Prediction::Class(q4.classify(&data.test[i])), "sample {i}");
+    }
+    server.shutdown().unwrap();
 }

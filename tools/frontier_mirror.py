@@ -301,14 +301,28 @@ class Plan:
         return (min(sup), max(sup))
 
     def pack_batches(self, cands):
-        """Greedy first-fit packing of support-disjoint flips (mirror of
-        CalibPlan::pack_batches): scan candidates in the given order, place
-        each into the first open batch whose accumulated support it does not
-        intersect, close batches at BATCH_LANES flips."""
-        open_batches = []  # (support_set, member_indices)
-        closed = []
+        """Two-tier packing (mirror of CalibPlan::pack_batches):
+
+        1. same-support grouping — a flip's support depends only on its slot
+           row, so same-row candidates share identical supports; full
+           BATCH_LANES-wide lanes of them are emitted first (the evaluator is
+           exact for any packing, and identical-support lanes share every
+           frontier strip op);
+        2. disjoint greedy first-fit over the per-row remainders, scanned in
+           slot-row order."""
+        groups = {}
         for ci, (slot, _nv) in enumerate(cands):
-            sup = self.flip_support(slot)
+            groups.setdefault(self.slot_rc[slot][0], []).append(ci)
+        closed, rest = [], []
+        for row in sorted(groups):
+            g = groups[row]
+            full = len(g) // BATCH_LANES * BATCH_LANES
+            for k in range(0, full, BATCH_LANES):
+                closed.append(g[k:k + BATCH_LANES])
+            rest.extend(g[full:])
+        open_batches = []  # (support_set, member_indices)
+        for ci in rest:
+            sup = self.flip_support(cands[ci][0])
             for oi, (mask, members) in enumerate(open_batches):
                 if not (mask & sup):
                     mask |= sup

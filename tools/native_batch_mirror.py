@@ -1,0 +1,188 @@
+"""Faithful Python mirror of the native lane-batched inference kernel
+(`rust/src/quant/batch.rs`: `QuantEsn::{classify_batch, predict_batch}` over
+`rollout_lanes`/`step_lanes`) vs a scalar per-sample reference.
+
+The kernel's claim is that per-lane arithmetic is the exact integer sequence
+of the scalar path — lane-major state layout, per-lane active masks for
+ragged batches, pooled accumulation (mean-state and last-state), and
+washout-gated per-step regression emission must all be bit-transparent.
+i64 ops are exact in Python ints and f64 == Python float, so equality here
+is bit-equality of the mirrored semantics.
+
+Usage:
+    python tools/native_batch_mirror.py   # the CI gate; no flags
+"""
+import random
+
+from frontier_mirror import Ladder, Model, argmax, qmax  # noqa: F401
+
+SAMPLE_LANES = 8
+
+
+# ---- scalar reference (QuantEsn::classify / QuantEsn::predict) ----
+
+def scalar_classify(m, u):
+    s_prev = [0] * m.n
+    pooled = [0] * m.n
+    for t, u_t in enumerate(u):
+        s_prev = m.step(u_t, s_prev, m.values)
+        if m.features == "mean":
+            for j in range(m.n):
+                pooled[j] += s_prev[j]
+        elif t == len(u) - 1:
+            pooled = list(s_prev)
+    t_factor = float(len(u)) if m.features == "mean" else 1.0
+    return argmax(m.readout_scores(pooled, t_factor))
+
+
+def scalar_predict(m, u):
+    out = []
+    s_prev = [0] * m.n
+    for t, u_t in enumerate(u):
+        s_prev = m.step(u_t, s_prev, m.values)
+        if t >= m.washout:
+            out.append(readout_from_state(m, s_prev))
+    return out
+
+
+def readout_from_state(m, srow):
+    return [
+        sum(m.w_out[c][j] * srow[j] for j in range(m.n)) / m.denom[c] + m.bias_f[c]
+        for c in range(m.out_dim)
+    ]
+
+
+# ---- lane-batched mirror (batch.rs rollout_lanes / step_lanes) ----
+
+def step_lanes(m, u_lanes, s_prev, s_next, active):
+    L = SAMPLE_LANES
+    for i in range(m.n):
+        acc_in = [m.w_in[i] * u_lanes[l] for l in range(L)]  # input_dim = 1
+        acc_r = [0] * L
+        for k in range(m.indptr[i], m.indptr[i + 1]):
+            w = m.values[k]
+            base = m.indices[k] * L
+            for l in range(L):
+                acc_r[l] += w * s_prev[base + l]
+        for l in range(L):
+            if active[l]:
+                s_next[i * L + l] = m.ladder.apply(m.m_in * acc_in[l] + (acc_r[l] << m.f))
+
+
+def rollout_lanes(m, chunk, emit):
+    """chunk: list of u_int sequences (≤ SAMPLE_LANES). emit(t, l, col)."""
+    L = SAMPLE_LANES
+    assert len(chunk) <= L
+    s_prev = [0] * (m.n * L)
+    s_next = [0] * (m.n * L)
+    u_lanes = [0] * L
+    pooled = [0] * (m.n * L)
+    t_max = max((len(u) for u in chunk), default=0)
+    active = [False] * L
+    for t in range(t_max):
+        for l, u in enumerate(chunk):
+            active[l] = t < len(u)
+            if active[l]:
+                u_lanes[l] = u[t]
+        step_lanes(m, u_lanes, s_prev, s_next, active)
+        if m.features == "mean":
+            for j in range(m.n):
+                for l in range(L):
+                    if active[l]:
+                        pooled[j * L + l] += s_next[j * L + l]
+        else:
+            for l, u in enumerate(chunk):
+                if t + 1 == len(u):
+                    for j in range(m.n):
+                        pooled[j * L + l] = s_next[j * L + l]
+        for l in range(len(chunk)):
+            if active[l]:
+                emit(t, l, [s_next[j * L + l] for j in range(m.n)])
+        s_prev, s_next = s_next, s_prev
+    return pooled
+
+
+def classify_batch(m, samples):
+    L = SAMPLE_LANES
+    out = []
+    for k in range(0, len(samples), L):
+        chunk = samples[k:k + L]
+        pooled = rollout_lanes(m, chunk, lambda t, l, col: None)
+        for l, u in enumerate(chunk):
+            col = [pooled[j * L + l] for j in range(m.n)]
+            t_factor = float(len(u)) if m.features == "mean" else 1.0
+            out.append(argmax(m.readout_scores(col, t_factor)))
+    return out
+
+
+def predict_batch(m, samples):
+    out = []
+    for k in range(0, len(samples), SAMPLE_LANES):
+        chunk = samples[k:k + SAMPLE_LANES]
+        base = len(out)
+        for _ in chunk:
+            out.append([])
+
+        def emit(t, l, col, base=base):
+            if t >= m.washout:
+                out[base + l].append(readout_from_state(m, col))
+
+        rollout_lanes(m, chunk, emit)
+    return out
+
+
+# ---- cases ----
+
+def ragged_inputs(rng, n_samples, t_lo, t_hi):
+    return [
+        [rng.randint(-127, 127) for _ in range(rng.randint(t_lo, t_hi))]
+        for _ in range(n_samples)
+    ]
+
+
+def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo, t_hi):
+    rng = random.Random(seed)
+    # Model's own samples are unused — we feed ragged ones directly.
+    m = Model(rng, n, q, task, features, washout, out_dim, nnz, t_hi, 1)
+    samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
+    mismatches = 0
+    if task == "cls":
+        got = classify_batch(m, samples)
+        want = [scalar_classify(m, u) for u in samples]
+    else:
+        got = predict_batch(m, samples)
+        want = [scalar_predict(m, u) for u in samples]
+    for i, (g, w) in enumerate(zip(got, want)):
+        if g != w:
+            mismatches += 1
+            if mismatches <= 3:
+                print(f"  MISMATCH seed={seed} sample={i}: lane={g} scalar={w}")
+    print(
+        f"native-batch(task={task}, feat={features}, n={n}, q={q}, wo={washout}, "
+        f"ns={n_samples}, T=[{t_lo},{t_hi}]): {mismatches} mismatches"
+    )
+    return mismatches
+
+
+def run_checks():
+    bad = 0
+    # Batch sizes crossing the lane boundary, uniform and ragged lengths.
+    bad += run_case(1, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=1, t_lo=10, t_hi=10)
+    bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
+                    n_samples=17, t_lo=4, t_hi=20)
+    bad += run_case(3, "cls", "last", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=9, t_lo=3, t_hi=15)
+    bad += run_case(4, "cls", "last", n=10, q=8, washout=0, out_dim=2, nnz=3,
+                    n_samples=8, t_lo=1, t_hi=1)   # T=1 edge, exactly one lane pass
+    bad += run_case(5, "reg", "mean", n=12, q=4, washout=5, out_dim=2, nnz=4,
+                    n_samples=11, t_lo=2, t_hi=25)  # some T < washout -> empty rows
+    bad += run_case(6, "reg", "mean", n=14, q=8, washout=0, out_dim=1, nnz=5,
+                    n_samples=16, t_lo=6, t_hi=6)
+    print("TOTAL MISMATCHES:", bad)
+    assert bad == 0, "lane-batched kernel diverges from the scalar reference"
+    print("OK: lane-batched == scalar on all cases")
+
+
+if __name__ == "__main__":
+    run_checks()
