@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         method: Method::Sensitivity,
         max_calib: if full { 512 } else { 128 },
         seed: 7,
+        ..Default::default()
     };
     let r = explore(&model, &data, &req);
     let hw = realize_hw(&r, &data);

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             method,
             max_calib: 96,
             seed: 7,
+            ..Default::default()
         };
         let r = explore(&model, &data, &req);
         print!("{:<12}", method.name());

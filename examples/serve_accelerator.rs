@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let backend = if std::env::var("RCX_BACKEND").as_deref() == Ok("pjrt") {
         BackendConfig::Pjrt { artifact_dir: "artifacts".into(), artifact: cfg.artifact.to_string() }
     } else {
-        BackendConfig::Native(NativeConfig { max_batch: 32, workers: 2 })
+        BackendConfig::Native(NativeConfig { max_batch: 32, workers: 2, ..Default::default() })
     };
     println!("starting coordinator on the {} backend...", backend.name());
     let server = Server::start(

@@ -31,6 +31,7 @@ fn main() {
                 method,
                 max_calib: if full { 256 } else { 96 },
                 seed: 7,
+                ..Default::default()
             };
             let mut r = None;
             let t = time_it(0, 1, || r = Some(explore(&model, &data, &req)));

@@ -23,6 +23,7 @@ fn main() {
             method: Method::Sensitivity,
             max_calib: if full { 256 } else { 96 },
             seed: 7,
+            ..Default::default()
         };
         let r = explore(&model, &data, &req);
         let hw = realize_hw(&r, &data);

@@ -19,6 +19,7 @@ fn main() {
         method: Method::Sensitivity,
         max_calib: 0,
         seed: 7,
+        ..Default::default()
     };
     let mut result = None;
     let t = time_it(0, 1, || result = Some(explore(&model, &data, &req)));

@@ -13,8 +13,8 @@ use crate::coordinator::VariantRegistry;
 use crate::data::{Dataset, TimeSeries};
 use crate::esn::{EsnModel, Perf};
 use crate::hw::{self, HwReport, Topology};
-use crate::pruning::{prune_with_compensation, Method, SensitivityPruner};
-use crate::quant::{QuantEsn, QuantInputCache, QuantSpec};
+use crate::pruning::{prune_with_compensation, Method, SensitivityConfig, SensitivityPruner};
+use crate::quant::{KernelChoice, QuantEsn, QuantInputCache, QuantSpec};
 
 /// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
 #[derive(Clone, Debug)]
@@ -26,6 +26,10 @@ pub struct DseRequest {
     /// only used for the reported `Perf`).
     pub max_calib: usize,
     pub seed: u64,
+    /// Lane-kernel override for the sensitivity scorer's batched engine
+    /// (`Auto` = overflow-bound-selected; `rcx dse --kernel …` pins a path
+    /// for bench/triage runs). Bit-identical either way.
+    pub kernel: KernelChoice,
 }
 
 impl Default for DseRequest {
@@ -36,6 +40,7 @@ impl Default for DseRequest {
             method: Method::Sensitivity,
             max_calib: 192,
             seed: 7,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -124,11 +129,13 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             if !input_cache.as_ref().is_some_and(|c| c.matches(&qmodel)) {
                 input_cache = Some(QuantInputCache::build(&qmodel, calib));
             }
-            // Default knobs (batched incremental engine) plus the DSE's
-            // q-level-shared input-cache injection. Bit-identical to the
-            // sequential/dense oracles, so the produced configuration set is
-            // unchanged; only the sweep wall-clock differs.
-            SensitivityPruner::default().scores_with_inputs(&qmodel, calib, input_cache.as_ref())
+            // Default knobs (batched incremental engine, bound-selected or
+            // request-pinned lane kernel) plus the DSE's q-level-shared
+            // input-cache injection. Bit-identical to the sequential/dense
+            // oracles, so the produced configuration set is unchanged; only
+            // the sweep wall-clock differs.
+            SensitivityPruner::new(SensitivityConfig { kernel: req.kernel, ..Default::default() })
+                .scores_with_inputs(&qmodel, calib, input_cache.as_ref())
         } else {
             req.method.pruner(req.seed).scores(&qmodel, calib)
         };
@@ -184,6 +191,7 @@ mod tests {
             method: Method::Random,
             max_calib: 40,
             seed: 1,
+            ..Default::default()
         };
         let r = explore(&m, &data, &req);
         // (1 unpruned + 2 rates) × 2 q-levels
@@ -208,6 +216,7 @@ mod tests {
             method: Method::Random,
             max_calib: 20,
             seed: 2,
+            ..Default::default()
         };
         let r = explore(&m, &data, &req);
         let hw = realize_hw(&r, &data);
@@ -232,6 +241,7 @@ mod tests {
             method: Method::Random,
             max_calib: 20,
             seed: 3,
+            ..Default::default()
         };
         let r = explore(&m, &data, &req);
         let reg = r.variant_registry();

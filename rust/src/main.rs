@@ -27,7 +27,7 @@ use rcx::esn::ReservoirSpec;
 use rcx::hyper::{random_search, SearchSpace};
 use rcx::hw::synthesize;
 use rcx::pruning::Method;
-use rcx::quant::{QuantEsn, QuantSpec};
+use rcx::quant::{KernelChoice, QuantEsn, QuantSpec};
 use rcx::report::{self, hw_table};
 
 /// Minimal flag parser: `--key value` pairs plus positionals.
@@ -71,6 +71,15 @@ impl Args {
         Benchmark::parse(name).with_context(|| format!("unknown benchmark {name}"))
     }
 
+    /// Lane-kernel override for the narrow/wide integer paths (`auto` =
+    /// overflow-bound-selected — the default; `narrow`/`wide` pin a path for
+    /// bench and triage runs, bit-identical either way).
+    fn kernel(&self) -> Result<KernelChoice> {
+        let s = self.flag("kernel").unwrap_or("auto");
+        KernelChoice::parse(s)
+            .with_context(|| format!("--kernel: expected auto|narrow|wide, got {s:?}"))
+    }
+
     fn full(&self) -> bool {
         self.flag("full").is_some()
     }
@@ -107,13 +116,16 @@ fn print_help() {
          commands:\n\
          \u{20}  hyperopt  [--iters N]                 stage-1 random search\n\
          \u{20}  dse       [--method M] [--q 4,6,8]    Algorithm 1 over Q x P\n\
+         \u{20}            [--kernel auto|narrow|wide]  pin the scorer's lane kernel\n\
          \u{20}  synth     [--q Q] [--p P] [--rtl F]   hardware-realize one config\n\
          \u{20}  table1 | table2 | table3              reproduce paper tables\n\
          \u{20}  fig3 | fig4                           reproduce paper figures (CSV)\n\
          \u{20}  serve     [--backend native|pjrt] [--q 4,8 | --variants pareto]\n\
          \u{20}            [--requests N] [--max-batch B] [--workers W]\n\
+         \u{20}            [--kernel auto|narrow|wide]\n\
          \u{20}            batching inference coordinator; the native backend\n\
-         \u{20}            serves every benchmark bit-exactly with no artifacts,\n\
+         \u{20}            serves every benchmark bit-exactly with no artifacts\n\
+         \u{20}            (narrow i32x16 lanes when the overflow bounds allow),\n\
          \u{20}            `--variants pareto` hot-loads a DSE Pareto front"
     );
 }
@@ -152,6 +164,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         method,
         max_calib: args.flag_or("calib", 128)?,
         seed: 7,
+        kernel: args.kernel()?,
     };
     println!("DSE on {} with {} pruning...", b.name(), method.name());
     let r = explore(&model, &data, &req);
@@ -223,6 +236,7 @@ fn cmd_hw_table(args: &Args, b: Benchmark, title: &str) -> Result<()> {
         method: Method::Sensitivity,
         max_calib: args.flag_or("calib", 128)?,
         seed: 7,
+        ..Default::default()
     };
     let r = explore(&model, &data, &req);
     let hw = realize_hw(&r, &data);
@@ -247,6 +261,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
             method,
             max_calib: args.flag_or("calib", 96)?,
             seed: 7,
+            ..Default::default()
         };
         println!("fig3: scoring with {}...", method.name());
         let r = explore(&model, &data, &req);
@@ -270,6 +285,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
         method: Method::Sensitivity,
         max_calib: args.flag_or("calib", 96)?,
         seed: 7,
+        ..Default::default()
     };
     let r = explore(&model, &data, &req);
     let hw = realize_hw(&r, &data);
@@ -329,6 +345,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "native" => BackendConfig::Native(NativeConfig {
             max_batch,
             workers: args.flag_or("workers", 1)?,
+            kernel: args.kernel()?,
         }),
         "pjrt" => {
             if data.task == Task::Regression {

@@ -25,7 +25,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::TimeSeries;
 use crate::quant::{
-    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantEsn, QuantInputCache,
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, KernelChoice, QuantEsn,
+    QuantInputCache,
 };
 
 use super::Pruner;
@@ -33,12 +34,15 @@ use super::Pruner;
 /// Which evaluation engine backs the Eq. 4 sweep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// Batched multi-flip scoring: flips are packed into
-    /// [`crate::quant::BATCH_LANES`]-wide batches (full same-support lanes
-    /// first, disjoint first-fit remainders) that share one pass over the
-    /// cached plan, with the frontier scatter vectorized over batch lanes. Bit-identical to both oracles below (asserted in
+    /// Batched multi-flip scoring: flips are packed into lane-width batches
+    /// ([`crate::quant::BATCH_LANES_NARROW`] = 16 narrow i32 lanes when the
+    /// overflow-bound analysis allows, else [`crate::quant::BATCH_LANES`] = 8
+    /// wide i64 lanes; full same-support lanes first, then first-fit with
+    /// overlap-tolerant top-up) that share one pass over the cached plan,
+    /// with the frontier scatter vectorized over batch lanes. Bit-identical
+    /// to both oracles below on either kernel (asserted in
     /// `tests/incremental_equivalence.rs` and at bench time); measured in the
-    /// perf_hotpaths L3-b′/L3-c sections (EXPERIMENTS.md §Perf).
+    /// perf_hotpaths L3-b′/L3-g sections (EXPERIMENTS.md §Perf).
     #[default]
     IncrementalBatched,
     /// Cached calibration plan + sparse delta-propagation rollouts, one flip
@@ -62,11 +66,22 @@ pub struct SensitivityConfig {
     /// module default, so `Method::Sensitivity.pruner()` users get the fast
     /// path); the sequential and dense oracles remain selectable.
     pub engine: Engine,
+    /// Lane-kernel override for the batched engine: `Auto` (default) lets the
+    /// overflow-bound analysis pick narrow (i32×16) whenever provably safe;
+    /// `Wide`/`Narrow` pin a path for bench and triage runs (narrow panics if
+    /// the bound fails — exactness is never traded). Ignored by the
+    /// sequential and dense oracles.
+    pub kernel: KernelChoice,
 }
 
 impl Default for SensitivityConfig {
     fn default() -> Self {
-        Self { parallelism: 0, max_calib: 256, engine: Engine::default() }
+        Self {
+            parallelism: 0,
+            max_calib: 256,
+            engine: Engine::default(),
+            kernel: KernelChoice::Auto,
+        }
     }
 }
 
@@ -122,7 +137,8 @@ impl SensitivityPruner {
                         &owned
                     }
                 };
-                let plan = CalibPlan::build_with_inputs(model, calib, cache);
+                let plan =
+                    CalibPlan::build_with_inputs_and_kernel(model, calib, cache, self.cfg.kernel);
                 if self.cfg.engine == Engine::IncrementalBatched {
                     self.scores_incremental_batched(model, &plan)
                 } else {
@@ -406,13 +422,39 @@ mod tests {
     fn incremental_matches_dense_oracle_exactly() {
         let (qm, data) = tiny_model();
         let mk = |engine| {
-            SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib: 25, engine })
+            SensitivityPruner::new(SensitivityConfig {
+                parallelism: 2,
+                max_calib: 25,
+                engine,
+                ..Default::default()
+            })
         };
         let inc = mk(Engine::Incremental).scores(&qm, &data.train);
         let dense = mk(Engine::Dense).scores(&qm, &data.train);
         assert_eq!(inc, dense, "incremental engine must be bit-identical to the dense oracle");
         let batched = mk(Engine::IncrementalBatched).scores(&qm, &data.train);
         assert_eq!(batched, dense, "batched engine must be bit-identical to the dense oracle");
+    }
+
+    #[test]
+    fn batched_kernels_match_dense_oracle_exactly() {
+        // Narrow (i32×16) and wide (i64×8) lane kernels, pinned explicitly,
+        // must both reproduce the dense oracle bit-for-bit.
+        let (qm, data) = tiny_model();
+        let mk = |engine, kernel| {
+            SensitivityPruner::new(SensitivityConfig {
+                parallelism: 2,
+                max_calib: 25,
+                engine,
+                kernel,
+            })
+        };
+        let dense = mk(Engine::Dense, KernelChoice::Auto).scores(&qm, &data.train);
+        let narrow =
+            mk(Engine::IncrementalBatched, KernelChoice::Narrow).scores(&qm, &data.train);
+        let wide = mk(Engine::IncrementalBatched, KernelChoice::Wide).scores(&qm, &data.train);
+        assert_eq!(narrow, dense, "narrow kernel must be bit-identical to the dense oracle");
+        assert_eq!(wide, dense, "wide kernel must be bit-identical to the dense oracle");
     }
 
     #[test]
@@ -423,6 +465,7 @@ mod tests {
                 parallelism: workers,
                 max_calib: 25,
                 engine: Engine::IncrementalBatched,
+                ..Default::default()
             })
             .scores(&qm, &data.train)
         };

@@ -1,17 +1,33 @@
-//! Lane-batched native inference: run up to [`SAMPLE_LANES`] *samples*
+//! Lane-batched native inference: run up to [`LaneScratch::lanes`] *samples*
 //! through the streamlined integer step in one pass, the way
 //! [`CalibPlan::eval_flips_batched`](super::CalibPlan::eval_flips_batched)
 //! lane-batches *flips*.
 //!
-//! States are stored lane-major (`s[j * SAMPLE_LANES + l]` is neuron `j` of
-//! sample lane `l`), so the per-neuron accumulator loops run across the lane
-//! dimension — contiguous 8-wide i64 strips the compiler can vectorize —
-//! while each lane's arithmetic stays the exact integer sequence of
+//! States are stored lane-major (`s[j * L + l]` is neuron `j` of sample lane
+//! `l`), so the per-neuron accumulator loops run across the lane dimension —
+//! contiguous fixed-width strips the compiler can vectorize — while each
+//! lane's arithmetic stays the exact integer sequence of
 //! [`QuantEsn::step_int`]. Per-lane results are therefore **bit-identical**
 //! to the scalar [`QuantEsn::classify`] / [`QuantEsn::predict`] paths (no
 //! float reassociation: lanes never mix). Ragged batches are handled with a
 //! per-lane active mask: a lane retires at its own sequence end, its pooled
 //! feature / emitted predictions frozen at that point.
+//!
+//! # Lane element width: narrow (i32) vs wide (i64)
+//!
+//! Every value the rollout holds is hard-clamped — states by the threshold
+//! ladder to `±qmax(q)`, quantized inputs by the input quantizer — and the
+//! per-neuron accumulators are short sums of clamped products, so
+//! [`KernelBounds`] can usually prove the whole per-step algebra fits `i32`:
+//! `rec_acc ≤ W·qmax`, `in_acc ≤ V·u_max` (see `bounds.rs`). When it does,
+//! [`LaneScratch`] instantiates the kernel at `(i32, 16)` — twice the lanes
+//! per register pair — and otherwise falls back to the bit-identical
+//! `(i64, 8)` oracle. The widening points (the `m_in` multiply, the `<< F`
+//! shift, the ladder input and every readout) always compute in `i64`, so
+//! the narrow kernel is exact whenever selected; the one quantity that grows
+//! with sequence length (the `MeanState` pooled accumulator, `≤ T·qmax`) is
+//! guarded per chunk: sequences longer than [`KernelBounds::max_steps`] take
+//! the scalar path instead (bit-identical, just unbatched).
 //!
 //! This kernel is the compute core of the serving stack's
 //! [`NativeBackend`](crate::runtime::NativeBackend).
@@ -19,51 +35,133 @@
 use crate::data::TimeSeries;
 use crate::esn::Features;
 
-use super::QuantEsn;
+use super::rollout::LaneElem;
+use super::{Kernel, KernelBounds, KernelChoice, QuantEsn};
 
-/// Samples processed per lane-batched rollout pass. Mirrors
+/// Samples processed per **wide** (i64) lane-batched rollout pass. Mirrors
 /// [`super::BATCH_LANES`] (8 × i64 = two AVX2 vectors per strip).
 pub const SAMPLE_LANES: usize = 8;
 
-/// Reusable lane-major scratch for [`QuantEsn::classify_batch`] /
-/// [`QuantEsn::predict_batch`]. Allocate once per worker, reuse across
-/// batches of the same model geometry.
-pub struct LaneScratch {
+/// Samples processed per **narrow** (i32) pass — the same two AVX2 vectors
+/// carry 16 lanes at half the element width. Selected by [`KernelBounds`].
+pub const SAMPLE_LANES_NARROW: usize = 16;
+
+/// Width-generic lane-major buffers — one instantiation per kernel.
+struct LaneBuf<E: LaneElem, const L: usize> {
     n: usize,
     input_dim: usize,
-    /// Lane-major state double buffer (`n × SAMPLE_LANES`).
-    s_prev: Vec<i64>,
-    s_next: Vec<i64>,
-    /// Lane-major quantized inputs for the current step (`input_dim × SAMPLE_LANES`).
-    u_int: Vec<i64>,
-    /// Lane-major pooled feature accumulator (`n × SAMPLE_LANES`).
-    pooled: Vec<i64>,
-    /// Gather buffer for one lane's state column (`n`).
+    /// Lane-major state double buffer (`n × L`).
+    s_prev: Vec<E>,
+    s_next: Vec<E>,
+    /// Lane-major quantized inputs for the current step (`input_dim × L`).
+    u_int: Vec<E>,
+    /// Lane-major pooled feature accumulator (`n × L`).
+    pooled: Vec<E>,
+    /// Gather buffer for one lane's state column (`n`, always i64 — readouts
+    /// consume i64).
     col: Vec<i64>,
 }
 
-impl LaneScratch {
-    pub fn new(n: usize, input_dim: usize) -> Self {
+impl<E: LaneElem, const L: usize> LaneBuf<E, L> {
+    fn new(n: usize, input_dim: usize) -> Self {
         Self {
             n,
             input_dim,
-            s_prev: vec![0; n * SAMPLE_LANES],
-            s_next: vec![0; n * SAMPLE_LANES],
-            u_int: vec![0; input_dim * SAMPLE_LANES],
-            pooled: vec![0; n * SAMPLE_LANES],
+            s_prev: vec![E::default(); n * L],
+            s_next: vec![E::default(); n * L],
+            u_int: vec![E::default(); input_dim * L],
+            pooled: vec![E::default(); n * L],
             col: vec![0; n],
         }
     }
 
-    pub fn for_model(model: &QuantEsn) -> Self {
-        Self::new(model.n, model.input_dim)
+    fn reset(&mut self) {
+        self.s_prev.fill(E::default());
+        self.s_next.fill(E::default());
+        self.u_int.fill(E::default());
+        self.pooled.fill(E::default());
+    }
+}
+
+enum LaneKernel {
+    Wide(LaneBuf<i64, SAMPLE_LANES>),
+    Narrow(LaneBuf<i32, SAMPLE_LANES_NARROW>),
+}
+
+/// Reusable lane-major scratch for [`QuantEsn::classify_batch`] /
+/// [`QuantEsn::predict_batch`]. Allocate once per worker, reuse across
+/// batches of the same model geometry. The lane kernel (narrow i32×16 vs
+/// wide i64×8) is selected at construction from the model's overflow bounds
+/// (or pinned via [`LaneScratch::for_model_with`]).
+pub struct LaneScratch {
+    imp: LaneKernel,
+    /// Longest sequence the narrow `MeanState` pooled accumulator provably
+    /// supports; longer chunks fall back to the scalar path.
+    max_steps: usize,
+}
+
+impl LaneScratch {
+    pub fn new(n: usize, input_dim: usize) -> Self {
+        // Geometry-only constructor: no model to analyze, so stay on the
+        // always-safe wide kernel.
+        Self { imp: LaneKernel::Wide(LaneBuf::new(n, input_dim)), max_steps: usize::MAX }
     }
 
-    fn reset(&mut self) {
-        self.s_prev.fill(0);
-        self.s_next.fill(0);
-        self.u_int.fill(0);
-        self.pooled.fill(0);
+    /// Bound-selected kernel for `model` ([`KernelChoice::Auto`]).
+    pub fn for_model(model: &QuantEsn) -> Self {
+        Self::for_model_with(model, KernelChoice::Auto)
+    }
+
+    /// Explicit kernel override (`Auto` = bound-selected; forcing `Narrow`
+    /// past a failed bound panics rather than risking a wrap).
+    pub fn for_model_with(model: &QuantEsn, choice: KernelChoice) -> Self {
+        let bounds = KernelBounds::analyze(model, 0);
+        match choice.resolve(bounds.inference_kernel(), "inference kernel") {
+            Kernel::Narrow => Self {
+                imp: LaneKernel::Narrow(LaneBuf::new(model.n, model.input_dim)),
+                max_steps: bounds.max_steps,
+            },
+            Kernel::Wide => Self {
+                imp: LaneKernel::Wide(LaneBuf::new(model.n, model.input_dim)),
+                max_steps: usize::MAX,
+            },
+        }
+    }
+
+    /// Lane kernel this scratch runs.
+    pub fn kernel(&self) -> Kernel {
+        match self.imp {
+            LaneKernel::Wide(_) => Kernel::Wide,
+            LaneKernel::Narrow(_) => Kernel::Narrow,
+        }
+    }
+
+    /// Samples per rollout pass: [`SAMPLE_LANES_NARROW`] = 16 narrow,
+    /// [`SAMPLE_LANES`] = 8 wide. Callers chunk batches by this.
+    pub fn lanes(&self) -> usize {
+        match self.imp {
+            LaneKernel::Wide(_) => SAMPLE_LANES,
+            LaneKernel::Narrow(_) => SAMPLE_LANES_NARROW,
+        }
+    }
+
+    /// Refresh the narrow pooled-horizon guard from a freshly analyzed
+    /// model. The horizon depends on the model's `q`, not just its geometry,
+    /// so callers that reuse one scratch across *models* (multi-variant
+    /// serving swaps models per batch) must refresh it per model — a q=4
+    /// horizon (~306M steps) silently over-approves q=8 sequences otherwise.
+    pub fn refresh_horizon(&mut self, bounds: &KernelBounds) {
+        self.max_steps = match self.kernel() {
+            Kernel::Narrow => bounds.max_steps,
+            Kernel::Wide => usize::MAX,
+        };
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        match &self.imp {
+            LaneKernel::Wide(b) => (b.n, b.input_dim),
+            LaneKernel::Narrow(b) => (b.n, b.input_dim),
+        }
     }
 }
 
@@ -72,65 +170,68 @@ impl QuantEsn {
     /// the per-lane pre-activation `m_in·(Σ_k Wq_in[i,k]·u[k,l]) +
     /// (Σ_j Wq_r[i,j]·s_prev[j,l]) << F` and apply the threshold ladder —
     /// writing only lanes still inside their sequence. Each lane replays
-    /// [`QuantEsn::step_int`] exactly (integer ops, no cross-lane mixing).
-    /// The accumulator loops run over the first `width` lanes only, so a
-    /// partial chunk (deadline flush of 2–7 requests) pays for the lanes it
-    /// occupies, not all [`SAMPLE_LANES`].
-    fn step_lanes(
+    /// [`QuantEsn::step_int`] exactly (integer ops, no cross-lane mixing; the
+    /// `m_in` multiply and the shift widen to i64 before the ladder, so the
+    /// narrow accumulators only ever hold bound-approved sums). The
+    /// accumulator loops run over the first `width` lanes only, so a partial
+    /// chunk (deadline flush of a few requests) pays for the lanes it
+    /// occupies, not all of them.
+    fn step_lanes_g<E: LaneElem, const L: usize>(
         &self,
         width: usize,
-        u_int: &[i64],
-        s_prev: &[i64],
-        s_next: &mut [i64],
-        active: &[bool; SAMPLE_LANES],
+        u_int: &[E],
+        s_prev: &[E],
+        s_next: &mut [E],
+        active: &[bool; L],
     ) {
-        const L: usize = SAMPLE_LANES;
         debug_assert!(width <= L);
         let f = self.f_bits;
         for i in 0..self.n {
             // Input projection, lane-wide.
-            let mut acc_in = [0i64; L];
+            let mut acc_in = [E::default(); L];
             let wrow = &self.w_in[i * self.input_dim..(i + 1) * self.input_dim];
             for k in 0..self.input_dim {
-                let w = wrow[k];
+                let w = E::from_i64(wrow[k]);
                 let urow = &u_int[k * L..(k + 1) * L];
                 for l in 0..width {
-                    acc_in[l] += w * urow[l];
+                    acc_in[l] = E::add(acc_in[l], E::mul(w, urow[l]));
                 }
             }
             // Recurrence over the CSR row, lane-wide.
-            let mut acc_r = [0i64; L];
+            let mut acc_r = [E::default(); L];
             for k in self.w_r_indptr[i]..self.w_r_indptr[i + 1] {
-                let w = self.w_r_values[k];
+                let w = E::from_i64(self.w_r_values[k]);
                 let srow = &s_prev[self.w_r_indices[k] * L..self.w_r_indices[k] * L + L];
                 for l in 0..width {
-                    acc_r[l] += w * srow[l];
+                    acc_r[l] = E::add(acc_r[l], E::mul(w, srow[l]));
                 }
             }
             let out = &mut s_next[i * L..(i + 1) * L];
             for l in 0..width {
                 if active[l] {
-                    out[l] = self.ladder.apply(self.m_in * acc_in[l] + (acc_r[l] << f));
+                    let acc = self.m_in * acc_in[l].to_i64() + (acc_r[l].to_i64() << f);
+                    out[l] = E::from_i64(self.ladder.apply(acc));
                 }
             }
         }
     }
 
-    /// Run one chunk of ≤ [`SAMPLE_LANES`] samples. When `emit` is present it
-    /// is called per (step, lane) with that lane's freshly written state
-    /// column gathered into `sc.col` — after the per-feature pooled
-    /// accumulation has run. Pass `None` (classification) to skip the
-    /// per-step column gathers entirely; only `sc.pooled` is produced.
-    fn rollout_lanes(
+    /// Run one chunk of ≤ `L` samples. When `emit` is present it is called
+    /// per (step, lane) with that lane's freshly written state column
+    /// gathered into `buf.col` — after the per-feature pooled accumulation
+    /// has run. `pool` controls whether the pooled accumulator is maintained
+    /// at all: classification needs it, per-step regression does not (and
+    /// skipping it also removes the only narrow quantity that grows with T).
+    fn rollout_lanes_g<E: LaneElem, const L: usize>(
         &self,
         chunk: &[&TimeSeries],
-        sc: &mut LaneScratch,
+        buf: &mut LaneBuf<E, L>,
+        pool: bool,
         mut emit: Option<&mut dyn FnMut(usize, usize, &[i64])>,
     ) {
-        const L: usize = SAMPLE_LANES;
-        assert!(chunk.len() <= L, "chunk wider than SAMPLE_LANES");
-        assert_eq!((sc.n, sc.input_dim), (self.n, self.input_dim), "scratch geometry mismatch");
-        sc.reset();
+        assert!(chunk.len() <= L, "chunk wider than the scratch lane width");
+        assert_eq!((buf.n, buf.input_dim), (self.n, self.input_dim), "scratch geometry mismatch");
+        buf.reset();
         let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
         let mut active = [false; L];
         for t in 0..t_max {
@@ -139,28 +240,36 @@ impl QuantEsn {
                 if active[l] {
                     let urow = s.inputs.row(t);
                     for k in 0..self.input_dim {
-                        sc.u_int[k * L + l] = self.qz_u.quantize(urow[k]);
+                        buf.u_int[k * L + l] = E::from_i64(self.qz_u.quantize(urow[k]));
                     }
                 }
             }
-            self.step_lanes(chunk.len(), &sc.u_int, &sc.s_prev, &mut sc.s_next, &active);
-            match self.features {
-                Features::MeanState => {
-                    for j in 0..self.n {
-                        let srow = &sc.s_next[j * L..(j + 1) * L];
-                        let prow = &mut sc.pooled[j * L..(j + 1) * L];
-                        for l in 0..chunk.len() {
-                            if active[l] {
-                                prow[l] += srow[l];
+            // Split-borrow the state double buffer around the generic step.
+            {
+                let LaneBuf { u_int, s_prev, s_next, .. } = &mut *buf;
+                self.step_lanes_g::<E, L>(chunk.len(), u_int, s_prev, s_next, &active);
+            }
+            if pool {
+                match self.features {
+                    Features::MeanState => {
+                        for j in 0..self.n {
+                            let srow = &buf.s_next[j * L..(j + 1) * L];
+                            let prow = &mut buf.pooled[j * L..(j + 1) * L];
+                            for l in 0..chunk.len() {
+                                if active[l] {
+                                    // Narrow safety: `|Σ_t s| ≤ T·qmax`,
+                                    // guarded by the caller's max_steps check.
+                                    prow[l] = E::add(prow[l], srow[l]);
+                                }
                             }
                         }
                     }
-                }
-                Features::LastState => {
-                    for (l, s) in chunk.iter().enumerate() {
-                        if t + 1 == s.inputs.rows() {
-                            for j in 0..self.n {
-                                sc.pooled[j * L + l] = sc.s_next[j * L + l];
+                    Features::LastState => {
+                        for (l, s) in chunk.iter().enumerate() {
+                            if t + 1 == s.inputs.rows() {
+                                for j in 0..self.n {
+                                    buf.pooled[j * L + l] = buf.s_next[j * L + l];
+                                }
                             }
                         }
                     }
@@ -170,40 +279,63 @@ impl QuantEsn {
                 for l in 0..chunk.len() {
                     if active[l] {
                         for j in 0..self.n {
-                            sc.col[j] = sc.s_next[j * L + l];
+                            buf.col[j] = buf.s_next[j * L + l].to_i64();
                         }
-                        emit(t, l, &sc.col);
+                        emit(t, l, &buf.col);
                     }
                 }
             }
-            std::mem::swap(&mut sc.s_prev, &mut sc.s_next);
+            std::mem::swap(&mut buf.s_prev, &mut buf.s_next);
+        }
+    }
+
+    /// Width-generic classification over one already-chunked slice.
+    fn classify_chunk_g<E: LaneElem, const L: usize>(
+        &self,
+        chunk: &[&TimeSeries],
+        buf: &mut LaneBuf<E, L>,
+        out: &mut Vec<usize>,
+    ) {
+        self.rollout_lanes_g::<E, L>(chunk, buf, true, None);
+        for (l, s) in chunk.iter().enumerate() {
+            for j in 0..self.n {
+                buf.col[j] = buf.pooled[j * L + l].to_i64();
+            }
+            let t_factor = match self.features {
+                Features::MeanState => s.inputs.rows() as f64,
+                Features::LastState => 1.0,
+            };
+            out.push(self.classify_from_pooled(&buf.col, t_factor));
         }
     }
 
     /// Lane-batched classification: one class index per sample, bit-identical
     /// to calling [`QuantEsn::classify`] on each sample. Any batch length —
-    /// chunked internally into [`SAMPLE_LANES`]-wide passes.
+    /// chunked internally into [`LaneScratch::lanes`]-wide passes.
     pub fn classify_batch(&self, samples: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<usize> {
-        const L: usize = SAMPLE_LANES;
+        assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        let lanes = sc.lanes();
+        let max_steps = sc.max_steps;
         let mut out = Vec::with_capacity(samples.len());
-        for chunk in samples.chunks(L) {
+        for chunk in samples.chunks(lanes) {
             // A lone sample (low-load flush, or the tail chunk) would pay
-            // all 8 lanes of MAC work for one lane of output — the scalar
-            // path is bit-identical and ~8× cheaper there.
+            // every lane's MAC work for one lane of output — the scalar
+            // path is bit-identical and lane-count× cheaper there.
             if chunk.len() == 1 {
                 out.push(self.classify(chunk[0]));
                 continue;
             }
-            self.rollout_lanes(chunk, sc, None);
-            for (l, s) in chunk.iter().enumerate() {
-                for j in 0..self.n {
-                    sc.col[j] = sc.pooled[j * L + l];
+            let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
+            match &mut sc.imp {
+                LaneKernel::Wide(buf) => self.classify_chunk_g(chunk, buf, &mut out),
+                // MeanState pooled sums grow with T; past the proven horizon
+                // the scalar path is the bit-identical fallback.
+                LaneKernel::Narrow(_)
+                    if self.features == Features::MeanState && t_max > max_steps =>
+                {
+                    out.extend(chunk.iter().map(|s| self.classify(s)));
                 }
-                let t_factor = match self.features {
-                    Features::MeanState => s.inputs.rows() as f64,
-                    Features::LastState => 1.0,
-                };
-                out.push(self.classify_from_pooled(&sc.col, t_factor));
+                LaneKernel::Narrow(buf) => self.classify_chunk_g(chunk, buf, &mut out),
             }
         }
         out
@@ -216,8 +348,10 @@ impl QuantEsn {
         samples: &[&TimeSeries],
         sc: &mut LaneScratch,
     ) -> Vec<Vec<Vec<f64>>> {
+        assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        let lanes = sc.lanes();
         let mut out: Vec<Vec<Vec<f64>>> = Vec::with_capacity(samples.len());
-        for chunk in samples.chunks(SAMPLE_LANES) {
+        for chunk in samples.chunks(lanes) {
             if chunk.len() == 1 {
                 out.push(self.predict(chunk[0]));
                 continue;
@@ -233,7 +367,16 @@ impl QuantEsn {
                     out[base + l].push(self.readout_from_state(col));
                 }
             };
-            self.rollout_lanes(chunk, sc, Some(&mut emit));
+            // `pool: false` — per-step regression never reads the pooled
+            // feature, and with it disabled no narrow value grows with T.
+            match &mut sc.imp {
+                LaneKernel::Wide(buf) => {
+                    self.rollout_lanes_g(chunk, buf, false, Some(&mut emit))
+                }
+                LaneKernel::Narrow(buf) => {
+                    self.rollout_lanes_g(chunk, buf, false, Some(&mut emit))
+                }
+            }
         }
         out
     }
@@ -268,13 +411,21 @@ mod tests {
             let m = trained_cls(&data, dim, seed);
             for q in [4u8, 8] {
                 let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
-                let mut sc = LaneScratch::for_model(&qm);
-                // Batch widths crossing the lane boundary, including 1.
-                for take in [1usize, 3, 8, 9, 17] {
-                    let refs: Vec<&TimeSeries> = data.test.iter().take(take).collect();
-                    let batched = qm.classify_batch(&refs, &mut sc);
-                    let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
-                    assert_eq!(batched, scalar, "benchmark dim={dim} q={q} take={take}");
+                // Paper-shaped models must bound-select the narrow kernel;
+                // both kernels must match the scalar oracle bit-for-bit.
+                for choice in [KernelChoice::Auto, KernelChoice::Wide] {
+                    let mut sc = LaneScratch::for_model_with(&qm, choice);
+                    if choice == KernelChoice::Auto {
+                        assert_eq!(sc.kernel(), Kernel::Narrow, "dim={dim} q={q}");
+                        assert_eq!(sc.lanes(), SAMPLE_LANES_NARROW);
+                    }
+                    // Batch widths crossing both lane boundaries, including 1.
+                    for take in [1usize, 3, 8, 9, 17, 33] {
+                        let refs: Vec<&TimeSeries> = data.test.iter().take(take).collect();
+                        let batched = qm.classify_batch(&refs, &mut sc);
+                        let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+                        assert_eq!(batched, scalar, "dim={dim} q={q} take={take} {choice:?}");
+                    }
                 }
             }
         }
@@ -285,19 +436,20 @@ mod tests {
         let data = melborn_sized(3, 40, 30);
         let m = trained_cls(&data, 1, 7);
         let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
-        let mut sc = LaneScratch::for_model(&qm);
-        // Mixed sequence lengths within one lane pass.
+        // Mixed sequence lengths within one lane pass, on both kernels.
         let ragged: Vec<TimeSeries> = data
             .test
             .iter()
-            .take(9)
+            .take(17)
             .enumerate()
             .map(|(i, s)| truncated(s, 4 + 2 * (i % 8)))
             .collect();
         let refs: Vec<&TimeSeries> = ragged.iter().collect();
-        let batched = qm.classify_batch(&refs, &mut sc);
         let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
-        assert_eq!(batched, scalar);
+        for choice in [KernelChoice::Narrow, KernelChoice::Wide] {
+            let mut sc = LaneScratch::for_model_with(&qm, choice);
+            assert_eq!(qm.classify_batch(&refs, &mut sc), scalar, "{choice:?}");
+        }
     }
 
     #[test]
@@ -310,17 +462,53 @@ mod tests {
             ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
         );
         let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
-        let mut sc = LaneScratch::for_model(&qm);
         let long = &data.test[0];
         // Mixed lengths, some shorter than washout (empty prediction lists).
         let ragged: Vec<TimeSeries> =
             [120usize, 40, 10, 80, 33].iter().map(|&t| truncated(long, t)).collect();
         let refs: Vec<&TimeSeries> = ragged.iter().collect();
-        let batched = qm.predict_batch(&refs, &mut sc);
-        for (s, got) in refs.iter().zip(&batched) {
-            let want = qm.predict(s);
-            assert_eq!(got, &want, "T={}", s.inputs.rows());
+        for choice in [KernelChoice::Auto, KernelChoice::Wide] {
+            let mut sc = LaneScratch::for_model_with(&qm, choice);
+            let batched = qm.predict_batch(&refs, &mut sc);
+            for (s, got) in refs.iter().zip(&batched) {
+                let want = qm.predict(s);
+                assert_eq!(got, &want, "T={} {choice:?}", s.inputs.rows());
+            }
         }
+    }
+
+    /// The narrow kernel's pooled-horizon guard: a chunk longer than
+    /// `max_steps` must take the scalar fallback and stay bit-identical.
+    #[test]
+    fn narrow_long_sequence_guard_falls_back_to_scalar() {
+        let data = melborn_sized(1, 30, 20);
+        let m = trained_cls(&data, 1, 5);
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let mut sc = LaneScratch::for_model(&qm);
+        assert_eq!(sc.kernel(), Kernel::Narrow);
+        // Shrink the proven horizon artificially to force the guard.
+        sc.max_steps = 4;
+        let refs: Vec<&TimeSeries> = data.test.iter().take(9).collect();
+        let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+        assert_eq!(qm.classify_batch(&refs, &mut sc), scalar);
+    }
+
+    /// The narrow pooled horizon depends on the model's q: refreshing a
+    /// scratch for a different-q model of the same geometry (what the native
+    /// backend does between variants) must tighten/loosen it accordingly.
+    #[test]
+    fn refresh_horizon_tracks_model_bounds() {
+        let data = melborn_sized(1, 30, 20);
+        let m = trained_cls(&data, 1, 5);
+        let q4 = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let q8 = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
+        let mut sc = LaneScratch::for_model(&q4);
+        assert_eq!(sc.kernel(), Kernel::Narrow);
+        let h4 = sc.max_steps;
+        sc.refresh_horizon(&KernelBounds::analyze(&q8, 0));
+        let h8 = sc.max_steps;
+        assert!(h8 < h4, "q=8 horizon must be tighter than q=4 ({h8} vs {h4})");
+        assert_eq!(h8, (crate::quant::I32_LIMIT / crate::quant::qmax(8)) as usize);
     }
 
     #[test]

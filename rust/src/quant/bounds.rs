@@ -1,0 +1,362 @@
+//! Static per-model overflow-bound analysis for the narrow (`i32`) lane
+//! kernels.
+//!
+//! The lane-batched hot paths — the sensitivity-scoring frontier scatter in
+//! [`rollout`](super::rollout) and the native inference kernel in
+//! [`batch`](super::batch) — historically ran every lane multiply-add in
+//! `i64`, even though the quantized algebra provably never leaves a tiny
+//! integer range: states are ladder-clamped to `±qmax(q)`, weights are
+//! quantized to the same range, and every accumulator is a short sum of such
+//! products. Halving the element width to `i32` doubles the number of lanes
+//! per vector register (16 × i32 = two AVX2 registers per strip, where
+//! 8 × i64 needed the same two registers for half the lanes).
+//!
+//! Narrowing is only sound when **no intermediate can overflow `i32`**. This
+//! module derives conservative worst-case magnitudes from the model constants
+//! at plan/scratch build time and selects [`Kernel::Narrow`] only when they
+//! all fit; otherwise the bit-identical `i64` path ([`Kernel::Wide`]) is kept
+//! as the automatic fallback. The same formulas are mirrored in
+//! `tools/frontier_mirror.py` / `tools/native_batch_mirror.py`, which assert
+//! on real data that every narrow-path intermediate stays inside the bound.
+//!
+//! # Bound derivation
+//!
+//! Let `m = qmax(q)` (largest representable level), `W = max_i Σ_j |w_r[i,j]|`
+//! (largest CSR row L1 norm over the **actual** stored values — pruning only
+//! shrinks it, hand-edited weights only grow it), `A = max_k |w_r[k]|`,
+//! `V = max_i Σ_k |w_in[i,k]|`, `U = qmax(qz_u.q)` (the input quantizer's
+//! clamp) and `T` the longest sequence considered.
+//!
+//! **Scoring** (frontier algebra over state *deviations*):
+//! - a state deviation is a difference of two ladder outputs, so
+//!   `|dev| ≤ dev_max = 2m` — always;
+//! - a flip delta satisfies `|Δw| ≤ dw_max = A + m` (the flipped value is a
+//!   `flip_bit` output, clamped to `±m`; the narrow evaluator asserts this);
+//! - the flipped-row correction is `Δw·s'_prev` with `|s'_prev| ≤ m`, so
+//!   `|corr| ≤ corr_max = dw_max·m`;
+//! - a scatter row accumulator is `Σ_{j∈dirty} w[i,j]·dev_j (+ corr)`, and
+//!   every partial sum obeys `|·| ≤ scatter_max = W·dev_max + corr_max`;
+//! - a pooled-feature deviation accumulates at most one `dev_max` per step:
+//!   `|pooled_dev| ≤ pooled_max = T·dev_max`.
+//!
+//! **Inference** (lane-major rollout of full states):
+//! - `|s| ≤ m` and `|u_int| ≤ U` (hard clamps);
+//! - a recurrence accumulator obeys `|Σ_j w_r[i,j]·s_j| ≤ rec_acc_max = W·m`;
+//! - an input-projection accumulator (pre `m_in`) obeys
+//!   `|Σ_k w_in[i,k]·u_k| ≤ in_acc_max = V·U`;
+//! - the `MeanState` pooled accumulator grows with the sequence:
+//!   `|Σ_t s| ≤ T·m`, so the narrow kernel supports sequences up to
+//!   [`KernelBounds::max_steps`] and falls back beyond it.
+//!
+//! The widening points (`m_in` multiply, `<< F` shift, ladder input, readout
+//! patches) always compute in `i64`, so a narrow kernel whose bounds hold is
+//! **bit-identical** to the wide one — the narrow lanes never hold a value
+//! the wide lanes would not.
+
+use super::{qmax, QuantEsn};
+
+/// Everything a narrow intermediate must fit into.
+pub const I32_LIMIT: i64 = i32::MAX as i64;
+
+/// Lane-kernel width selected for a model (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `i32` lane elements, 16 lanes per strip — selected only when the
+    /// overflow bounds prove every intermediate fits.
+    Narrow,
+    /// `i64` lane elements, 8 lanes per strip — the bit-identical oracle and
+    /// the automatic fallback.
+    Wide,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Narrow => "narrow",
+            Kernel::Wide => "wide",
+        }
+    }
+}
+
+/// Caller-facing kernel override: `Auto` (bound-selected, the default) or a
+/// pinned width for bench/triage runs (`rcx serve|dse --kernel …`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Use the overflow-bound analysis (narrow whenever provably safe).
+    #[default]
+    Auto,
+    /// Force the narrow kernel. **Panics** at plan/scratch build time if the
+    /// bound analysis cannot prove it safe — pinning must never trade
+    /// exactness for speed.
+    Narrow,
+    /// Force the wide (`i64`) oracle path.
+    Wide,
+}
+
+impl KernelChoice {
+    /// Parse a CLI value (`auto` | `narrow` | `wide`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "narrow" => Some(Self::Narrow),
+            "wide" => Some(Self::Wide),
+            _ => None,
+        }
+    }
+
+    /// Resolve against a bound-selected kernel. Forcing `Narrow` when the
+    /// bounds say `Wide` panics: the narrow path would silently wrap.
+    pub fn resolve(self, auto: Kernel, what: &str) -> Kernel {
+        match self {
+            Self::Auto => auto,
+            Self::Wide => Kernel::Wide,
+            Self::Narrow => {
+                assert!(
+                    auto == Kernel::Narrow,
+                    "refusing --kernel narrow for {what}: the overflow-bound analysis \
+                     cannot prove i32 safety for this model"
+                );
+                Kernel::Narrow
+            }
+        }
+    }
+}
+
+/// Worst-case magnitudes derived from one model (all saturating, so
+/// adversarial hand-edited weights degrade to `Wide`, never to wraparound).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelBounds {
+    /// Largest CSR reservoir row L1 norm `max_i Σ_j |w_r[i,j]|`.
+    pub max_row_l1: i64,
+    /// Largest single reservoir weight magnitude.
+    pub max_w_abs: i64,
+    /// Largest input-weight row L1 norm `max_i Σ_k |w_in[i,k]|`.
+    pub max_in_l1: i64,
+    /// Ladder output clamp `qmax(q)` — bounds every state.
+    pub s_max: i64,
+    /// Input quantizer clamp `qmax(qz_u.q)` — bounds every quantized input.
+    pub u_max: i64,
+    /// Largest admissible flip value magnitude (`flip_bit` outputs are
+    /// clamped to `±qmax(q)`); the narrow scoring path asserts candidates
+    /// respect it.
+    pub new_val_limit: i64,
+    /// Worst-case state deviation `2·qmax(q)`.
+    pub dev_max: i64,
+    /// Worst-case frontier-scatter row accumulator (incl. the flipped-row
+    /// correction).
+    pub scatter_max: i64,
+    /// Worst-case pooled-feature deviation over the analyzed horizon.
+    pub pooled_max: i64,
+    /// Worst-case inference recurrence accumulator.
+    pub rec_acc_max: i64,
+    /// Worst-case inference input-projection accumulator (pre `m_in`).
+    pub in_acc_max: i64,
+    /// Sequence-length horizon the scoring bounds were computed for (longest
+    /// calibration sequence).
+    pub t_max: usize,
+    /// Longest sequence the narrow inference kernel's `MeanState` pooled
+    /// accumulator provably supports; longer chunks take the scalar fallback.
+    pub max_steps: usize,
+    scoring_narrow: bool,
+    inference_narrow: bool,
+}
+
+impl KernelBounds {
+    /// Analyze `model` for a workload whose longest sequence is `t_max`
+    /// steps (scoring: the longest calibration sequence; inference: pass 0 —
+    /// the per-chunk length is checked against [`KernelBounds::max_steps`]
+    /// at run time instead).
+    pub fn analyze(model: &QuantEsn, t_max: usize) -> Self {
+        let m = qmax(model.q);
+        let mut max_row_l1: i64 = 0;
+        let mut max_w_abs: i64 = 0;
+        for i in 0..model.n {
+            let mut l1: i64 = 0;
+            for k in model.w_r_indptr[i]..model.w_r_indptr[i + 1] {
+                let a = model.w_r_values[k].saturating_abs();
+                l1 = l1.saturating_add(a);
+                max_w_abs = max_w_abs.max(a);
+            }
+            max_row_l1 = max_row_l1.max(l1);
+        }
+        let mut max_in_l1: i64 = 0;
+        for i in 0..model.n {
+            let mut l1: i64 = 0;
+            for k in 0..model.input_dim {
+                l1 = l1.saturating_add(model.w_in[i * model.input_dim + k].saturating_abs());
+            }
+            max_in_l1 = max_in_l1.max(l1);
+        }
+        let s_max = m;
+        let u_max = qmax(model.qz_u.q);
+        let new_val_limit = m;
+        let dev_max = 2 * m;
+        let dw_max = max_w_abs.saturating_add(new_val_limit);
+        let corr_max = dw_max.saturating_mul(m);
+        let scatter_max = max_row_l1.saturating_mul(dev_max).saturating_add(corr_max);
+        let pooled_max = (t_max as i64).saturating_mul(dev_max);
+        let rec_acc_max = max_row_l1.saturating_mul(s_max);
+        let in_acc_max = max_in_l1.saturating_mul(u_max);
+        let scoring_narrow = scatter_max <= I32_LIMIT && pooled_max <= I32_LIMIT;
+        let inference_narrow =
+            rec_acc_max <= I32_LIMIT && in_acc_max <= I32_LIMIT && u_max <= I32_LIMIT;
+        let max_steps = if s_max > 0 { (I32_LIMIT / s_max) as usize } else { usize::MAX };
+        Self {
+            max_row_l1,
+            max_w_abs,
+            max_in_l1,
+            s_max,
+            u_max,
+            new_val_limit,
+            dev_max,
+            scatter_max,
+            pooled_max,
+            rec_acc_max,
+            in_acc_max,
+            t_max,
+            max_steps,
+            scoring_narrow,
+            inference_narrow,
+        }
+    }
+
+    /// Kernel the scoring engine (frontier algebra) may run at.
+    pub fn scoring_kernel(&self) -> Kernel {
+        if self.scoring_narrow {
+            Kernel::Narrow
+        } else {
+            Kernel::Wide
+        }
+    }
+
+    /// Kernel the inference engine (lane-major rollout) may run at.
+    pub fn inference_kernel(&self) -> Kernel {
+        if self.inference_narrow {
+            Kernel::Narrow
+        } else {
+            Kernel::Wide
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{henon_sized, melborn_sized, pen_sized};
+    use crate::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::quant::QuantSpec;
+
+    fn paper_model(q: u8) -> QuantEsn {
+        let data = melborn_sized(1, 40, 20);
+        let res = Reservoir::init(ReservoirSpec::paper(16, 1, 48, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        QuantEsn::from_model(&m, &data, QuantSpec::bits(q))
+    }
+
+    /// All paper-shaped models (q ≤ 8, sparse rows, short sequences) must
+    /// select narrow on both paths: row L1 ≤ nnz·qmax keeps every bound tiny.
+    #[test]
+    fn paper_models_select_narrow_everywhere() {
+        let shapes = [paper_model(4), paper_model(6), paper_model(8)];
+        for qm in &shapes {
+            let b = KernelBounds::analyze(qm, 4096);
+            assert_eq!(b.scoring_kernel(), Kernel::Narrow, "q={}", qm.q);
+            assert_eq!(b.inference_kernel(), Kernel::Narrow, "q={}", qm.q);
+            assert!(b.scatter_max <= I32_LIMIT);
+            assert!(b.max_steps > 1_000_000);
+        }
+        // The other two benchmark families too.
+        let pd = pen_sized(1, 30, 20);
+        let pres = Reservoir::init(ReservoirSpec::paper(16, 2, 48, 0.6, 1.0, 13));
+        let pm = EsnModel::fit(pres, &pd, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let hd = henon_sized(1, 120, 60);
+        let hres = Reservoir::init(ReservoirSpec::paper(20, 1, 60, 0.9, 1.0, 3));
+        let hm = EsnModel::fit(
+            hres,
+            &hd,
+            ReadoutSpec { lambda: 1e-4, washout: 10, features: Features::MeanState },
+        );
+        for q in [4u8, 6, 8] {
+            for (m, d) in [(&pm, &pd), (&hm, &hd)] {
+                let qm = QuantEsn::from_model(m, d, QuantSpec::bits(q));
+                let b = KernelBounds::analyze(&qm, 4096);
+                assert_eq!(b.scoring_kernel(), Kernel::Narrow);
+                assert_eq!(b.inference_kernel(), Kernel::Narrow);
+            }
+        }
+    }
+
+    /// Adversarial weight magnitudes right at the i32 boundary: the analysis
+    /// must flip to Wide exactly when the scatter bound crosses `i32::MAX`.
+    #[test]
+    fn boundary_magnitudes_select_wide() {
+        let mut qm = paper_model(8);
+        let m = qmax(8);
+        let dev = 2 * m;
+        // Inflate one row's single weight so that W·dev + (A+m)·m straddles
+        // the limit. Solve for the largest safe |w|:
+        //   w·dev + (w+m)·m ≤ I32_LIMIT  ⇔  w ≤ (I32_LIMIT − m²)/(dev + m)
+        // minus a margin covering the row's other (≤ qmax) weights, whose L1
+        // also enters W: ≤ ~5·127·254/381 ≈ 423 — 1000 is safely past it.
+        let w_safe = (I32_LIMIT - m * m) / (dev + m) - 1000;
+        let slot = 0usize;
+        qm.set_weight(slot, w_safe);
+        let b = KernelBounds::analyze(&qm, 16);
+        assert!(b.scatter_max <= I32_LIMIT, "w_safe must sit inside the bound");
+        // One more unit crosses it (the row may hold other weights, so the
+        // safe case above is conservative; the unsafe direction must be hard).
+        qm.set_weight(slot, w_safe + m * m);
+        let b = KernelBounds::analyze(&qm, 16);
+        assert_eq!(b.scoring_kernel(), Kernel::Wide, "scatter_max={}", b.scatter_max);
+        assert_eq!(b.inference_kernel(), Kernel::Wide);
+    }
+
+    /// A pathological sequence horizon alone (pooled deviation accumulator)
+    /// must force the scoring path wide even with tiny weights.
+    #[test]
+    fn huge_horizon_forces_wide_scoring() {
+        let qm = paper_model(4);
+        let t_max = (I32_LIMIT / (2 * qmax(4))) as usize + 1;
+        let b = KernelBounds::analyze(&qm, t_max);
+        assert_eq!(b.scoring_kernel(), Kernel::Wide);
+        // Inference is horizon-independent at analysis time; the per-chunk
+        // `max_steps` check handles long sequences instead.
+        assert_eq!(b.inference_kernel(), Kernel::Narrow);
+        assert!(b.max_steps >= (I32_LIMIT / qmax(4)) as usize);
+    }
+
+    /// Saturating arithmetic: absurd hand-edited weights must degrade to
+    /// Wide, not wrap around back into the narrow range.
+    #[test]
+    fn saturation_never_wraps_back_to_narrow() {
+        let mut qm = paper_model(6);
+        for slot in 0..qm.n_weights() {
+            qm.set_weight(slot, i64::MAX / 4);
+        }
+        let b = KernelBounds::analyze(&qm, 1 << 30);
+        assert_eq!(b.scatter_max, i64::MAX, "must saturate");
+        assert_eq!(b.scoring_kernel(), Kernel::Wide);
+        assert_eq!(b.inference_kernel(), Kernel::Wide);
+    }
+
+    #[test]
+    fn choice_resolution_rules() {
+        assert_eq!(KernelChoice::Auto.resolve(Kernel::Narrow, "t"), Kernel::Narrow);
+        assert_eq!(KernelChoice::Auto.resolve(Kernel::Wide, "t"), Kernel::Wide);
+        assert_eq!(KernelChoice::Wide.resolve(Kernel::Narrow, "t"), Kernel::Wide);
+        assert_eq!(KernelChoice::Narrow.resolve(Kernel::Narrow, "t"), Kernel::Narrow);
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("narrow"), Some(KernelChoice::Narrow));
+        assert_eq!(KernelChoice::parse("wide"), Some(KernelChoice::Wide));
+        assert_eq!(KernelChoice::parse("i32"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing --kernel narrow")]
+    fn forcing_narrow_past_the_bound_panics() {
+        let mut qm = paper_model(8);
+        qm.set_weight(0, i64::MAX / 8);
+        let b = KernelBounds::analyze(&qm, 16);
+        let _ = KernelChoice::Narrow.resolve(b.scoring_kernel(), "test");
+    }
+}

@@ -10,25 +10,33 @@
 //! - [`bitflip`]: two's-complement bit-flip fault injection (Eq. 4 probes).
 //! - [`rollout`]: the incremental sensitivity engine — cached calibration
 //!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation
-//!   (single-flip and [`BATCH_LANES`]-wide batched multi-flip), bit-identical
-//!   to the dense flip → evaluate → restore loop.
-//! - [`batch`]: lane-batched native *inference* — [`SAMPLE_LANES`] samples
-//!   per pass through the streamlined step, bit-identical per lane to the
-//!   scalar paths; the kernel behind the serving stack's native backend.
+//!   (single-flip and lane-batched multi-flip: [`BATCH_LANES`] = 8 wide i64
+//!   lanes or [`BATCH_LANES_NARROW`] = 16 narrow i32 lanes, bound-selected),
+//!   bit-identical to the dense flip → evaluate → restore loop.
+//! - [`batch`]: lane-batched native *inference* — [`SAMPLE_LANES`] (i64) or
+//!   [`SAMPLE_LANES_NARROW`] (i32) samples per pass through the streamlined
+//!   step, bit-identical per lane to the scalar paths; the kernel behind the
+//!   serving stack's native backend.
+//! - [`bounds`]: the static per-model overflow-bound analysis
+//!   ([`KernelBounds`]) that proves when the narrow (i32) lane kernels are
+//!   safe, and the [`Kernel`]/[`KernelChoice`] selection types.
 
 mod batch;
 mod bitflip;
+mod bounds;
 mod linear;
 mod qmodel;
 mod rollout;
 mod streamline;
 
-pub use batch::{LaneScratch, SAMPLE_LANES};
+pub use batch::{LaneScratch, SAMPLE_LANES, SAMPLE_LANES_NARROW};
 pub use bitflip::flip_bit;
+pub use bounds::{Kernel, KernelBounds, KernelChoice, I32_LIMIT};
 pub use linear::Quantizer;
 pub use qmodel::{QuantEsn, QuantSpec};
 pub use rollout::{
     BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantInputCache, BATCH_LANES,
+    BATCH_LANES_NARROW,
 };
 pub use streamline::ThresholdLadder;
 

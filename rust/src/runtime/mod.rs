@@ -5,9 +5,11 @@
 //! backends ship:
 //!
 //! - **Native** ([`NativeBackend`]) — lane-batched, bit-exact [`QuantEsn`]
-//!   rollouts on CPU ([`crate::quant::SAMPLE_LANES`] samples per pass,
-//!   optional intra-batch workers). No artifacts, no Python, serves
-//!   classification *and* regression; the default, and what CI exercises.
+//!   rollouts on CPU ([`crate::quant::SAMPLE_LANES_NARROW`] = 16 narrow i32
+//!   samples per pass when the model's overflow bounds allow, else
+//!   [`crate::quant::SAMPLE_LANES`] = 8 wide i64 lanes; optional intra-batch
+//!   workers). No artifacts, no Python, serves classification *and*
+//!   regression; the default, and what CI exercises.
 //! - **PJRT** ([`PjrtBackend`]) — AOT HLO-text artifacts produced by
 //!   `python/compile/aot.py`, compiled once on the CPU PJRT client
 //!   ([`Runtime`]) and executed from the hot path ([`pooled_states`] /

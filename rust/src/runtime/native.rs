@@ -1,17 +1,19 @@
 //! The native execution backend: lane-batched, bit-exact [`QuantEsn`]
 //! rollouts on CPU — no compiled artifacts, no Python, no PJRT.
 //!
-//! Batches are split into [`SAMPLE_LANES`]-wide lane chunks
-//! ([`QuantEsn::classify_batch`] / [`QuantEsn::predict_batch`]); with
-//! `workers > 1` the chunks are distributed round-robin over scoped threads,
-//! each owning one reusable [`LaneScratch`]. Chunk results are placed by
-//! index, so output order — and every bit of every prediction — is
-//! independent of the worker count.
+//! Batches are split into [`LaneScratch::lanes`]-wide lane chunks (16 i32
+//! lanes when the model's overflow bounds allow, else 8 i64 lanes — see
+//! `quant::bounds`; [`QuantEsn::classify_batch`] /
+//! [`QuantEsn::predict_batch`]); with `workers > 1` the chunks are
+//! distributed round-robin over scoped threads, each owning one reusable
+//! [`LaneScratch`]. Chunk results are placed by index, so output order — and
+//! every bit of every prediction — is independent of the worker count and of
+//! the kernel width.
 
 use anyhow::{ensure, Result};
 
 use crate::data::{Task, TimeSeries};
-use crate::quant::{LaneScratch, QuantEsn, SAMPLE_LANES};
+use crate::quant::{Kernel, KernelBounds, KernelChoice, LaneScratch, QuantEsn};
 
 use super::backend::{ExecBackend, Prediction};
 
@@ -23,11 +25,15 @@ pub struct NativeConfig {
     /// Worker threads for intra-batch chunk parallelism (min 1). One worker
     /// serves a lane chunk at a time; more overlap chunks of large batches.
     pub workers: usize,
+    /// Lane-kernel override (`rcx serve --kernel …`): `Auto` (default) lets
+    /// the overflow-bound analysis pick narrow i32×16 lanes whenever provably
+    /// safe; `Wide`/`Narrow` pin a path. Bit-identical either way.
+    pub kernel: KernelChoice,
 }
 
 impl Default for NativeConfig {
     fn default() -> Self {
-        Self { max_batch: 64, workers: 1 }
+        Self { max_batch: 64, workers: 1, kernel: KernelChoice::Auto }
     }
 }
 
@@ -35,25 +41,41 @@ impl Default for NativeConfig {
 pub struct NativeBackend {
     cfg: NativeConfig,
     /// One reusable scratch per worker; re-allocated when the served model
-    /// geometry changes (multi-variant serving swaps models per batch).
+    /// geometry or bound-selected kernel changes (multi-variant serving
+    /// swaps models per batch).
     scratches: Vec<LaneScratch>,
-    geometry: (usize, usize),
+    geometry: (usize, usize, Option<Kernel>),
 }
 
 impl NativeBackend {
     pub fn new(cfg: NativeConfig) -> Self {
-        Self { cfg, scratches: Vec::new(), geometry: (0, 0) }
+        Self { cfg, scratches: Vec::new(), geometry: (0, 0, None) }
     }
 
-    fn ensure_scratches(&mut self, model: &QuantEsn, workers: usize) {
-        let geom = (model.n, model.input_dim);
+    /// Ensure `workers` scratches exist for `model`; returns the lane width
+    /// the scratches (and hence the chunking) run at. Multi-variant serving
+    /// swaps models per batch, so the bound-selected kernel is re-resolved
+    /// every call (an O(nnz) scan — cheap against a rollout) and the
+    /// scratches rebuilt on any geometry or kernel change.
+    fn ensure_scratches(&mut self, model: &QuantEsn, workers: usize) -> usize {
+        let bounds = KernelBounds::analyze(model, 0);
+        let kern = self.cfg.kernel.resolve(bounds.inference_kernel(), "inference kernel");
+        let geom = (model.n, model.input_dim, Some(kern));
         if self.geometry != geom {
             self.scratches.clear();
             self.geometry = geom;
         }
         while self.scratches.len() < workers {
-            self.scratches.push(LaneScratch::for_model(model));
+            self.scratches.push(LaneScratch::for_model_with(model, self.cfg.kernel));
         }
+        // The narrow pooled-horizon guard depends on the model's q, not its
+        // geometry — variants sharing (n, input_dim, kernel) reuse the
+        // buffers but must NOT reuse a previous variant's (possibly looser)
+        // horizon.
+        for sc in &mut self.scratches {
+            sc.refresh_horizon(&bounds);
+        }
+        self.scratches[0].lanes()
     }
 
     /// Effective worker count for a batch of `chunks` lane chunks.
@@ -77,15 +99,17 @@ impl ExecBackend for NativeBackend {
         samples: &[&TimeSeries],
     ) -> Result<Vec<Prediction>> {
         ensure!(samples.len() <= self.cfg.max_batch, "batch overflows native backend cap");
-        let n_chunks = samples.len().div_ceil(SAMPLE_LANES);
+        // Worker sizing needs the chunk count, which needs the lane width —
+        // size for the widest chunking (narrow, 16) then clamp.
+        let lane_w = self.ensure_scratches(model, self.cfg.workers.max(1));
+        let n_chunks = samples.len().div_ceil(lane_w);
         let workers = self.workers_for(n_chunks);
-        self.ensure_scratches(model, workers);
         if workers <= 1 {
             let sc = &mut self.scratches[0];
             return Ok(predict_chunk(model, samples, sc));
         }
         // Round-robin the lane chunks over scoped workers; merge by index.
-        let chunks: Vec<&[&TimeSeries]> = samples.chunks(SAMPLE_LANES).collect();
+        let chunks: Vec<&[&TimeSeries]> = samples.chunks(lane_w).collect();
         let mut merged: Vec<Vec<Prediction>> = Vec::with_capacity(n_chunks);
         merged.resize_with(n_chunks, Vec::new);
         std::thread::scope(|scope| {
@@ -142,7 +166,8 @@ mod tests {
         let refs: Vec<&_> = data.test.iter().collect();
         let mut base: Option<Vec<Prediction>> = None;
         for workers in [1usize, 2, 4] {
-            let mut b = NativeBackend::new(NativeConfig { max_batch: 64, workers });
+            let cfg = NativeConfig { max_batch: 64, workers, ..Default::default() };
+            let mut b = NativeBackend::new(cfg);
             let got = b.execute_batch(&qm, &refs).unwrap();
             match &base {
                 None => base = Some(got),
@@ -151,10 +176,27 @@ mod tests {
         }
     }
 
+    /// The narrow (i32×16) and wide (i64×8) kernels must serve identical
+    /// predictions through the backend, on classification and regression.
+    #[test]
+    fn kernel_width_does_not_change_output() {
+        let (qm, data) = melborn_model();
+        let refs: Vec<&_> = data.test.iter().collect();
+        let mut outs = Vec::new();
+        for kernel in [KernelChoice::Narrow, KernelChoice::Wide, KernelChoice::Auto] {
+            let cfg = NativeConfig { max_batch: 64, workers: 2, kernel };
+            let mut b = NativeBackend::new(cfg);
+            outs.push(b.execute_batch(&qm, &refs).unwrap());
+        }
+        assert_eq!(outs[0], outs[1], "narrow != wide through the backend");
+        assert_eq!(outs[0], outs[2], "auto != pinned through the backend");
+    }
+
     #[test]
     fn classification_matches_scalar_model() {
         let (qm, data) = melborn_model();
-        let mut b = NativeBackend::new(NativeConfig { max_batch: 64, workers: 2 });
+        let cfg = NativeConfig { max_batch: 64, workers: 2, ..Default::default() };
+        let mut b = NativeBackend::new(cfg);
         let refs: Vec<&_> = data.test.iter().take(20).collect();
         let preds = b.execute_batch(&qm, &refs).unwrap();
         for (s, p) in refs.iter().zip(&preds) {
@@ -183,7 +225,8 @@ mod tests {
     #[test]
     fn batch_cap_is_enforced() {
         let (qm, data) = melborn_model();
-        let mut b = NativeBackend::new(NativeConfig { max_batch: 4, workers: 1 });
+        let cfg = NativeConfig { max_batch: 4, workers: 1, ..Default::default() };
+        let mut b = NativeBackend::new(cfg);
         let refs: Vec<&_> = data.test.iter().take(5).collect();
         assert!(b.execute_batch(&qm, &refs).is_err());
     }

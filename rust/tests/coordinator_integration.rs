@@ -20,7 +20,7 @@ use rcx::runtime::NativeConfig;
 
 fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
     ServeConfig {
-        backend: BackendConfig::Native(NativeConfig { max_batch, workers }),
+        backend: BackendConfig::Native(NativeConfig { max_batch, workers, ..Default::default() }),
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
     }
 }

@@ -1,19 +1,24 @@
 //! Exact-equivalence property tests for the incremental sensitivity engines:
 //! on every benchmark task, both feature-pooling modes and every paper
 //! bit-width, the sequential-incremental AND batched-incremental engines'
-//! Eq. 4 scores must be **bit-identical** (assert_eq on `f64`, no tolerance)
-//! to the dense flip → `evaluate_split` → restore oracle — which in turn must
+//! Eq. 4 scores — on **both** lane kernels, narrow (i32×16) and wide
+//! (i64×8) — must be **bit-identical** (assert_eq on `f64`, no tolerance) to
+//! the dense flip → `evaluate_split` → restore oracle — which in turn must
 //! agree with the allocating `evaluate_split_reference` path under perturbed
 //! weights. Property tests additionally pin lane-level batched evaluation to
 //! sequential `eval_flip` under random (possibly support-overlapping) batch
-//! compositions.
+//! compositions. Running under `cargo test` (debug) also exercises the
+//! narrow kernel's `debug_assert!` overflow guards across the whole
+//! benchmark × pooling × bit-width grid — they must never fire on a
+//! bound-approved model.
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
 use rcx::data::Dataset;
 use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
 use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
 use rcx::quant::{
-    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantEsn, QuantSpec, BATCH_LANES,
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, KernelChoice, QuantEsn,
+    QuantSpec, BATCH_LANES,
 };
 use rcx::rng::{Pcg64, Rng};
 
@@ -42,18 +47,26 @@ fn henon() -> (EsnModel, Dataset) {
     (m, data)
 }
 
-/// Full Eq. 4 sweep on all three engines; exact equality required.
+/// Full Eq. 4 sweep on all three engines — the batched one additionally on
+/// both pinned lane kernels; exact equality required everywhere.
 fn assert_engines_agree(model: &EsnModel, data: &Dataset, q: u8, max_calib: usize, tag: &str) {
     let qm = QuantEsn::from_model(model, data, QuantSpec::bits(q));
-    let mk = |engine| {
-        SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib, engine })
+    let mk = |engine, kernel| {
+        SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib, engine, kernel })
     };
-    let inc = mk(Engine::Incremental).scores(&qm, &data.train);
-    let dense = mk(Engine::Dense).scores(&qm, &data.train);
+    let auto = KernelChoice::Auto;
+    let inc = mk(Engine::Incremental, auto).scores(&qm, &data.train);
+    let dense = mk(Engine::Dense, auto).scores(&qm, &data.train);
     assert_eq!(inc.len(), qm.n_weights());
     assert_eq!(inc, dense, "{tag} q={q}: incremental != dense oracle");
-    let batched = mk(Engine::IncrementalBatched).scores(&qm, &data.train);
+    let batched = mk(Engine::IncrementalBatched, auto).scores(&qm, &data.train);
     assert_eq!(batched, dense, "{tag} q={q}: batched != dense oracle");
+    // Pinned kernels: the narrow (i32×16) path runs under its debug_assert
+    // overflow guards here; the wide (i64×8) path is the frozen oracle.
+    let narrow = mk(Engine::IncrementalBatched, KernelChoice::Narrow).scores(&qm, &data.train);
+    assert_eq!(narrow, dense, "{tag} q={q}: narrow kernel != dense oracle");
+    let wide = mk(Engine::IncrementalBatched, KernelChoice::Wide).scores(&qm, &data.train);
+    assert_eq!(wide, dense, "{tag} q={q}: wide kernel != dense oracle");
 }
 
 #[test]
@@ -138,6 +151,7 @@ fn incremental_deterministic_across_parallelism() {
             parallelism: workers,
             max_calib: 25,
             engine: Engine::Incremental,
+            ..Default::default()
         })
         .scores(&qm, &data.train)
     };
@@ -161,7 +175,12 @@ fn clamped_noop_flips_are_skipped_identically() {
     // Force a slot to the clamp-sensitive extreme and sweep both engines.
     qm.set_weight(3, m);
     let mk = |engine| {
-        SensitivityPruner::new(SensitivityConfig { parallelism: 1, max_calib: 15, engine })
+        SensitivityPruner::new(SensitivityConfig {
+            parallelism: 1,
+            max_calib: 15,
+            engine,
+            ..Default::default()
+        })
     };
     let inc = mk(Engine::Incremental).scores(&qm, &data.train);
     let dense = mk(Engine::Dense).scores(&qm, &data.train);

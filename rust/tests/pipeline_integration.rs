@@ -65,6 +65,7 @@ fn algorithm1_grid_is_consistent() {
         method: Method::Spearman,
         max_calib: 0,
         seed: 1,
+        ..Default::default()
     };
     let r = explore(&model, &data, &req);
     assert_eq!(r.configs.len(), 6);
@@ -100,6 +101,7 @@ fn sensitivity_beats_random_on_average_melborn() {
         method,
         max_calib: 96,
         seed: 5,
+        ..Default::default()
     };
     let sens = explore(&model, &data, &mk(Method::Sensitivity));
     let rand = explore(&model, &data, &mk(Method::Random));

@@ -2,10 +2,15 @@
 
 Mirrors: ThresholdLadder.apply, step_int, evaluate_split (classification +
 regression), CalibPlan caches, step_frontier, eval_flip_cls/reg, flip_bit,
-and the batched multi-flip path (eval_flips_batched lane algebra, the greedy
-support-disjoint packer, the dead-lane early exit via last_prev_nz).
-Asserts bit-identical Perf for every (slot, bit) flip on random sparse
-models, sequentially and through packed batches.
+the batched multi-flip path (eval_flips_batched lane algebra, the packer
+with overlap-tolerant top-up, the dead-lane early exit via last_prev_nz),
+and the narrow-kernel overflow-bound analysis (quant::bounds): the mirror
+computes the same scatter/pooled bound formula, selects 16 narrow lanes or
+8 wide lanes exactly like `CalibPlan::build`, and — Python ints being exact —
+*proves* the bound on real data by asserting every narrow-path intermediate
+stays inside i32. Asserts bit-identical Perf for every (slot, bit) flip on
+random sparse models, sequentially and through packed batches, including a
+model deliberately constructed to FAIL the bound and take the wide fallback.
 
 Usage:
     python tools/frontier_mirror.py --check   # CI gate: all correctness cases
@@ -17,11 +22,43 @@ import bisect
 import sys
 import time
 
+# Lane widths of the two kernels (rollout.rs BATCH_LANES / BATCH_LANES_NARROW)
 BATCH_LANES = 8
+BATCH_LANES_NARROW = 16
+
+# quant::bounds::I32_LIMIT
+I32_MAX = 2**31 - 1
 
 
 def qmax(q):
     return (1 << (q - 1)) - 1
+
+
+def kernel_bounds(model, t_max):
+    """Mirror of quant::bounds::KernelBounds::analyze (scoring side): the
+    exact same worst-case magnitudes, so the lane selection here matches the
+    Rust plan build decision for the same model constants."""
+    m = qmax(model.q)
+    row_l1 = 0
+    w_abs = 0
+    for i in range(model.n):
+        l1 = sum(abs(model.values[k]) for k in range(model.indptr[i], model.indptr[i + 1]))
+        row_l1 = max(row_l1, l1)
+        for k in range(model.indptr[i], model.indptr[i + 1]):
+            w_abs = max(w_abs, abs(model.values[k]))
+    dev_max = 2 * m
+    dw_max = w_abs + m          # flip values are clamped to ±m
+    corr_max = dw_max * m
+    scatter_max = row_l1 * dev_max + corr_max
+    pooled_max = t_max * dev_max
+    narrow = scatter_max <= I32_MAX and pooled_max <= I32_MAX
+    return {
+        "scatter_max": scatter_max,
+        "pooled_max": pooled_max,
+        "new_val_limit": m,
+        "narrow": narrow,
+        "lanes": BATCH_LANES_NARROW if narrow else BATCH_LANES,
+    }
 
 
 def flip_bit(v, bit, q):
@@ -153,7 +190,9 @@ def argmax(scores):
 
 
 class Plan:
-    def __init__(self, model):
+    def __init__(self, model, kernel="auto"):
+        """kernel: "auto" (bound-selected, like CalibPlan::build), "narrow"
+        (panics past a failed bound, like KernelChoice::Narrow) or "wide"."""
         self.m = model
         n = model.n
         # reverse index
@@ -213,6 +252,27 @@ class Plan:
                 entry["racc"] = racc
                 entry["se"] = se
             self.sp.append(entry)
+        # Lane-kernel selection (mirror of CalibPlan::build + KernelChoice).
+        t_max = max((sp["T"] for sp in self.sp), default=0)
+        self.bounds = kernel_bounds(model, t_max)
+        if kernel == "auto":
+            self.narrow = self.bounds["narrow"]
+        elif kernel == "wide":
+            self.narrow = False
+        elif kernel == "narrow":
+            assert self.bounds["narrow"], "refusing kernel=narrow: bound fails"
+            self.narrow = True
+        else:
+            raise ValueError(kernel)
+        self.lanes = BATCH_LANES_NARROW if self.narrow else BATCH_LANES
+
+    def _ck(self, v):
+        """Narrow-kernel overflow guard: the Python mirror of the Rust
+        debug_assert!s — Python ints are exact, so asserting every narrow
+        intermediate fits i32 *proves* the bound held on this data."""
+        if self.narrow:
+            assert -I32_MAX - 1 <= v <= I32_MAX, f"narrow bound violated: {v}"
+        return v
 
     def step_frontier(self, sp, t, i0, j0, dw, dirty):
         m = self.m
@@ -301,57 +361,76 @@ class Plan:
         return (min(sup), max(sup))
 
     def pack_batches(self, cands):
-        """Two-tier packing (mirror of CalibPlan::pack_batches):
+        """Three-tier packing (mirror of CalibPlan::pack_batches):
 
         1. same-support grouping — a flip's support depends only on its slot
            row, so same-row candidates share identical supports; full
-           BATCH_LANES-wide lanes of them are emitted first (the evaluator is
+           lane-width batches of them are emitted first (the evaluator is
            exact for any packing, and identical-support lanes share every
            frontier strip op);
-        2. disjoint greedy first-fit over the per-row remainders, scanned in
-           slot-row order."""
+        2. first-fit with overlap-tolerant top-up over the per-row
+           remainders, scanned in slot-row order: a candidate fits a batch
+           when its support is disjoint from the batch's dirty-row mask (the
+           mask grows) OR a subset of it (rides free — those rows are
+           already strip-processed; the mask is unchanged);
+        3. fold pass — a trailing open batch whose mask is covered by an
+           earlier batch's mask folds into it, capacity permitting."""
+        L = self.lanes
         groups = {}
         for ci, (slot, _nv) in enumerate(cands):
             groups.setdefault(self.slot_rc[slot][0], []).append(ci)
         closed, rest = [], []
         for row in sorted(groups):
             g = groups[row]
-            full = len(g) // BATCH_LANES * BATCH_LANES
-            for k in range(0, full, BATCH_LANES):
-                closed.append(g[k:k + BATCH_LANES])
+            full = len(g) // L * L
+            for k in range(0, full, L):
+                closed.append(g[k:k + L])
             rest.extend(g[full:])
-        open_batches = []  # (support_set, member_indices)
+        open_batches = []  # [support_mask_set, member_indices]
         for ci in rest:
             sup = self.flip_support(cands[ci][0])
-            for oi, (mask, members) in enumerate(open_batches):
-                if not (mask & sup):
-                    mask |= sup
+            for oi, ob in enumerate(open_batches):
+                mask, members = ob
+                if not (mask & sup) or sup <= mask:
+                    mask |= sup  # no-op for a subset rider
                     members.append(ci)
-                    if len(members) == BATCH_LANES:
+                    if len(members) == L:
                         closed.append(members)
                         open_batches.pop(oi)
                     break
             else:
-                open_batches.append((set(sup), [ci]))
+                open_batches.append([set(sup), [ci]])
+        i = len(open_batches)
+        while i > 1:
+            i -= 1
+            for j in range(i):
+                fits = len(open_batches[j][1]) + len(open_batches[i][1]) <= L
+                if fits and open_batches[i][0] <= open_batches[j][0]:
+                    open_batches[j][1].extend(open_batches[i][1])
+                    open_batches.pop(i)
+                    break
         closed.extend(members for (_mask, members) in open_batches)
         return closed
 
     def _step_batched(self, sp, t, b, dw, i0, j0, alive, cur):
         """Lane-vectorized frontier step: `cur` maps dirty neuron -> lane
-        deviation vector; returns (next frontier, per-lane nonzero count)."""
+        deviation vector; returns (next frontier, per-lane nonzero count).
+        In narrow mode every accumulator value is asserted to fit i32 — the
+        mirror of the Rust narrow kernel's debug_assert! guards."""
         m = self.m
+        L = self.lanes
         delta = {}
         for j, dv in cur.items():
             # mirror of the Rust lane mask: scatter only lanes with a nonzero
             # deviation at this neuron (adding w*0 would be identical)
-            nz = [l for l in range(BATCH_LANES) if dv[l] != 0]
+            nz = [l for l in range(L) if dv[l] != 0]
             for (row, k) in self.col[j]:
                 rd = delta.get(row)
                 if rd is None:
-                    rd = delta[row] = [0] * BATCH_LANES
+                    rd = delta[row] = [0] * L
                 w = m.values[k]
                 for l in nz:
-                    rd[l] += w * dv[l]
+                    rd[l] = self._ck(rd[l] + self._ck(w * dv[l]))
         for l in range(b):
             if not alive[l]:
                 continue
@@ -361,23 +440,25 @@ class Plan:
             if corr != 0:
                 rd = delta.get(i0[l])
                 if rd is None:
-                    rd = delta[i0[l]] = [0] * BATCH_LANES
-                rd[l] += corr
+                    rd = delta[i0[l]] = [0] * L
+                rd[l] = self._ck(rd[l] + self._ck(corr))
         nxt = {}
-        lane_nnz = [0] * BATCH_LANES
+        lane_nnz = [0] * L
         for row, rd in delta.items():
             for l in range(b):
                 if rd[l] == 0:
                     continue
-                # per-lane ladder re-evaluation: local walk from the cached
-                # baseline level (exact; mirror of the Rust batched path)
+                # per-lane ladder re-evaluation: bracket check at the cached
+                # baseline level (exact; mirror of the Rust batched path).
+                # The shift widens first — only the unshifted delta must fit
+                # the lane element.
                 acc = sp["acc"][t][row] + (rd[l] << m.f)
                 d = m.ladder.apply_from(acc, sp["s"][t][row]) - sp["s"][t][row]
                 if d != 0:
                     out = nxt.get(row)
                     if out is None:
-                        out = nxt[row] = [0] * BATCH_LANES
-                    out[l] = d
+                        out = nxt[row] = [0] * L
+                    out[l] = self._ck(d)
                     lane_nnz[l] += 1
         return nxt, lane_nnz
 
@@ -395,15 +476,29 @@ class Plan:
         return n_alive
 
     def eval_flips_batched(self, flips):
-        """Mirror of CalibPlan::eval_flips_batched: up to BATCH_LANES
+        """Mirror of CalibPlan::eval_flips_batched: up to self.lanes
         independent flips in one pass, bit-identical to eval_flip per lane."""
         m = self.m
         b = len(flips)
-        assert b <= BATCH_LANES
+        assert b <= self.lanes
+        if self.narrow and any(abs(nv) > self.bounds["new_val_limit"] for (_s, nv) in flips):
+            # Out-of-range hypothetical values void the scatter bound: route
+            # the batch through the wide kernel in <= BATCH_LANES chunks
+            # (lanes never interact), mirroring the Rust fallback.
+            saved = (self.narrow, self.lanes)
+            self.narrow, self.lanes = False, BATCH_LANES
+            try:
+                out = []
+                for k in range(0, b, BATCH_LANES):
+                    out.extend(self.eval_flips_batched(flips[k:k + BATCH_LANES]))
+            finally:
+                self.narrow, self.lanes = saved
+            return out
         dw = [nv - m.values[slot] for (slot, nv) in flips]
         i0 = [self.slot_rc[slot][0] for (slot, _nv) in flips]
         j0 = [self.slot_rc[slot][1] for (slot, _nv) in flips]
         base = plan_base(self, m)
+        L = self.lanes
         if m.task == "cls":
             correct = [0] * b
             for sp, (u, label, _) in zip(self.sp, m.samples):
@@ -419,9 +514,9 @@ class Plan:
                         for j, dv in cur.items():
                             pd = pooled.get(j)
                             if pd is None:
-                                pd = pooled[j] = [0] * BATCH_LANES
-                            for l in range(BATCH_LANES):
-                                pd[l] += dv[l]
+                                pd = pooled[j] = [0] * L
+                            for l in range(L):
+                                pd[l] = self._ck(pd[l] + dv[l])
                             for l in range(b):
                                 if dv[l] != 0:
                                     lane_any[l] = True
@@ -467,10 +562,12 @@ class Plan:
                                 count += 1
                         else:
                             for c in range(m.out_dim):
-                                dacc = [0] * BATCH_LANES
+                                # readout deltas accumulate in i64 in Rust
+                                # (widening loads) — no narrow assert here
+                                dacc = [0] * L
                                 for j, dv in cur.items():
                                     w = m.w_out[c][j]
-                                    for l in range(BATCH_LANES):
+                                    for l in range(L):
                                         dacc[l] += w * dv[l]
                                 cached = sp["se"][bidx + c]
                                 for l in range(b):
@@ -550,15 +647,24 @@ def all_candidates(model):
     return cands
 
 
-def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3, nnz=4):
+def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3,
+                     nnz=4, kernel="auto", expect_lanes=None, inflate=None):
     """Mirror of the Rust batched scorer's pipeline: locality-sort all
-    candidates by support row span, greedily pack support-disjoint batches,
+    candidates by support row span, pack batches (overlap-tolerant top-up),
     evaluate each batch through the lane algebra, and compare every lane
     against sequential eval_flip — plus random (overlapping, duplicate,
-    no-op-containing) batches that the packer never promises to produce."""
+    no-op-containing) batches that the packer never promises to produce.
+    `kernel` pins the lane width like KernelChoice; `inflate` multiplies the
+    reservoir weights to construct a model that FAILS the overflow bound
+    (the forced wide-fallback case); `expect_lanes` asserts the selection."""
     rng = random.Random(seed)
     model = Model(rng, n, q, task, features, washout, out_dim, nnz, T, n_samples)
-    plan = Plan(model)
+    if inflate:
+        model.values = [v * inflate for v in model.values]
+    plan = Plan(model, kernel=kernel)
+    if expect_lanes is not None:
+        assert plan.lanes == expect_lanes, \
+            f"kernel selection: expected {expect_lanes} lanes, got {plan.lanes}"
     cands = all_candidates(model)
     order = sorted(range(len(cands)), key=lambda i: plan.support_row_span(cands[i][0]) + (i,))
     sorted_cands = [cands[i] for i in order]
@@ -567,7 +673,7 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
     mismatches = 0
     total = 0
     for batch in batches:
-        assert 0 < len(batch) <= BATCH_LANES
+        assert 0 < len(batch) <= plan.lanes
         flips = [sorted_cands[ci] for ci in batch]
         perfs = plan.eval_flips_batched(flips)
         for (slot, nv), perf in zip(flips, perfs):
@@ -581,7 +687,7 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
     # adversarial compositions: random batches with support overlap,
     # duplicates and clamped no-op flips
     for _ in range(12):
-        bsz = 1 + rng.randrange(BATCH_LANES)
+        bsz = 1 + rng.randrange(plan.lanes)
         flips = []
         for _ in range(bsz):
             slot = rng.randrange(len(model.values))
@@ -596,8 +702,22 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
                 if mismatches <= 3:
                     print(f"  RANDOM-BATCH MISMATCH seed={seed} slot={slot} nv={nv}: "
                           f"batched={perf} seq={seq}")
+    # narrow plans: an out-of-range hypothetical value (never produced by
+    # flip_bit) must take the wide fallback and still match sequential
+    if plan.narrow:
+        flips = [(0, qmax(q) * 50), (1, flip_bit(model.values[1], 0, q))]
+        perfs = plan.eval_flips_batched(flips)
+        for (slot, nv), perf in zip(flips, perfs):
+            total += 1
+            seq = plan.eval_flip(slot, nv) if nv != model.values[slot] else plan_base(plan, model)
+            if perf != seq:
+                mismatches += 1
+                print(f"  FALLBACK MISMATCH seed={seed} slot={slot} nv={nv}: "
+                      f"batched={perf} seq={seq}")
+    fill = len(cands) / max(len(batches), 1)
     print(f"batched(task={task}, feat={features}, n={n}, q={q}, T={T}, ns={n_samples}, "
-          f"wo={washout}): {len(batches)} batches, {total} lanes, {mismatches} mismatches")
+          f"wo={washout}, lanes={plan.lanes}): {len(batches)} batches "
+          f"(fill {fill:.2f}), {total} lanes, {mismatches} mismatches")
     return mismatches
 
 
@@ -611,53 +731,71 @@ def run_checks():
     bad += run_case(6, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
     bad += run_case(7, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
     bad += run_case(8, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)  # washout == T edge
-    bad += run_batched_case(11, "cls", "mean", n=12, q=4, T=10, n_samples=8)
-    bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6)
+    # Auto selection: these models' bounds all hold, so they run the narrow
+    # 16-lane algebra under the mirror's i32-range asserts.
+    bad += run_batched_case(11, "cls", "mean", n=12, q=4, T=10, n_samples=8,
+                            expect_lanes=BATCH_LANES_NARROW)
+    bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6,
+                            expect_lanes=BATCH_LANES_NARROW)
     bad += run_batched_case(13, "cls", "last", n=12, q=4, T=10, n_samples=8)
     bad += run_batched_case(14, "cls", "last", n=10, q=8, T=6, n_samples=5)
     bad += run_batched_case(15, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
     bad += run_batched_case(16, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
     bad += run_batched_case(17, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
     bad += run_batched_case(18, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)
+    # Pinned-wide (8-lane i64 oracle path) on the same shapes.
+    bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6,
+                            kernel="wide", expect_lanes=BATCH_LANES)
+    bad += run_batched_case(15, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5,
+                            out_dim=2, kernel="wide", expect_lanes=BATCH_LANES)
+    # Forced wide FALLBACK: reservoir weights inflated until the scatter
+    # bound fails i32 — auto selection must reject narrow and the wide
+    # algebra must still match sequential exactly.
+    bad += run_batched_case(19, "cls", "mean", n=12, q=8, T=10, n_samples=6,
+                            inflate=10**8, expect_lanes=BATCH_LANES)
+    bad += run_batched_case(20, "reg", "mean", n=10, q=8, T=12, n_samples=3, washout=2,
+                            out_dim=2, inflate=10**8, expect_lanes=BATCH_LANES)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "frontier algorithm diverges from dense reference"
-    print("OK: incremental == batched == dense on all cases")
+    print("OK: incremental == batched == dense on all cases (narrow + wide kernels)")
 
 
 def run_perf():
-    """Timing: sequential eval_flip sweep vs packed batched sweep on a mirror
-    of the Melborn sweep config (n=50 neurons, ~5 nnz/row, T=24, 64 samples,
-    q=6, mean-state classification). Python constant factors differ from
-    Rust, but the ratio tracks the algorithmic win (shared passes + dead-lane
-    early exit); the Rust wall-clock is recorded by CI's bench-smoke job into
-    BENCH_ci.json."""
+    """Timing + fill: sequential eval_flip sweep vs packed batched sweep on a
+    mirror of the Melborn sweep config (n=50 neurons, ~5 nnz/row, T=24, 64
+    samples, q=6, mean-state classification), at both lane widths. Python
+    constant factors differ from Rust (the interpreted per-lane loops pay per
+    operation with no SIMD), but the packer fill and op-count ratios are the
+    algorithmic quantities EXPERIMENTS.md records; the Rust wall-clock is
+    recorded by CI's bench-smoke job into BENCH_ci.json (L3-g section)."""
     rng = random.Random(42)
     model = Model(rng, 50, 6, "cls", "mean", 0, 10, 5, 24, 64)
-    plan = Plan(model)
     cands = all_candidates(model)
     print(f"perf config: n=50 nnz/row=5 T=24 samples=64 q=6, {len(cands)} candidate flips")
 
+    plan = Plan(model, kernel="wide")
     t0 = time.perf_counter()
     seq = [plan.eval_flip(slot, nv) for (slot, nv) in cands]
     t_seq = time.perf_counter() - t0
+    print(f"sequential incremental: {t_seq:.3f}s  ({len(cands) / t_seq:.0f} flips/s)")
 
-    t0 = time.perf_counter()
     order = sorted(range(len(cands)), key=lambda i: plan.support_row_span(cands[i][0]) + (i,))
     sorted_cands = [cands[i] for i in order]
-    batches = plan.pack_batches(sorted_cands)
-    bat = [None] * len(cands)
-    for batch in batches:
-        perfs = plan.eval_flips_batched([sorted_cands[ci] for ci in batch])
-        for ci, perf in zip(batch, perfs):
-            bat[order[ci]] = perf
-    t_bat = time.perf_counter() - t0
-
-    assert bat == seq, "batched sweep diverged from sequential"
-    sizes = [len(b) for b in batches]
-    print(f"batches: {len(batches)} (mean lane fill {sum(sizes) / len(sizes):.2f})")
-    print(f"sequential incremental: {t_seq:.3f}s  ({len(cands) / t_seq:.0f} flips/s)")
-    print(f"batched incremental:    {t_bat:.3f}s  ({len(cands) / t_bat:.0f} flips/s)")
-    print(f"speedup (batched vs sequential): {t_seq / t_bat:.2f}x")
+    for kernel in ("wide", "narrow"):
+        plan = Plan(model, kernel=kernel)
+        t0 = time.perf_counter()
+        batches = plan.pack_batches(sorted_cands)
+        bat = [None] * len(cands)
+        for batch in batches:
+            perfs = plan.eval_flips_batched([sorted_cands[ci] for ci in batch])
+            for ci, perf in zip(batch, perfs):
+                bat[order[ci]] = perf
+        t_bat = time.perf_counter() - t0
+        assert bat == seq, f"batched ({kernel}) sweep diverged from sequential"
+        fill = len(cands) / len(batches)
+        print(f"batched {kernel:>6} ({plan.lanes:>2} lanes): {len(batches)} batches, "
+              f"mean lane fill {fill:.2f} of {plan.lanes}, {t_bat:.3f}s "
+              f"({len(cands) / t_bat:.0f} flips/s)")
 
 
 if __name__ == "__main__":

@@ -9,14 +9,49 @@ washout-gated per-step regression emission must all be bit-transparent.
 i64 ops are exact in Python ints and f64 == Python float, so equality here
 is bit-equality of the mirrored semantics.
 
+Since the narrow-kernel rework the mirror also carries the inference side of
+the overflow-bound analysis (`quant::bounds`): it computes the same
+`rec_acc`/`in_acc` worst-case formula, selects 16 narrow lanes or 8 wide
+lanes exactly like `LaneScratch::for_model`, and in narrow mode asserts every
+accumulator fits i32 (Python ints are exact, so the assert *proves* the bound
+on real data). One case deliberately FAILS the bound (inflated weights) and
+must take the wide fallback.
+
 Usage:
     python tools/native_batch_mirror.py   # the CI gate; no flags
 """
 import random
 
-from frontier_mirror import Ladder, Model, argmax, qmax  # noqa: F401
+from frontier_mirror import I32_MAX, Ladder, Model, argmax, qmax  # noqa: F401
 
+# Lane widths of the two kernels (batch.rs SAMPLE_LANES / SAMPLE_LANES_NARROW)
 SAMPLE_LANES = 8
+SAMPLE_LANES_NARROW = 16
+
+# The mirror feeds raw 8-bit sensor words (±127), matching the Rust input
+# quantizer clamp qmax(max(8, q)) for q <= 8.
+U_MAX = 127
+
+
+def inference_bounds(model, u_max=U_MAX):
+    """Mirror of quant::bounds::KernelBounds::analyze (inference side)."""
+    m = qmax(model.q)
+    row_l1 = 0
+    for i in range(model.n):
+        l1 = sum(abs(model.values[k]) for k in range(model.indptr[i], model.indptr[i + 1]))
+        row_l1 = max(row_l1, l1)
+    in_l1 = max((abs(w) for w in model.w_in), default=0)  # input_dim = 1
+    rec_acc_max = row_l1 * m
+    in_acc_max = in_l1 * u_max
+    narrow = rec_acc_max <= I32_MAX and in_acc_max <= I32_MAX and u_max <= I32_MAX
+    max_steps = I32_MAX // m if m > 0 else float("inf")
+    return {
+        "rec_acc_max": rec_acc_max,
+        "in_acc_max": in_acc_max,
+        "max_steps": max_steps,
+        "narrow": narrow,
+        "lanes": SAMPLE_LANES_NARROW if narrow else SAMPLE_LANES,
+    }
 
 
 # ---- scalar reference (QuantEsn::classify / QuantEsn::predict) ----
@@ -54,24 +89,50 @@ def readout_from_state(m, srow):
 
 # ---- lane-batched mirror (batch.rs rollout_lanes / step_lanes) ----
 
-def step_lanes(m, u_lanes, s_prev, s_next, active):
-    L = SAMPLE_LANES
+class Lanes:
+    """Kernel selection + narrow-range asserts (mirror of LaneScratch)."""
+
+    def __init__(self, model, kernel="auto"):
+        self.bounds = inference_bounds(model)
+        if kernel == "auto":
+            self.narrow = self.bounds["narrow"]
+        elif kernel == "wide":
+            self.narrow = False
+        elif kernel == "narrow":
+            assert self.bounds["narrow"], "refusing kernel=narrow: bound fails"
+            self.narrow = True
+        else:
+            raise ValueError(kernel)
+        self.lanes = SAMPLE_LANES_NARROW if self.narrow else SAMPLE_LANES
+        self.max_steps = self.bounds["max_steps"] if self.narrow else float("inf")
+
+    def ck(self, v):
+        """Narrow overflow guard (mirror of the Rust debug_assert!s)."""
+        if self.narrow:
+            assert -I32_MAX - 1 <= v <= I32_MAX, f"narrow bound violated: {v}"
+        return v
+
+
+def step_lanes(m, lk, width, u_lanes, s_prev, s_next, active):
+    L = lk.lanes
     for i in range(m.n):
-        acc_in = [m.w_in[i] * u_lanes[l] for l in range(L)]  # input_dim = 1
+        # input projection, lane-wide (input_dim = 1)
+        acc_in = [lk.ck(m.w_in[i] * u_lanes[l]) for l in range(width)]
         acc_r = [0] * L
         for k in range(m.indptr[i], m.indptr[i + 1]):
             w = m.values[k]
             base = m.indices[k] * L
-            for l in range(L):
-                acc_r[l] += w * s_prev[base + l]
-        for l in range(L):
+            for l in range(width):
+                acc_r[l] = lk.ck(acc_r[l] + lk.ck(w * s_prev[base + l]))
+        for l in range(width):
             if active[l]:
+                # the m_in multiply and the << F shift widen to i64 first
                 s_next[i * L + l] = m.ladder.apply(m.m_in * acc_in[l] + (acc_r[l] << m.f))
 
 
-def rollout_lanes(m, chunk, emit):
-    """chunk: list of u_int sequences (≤ SAMPLE_LANES). emit(t, l, col)."""
-    L = SAMPLE_LANES
+def rollout_lanes(m, lk, chunk, pool, emit):
+    """chunk: list of u_int sequences (≤ lk.lanes). emit(t, l, col)."""
+    L = lk.lanes
     assert len(chunk) <= L
     s_prev = [0] * (m.n * L)
     s_next = [0] * (m.n * L)
@@ -84,17 +145,18 @@ def rollout_lanes(m, chunk, emit):
             active[l] = t < len(u)
             if active[l]:
                 u_lanes[l] = u[t]
-        step_lanes(m, u_lanes, s_prev, s_next, active)
-        if m.features == "mean":
-            for j in range(m.n):
-                for l in range(L):
-                    if active[l]:
-                        pooled[j * L + l] += s_next[j * L + l]
-        else:
-            for l, u in enumerate(chunk):
-                if t + 1 == len(u):
-                    for j in range(m.n):
-                        pooled[j * L + l] = s_next[j * L + l]
+        step_lanes(m, lk, len(chunk), u_lanes, s_prev, s_next, active)
+        if pool:
+            if m.features == "mean":
+                for j in range(m.n):
+                    for l in range(L):
+                        if active[l]:
+                            pooled[j * L + l] = lk.ck(pooled[j * L + l] + s_next[j * L + l])
+            else:
+                for l, u in enumerate(chunk):
+                    if t + 1 == len(u):
+                        for j in range(m.n):
+                            pooled[j * L + l] = s_next[j * L + l]
         for l in range(len(chunk)):
             if active[l]:
                 emit(t, l, [s_next[j * L + l] for j in range(m.n)])
@@ -102,12 +164,19 @@ def rollout_lanes(m, chunk, emit):
     return pooled
 
 
-def classify_batch(m, samples):
-    L = SAMPLE_LANES
+def classify_batch(m, lk, samples):
+    L = lk.lanes
     out = []
     for k in range(0, len(samples), L):
         chunk = samples[k:k + L]
-        pooled = rollout_lanes(m, chunk, lambda t, l, col: None)
+        t_max = max((len(u) for u in chunk), default=0)
+        if len(chunk) == 1 or (
+            lk.narrow and m.features == "mean" and t_max > lk.max_steps
+        ):
+            # scalar fallback: lone sample, or narrow pooled horizon exceeded
+            out.extend(scalar_classify(m, u) for u in chunk)
+            continue
+        pooled = rollout_lanes(m, lk, chunk, True, lambda t, l, col: None)
         for l, u in enumerate(chunk):
             col = [pooled[j * L + l] for j in range(m.n)]
             t_factor = float(len(u)) if m.features == "mean" else 1.0
@@ -115,10 +184,13 @@ def classify_batch(m, samples):
     return out
 
 
-def predict_batch(m, samples):
+def predict_batch(m, lk, samples):
     out = []
-    for k in range(0, len(samples), SAMPLE_LANES):
-        chunk = samples[k:k + SAMPLE_LANES]
+    for k in range(0, len(samples), lk.lanes):
+        chunk = samples[k:k + lk.lanes]
+        if len(chunk) == 1:
+            out.append(scalar_predict(m, chunk[0]))
+            continue
         base = len(out)
         for _ in chunk:
             out.append([])
@@ -127,7 +199,8 @@ def predict_batch(m, samples):
             if t >= m.washout:
                 out[base + l].append(readout_from_state(m, col))
 
-        rollout_lanes(m, chunk, emit)
+        # pool=False: per-step regression never reads the pooled feature
+        rollout_lanes(m, lk, chunk, False, emit)
     return out
 
 
@@ -135,22 +208,31 @@ def predict_batch(m, samples):
 
 def ragged_inputs(rng, n_samples, t_lo, t_hi):
     return [
-        [rng.randint(-127, 127) for _ in range(rng.randint(t_lo, t_hi))]
+        [rng.randint(-U_MAX, U_MAX) for _ in range(rng.randint(t_lo, t_hi))]
         for _ in range(n_samples)
     ]
 
 
-def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo, t_hi):
+def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo, t_hi,
+             kernel="auto", expect_lanes=None, inflate=None, clamp_steps=None):
     rng = random.Random(seed)
     # Model's own samples are unused — we feed ragged ones directly.
     m = Model(rng, n, q, task, features, washout, out_dim, nnz, t_hi, 1)
+    if inflate:
+        m.values = [v * inflate for v in m.values]
+    lk = Lanes(m, kernel=kernel)
+    if expect_lanes is not None:
+        assert lk.lanes == expect_lanes, \
+            f"kernel selection: expected {expect_lanes} lanes, got {lk.lanes}"
+    if clamp_steps is not None:
+        lk.max_steps = clamp_steps  # force the long-sequence scalar fallback
     samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
     mismatches = 0
     if task == "cls":
-        got = classify_batch(m, samples)
+        got = classify_batch(m, lk, samples)
         want = [scalar_classify(m, u) for u in samples]
     else:
-        got = predict_batch(m, samples)
+        got = predict_batch(m, lk, samples)
         want = [scalar_predict(m, u) for u in samples]
     for i, (g, w) in enumerate(zip(got, want)):
         if g != w:
@@ -159,29 +241,48 @@ def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo,
                 print(f"  MISMATCH seed={seed} sample={i}: lane={g} scalar={w}")
     print(
         f"native-batch(task={task}, feat={features}, n={n}, q={q}, wo={washout}, "
-        f"ns={n_samples}, T=[{t_lo},{t_hi}]): {mismatches} mismatches"
+        f"ns={n_samples}, T=[{t_lo},{t_hi}], lanes={lk.lanes}): {mismatches} mismatches"
     )
     return mismatches
 
 
 def run_checks():
     bad = 0
-    # Batch sizes crossing the lane boundary, uniform and ragged lengths.
+    # Batch sizes crossing both lane boundaries, uniform and ragged lengths.
+    # Auto selection: these models' bounds hold, so the 16-lane narrow
+    # algebra runs under the mirror's i32-range asserts.
     bad += run_case(1, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
-                    n_samples=1, t_lo=10, t_hi=10)
+                    n_samples=1, t_lo=10, t_hi=10, expect_lanes=SAMPLE_LANES_NARROW)
     bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
-                    n_samples=17, t_lo=4, t_hi=20)
+                    n_samples=33, t_lo=4, t_hi=20, expect_lanes=SAMPLE_LANES_NARROW)
     bad += run_case(3, "cls", "last", n=12, q=4, washout=0, out_dim=3, nnz=4,
-                    n_samples=9, t_lo=3, t_hi=15)
+                    n_samples=17, t_lo=3, t_hi=15)
     bad += run_case(4, "cls", "last", n=10, q=8, washout=0, out_dim=2, nnz=3,
-                    n_samples=8, t_lo=1, t_hi=1)   # T=1 edge, exactly one lane pass
+                    n_samples=16, t_lo=1, t_hi=1)   # T=1 edge, one lane pass
     bad += run_case(5, "reg", "mean", n=12, q=4, washout=5, out_dim=2, nnz=4,
-                    n_samples=11, t_lo=2, t_hi=25)  # some T < washout -> empty rows
+                    n_samples=19, t_lo=2, t_hi=25)  # some T < washout -> empty rows
     bad += run_case(6, "reg", "mean", n=14, q=8, washout=0, out_dim=1, nnz=5,
                     n_samples=16, t_lo=6, t_hi=6)
+    # Pinned-wide (8-lane i64 oracle path).
+    bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
+                    n_samples=33, t_lo=4, t_hi=20, kernel="wide",
+                    expect_lanes=SAMPLE_LANES)
+    # Forced wide FALLBACK: inflated weights fail the rec_acc bound — auto
+    # must reject narrow, and the wide lanes must still match scalar.
+    bad += run_case(7, "cls", "mean", n=12, q=8, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=4, t_hi=12, inflate=10**8,
+                    expect_lanes=SAMPLE_LANES)
+    bad += run_case(8, "reg", "mean", n=10, q=8, washout=2, out_dim=2, nnz=3,
+                    n_samples=9, t_lo=3, t_hi=14, inflate=10**8,
+                    expect_lanes=SAMPLE_LANES)
+    # Narrow pooled-horizon guard: artificially tiny max_steps must route
+    # long chunks to the scalar fallback, bit-identically.
+    bad += run_case(9, "cls", "mean", n=12, q=6, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=6, t_hi=18, clamp_steps=4,
+                    expect_lanes=SAMPLE_LANES_NARROW)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "lane-batched kernel diverges from the scalar reference"
-    print("OK: lane-batched == scalar on all cases")
+    print("OK: lane-batched == scalar on all cases (narrow + wide kernels)")
 
 
 if __name__ == "__main__":
