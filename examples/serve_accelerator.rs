@@ -46,11 +46,16 @@ fn main() -> anyhow::Result<()> {
     } else {
         BackendConfig::Native(NativeConfig { max_batch: 32, workers: 2, ..Default::default() })
     };
-    println!("starting coordinator on the {} backend...", backend.name());
+    // Shard the native engine across the Pareto front: one executor (its own
+    // backend) per variant group, so mixed-variant traffic scales across
+    // cores. Bit-identical to a single executor at any shard count.
+    let shards = if matches!(backend, BackendConfig::Native(_)) { 2 } else { 1 };
+    println!("starting coordinator on the {} backend ({shards} shard(s))...", backend.name());
     let server = Server::start(
         ServeConfig {
             backend,
             batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
+            shards,
         },
         registry.specs(),
     )?;

@@ -12,6 +12,9 @@
 //!         worker count through the full coordinator (serve smoke)
 //!   L3-g  narrow (i32×16) vs wide (i64×8) lane kernels: scoring sweep
 //!         head-to-head (bit-identity asserted) + pack fill at 16 lanes
+//!   L3-h  SIMD dispatch head-to-head: every lane kernel (i16×32 / i32×16 /
+//!         i64×8) × every available ISA tier (scalar / AVX2 / AVX-512),
+//!         scoring + inference, with hard bit-identity asserts
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
@@ -31,8 +34,8 @@ use rcx::dse::calibration_split;
 use rcx::hw::{self, Topology};
 use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
 use rcx::quant::{
-    flip_bit, CalibPlan, FlipCandidate, Kernel, KernelChoice, LaneScratch, QuantEsn, QuantSpec,
-    BATCH_LANES_NARROW,
+    flip_bit, CalibPlan, FlipCandidate, Isa, Kernel, KernelChoice, LaneScratch, QuantEsn,
+    QuantSpec, BATCH_LANES_NARROW,
 };
 use rcx::runtime::{pooled_states, NativeConfig, Runtime};
 
@@ -217,6 +220,95 @@ fn main() {
         );
     }
 
+    section("L3-h SIMD dispatch head-to-head (kernel width x ISA tier, bit-identity asserted)");
+    {
+        // Every lane kernel at every *available* ISA tier, over the same
+        // scoring sweep and the same 64-sample inference batch. The first
+        // combo (wide kernel, scalar tier — the pre-SIMD oracle) is the
+        // baseline; every other combo must produce bit-identical Perf values
+        // and class predictions, or the bench aborts.
+        let tiers: Vec<Isa> =
+            [Isa::Scalar, Isa::Avx2, Isa::Avx512].into_iter().filter(|t| t.available()).collect();
+        let kernels = [KernelChoice::Wide, KernelChoice::Narrow, KernelChoice::Narrow16];
+        let refs: Vec<&_> = data.test.iter().take(64).collect();
+        let scalar_cls: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+        let mut rows = String::new();
+        let mut baseline: Option<(f64, f64, Vec<rcx::esn::Perf>)> = None;
+        for &choice in &kernels {
+            // Candidates/sort/packing depend on the kernel width but not the
+            // ISA tier — compute once per kernel, reuse across tiers.
+            let mut packed: Option<(Vec<FlipCandidate>, Vec<Vec<usize>>)> = None;
+            for &isa in &tiers {
+                // Scoring sweep through a pinned plan (packing excluded from
+                // the timed region).
+                let plan = CalibPlan::build_pinned(&qm, calib, choice, isa);
+                if packed.is_none() {
+                    let cands = all_flip_candidates(&plan, &qm);
+                    let sorted = locality_sorted(&plan, &cands);
+                    let batches = plan.pack_batches(&sorted);
+                    packed = Some((sorted, batches));
+                }
+                let (sorted, batches) = packed.as_ref().expect("packed per kernel");
+                let mut sc = rcx::quant::BatchScratch::for_plan(&plan);
+                let t0 = Instant::now();
+                let mut perfs: Vec<Option<rcx::esn::Perf>> = vec![None; sorted.len()];
+                for batch in batches {
+                    let flips: Vec<FlipCandidate> =
+                        batch.iter().map(|&ci| sorted[ci]).collect();
+                    let out = plan.eval_flips_batched(&qm, &flips, &mut sc);
+                    for (&ci, p) in batch.iter().zip(out) {
+                        perfs[ci] = Some(p);
+                    }
+                }
+                let scoring_s = t0.elapsed().as_secs_f64();
+                let perfs: Vec<rcx::esn::Perf> =
+                    perfs.into_iter().map(|p| p.expect("unpacked candidate")).collect();
+                // Inference through a pinned scratch.
+                let mut lsc = LaneScratch::for_model_pinned(&qm, choice, isa);
+                assert_eq!(
+                    qm.classify_batch(&refs, &mut lsc),
+                    scalar_cls,
+                    "kernel={choice:?} isa={isa:?}: batched classify != scalar"
+                );
+                let st = time_it(3, 20, || qm.classify_batch(&refs, &mut lsc));
+                let classify_us = st.median.as_secs_f64() * 1e6;
+                match &baseline {
+                    None => baseline = Some((scoring_s, classify_us, perfs)),
+                    Some((_, _, base_perfs)) => assert_eq!(
+                        &perfs, base_perfs,
+                        "kernel={choice:?} isa={isa:?}: scoring != wide/scalar oracle"
+                    ),
+                }
+                let (base_s, base_us, _) = baseline.as_ref().expect("baseline set");
+                let kname = plan.kernel().name();
+                println!(
+                    "kernel={kname:<9} isa={:<7} scoring {scoring_s:>8.3}s ({:.2}x)  \
+                     classify {classify_us:>8.1}us ({:.2}x)",
+                    isa.name(),
+                    base_s / scoring_s,
+                    base_us / classify_us
+                );
+                if !rows.is_empty() {
+                    rows.push(',');
+                }
+                rows.push_str(&format!(
+                    concat!(
+                        "\n    {{\"kernel\": \"{}\", \"isa\": \"{}\", ",
+                        "\"scoring_s\": {:.6}, \"classify_us\": {:.1}, ",
+                        "\"scoring_speedup\": {:.3}, \"classify_speedup\": {:.3}}}"
+                    ),
+                    kname,
+                    isa.name(),
+                    scoring_s,
+                    classify_us,
+                    base_s / scoring_s,
+                    base_us / classify_us
+                ));
+            }
+        }
+        report.add("l3h_simd", format!("{{\"bit_identical\": true, \"rows\": [{rows}\n  ]}}"));
+    }
+
     section("L3-c hardware model evaluation (cost+timing+activity+power)");
     let st = time_it(3, 30, || hw::evaluate(&qm, Topology::Pipelined { t_unroll: 24 }, &data.test));
     println!("{st}");
@@ -234,10 +326,13 @@ fn main() {
     });
     println!("{st}  ({:.1} Mops/s)", 1.0 / st.median.as_secs_f64() / 1e6);
 
-    section("L3-e native lane-batched inference kernel (8 samples/pass vs scalar loop)");
+    // Pinned wide so `native_kernel.speedup` stays the PR-3 8-lane-vs-scalar
+    // metric (the iteration-5 waiting table was defined for it); per-kernel
+    // inference numbers incl. the i16x32 tier live in L3-h above.
+    section("L3-e native lane-batched inference kernel (8 wide samples/pass vs scalar loop)");
     {
         let refs: Vec<&_> = data.test.iter().take(64).collect();
-        let mut sc = LaneScratch::for_model(&qm);
+        let mut sc = LaneScratch::for_model_with(&qm, KernelChoice::Wide);
         let st_lane = time_it(5, 50, || qm.classify_batch(&refs, &mut sc));
         let st_scalar = time_it(5, 50, || -> Vec<usize> {
             refs.iter().map(|s| qm.classify(s)).collect()
@@ -278,6 +373,7 @@ fn main() {
                         max_batch,
                         max_wait: std::time::Duration::from_millis(2),
                     },
+                    shards: 1,
                 },
                 vec![VariantSpec::new("q6", qm.clone())],
             )

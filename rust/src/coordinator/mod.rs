@@ -6,15 +6,16 @@
 //! backend's handles are `!Send`):
 //!
 //! ```text
-//! clients ──mpsc──▶ executor thread
-//!                     ├─ router: group pending requests by model variant
-//!                     ├─ batcher: flush on max_batch or max_wait deadline
-//!                     ├─ backend.execute_batch
-//!                     │    ├─ native: lane-batched bit-exact QuantEsn
-//!                     │    │          rollouts (SAMPLE_LANES-wide, optional
-//!                     │    │          intra-batch workers) — the default
-//!                     │    └─ pjrt:   AOT XLA/Pallas rollout artifact
-//!                     └─ respond via per-request channel
+//! clients ──ShardRouter──▶ executor shard 0..S   (S = ServeConfig::shards)
+//!                            ├─ router: its variant group, local queues
+//!                            ├─ batcher: flush on max_batch or max_wait
+//!                            ├─ backend.execute_batch   (one engine/shard)
+//!                            │    ├─ native: lane-batched bit-exact
+//!                            │    │          QuantEsn rollouts (i16/i32/i64
+//!                            │    │          lanes, SIMD-dispatched strips,
+//!                            │    │          optional intra-batch workers)
+//!                            │    └─ pjrt:   AOT XLA/Pallas artifact
+//!                            └─ respond via per-request channel
 //! ```
 //!
 //! Variants are shared handles ([`VariantSpec`]/[`VariantRegistry`]): a DSE
@@ -22,7 +23,11 @@
 //! weights (`DseResult::variant_registry`, `dse::pareto_variants`). The
 //! native backend serves classification ([`Prediction::Class`]) and per-step
 //! regression ([`Prediction::Values`]), so all three paper benchmarks are
-//! servable with no compiled artifacts present.
+//! servable with no compiled artifacts present. With `shards > 1` the
+//! [`ShardRouter`] pins each variant group to its own executor thread (its
+//! own backend engine), so mixed-variant traffic scales across cores
+//! instead of serializing on one engine — served bits are identical at any
+//! shard count.
 
 mod batcher;
 mod metrics;
@@ -31,7 +36,7 @@ mod server;
 
 pub use batcher::{BatchDecision, Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::VariantRegistry;
+pub use registry::{ShardRouter, VariantRegistry};
 pub use server::{Client, Request, Response, ServeConfig, Server, VariantSpec};
 
 // Re-exported so serving call-sites need only this module.

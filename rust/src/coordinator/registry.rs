@@ -2,12 +2,53 @@
 //! shared handles, so registering a whole DSE result set (or its Pareto
 //! front) never clones weight arrays. `rcx serve` and the integration tests
 //! consume [`VariantRegistry::specs`] directly.
+//!
+//! The registry side also owns the **shard routing rule** ([`ShardRouter`]):
+//! when the server runs in multi-executor mode (`ServeConfig::shards`), each
+//! variant group is pinned to one shard thread — round-robin by global
+//! variant index, so a mixed-q Pareto front spreads across shards instead of
+//! clustering all hot variants on one engine.
 
 use std::sync::Arc;
 
 use crate::quant::QuantEsn;
 
 use super::server::VariantSpec;
+
+/// The coordinator's variant → shard routing rule. Pure arithmetic (no
+/// allocation), copied into every [`super::Client`]: global variant `v` is
+/// owned by shard `v % shards` at local queue index `v / shards`, so a
+/// shard's local queues are exactly its variant group in ascending global
+/// order.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRouter {
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    /// A router over `shards` executor shards serving `n_variants` variants.
+    /// Clamped to `[1, n_variants]` — more shards than variants would idle.
+    pub fn new(n_variants: usize, shards: usize) -> Self {
+        Self { n_shards: shards.max(1).min(n_variants.max(1)) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// `(shard, local queue index)` owning global variant `v`. Total and
+    /// in-range on the shard axis for any `v` (an out-of-range variant maps
+    /// to an out-of-range *local* index, which the shard's ingest rejects —
+    /// preserving the single-executor rejection semantics).
+    pub fn route(&self, variant: usize) -> (usize, usize) {
+        (variant % self.n_shards, variant / self.n_shards)
+    }
+
+    /// Global variant indices of `shard`'s group, in local-index order.
+    pub fn group(&self, shard: usize, n_variants: usize) -> impl Iterator<Item = usize> {
+        (shard..n_variants).step_by(self.n_shards)
+    }
+}
 
 /// Keyed, insertion-ordered collection of serving variants.
 #[derive(Clone, Default)]
@@ -84,5 +125,28 @@ mod tests {
         // Specs share, not clone: same allocation behind both handles.
         let specs = reg.specs();
         assert!(Arc::ptr_eq(&specs[1].model, &q8));
+    }
+
+    #[test]
+    fn shard_router_partitions_all_variants_exactly_once() {
+        for (n_variants, shards) in [(1usize, 1usize), (5, 2), (7, 3), (4, 9), (6, 6)] {
+            let r = ShardRouter::new(n_variants, shards);
+            assert!(r.n_shards() >= 1 && r.n_shards() <= n_variants.max(1));
+            // route() and group() must agree, and every variant must land in
+            // exactly one shard at a consistent local index.
+            let mut seen = vec![false; n_variants];
+            for shard in 0..r.n_shards() {
+                for (local, v) in r.group(shard, n_variants).enumerate() {
+                    assert_eq!(r.route(v), (shard, local), "v={v}");
+                    assert!(!std::mem::replace(&mut seen[v], true), "v={v} routed twice");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "router dropped a variant");
+            // Out-of-range variants map to a valid shard with an
+            // out-of-range local index (rejected at ingest, never a panic).
+            let (shard, local) = r.route(n_variants + 3);
+            assert!(shard < r.n_shards());
+            assert!(local >= r.group(shard, n_variants).count());
+        }
     }
 }

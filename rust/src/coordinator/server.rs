@@ -1,5 +1,19 @@
 //! The serving loop: router over model variants, dynamic batching, execution
 //! through the pluggable [`ExecBackend`], response delivery.
+//!
+//! # Sharded (multi-executor) mode
+//!
+//! With `ServeConfig::shards > 1` the server runs one executor thread per
+//! **variant group** instead of a single thread serializing every variant:
+//! the [`super::ShardRouter`] pins each variant to a shard (round-robin by
+//! global index), each shard thread builds its **own** backend engine from
+//! the shared [`BackendConfig`] and runs the full ingest → per-variant queue
+//! → deadline-aware batcher → execute loop over just its group. Clients
+//! route at submit time (pure arithmetic, no cross-shard locks); metrics
+//! aggregate into one shared sink. Because lane kernels never mix samples
+//! across batches, shard count — like worker count and kernel width — cannot
+//! change a single served bit; it only changes which core computes it
+//! (asserted by `sharded_serving_is_bit_identical_to_single_executor`).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -15,6 +29,7 @@ use crate::runtime::{BackendConfig, ExecBackend, Prediction};
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::registry::ShardRouter;
 
 /// A deployable model variant (one point of the DSE space). The model is a
 /// shared handle — a [`super::VariantRegistry`] (or a whole DSE Pareto
@@ -42,9 +57,16 @@ impl VariantSpec {
 pub struct ServeConfig {
     pub backend: BackendConfig,
     pub batcher: BatcherConfig,
+    /// Executor shards (0 or 1 = the classic single-executor loop). Each
+    /// shard owns its own backend engine and serves one variant group;
+    /// clamped to the variant count at startup. Predictions are bit-identical
+    /// at any shard count.
+    pub shards: usize,
 }
 
-/// One inference request.
+/// One inference request. `variant` is the index **within the receiving
+/// shard's group** (the [`Client`] translates global → local at submit time;
+/// with one shard the two coincide).
 pub struct Request {
     pub variant: usize,
     pub series: TimeSeries,
@@ -65,39 +87,62 @@ enum Control {
     Shutdown,
 }
 
-/// Running server: executor thread owning the execution backend.
+/// Running server: one executor thread per shard, each owning its own
+/// execution backend (one shard total unless `ServeConfig::shards` asks for
+/// more).
 pub struct Server {
-    tx: Sender<Control>,
+    txs: Vec<Sender<Control>>,
+    router: ShardRouter,
     metrics: Arc<Metrics>,
     variants: Vec<String>,
-    join: Option<JoinHandle<Result<()>>>,
+    joins: Vec<JoinHandle<Result<()>>>,
 }
 
 impl Server {
-    /// Start the executor thread. The backend is built *inside* the thread
-    /// (PJRT handles are `!Send`); startup failures (missing artifacts,
-    /// compile errors) propagate out of this call.
+    /// Start the executor shard(s). Backends are built *inside* their shard
+    /// threads (PJRT handles are `!Send`); startup failures (missing
+    /// artifacts, compile errors) from any shard propagate out of this call.
     pub fn start(cfg: ServeConfig, variants: Vec<VariantSpec>) -> Result<Server> {
         anyhow::ensure!(!variants.is_empty(), "no variants to serve");
         let metrics = Arc::new(Metrics::default());
         let keys: Vec<String> = variants.iter().map(|v| v.key.clone()).collect();
-        let (tx, rx) = mpsc::channel::<Control>();
-        let m2 = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("rcx-executor".into())
-            .spawn(move || executor(cfg, variants, rx, m2, ready_tx))
-            .context("spawn executor")?;
-        // Propagate startup failures (artifact missing, compile error).
-        ready_rx
-            .recv()
-            .context("executor died during startup")??;
-        Ok(Server { tx, metrics, variants: keys, join: Some(join) })
+        let router = ShardRouter::new(variants.len(), cfg.shards.max(1));
+        let mut txs = Vec::with_capacity(router.n_shards());
+        let mut joins = Vec::with_capacity(router.n_shards());
+        let mut readies = Vec::with_capacity(router.n_shards());
+        for shard in 0..router.n_shards() {
+            // The shard's variant group, in local-index order (the executor's
+            // queue index *is* the local index the router computes).
+            let group: Vec<VariantSpec> =
+                router.group(shard, variants.len()).map(|v| variants[v].clone()).collect();
+            let (tx, rx) = mpsc::channel::<Control>();
+            let m2 = Arc::clone(&metrics);
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let cfg2 = cfg.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("rcx-executor-{shard}"))
+                .spawn(move || executor(cfg2, group, rx, m2, ready_tx))
+                .context("spawn executor")?;
+            txs.push(tx);
+            joins.push(join);
+            readies.push(ready_rx);
+        }
+        // Propagate startup failures (artifact missing, compile error) from
+        // every shard before declaring the server up.
+        for ready_rx in readies {
+            ready_rx.recv().context("executor died during startup")??;
+        }
+        Ok(Server { txs, router, metrics, variants: keys, joins })
     }
 
-    /// A cloneable client handle.
+    /// A cloneable client handle (owns the shard routing table).
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
+        Client { txs: Arc::new(self.txs.clone()), router: self.router }
+    }
+
+    /// Number of executor shards actually running (after clamping).
+    pub fn n_shards(&self) -> usize {
+        self.router.n_shards()
     }
 
     /// Routing index of a variant key.
@@ -114,38 +159,53 @@ impl Server {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: drains the queue, joins the executor.
+    /// Graceful shutdown: drains every shard's queue, joins all executors.
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Control::Shutdown);
-        if let Some(j) = self.join.take() {
-            j.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        for tx in &self.txs {
+            let _ = tx.send(Control::Shutdown);
         }
-        Ok(())
+        let mut result = Ok(());
+        for j in self.joins.drain(..) {
+            match j.join() {
+                Ok(r) => {
+                    if let Err(e) = r {
+                        result = Err(e);
+                    }
+                }
+                Err(_) => result = Err(anyhow::anyhow!("executor panicked")),
+            }
+        }
+        result
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Control::Shutdown);
-        if let Some(j) = self.join.take() {
+        for tx in &self.txs {
+            let _ = tx.send(Control::Shutdown);
+        }
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-/// Cloneable request submitter.
+/// Cloneable request submitter: routes each request to the shard owning its
+/// variant (pure arithmetic — no locks on the submit path).
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Control>,
+    txs: Arc<Vec<Sender<Control>>>,
+    router: ShardRouter,
 }
 
 impl Client {
     /// Submit asynchronously; returns the response channel.
     pub fn submit(&self, variant: usize, series: TimeSeries) -> Result<Receiver<Response>> {
+        let (shard, local) = self.router.route(variant);
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.tx
+        self.txs[shard]
             .send(Control::Req(Request {
-                variant,
+                variant: local,
                 series,
                 submitted: Instant::now(),
                 respond: resp_tx,
@@ -161,7 +221,10 @@ impl Client {
     }
 }
 
-/// Executor: owns the backend; routes, batches, executes, responds.
+/// Executor: one shard's serving loop. Owns its own backend engine; routes
+/// over its variant group (local indices), batches per variant with
+/// deadline-aware flush, executes, responds. With one shard this is the
+/// whole server.
 fn executor(
     cfg: ServeConfig,
     variants: Vec<VariantSpec>,

@@ -14,7 +14,7 @@ use crate::data::{Dataset, TimeSeries};
 use crate::esn::{EsnModel, Perf};
 use crate::hw::{self, HwReport, Topology};
 use crate::pruning::{prune_with_compensation, Method, SensitivityConfig, SensitivityPruner};
-use crate::quant::{KernelChoice, QuantEsn, QuantInputCache, QuantSpec};
+use crate::quant::{Isa, Kernel, KernelChoice, QuantEsn, QuantInputCache, QuantSpec};
 
 /// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
 #[derive(Clone, Debug)]
@@ -69,11 +69,30 @@ impl AccelConfig {
     }
 }
 
+/// The lane kernel + ISA tier the sensitivity scorer *actually resolved* for
+/// one q-level — recorded in [`DseResult`] so downstream reports show what
+/// ran, not what was requested (`--kernel auto` can resolve differently per
+/// q: a 4-bit model typically reaches `narrow16` while its 8-bit sibling
+/// stops at `narrow`).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelReport {
+    pub q: u8,
+    /// What the caller asked for (`DseRequest::kernel`).
+    pub requested: KernelChoice,
+    /// What the overflow-bound analysis resolved it to.
+    pub kernel: Kernel,
+    /// SIMD ISA tier the lane strips dispatch to on this machine.
+    pub isa: Isa,
+}
+
 /// DSE result set plus bookkeeping.
 #[derive(Clone, Debug)]
 pub struct DseResult {
     pub configs: Vec<AccelConfig>,
     pub scoring_seconds: f64,
+    /// Per-q resolved scoring-kernel metadata (empty for non-sensitivity
+    /// methods — no lane kernel runs there).
+    pub kernels: Vec<KernelReport>,
 }
 
 impl DseResult {
@@ -104,6 +123,7 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
     let calib = calibration_split(data, req.max_calib);
     let mut configs = Vec::new();
     let mut scoring_seconds = 0.0;
+    let mut kernels = Vec::new();
     // One pre-quantized calibration input cache for the whole sweep: inputs
     // are quantized as 8-bit sensor words for every q ≤ 8, so the cache is
     // identical across the paper's Q = {4,6,8} grid. `matches` re-validates
@@ -134,8 +154,16 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             // input-cache injection. Bit-identical to the sequential/dense
             // oracles, so the produced configuration set is unchanged; only
             // the sweep wall-clock differs.
-            SensitivityPruner::new(SensitivityConfig { kernel: req.kernel, ..Default::default() })
-                .scores_with_inputs(&qmodel, calib, input_cache.as_ref())
+            let pruner = SensitivityPruner::new(SensitivityConfig {
+                kernel: req.kernel,
+                ..Default::default()
+            });
+            // Record the *resolved* kernel for this q, straight from the
+            // pruner's own slicing + bound analysis so the report cannot
+            // drift from what the plan build actually selects.
+            let (kernel, isa) = pruner.resolved_kernel(&qmodel, calib);
+            kernels.push(KernelReport { q, requested: req.kernel, kernel, isa });
+            pruner.scores_with_inputs(&qmodel, calib, input_cache.as_ref())
         } else {
             req.method.pruner(req.seed).scores(&qmodel, calib)
         };
@@ -148,7 +176,7 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
             configs.push(AccelConfig { q, p, method: req.method, perf, perf_base, model: pruned });
         }
     }
-    DseResult { configs, scoring_seconds }
+    DseResult { configs, scoring_seconds, kernels }
 }
 
 /// Hardware evaluation of every configuration in a DSE result
@@ -230,6 +258,39 @@ mod tests {
         let (_, data) = setup();
         let c = calibration_split(&data, 10);
         assert_eq!(c.len(), 10);
+    }
+
+    /// Sensitivity DSE must record the *resolved* scorer kernel per q-level
+    /// (narrow16 on the paper-shaped q=4 model) plus a machine-valid ISA;
+    /// non-sensitivity methods record nothing (no lane kernel runs).
+    #[test]
+    fn dse_records_resolved_kernel_metadata() {
+        let (m, data) = setup();
+        let req = DseRequest {
+            q_levels: vec![4],
+            pruning_rates: vec![50.0],
+            method: Method::Sensitivity,
+            max_calib: 20,
+            seed: 3,
+            ..Default::default()
+        };
+        let r = explore(&m, &data, &req);
+        assert_eq!(r.kernels.len(), 1);
+        let k = &r.kernels[0];
+        assert_eq!(k.q, 4);
+        assert_eq!(k.requested, KernelChoice::Auto);
+        assert_eq!(k.kernel, Kernel::Narrow16, "q=4 paper shape must reach i16");
+        assert!(k.isa.available());
+
+        let wide = explore(
+            &m,
+            &data,
+            &DseRequest { kernel: KernelChoice::Wide, ..req.clone() },
+        );
+        assert_eq!(wide.kernels[0].kernel, Kernel::Wide, "pin must be reported as resolved");
+
+        let random = explore(&m, &data, &DseRequest { method: Method::Random, ..req });
+        assert!(random.kernels.is_empty());
     }
 
     #[test]

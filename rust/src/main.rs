@@ -71,13 +71,15 @@ impl Args {
         Benchmark::parse(name).with_context(|| format!("unknown benchmark {name}"))
     }
 
-    /// Lane-kernel override for the narrow/wide integer paths (`auto` =
-    /// overflow-bound-selected — the default; `narrow`/`wide` pin a path for
-    /// bench and triage runs, bit-identical either way).
+    /// Lane-kernel override for the integer lane paths (`auto` =
+    /// overflow-bound-selected — the default; `narrow16`/`narrow`/`wide` pin
+    /// a width for bench and triage runs, bit-identical either way). The
+    /// *resolved* kernel — not this request — is what serve startup logs and
+    /// `DseResult` metadata report.
     fn kernel(&self) -> Result<KernelChoice> {
         let s = self.flag("kernel").unwrap_or("auto");
         KernelChoice::parse(s)
-            .with_context(|| format!("--kernel: expected auto|narrow|wide, got {s:?}"))
+            .with_context(|| format!("--kernel: expected auto|narrow16|narrow|wide, got {s:?}"))
     }
 
     fn full(&self) -> bool {
@@ -116,16 +118,19 @@ fn print_help() {
          commands:\n\
          \u{20}  hyperopt  [--iters N]                 stage-1 random search\n\
          \u{20}  dse       [--method M] [--q 4,6,8]    Algorithm 1 over Q x P\n\
-         \u{20}            [--kernel auto|narrow|wide]  pin the scorer's lane kernel\n\
+         \u{20}            [--kernel auto|narrow16|narrow|wide]  pin the scorer's\n\
+         \u{20}            lane kernel (resolved kernel + ISA tier are reported)\n\
          \u{20}  synth     [--q Q] [--p P] [--rtl F]   hardware-realize one config\n\
          \u{20}  table1 | table2 | table3              reproduce paper tables\n\
          \u{20}  fig3 | fig4                           reproduce paper figures (CSV)\n\
          \u{20}  serve     [--backend native|pjrt] [--q 4,8 | --variants pareto]\n\
          \u{20}            [--requests N] [--max-batch B] [--workers W]\n\
-         \u{20}            [--kernel auto|narrow|wide]\n\
+         \u{20}            [--shards S] [--kernel auto|narrow16|narrow|wide]\n\
          \u{20}            batching inference coordinator; the native backend\n\
          \u{20}            serves every benchmark bit-exactly with no artifacts\n\
-         \u{20}            (narrow i32x16 lanes when the overflow bounds allow),\n\
+         \u{20}            (i16x32 / i32x16 lanes when the overflow bounds allow,\n\
+         \u{20}            SIMD-dispatched; startup logs the *resolved* kernel),\n\
+         \u{20}            `--shards S` runs one executor per variant group,\n\
          \u{20}            `--variants pareto` hot-loads a DSE Pareto front"
     );
 }
@@ -169,6 +174,17 @@ fn cmd_dse(args: &Args) -> Result<()> {
     println!("DSE on {} with {} pruning...", b.name(), method.name());
     let r = explore(&model, &data, &req);
     println!("scored in {:.1}s; configurations:", r.scoring_seconds);
+    // Report what the scorer actually ran, not what was requested: the
+    // bound analysis resolves `--kernel auto` per q-level.
+    for k in &r.kernels {
+        println!(
+            "  scorer kernel q={}: {} on {} (requested {})",
+            k.q,
+            k.kernel.name(),
+            k.isa.name(),
+            k.requested.name()
+        );
+    }
     for c in &r.configs {
         println!("  s(q={}, p={:>4.0}%): {}", c.q, c.p, c.perf);
     }
@@ -360,15 +376,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let backend_name = backend.name();
 
+    // Startup report: the kernel each variant *resolves* to (the bound
+    // analysis decides; a pin past its bound fails fast right here) plus the
+    // probed ISA tier — not the requested `--kernel` value.
+    if let BackendConfig::Native(ncfg) = &backend {
+        for spec in registry.specs() {
+            let (kern, isa) = rcx::quant::resolve_inference(&spec.model, ncfg.kernel);
+            println!(
+                "variant {}: kernel={} isa={} (requested {})",
+                spec.key,
+                kern.name(),
+                isa.name(),
+                ncfg.kernel.name()
+            );
+        }
+    }
+
+    let shards: usize = args.flag_or("shards", 1)?;
     let server = Server::start(
-        ServeConfig { backend, batcher: BatcherConfig { max_batch, ..Default::default() } },
+        ServeConfig {
+            backend,
+            batcher: BatcherConfig { max_batch, ..Default::default() },
+            shards,
+        },
         registry.specs(),
     )?;
     let client = server.client();
     let keys: Vec<String> = server.variant_keys().to_vec();
     println!(
-        "serving {n_requests} requests on the {backend_name} backend ({}, variants: {})...",
+        "serving {n_requests} requests on the {backend_name} backend \
+         ({}, {} shard(s), variants: {})...",
         b.name(),
+        server.n_shards(),
         keys.join(",")
     );
     let t0 = std::time::Instant::now();

@@ -25,8 +25,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::TimeSeries;
 use crate::quant::{
-    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, KernelChoice, QuantEsn,
-    QuantInputCache,
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, Isa, Kernel, KernelBounds,
+    KernelChoice, QuantEsn, QuantInputCache,
 };
 
 use super::Pruner;
@@ -35,14 +35,16 @@ use super::Pruner;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Engine {
     /// Batched multi-flip scoring: flips are packed into lane-width batches
-    /// ([`crate::quant::BATCH_LANES_NARROW`] = 16 narrow i32 lanes when the
-    /// overflow-bound analysis allows, else [`crate::quant::BATCH_LANES`] = 8
-    /// wide i64 lanes; full same-support lanes first, then first-fit with
-    /// overlap-tolerant top-up) that share one pass over the cached plan,
-    /// with the frontier scatter vectorized over batch lanes. Bit-identical
-    /// to both oracles below on either kernel (asserted in
-    /// `tests/incremental_equivalence.rs` and at bench time); measured in the
-    /// perf_hotpaths L3-b′/L3-g sections (EXPERIMENTS.md §Perf).
+    /// ([`crate::quant::BATCH_LANES_NARROW16`] = 32 narrow i16 lanes when
+    /// the overflow-bound analysis allows, else
+    /// [`crate::quant::BATCH_LANES_NARROW`] = 16 i32 lanes, else
+    /// [`crate::quant::BATCH_LANES`] = 8 wide i64 lanes; full same-support
+    /// lanes first, then first-fit with overlap-tolerant top-up) that share
+    /// one pass over the cached plan, with the frontier scatter running on
+    /// the runtime-dispatched SIMD strips (`quant::simd`). Bit-identical to
+    /// both oracles below on every kernel (asserted in
+    /// `tests/incremental_equivalence.rs` and at bench time); measured in
+    /// the perf_hotpaths L3-b′/L3-g/L3-h sections (EXPERIMENTS.md §Perf).
     #[default]
     IncrementalBatched,
     /// Cached calibration plan + sparse delta-propagation rollouts, one flip
@@ -66,11 +68,12 @@ pub struct SensitivityConfig {
     /// module default, so `Method::Sensitivity.pruner()` users get the fast
     /// path); the sequential and dense oracles remain selectable.
     pub engine: Engine,
-    /// Lane-kernel override for the batched engine: `Auto` (default) lets the
-    /// overflow-bound analysis pick narrow (i32×16) whenever provably safe;
-    /// `Wide`/`Narrow` pin a path for bench and triage runs (narrow panics if
-    /// the bound fails — exactness is never traded). Ignored by the
-    /// sequential and dense oracles.
+    /// Lane-kernel override for the batched engine: `Auto` (default) lets
+    /// the overflow-bound analysis pick the narrowest provably safe width
+    /// (i16×32 → i32×16 → i64×8); `Wide`/`Narrow`/`Narrow16` pin a path for
+    /// bench and triage runs (a narrow pin panics if its bound fails —
+    /// exactness is never traded). Ignored by the sequential and dense
+    /// oracles.
     pub kernel: KernelChoice,
 }
 
@@ -110,6 +113,19 @@ impl SensitivityPruner {
         } else {
             calib
         }
+    }
+
+    /// The lane kernel + ISA tier the batched engine will *actually* run for
+    /// `(model, calib)` under this config — the same calibration slicing and
+    /// overflow-bound analysis the plan build performs, exposed so reporting
+    /// callers (DSE metadata, serve logs) show what runs instead of
+    /// re-deriving it and risking drift. Panics exactly when the plan build
+    /// would (a pinned kernel past its bound).
+    pub fn resolved_kernel(&self, model: &QuantEsn, calib: &[TimeSeries]) -> (Kernel, Isa) {
+        let calib = self.calib_slice(calib);
+        let t_max = calib.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
+        let bounds = KernelBounds::analyze(model, t_max);
+        (self.cfg.kernel.resolve(bounds.scoring_kernel(), "scoring plan"), Isa::detect())
     }
 
     /// Score with a caller-provided pre-quantized input cache (shared across
@@ -438,8 +454,10 @@ mod tests {
 
     #[test]
     fn batched_kernels_match_dense_oracle_exactly() {
-        // Narrow (i32×16) and wide (i64×8) lane kernels, pinned explicitly,
-        // must both reproduce the dense oracle bit-for-bit.
+        // Narrow16 (i16×32), narrow (i32×16) and wide (i64×8) lane kernels,
+        // pinned explicitly, must all reproduce the dense oracle
+        // bit-for-bit. (The q=4 paper shape is provably i16-safe, so the
+        // narrow16 pin cannot refuse.)
         let (qm, data) = tiny_model();
         let mk = |engine, kernel| {
             SensitivityPruner::new(SensitivityConfig {
@@ -450,9 +468,12 @@ mod tests {
             })
         };
         let dense = mk(Engine::Dense, KernelChoice::Auto).scores(&qm, &data.train);
+        let narrow16 =
+            mk(Engine::IncrementalBatched, KernelChoice::Narrow16).scores(&qm, &data.train);
         let narrow =
             mk(Engine::IncrementalBatched, KernelChoice::Narrow).scores(&qm, &data.train);
         let wide = mk(Engine::IncrementalBatched, KernelChoice::Wide).scores(&qm, &data.train);
+        assert_eq!(narrow16, dense, "narrow16 kernel must be bit-identical to the dense oracle");
         assert_eq!(narrow, dense, "narrow kernel must be bit-identical to the dense oracle");
         assert_eq!(wide, dense, "wide kernel must be bit-identical to the dense oracle");
     }

@@ -13,21 +13,29 @@
 //! per-lane active mask: a lane retires at its own sequence end, its pooled
 //! feature / emitted predictions frozen at that point.
 //!
-//! # Lane element width: narrow (i32) vs wide (i64)
+//! # Lane element width: narrow16 (i16) vs narrow (i32) vs wide (i64)
 //!
 //! Every value the rollout holds is hard-clamped — states by the threshold
 //! ladder to `±qmax(q)`, quantized inputs by the input quantizer — and the
 //! per-neuron accumulators are short sums of clamped products, so
-//! [`KernelBounds`] can usually prove the whole per-step algebra fits `i32`:
-//! `rec_acc ≤ W·qmax`, `in_acc ≤ V·u_max` (see `bounds.rs`). When it does,
-//! [`LaneScratch`] instantiates the kernel at `(i32, 16)` — twice the lanes
-//! per register pair — and otherwise falls back to the bit-identical
-//! `(i64, 8)` oracle. The widening points (the `m_in` multiply, the `<< F`
-//! shift, the ladder input and every readout) always compute in `i64`, so
-//! the narrow kernel is exact whenever selected; the one quantity that grows
-//! with sequence length (the `MeanState` pooled accumulator, `≤ T·qmax`) is
-//! guarded per chunk: sequences longer than [`KernelBounds::max_steps`] take
-//! the scalar path instead (bit-identical, just unbatched).
+//! [`KernelBounds`] can usually prove the whole per-step algebra fits a
+//! narrow element: `rec_acc ≤ W·qmax`, `in_acc ≤ V·u_max` (see `bounds.rs`).
+//! For the paper's q ≤ 8 sweet spot (e.g. every 4-bit MELBORN configuration)
+//! the bounds typically fit `i16`, so [`LaneScratch`] instantiates the
+//! kernel at `(i16, 32)` — 32 state lanes per 512-bit register — falling
+//! back to `(i32, 16)` and ultimately the bit-identical `(i64, 8)` oracle.
+//! The widening points (the `m_in` multiply, the `<< F` shift, the ladder
+//! input and every readout) always compute in `i64`, so every narrow kernel
+//! is exact whenever selected; the one quantity that grows with sequence
+//! length (the `MeanState` pooled accumulator, `≤ T·qmax`) is guarded per
+//! chunk: sequences longer than [`KernelBounds::max_steps_for`] the selected
+//! width take the scalar path instead (bit-identical, just unbatched).
+//!
+//! The per-neuron accumulator strips run through the runtime-dispatched
+//! explicit-SIMD primitives of [`crate::quant::simd`] (scalar / AVX2 /
+//! AVX-512, probed once at scratch build) instead of relying on the
+//! autovectorizer; all tiers are wrapping integer ops and bit-identical
+//! under the proven bounds.
 //!
 //! This kernel is the compute core of the serving stack's
 //! [`NativeBackend`](crate::runtime::NativeBackend).
@@ -35,7 +43,7 @@
 use crate::data::TimeSeries;
 use crate::esn::Features;
 
-use super::rollout::LaneElem;
+use super::simd::{Isa, LaneElem};
 use super::{Kernel, KernelBounds, KernelChoice, QuantEsn};
 
 /// Samples processed per **wide** (i64) lane-batched rollout pass. Mirrors
@@ -45,6 +53,10 @@ pub const SAMPLE_LANES: usize = 8;
 /// Samples processed per **narrow** (i32) pass — the same two AVX2 vectors
 /// carry 16 lanes at half the element width. Selected by [`KernelBounds`].
 pub const SAMPLE_LANES_NARROW: usize = 16;
+
+/// Samples processed per **narrow16** (i16) pass — 32 lanes per 512-bit
+/// register, the densest tier. Mirrors [`super::BATCH_LANES_NARROW16`].
+pub const SAMPLE_LANES_NARROW16: usize = 32;
 
 /// Width-generic lane-major buffers — one instantiation per kernel.
 struct LaneBuf<E: LaneElem, const L: usize> {
@@ -86,46 +98,50 @@ impl<E: LaneElem, const L: usize> LaneBuf<E, L> {
 enum LaneKernel {
     Wide(LaneBuf<i64, SAMPLE_LANES>),
     Narrow(LaneBuf<i32, SAMPLE_LANES_NARROW>),
+    Narrow16(LaneBuf<i16, SAMPLE_LANES_NARROW16>),
 }
 
 /// Reusable lane-major scratch for [`QuantEsn::classify_batch`] /
 /// [`QuantEsn::predict_batch`]. Allocate once per worker, reuse across
-/// batches of the same model geometry. The lane kernel (narrow i32×16 vs
-/// wide i64×8) is selected at construction from the model's overflow bounds
-/// (or pinned via [`LaneScratch::for_model_with`]).
+/// batches of the same model geometry. The lane kernel (narrow16 i16×32 vs
+/// narrow i32×16 vs wide i64×8) is selected at construction from the model's
+/// overflow bounds (or pinned via [`LaneScratch::for_model_with`]); the SIMD
+/// ISA tier is probed once here too.
 pub struct LaneScratch {
     imp: LaneKernel,
-    /// Longest sequence the narrow `MeanState` pooled accumulator provably
-    /// supports; longer chunks fall back to the scalar path.
+    /// Longest sequence the selected kernel's `MeanState` pooled accumulator
+    /// provably supports; longer chunks fall back to the scalar path.
     max_steps: usize,
+    /// ISA tier the accumulator strips dispatch to.
+    isa: Isa,
 }
 
 impl LaneScratch {
-    pub fn new(n: usize, input_dim: usize) -> Self {
-        // Geometry-only constructor: no model to analyze, so stay on the
-        // always-safe wide kernel.
-        Self { imp: LaneKernel::Wide(LaneBuf::new(n, input_dim)), max_steps: usize::MAX }
-    }
-
     /// Bound-selected kernel for `model` ([`KernelChoice::Auto`]).
     pub fn for_model(model: &QuantEsn) -> Self {
         Self::for_model_with(model, KernelChoice::Auto)
     }
 
-    /// Explicit kernel override (`Auto` = bound-selected; forcing `Narrow`
-    /// past a failed bound panics rather than risking a wrap).
+    /// Explicit kernel override (`Auto` = bound-selected; forcing a narrow
+    /// tier past a failed bound panics rather than risking a wrap).
     pub fn for_model_with(model: &QuantEsn, choice: KernelChoice) -> Self {
+        Self::for_model_pinned(model, choice, Isa::detect())
+    }
+
+    /// Kernel override plus a pinned SIMD ISA tier — the bench harness's
+    /// head-to-head entry point. Panics on a tier this machine cannot run
+    /// (executing `#[target_feature]` code without the feature is UB, so a
+    /// safe API must refuse rather than trust the caller).
+    pub fn for_model_pinned(model: &QuantEsn, choice: KernelChoice, isa: Isa) -> Self {
+        assert!(isa.available(), "pinned ISA tier {} is not available on this machine", isa.name());
         let bounds = KernelBounds::analyze(model, 0);
-        match choice.resolve(bounds.inference_kernel(), "inference kernel") {
-            Kernel::Narrow => Self {
-                imp: LaneKernel::Narrow(LaneBuf::new(model.n, model.input_dim)),
-                max_steps: bounds.max_steps,
-            },
-            Kernel::Wide => Self {
-                imp: LaneKernel::Wide(LaneBuf::new(model.n, model.input_dim)),
-                max_steps: usize::MAX,
-            },
-        }
+        let kernel = choice.resolve(bounds.inference_kernel(), "inference kernel");
+        let imp = match kernel {
+            Kernel::Narrow16 => LaneKernel::Narrow16(LaneBuf::new(model.n, model.input_dim)),
+            Kernel::Narrow => LaneKernel::Narrow(LaneBuf::new(model.n, model.input_dim)),
+            Kernel::Wide => LaneKernel::Wide(LaneBuf::new(model.n, model.input_dim)),
+        };
+        Self { imp, max_steps: bounds.max_steps_for(kernel), isa }
     }
 
     /// Lane kernel this scratch runs.
@@ -133,15 +149,23 @@ impl LaneScratch {
         match self.imp {
             LaneKernel::Wide(_) => Kernel::Wide,
             LaneKernel::Narrow(_) => Kernel::Narrow,
+            LaneKernel::Narrow16(_) => Kernel::Narrow16,
         }
     }
 
-    /// Samples per rollout pass: [`SAMPLE_LANES_NARROW`] = 16 narrow,
-    /// [`SAMPLE_LANES`] = 8 wide. Callers chunk batches by this.
+    /// SIMD ISA tier this scratch's strips dispatch to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Samples per rollout pass: [`SAMPLE_LANES_NARROW16`] = 32 narrow16,
+    /// [`SAMPLE_LANES_NARROW`] = 16 narrow, [`SAMPLE_LANES`] = 8 wide.
+    /// Callers chunk batches by this.
     pub fn lanes(&self) -> usize {
         match self.imp {
             LaneKernel::Wide(_) => SAMPLE_LANES,
             LaneKernel::Narrow(_) => SAMPLE_LANES_NARROW,
+            LaneKernel::Narrow16(_) => SAMPLE_LANES_NARROW16,
         }
     }
 
@@ -149,18 +173,16 @@ impl LaneScratch {
     /// model. The horizon depends on the model's `q`, not just its geometry,
     /// so callers that reuse one scratch across *models* (multi-variant
     /// serving swaps models per batch) must refresh it per model — a q=4
-    /// horizon (~306M steps) silently over-approves q=8 sequences otherwise.
+    /// horizon silently over-approves q=8 sequences otherwise.
     pub fn refresh_horizon(&mut self, bounds: &KernelBounds) {
-        self.max_steps = match self.kernel() {
-            Kernel::Narrow => bounds.max_steps,
-            Kernel::Wide => usize::MAX,
-        };
+        self.max_steps = bounds.max_steps_for(self.kernel());
     }
 
     fn geometry(&self) -> (usize, usize) {
         match &self.imp {
             LaneKernel::Wide(b) => (b.n, b.input_dim),
             LaneKernel::Narrow(b) => (b.n, b.input_dim),
+            LaneKernel::Narrow16(b) => (b.n, b.input_dim),
         }
     }
 }
@@ -173,9 +195,13 @@ impl QuantEsn {
     /// [`QuantEsn::step_int`] exactly (integer ops, no cross-lane mixing; the
     /// `m_in` multiply and the shift widen to i64 before the ladder, so the
     /// narrow accumulators only ever hold bound-approved sums). The
-    /// accumulator loops run over the first `width` lanes only, so a partial
-    /// chunk (deadline flush of a few requests) pays for the lanes it
-    /// occupies, not all of them.
+    /// accumulator MACs run full-strip through the runtime-dispatched SIMD
+    /// primitives — lanes beyond the chunk are zero and retired lanes hold
+    /// stale values *from this same rollout* (every chunk starts from
+    /// `LaneBuf::reset`, so staleness never crosses models), all within this
+    /// model's bounds — so the extra lanes are free register fill, not extra
+    /// work, and the overflow guards cannot fire on them. The ladder applies
+    /// to occupied, active lanes only.
     fn step_lanes_g<E: LaneElem, const L: usize>(
         &self,
         width: usize,
@@ -183,6 +209,7 @@ impl QuantEsn {
         s_prev: &[E],
         s_next: &mut [E],
         active: &[bool; L],
+        isa: Isa,
     ) {
         debug_assert!(width <= L);
         let f = self.f_bits;
@@ -193,18 +220,14 @@ impl QuantEsn {
             for k in 0..self.input_dim {
                 let w = E::from_i64(wrow[k]);
                 let urow = &u_int[k * L..(k + 1) * L];
-                for l in 0..width {
-                    acc_in[l] = E::add(acc_in[l], E::mul(w, urow[l]));
-                }
+                E::madd_strip(&mut acc_in, w, urow, isa);
             }
             // Recurrence over the CSR row, lane-wide.
             let mut acc_r = [E::default(); L];
             for k in self.w_r_indptr[i]..self.w_r_indptr[i + 1] {
                 let w = E::from_i64(self.w_r_values[k]);
                 let srow = &s_prev[self.w_r_indices[k] * L..self.w_r_indices[k] * L + L];
-                for l in 0..width {
-                    acc_r[l] = E::add(acc_r[l], E::mul(w, srow[l]));
-                }
+                E::madd_strip(&mut acc_r, w, srow, isa);
             }
             let out = &mut s_next[i * L..(i + 1) * L];
             for l in 0..width {
@@ -227,6 +250,7 @@ impl QuantEsn {
         chunk: &[&TimeSeries],
         buf: &mut LaneBuf<E, L>,
         pool: bool,
+        isa: Isa,
         mut emit: Option<&mut dyn FnMut(usize, usize, &[i64])>,
     ) {
         assert!(chunk.len() <= L, "chunk wider than the scratch lane width");
@@ -247,19 +271,28 @@ impl QuantEsn {
             // Split-borrow the state double buffer around the generic step.
             {
                 let LaneBuf { u_int, s_prev, s_next, .. } = &mut *buf;
-                self.step_lanes_g::<E, L>(chunk.len(), u_int, s_prev, s_next, &active);
+                self.step_lanes_g::<E, L>(chunk.len(), u_int, s_prev, s_next, &active, isa);
             }
             if pool {
                 match self.features {
                     Features::MeanState => {
+                        // Full-strip accumulate when every lane is live (the
+                        // common equal-length serving case); per-lane masked
+                        // adds on ragged steps — pooled lanes of finished
+                        // samples must stay frozen.
+                        let full = chunk.len() == L && active.iter().all(|&a| a);
                         for j in 0..self.n {
                             let srow = &buf.s_next[j * L..(j + 1) * L];
                             let prow = &mut buf.pooled[j * L..(j + 1) * L];
-                            for l in 0..chunk.len() {
-                                if active[l] {
-                                    // Narrow safety: `|Σ_t s| ≤ T·qmax`,
-                                    // guarded by the caller's max_steps check.
-                                    prow[l] = E::add(prow[l], srow[l]);
+                            if full {
+                                // Narrow safety: `|Σ_t s| ≤ T·qmax`, guarded
+                                // by the caller's max_steps check.
+                                E::accum_strip(prow, srow, isa);
+                            } else {
+                                for l in 0..chunk.len() {
+                                    if active[l] {
+                                        prow[l] = E::add(prow[l], srow[l]);
+                                    }
                                 }
                             }
                         }
@@ -294,9 +327,10 @@ impl QuantEsn {
         &self,
         chunk: &[&TimeSeries],
         buf: &mut LaneBuf<E, L>,
+        isa: Isa,
         out: &mut Vec<usize>,
     ) {
-        self.rollout_lanes_g::<E, L>(chunk, buf, true, None);
+        self.rollout_lanes_g::<E, L>(chunk, buf, true, isa, None);
         for (l, s) in chunk.iter().enumerate() {
             for j in 0..self.n {
                 buf.col[j] = buf.pooled[j * L + l].to_i64();
@@ -316,6 +350,7 @@ impl QuantEsn {
         assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
         let lanes = sc.lanes();
         let max_steps = sc.max_steps;
+        let isa = sc.isa;
         let mut out = Vec::with_capacity(samples.len());
         for chunk in samples.chunks(lanes) {
             // A lone sample (low-load flush, or the tail chunk) would pay
@@ -327,15 +362,17 @@ impl QuantEsn {
             }
             let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
             match &mut sc.imp {
-                LaneKernel::Wide(buf) => self.classify_chunk_g(chunk, buf, &mut out),
-                // MeanState pooled sums grow with T; past the proven horizon
-                // the scalar path is the bit-identical fallback.
-                LaneKernel::Narrow(_)
+                LaneKernel::Wide(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
+                // MeanState pooled sums grow with T; past the selected
+                // width's proven horizon the scalar path is the bit-identical
+                // fallback.
+                LaneKernel::Narrow(_) | LaneKernel::Narrow16(_)
                     if self.features == Features::MeanState && t_max > max_steps =>
                 {
                     out.extend(chunk.iter().map(|s| self.classify(s)));
                 }
-                LaneKernel::Narrow(buf) => self.classify_chunk_g(chunk, buf, &mut out),
+                LaneKernel::Narrow(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
+                LaneKernel::Narrow16(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
             }
         }
         out
@@ -350,6 +387,7 @@ impl QuantEsn {
     ) -> Vec<Vec<Vec<f64>>> {
         assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
         let lanes = sc.lanes();
+        let isa = sc.isa;
         let mut out: Vec<Vec<Vec<f64>>> = Vec::with_capacity(samples.len());
         for chunk in samples.chunks(lanes) {
             if chunk.len() == 1 {
@@ -371,10 +409,13 @@ impl QuantEsn {
             // feature, and with it disabled no narrow value grows with T.
             match &mut sc.imp {
                 LaneKernel::Wide(buf) => {
-                    self.rollout_lanes_g(chunk, buf, false, Some(&mut emit))
+                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
                 }
                 LaneKernel::Narrow(buf) => {
-                    self.rollout_lanes_g(chunk, buf, false, Some(&mut emit))
+                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
+                }
+                LaneKernel::Narrow16(buf) => {
+                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
                 }
             }
         }
@@ -411,13 +452,17 @@ mod tests {
             let m = trained_cls(&data, dim, seed);
             for q in [4u8, 8] {
                 let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
-                // Paper-shaped models must bound-select the narrow kernel;
-                // both kernels must match the scalar oracle bit-for-bit.
+                // Paper-shaped models must bound-select a narrow kernel —
+                // and at q=4 (worst-case bounds « i16) the 32-lane i16 tier;
+                // every kernel must match the scalar oracle bit-for-bit.
                 for choice in [KernelChoice::Auto, KernelChoice::Wide] {
                     let mut sc = LaneScratch::for_model_with(&qm, choice);
                     if choice == KernelChoice::Auto {
-                        assert_eq!(sc.kernel(), Kernel::Narrow, "dim={dim} q={q}");
-                        assert_eq!(sc.lanes(), SAMPLE_LANES_NARROW);
+                        assert_ne!(sc.kernel(), Kernel::Wide, "dim={dim} q={q}");
+                        if q == 4 {
+                            assert_eq!(sc.kernel(), Kernel::Narrow16, "dim={dim}");
+                            assert_eq!(sc.lanes(), SAMPLE_LANES_NARROW16);
+                        }
                     }
                     // Batch widths crossing both lane boundaries, including 1.
                     for take in [1usize, 3, 8, 9, 17, 33] {
@@ -446,7 +491,7 @@ mod tests {
             .collect();
         let refs: Vec<&TimeSeries> = ragged.iter().collect();
         let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
-        for choice in [KernelChoice::Narrow, KernelChoice::Wide] {
+        for choice in [KernelChoice::Narrow16, KernelChoice::Narrow, KernelChoice::Wide] {
             let mut sc = LaneScratch::for_model_with(&qm, choice);
             assert_eq!(qm.classify_batch(&refs, &mut sc), scalar, "{choice:?}");
         }
@@ -485,7 +530,7 @@ mod tests {
         let m = trained_cls(&data, 1, 5);
         let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
         let mut sc = LaneScratch::for_model(&qm);
-        assert_eq!(sc.kernel(), Kernel::Narrow);
+        assert_eq!(sc.kernel(), Kernel::Narrow16);
         // Shrink the proven horizon artificially to force the guard.
         sc.max_steps = 4;
         let refs: Vec<&TimeSeries> = data.test.iter().take(9).collect();
@@ -503,12 +548,13 @@ mod tests {
         let q4 = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
         let q8 = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
         let mut sc = LaneScratch::for_model(&q4);
-        assert_eq!(sc.kernel(), Kernel::Narrow);
+        assert_eq!(sc.kernel(), Kernel::Narrow16);
         let h4 = sc.max_steps;
+        assert_eq!(h4, (crate::quant::I16_LIMIT / crate::quant::qmax(4)) as usize);
         sc.refresh_horizon(&KernelBounds::analyze(&q8, 0));
         let h8 = sc.max_steps;
         assert!(h8 < h4, "q=8 horizon must be tighter than q=4 ({h8} vs {h4})");
-        assert_eq!(h8, (crate::quant::I32_LIMIT / crate::quant::qmax(8)) as usize);
+        assert_eq!(h8, (crate::quant::I16_LIMIT / crate::quant::qmax(8)) as usize);
     }
 
     #[test]

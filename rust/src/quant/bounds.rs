@@ -1,5 +1,5 @@
-//! Static per-model overflow-bound analysis for the narrow (`i32`) lane
-//! kernels.
+//! Static per-model overflow-bound analysis for the narrow (`i32` and `i16`)
+//! lane kernels.
 //!
 //! The lane-batched hot paths — the sensitivity-scoring frontier scatter in
 //! [`rollout`](super::rollout) and the native inference kernel in
@@ -11,13 +11,26 @@
 //! per vector register (16 × i32 = two AVX2 registers per strip, where
 //! 8 × i64 needed the same two registers for half the lanes).
 //!
-//! Narrowing is only sound when **no intermediate can overflow `i32`**. This
-//! module derives conservative worst-case magnitudes from the model constants
-//! at plan/scratch build time and selects [`Kernel::Narrow`] only when they
-//! all fit; otherwise the bit-identical `i64` path ([`Kernel::Wide`]) is kept
-//! as the automatic fallback. The same formulas are mirrored in
-//! `tools/frontier_mirror.py` / `tools/native_batch_mirror.py`, which assert
-//! on real data that every narrow-path intermediate stays inside the bound.
+//! Narrowing is only sound when **no intermediate can overflow the lane
+//! element**. This module derives conservative worst-case magnitudes from the
+//! model constants at plan/scratch build time and selects the narrowest
+//! provably safe kernel: [`Kernel::Narrow16`] (`i16`, 32 lanes — where the
+//! paper's q ≤ 8 configurations live) when everything fits `i16`,
+//! [`Kernel::Narrow`] (`i32`, 16 lanes) when everything fits `i32`, and
+//! otherwise the bit-identical `i64` path ([`Kernel::Wide`]) as the automatic
+//! fallback. The same formulas are mirrored in `tools/frontier_mirror.py` /
+//! `tools/native_batch_mirror.py`, which assert on real data that every
+//! narrow-path intermediate stays inside the selected bound.
+//!
+//! The `i16` selection reuses the exact same worst-case magnitudes against
+//! [`I16_LIMIT`]; note it also covers the *stored* lane values implicitly —
+//! `scatter_max ≥ corr_max ≥ m²` bounds `m ≤ 181`, so deviations (`≤ 2m`)
+//! and states (`≤ m`) fit whenever the accumulator bounds do (the inference
+//! side additionally checks `s_max` explicitly for the degenerate all-pruned
+//! case). The readout/pooled accumulators are covered too: the pooled
+//! deviation (scoring) and `MeanState` pooled sum (inference, via
+//! [`KernelBounds::max_steps_for`]) enter the selection, while readout score
+//! patches always widen to `i64` before accumulating.
 //!
 //! # Bound derivation
 //!
@@ -53,16 +66,25 @@
 //! **bit-identical** to the wide one — the narrow lanes never hold a value
 //! the wide lanes would not.
 
+use super::simd::Isa;
 use super::{qmax, QuantEsn};
 
-/// Everything a narrow intermediate must fit into.
+/// Everything an `i32`-narrow intermediate must fit into.
 pub const I32_LIMIT: i64 = i32::MAX as i64;
 
-/// Lane-kernel width selected for a model (see the module docs).
+/// Everything an `i16`-narrow intermediate must fit into.
+pub const I16_LIMIT: i64 = i16::MAX as i64;
+
+/// Lane-kernel width selected for a model (see the module docs). Ordered
+/// narrowest-first; a wider kernel is always safe where a narrower one is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kernel {
-    /// `i32` lane elements, 16 lanes per strip — selected only when the
-    /// overflow bounds prove every intermediate fits.
+    /// `i16` lane elements, 32 lanes per strip — selected only when the
+    /// overflow bounds prove every intermediate fits `i16` (the q ≤ 8
+    /// regime the paper's DSE sweeps live in).
+    Narrow16,
+    /// `i32` lane elements, 16 lanes per strip — selected when the bounds
+    /// fit `i32` but not `i16`.
     Narrow,
     /// `i64` lane elements, 8 lanes per strip — the bit-identical oracle and
     /// the automatic fallback.
@@ -72,8 +94,18 @@ pub enum Kernel {
 impl Kernel {
     pub fn name(self) -> &'static str {
         match self {
+            Kernel::Narrow16 => "narrow16",
             Kernel::Narrow => "narrow",
             Kernel::Wide => "wide",
+        }
+    }
+
+    /// Largest magnitude a lane element of this kernel can hold.
+    pub fn lane_limit(self) -> i64 {
+        match self {
+            Kernel::Narrow16 => I16_LIMIT,
+            Kernel::Narrow => I32_LIMIT,
+            Kernel::Wide => i64::MAX,
         }
     }
 }
@@ -82,44 +114,75 @@ impl Kernel {
 /// pinned width for bench/triage runs (`rcx serve|dse --kernel …`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum KernelChoice {
-    /// Use the overflow-bound analysis (narrow whenever provably safe).
+    /// Use the overflow-bound analysis (narrowest provably safe width).
     #[default]
     Auto,
-    /// Force the narrow kernel. **Panics** at plan/scratch build time if the
-    /// bound analysis cannot prove it safe — pinning must never trade
+    /// Force the `i16` narrow kernel. **Panics** at plan/scratch build time
+    /// if the bound analysis cannot prove it safe — pinning must never trade
     /// exactness for speed.
+    Narrow16,
+    /// Force the `i32` narrow kernel. **Panics** if not provably safe.
     Narrow,
     /// Force the wide (`i64`) oracle path.
     Wide,
 }
 
 impl KernelChoice {
-    /// Parse a CLI value (`auto` | `narrow` | `wide`).
+    /// Parse a CLI value (`auto` | `narrow16` | `narrow` | `wide`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "auto" => Some(Self::Auto),
+            "narrow16" => Some(Self::Narrow16),
             "narrow" => Some(Self::Narrow),
             "wide" => Some(Self::Wide),
             _ => None,
         }
     }
 
-    /// Resolve against a bound-selected kernel. Forcing `Narrow` when the
-    /// bounds say `Wide` panics: the narrow path would silently wrap.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Narrow16 => "narrow16",
+            Self::Narrow => "narrow",
+            Self::Wide => "wide",
+        }
+    }
+
+    /// Resolve against a bound-selected kernel. Forcing a kernel narrower
+    /// than the bounds allow panics: the narrow path would silently wrap.
+    /// (Pinning `Narrow` when the bounds allow `Narrow16` is fine — i16-safe
+    /// implies i32-safe.)
     pub fn resolve(self, auto: Kernel, what: &str) -> Kernel {
         match self {
             Self::Auto => auto,
             Self::Wide => Kernel::Wide,
             Self::Narrow => {
                 assert!(
-                    auto == Kernel::Narrow,
+                    auto != Kernel::Wide,
                     "refusing --kernel narrow for {what}: the overflow-bound analysis \
                      cannot prove i32 safety for this model"
                 );
                 Kernel::Narrow
             }
+            Self::Narrow16 => {
+                assert!(
+                    auto == Kernel::Narrow16,
+                    "refusing --kernel narrow16 for {what}: the overflow-bound analysis \
+                     cannot prove i16 safety for this model"
+                );
+                Kernel::Narrow16
+            }
         }
     }
+}
+
+/// Resolve the lane kernel + ISA tier a model will actually *serve* at —
+/// what `rcx serve` logs at startup and `DseResult` records, instead of the
+/// requested [`KernelChoice`]. Panics exactly when the backend itself would
+/// (pinning a kernel past its bound), so a bad pin fails fast.
+pub fn resolve_inference(model: &QuantEsn, choice: KernelChoice) -> (Kernel, Isa) {
+    let bounds = KernelBounds::analyze(model, 0);
+    (choice.resolve(bounds.inference_kernel(), "inference kernel"), Isa::detect())
 }
 
 /// Worst-case magnitudes derived from one model (all saturating, so
@@ -154,11 +217,17 @@ pub struct KernelBounds {
     /// Sequence-length horizon the scoring bounds were computed for (longest
     /// calibration sequence).
     pub t_max: usize,
-    /// Longest sequence the narrow inference kernel's `MeanState` pooled
-    /// accumulator provably supports; longer chunks take the scalar fallback.
+    /// Longest sequence the `i32` narrow inference kernel's `MeanState`
+    /// pooled accumulator provably supports; longer chunks take the scalar
+    /// fallback. (Use [`KernelBounds::max_steps_for`] for the per-kernel
+    /// horizon.)
     pub max_steps: usize,
+    /// The `i16` counterpart of `max_steps`.
+    pub max_steps16: usize,
     scoring_narrow: bool,
+    scoring_narrow16: bool,
     inference_narrow: bool,
+    inference_narrow16: bool,
 }
 
 impl KernelBounds {
@@ -198,9 +267,17 @@ impl KernelBounds {
         let rec_acc_max = max_row_l1.saturating_mul(s_max);
         let in_acc_max = max_in_l1.saturating_mul(u_max);
         let scoring_narrow = scatter_max <= I32_LIMIT && pooled_max <= I32_LIMIT;
+        let scoring_narrow16 = scatter_max <= I16_LIMIT && pooled_max <= I16_LIMIT;
         let inference_narrow =
             rec_acc_max <= I32_LIMIT && in_acc_max <= I32_LIMIT && u_max <= I32_LIMIT;
+        // `s_max` is checked explicitly at i16 (the accumulator bounds only
+        // imply it when the reservoir has live weights).
+        let inference_narrow16 = rec_acc_max <= I16_LIMIT
+            && in_acc_max <= I16_LIMIT
+            && u_max <= I16_LIMIT
+            && s_max <= I16_LIMIT;
         let max_steps = if s_max > 0 { (I32_LIMIT / s_max) as usize } else { usize::MAX };
+        let max_steps16 = if s_max > 0 { (I16_LIMIT / s_max) as usize } else { usize::MAX };
         Self {
             max_row_l1,
             max_w_abs,
@@ -215,14 +292,20 @@ impl KernelBounds {
             in_acc_max,
             t_max,
             max_steps,
+            max_steps16,
             scoring_narrow,
+            scoring_narrow16,
             inference_narrow,
+            inference_narrow16,
         }
     }
 
-    /// Kernel the scoring engine (frontier algebra) may run at.
+    /// Kernel the scoring engine (frontier algebra) may run at — the
+    /// narrowest width whose bounds all hold.
     pub fn scoring_kernel(&self) -> Kernel {
-        if self.scoring_narrow {
+        if self.scoring_narrow16 {
+            Kernel::Narrow16
+        } else if self.scoring_narrow {
             Kernel::Narrow
         } else {
             Kernel::Wide
@@ -231,10 +314,22 @@ impl KernelBounds {
 
     /// Kernel the inference engine (lane-major rollout) may run at.
     pub fn inference_kernel(&self) -> Kernel {
-        if self.inference_narrow {
+        if self.inference_narrow16 {
+            Kernel::Narrow16
+        } else if self.inference_narrow {
             Kernel::Narrow
         } else {
             Kernel::Wide
+        }
+    }
+
+    /// Longest sequence a `kernel`-width `MeanState` pooled accumulator
+    /// provably supports; longer inference chunks take the scalar fallback.
+    pub fn max_steps_for(&self, kernel: Kernel) -> usize {
+        match kernel {
+            Kernel::Narrow16 => self.max_steps16,
+            Kernel::Narrow => self.max_steps,
+            Kernel::Wide => usize::MAX,
         }
     }
 }
@@ -254,18 +349,27 @@ mod tests {
     }
 
     /// All paper-shaped models (q ≤ 8, sparse rows, short sequences) must
-    /// select narrow on both paths: row L1 ≤ nnz·qmax keeps every bound tiny.
+    /// select a narrow width on both paths (row L1 ≤ nnz·qmax keeps every
+    /// bound tiny) — and the q = 4 configurations, where the paper's MELBORN
+    /// sweet spot lives, must reach the i16 tier on both.
     #[test]
     fn paper_models_select_narrow_everywhere() {
         let shapes = [paper_model(4), paper_model(6), paper_model(8)];
         for qm in &shapes {
             let b = KernelBounds::analyze(qm, 4096);
-            assert_eq!(b.scoring_kernel(), Kernel::Narrow, "q={}", qm.q);
-            assert_eq!(b.inference_kernel(), Kernel::Narrow, "q={}", qm.q);
+            assert_ne!(b.scoring_kernel(), Kernel::Wide, "q={}", qm.q);
+            assert_ne!(b.inference_kernel(), Kernel::Wide, "q={}", qm.q);
             assert!(b.scatter_max <= I32_LIMIT);
             assert!(b.max_steps > 1_000_000);
+            assert!(b.max_steps16 >= b.max_steps / 100_000, "i16 horizon sane");
         }
-        // The other two benchmark families too.
+        // q = 4 at the real calibration horizon (melborn T = 24): provably
+        // i16 on both sides — worst case scatter 21·14 + 14·7 = 392 « 32767.
+        let b4 = KernelBounds::analyze(&paper_model(4), 24);
+        assert_eq!(b4.scoring_kernel(), Kernel::Narrow16);
+        assert_eq!(b4.inference_kernel(), Kernel::Narrow16);
+        assert_eq!(b4.max_steps16, (I16_LIMIT / qmax(4)) as usize);
+        // The other two benchmark families stay off the wide fallback too.
         let pd = pen_sized(1, 30, 20);
         let pres = Reservoir::init(ReservoirSpec::paper(16, 2, 48, 0.6, 1.0, 13));
         let pm = EsnModel::fit(pres, &pd, ReadoutSpec { lambda: 0.1, ..Default::default() });
@@ -280,10 +384,24 @@ mod tests {
             for (m, d) in [(&pm, &pd), (&hm, &hd)] {
                 let qm = QuantEsn::from_model(m, d, QuantSpec::bits(q));
                 let b = KernelBounds::analyze(&qm, 4096);
-                assert_eq!(b.scoring_kernel(), Kernel::Narrow);
-                assert_eq!(b.inference_kernel(), Kernel::Narrow);
+                assert_ne!(b.scoring_kernel(), Kernel::Wide);
+                assert_ne!(b.inference_kernel(), Kernel::Wide);
             }
         }
+    }
+
+    /// Magnitudes that cross the i16 bound but stay inside the i32 bound
+    /// must select the middle tier — `Kernel::Narrow` — on both paths.
+    #[test]
+    fn boundary_magnitudes_select_i32_between_the_limits() {
+        let mut qm = paper_model(8);
+        // One 2000-magnitude weight: scatter ≥ 2000·254 » i16, « i32; the
+        // recurrence accumulator bound crosses i16 the same way.
+        qm.set_weight(0, 2000);
+        let b = KernelBounds::analyze(&qm, 16);
+        assert!(b.scatter_max > I16_LIMIT && b.scatter_max <= I32_LIMIT);
+        assert_eq!(b.scoring_kernel(), Kernel::Narrow);
+        assert_eq!(b.inference_kernel(), Kernel::Narrow);
     }
 
     /// Adversarial weight magnitudes right at the i32 boundary: the analysis
@@ -320,9 +438,16 @@ mod tests {
         let b = KernelBounds::analyze(&qm, t_max);
         assert_eq!(b.scoring_kernel(), Kernel::Wide);
         // Inference is horizon-independent at analysis time; the per-chunk
-        // `max_steps` check handles long sequences instead.
-        assert_eq!(b.inference_kernel(), Kernel::Narrow);
+        // `max_steps_for` check handles long sequences instead.
+        assert_eq!(b.inference_kernel(), Kernel::Narrow16);
         assert!(b.max_steps >= (I32_LIMIT / qmax(4)) as usize);
+        assert_eq!(b.max_steps_for(Kernel::Narrow16), (I16_LIMIT / qmax(4)) as usize);
+        assert_eq!(b.max_steps_for(Kernel::Narrow), b.max_steps);
+        assert_eq!(b.max_steps_for(Kernel::Wide), usize::MAX);
+        // An intermediate horizon: past the i16 pooled bound but inside i32
+        // selects the middle scoring tier.
+        let mid = (I16_LIMIT / (2 * qmax(4))) as usize + 1;
+        assert_eq!(KernelBounds::analyze(&qm, mid).scoring_kernel(), Kernel::Narrow);
     }
 
     /// Saturating arithmetic: absurd hand-edited weights must degrade to
@@ -341,14 +466,24 @@ mod tests {
 
     #[test]
     fn choice_resolution_rules() {
+        assert_eq!(KernelChoice::Auto.resolve(Kernel::Narrow16, "t"), Kernel::Narrow16);
         assert_eq!(KernelChoice::Auto.resolve(Kernel::Narrow, "t"), Kernel::Narrow);
         assert_eq!(KernelChoice::Auto.resolve(Kernel::Wide, "t"), Kernel::Wide);
+        assert_eq!(KernelChoice::Wide.resolve(Kernel::Narrow16, "t"), Kernel::Wide);
         assert_eq!(KernelChoice::Wide.resolve(Kernel::Narrow, "t"), Kernel::Wide);
+        // Pinning a *wider* narrow tier than auto selected is always safe.
+        assert_eq!(KernelChoice::Narrow.resolve(Kernel::Narrow16, "t"), Kernel::Narrow);
         assert_eq!(KernelChoice::Narrow.resolve(Kernel::Narrow, "t"), Kernel::Narrow);
+        assert_eq!(KernelChoice::Narrow16.resolve(Kernel::Narrow16, "t"), Kernel::Narrow16);
         assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("narrow16"), Some(KernelChoice::Narrow16));
         assert_eq!(KernelChoice::parse("narrow"), Some(KernelChoice::Narrow));
         assert_eq!(KernelChoice::parse("wide"), Some(KernelChoice::Wide));
         assert_eq!(KernelChoice::parse("i32"), None);
+        assert_eq!(KernelChoice::Narrow16.name(), "narrow16");
+        assert_eq!(Kernel::Narrow16.name(), "narrow16");
+        assert_eq!(Kernel::Narrow16.lane_limit(), I16_LIMIT);
+        assert_eq!(Kernel::Narrow.lane_limit(), I32_LIMIT);
     }
 
     #[test]
@@ -358,5 +493,29 @@ mod tests {
         qm.set_weight(0, i64::MAX / 8);
         let b = KernelBounds::analyze(&qm, 16);
         let _ = KernelChoice::Narrow.resolve(b.scoring_kernel(), "test");
+    }
+
+    /// Forcing the i16 tier on a model whose bounds only prove i32 must
+    /// refuse — a narrower pin than the analysis allows would silently wrap.
+    #[test]
+    #[should_panic(expected = "refusing --kernel narrow16")]
+    fn forcing_narrow16_past_the_i16_bound_panics() {
+        let mut qm = paper_model(8);
+        qm.set_weight(0, 2000); // i32-safe, i16-unsafe (see the boundary test)
+        let b = KernelBounds::analyze(&qm, 16);
+        assert_eq!(b.scoring_kernel(), Kernel::Narrow);
+        let _ = KernelChoice::Narrow16.resolve(b.scoring_kernel(), "test");
+    }
+
+    /// `resolve_inference` reports the kernel the backend will actually run
+    /// plus a machine-valid ISA tier — the serve-startup log contract.
+    #[test]
+    fn resolve_inference_reports_resolved_kernel_and_isa() {
+        let qm = paper_model(4);
+        let (kern, isa) = resolve_inference(&qm, KernelChoice::Auto);
+        assert_eq!(kern, Kernel::Narrow16);
+        assert!(isa.available());
+        let (pinned, _) = resolve_inference(&qm, KernelChoice::Wide);
+        assert_eq!(pinned, Kernel::Wide);
     }
 }

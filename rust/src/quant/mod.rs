@@ -11,15 +11,20 @@
 //! - [`rollout`]: the incremental sensitivity engine — cached calibration
 //!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation
 //!   (single-flip and lane-batched multi-flip: [`BATCH_LANES`] = 8 wide i64
-//!   lanes or [`BATCH_LANES_NARROW`] = 16 narrow i32 lanes, bound-selected),
+//!   lanes, [`BATCH_LANES_NARROW`] = 16 narrow i32 lanes or
+//!   [`BATCH_LANES_NARROW16`] = 32 narrow i16 lanes, bound-selected),
 //!   bit-identical to the dense flip → evaluate → restore loop.
-//! - [`batch`]: lane-batched native *inference* — [`SAMPLE_LANES`] (i64) or
-//!   [`SAMPLE_LANES_NARROW`] (i32) samples per pass through the streamlined
-//!   step, bit-identical per lane to the scalar paths; the kernel behind the
-//!   serving stack's native backend.
+//! - [`batch`]: lane-batched native *inference* — [`SAMPLE_LANES`] (i64),
+//!   [`SAMPLE_LANES_NARROW`] (i32) or [`SAMPLE_LANES_NARROW16`] (i16)
+//!   samples per pass through the streamlined step, bit-identical per lane
+//!   to the scalar paths; the kernel behind the serving stack's native
+//!   backend.
 //! - [`bounds`]: the static per-model overflow-bound analysis
-//!   ([`KernelBounds`]) that proves when the narrow (i32) lane kernels are
-//!   safe, and the [`Kernel`]/[`KernelChoice`] selection types.
+//!   ([`KernelBounds`]) that proves when the narrow (i32/i16) lane kernels
+//!   are safe, and the [`Kernel`]/[`KernelChoice`] selection types.
+//! - [`simd`]: the runtime-dispatched explicit-SIMD strip primitives the
+//!   lane kernels run on ([`Isa`]: scalar / AVX2 / AVX-512, probed once per
+//!   plan or scratch build via `is_x86_feature_detected!`).
 
 mod batch;
 mod bitflip;
@@ -27,17 +32,19 @@ mod bounds;
 mod linear;
 mod qmodel;
 mod rollout;
+pub mod simd;
 mod streamline;
 
-pub use batch::{LaneScratch, SAMPLE_LANES, SAMPLE_LANES_NARROW};
+pub use batch::{LaneScratch, SAMPLE_LANES, SAMPLE_LANES_NARROW, SAMPLE_LANES_NARROW16};
 pub use bitflip::flip_bit;
-pub use bounds::{Kernel, KernelBounds, KernelChoice, I32_LIMIT};
+pub use bounds::{resolve_inference, Kernel, KernelBounds, KernelChoice, I16_LIMIT, I32_LIMIT};
 pub use linear::Quantizer;
 pub use qmodel::{QuantEsn, QuantSpec};
 pub use rollout::{
     BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantInputCache, BATCH_LANES,
-    BATCH_LANES_NARROW,
+    BATCH_LANES_NARROW, BATCH_LANES_NARROW16,
 };
+pub use simd::Isa;
 pub use streamline::ThresholdLadder;
 
 /// Largest magnitude representable by a symmetric signed q-bit integer.

@@ -79,21 +79,30 @@
 //! per-lane masks isolate its deviations), and trailing open batches whose
 //! dirty-row masks are covered by an earlier one fold into it.
 //!
-//! # Lane element width: narrow (i32) vs wide (i64)
+//! # Lane element width: narrow16 (i16) vs narrow (i32) vs wide (i64)
 //!
 //! The lane algebra only ever holds *state deviations* (ladder-clamped to
 //! `±2·qmax`) and short sums of `weight × deviation` products, so for every
-//! paper-shaped model the values provably fit `i32` — at half the element
-//! width the same two AVX2 registers carry [`BATCH_LANES_NARROW`] = 16 lanes
-//! instead of [`BATCH_LANES`] = 8. [`crate::quant::KernelBounds`] derives the
-//! worst-case magnitudes (scatter accumulator `W·2m + (A+m)·m`, pooled
+//! paper-shaped model the values provably fit a narrow element — and for the
+//! q ≤ 8 sweet spot usually `i16`. [`crate::quant::KernelBounds`] derives
+//! the worst-case magnitudes (scatter accumulator `W·2m + (A+m)·m`, pooled
 //! deviation `T·2m`; see `bounds.rs` for the full derivation) at plan-build
-//! time, and the plan instantiates the generic lane core at
-//! `(i32, 16)` ([`Kernel::Narrow`]) only when they all fit, else at
-//! `(i64, 8)` ([`Kernel::Wide`]) — the bit-identical oracle and automatic
-//! fallback. Widening points (ladder input, readout patches) always compute
-//! in `i64`, so narrow == wide bit-for-bit whenever narrow is selected; debug
-//! builds additionally guard every narrow add/mul with overflow asserts.
+//! time, and the plan instantiates the generic lane core at the narrowest
+//! provably safe width: `(i16, 32)` ([`Kernel::Narrow16`] —
+//! [`BATCH_LANES_NARROW16`] lanes, a full 512-bit register per strip),
+//! `(i32, 16)` ([`Kernel::Narrow`]) or `(i64, 8)` ([`Kernel::Wide`]) — the
+//! bit-identical oracle and automatic fallback. Widening points (ladder
+//! input, readout patches) always compute in `i64`, so every width computes
+//! identical bits whenever selected; debug builds additionally guard every
+//! narrow add/mul with overflow asserts.
+//!
+//! Since PR 5 the strip multiply-adds are **explicitly dispatched SIMD**
+//! rather than autovectorizer bait: [`crate::quant::simd`] probes the ISA
+//! once per plan build (`is_x86_feature_detected!` → scalar / AVX2 /
+//! AVX-512) and the frontier scatter's dense branch and pooled accumulation
+//! run through the probed strip primitives ([`LaneElem::madd_strip`] /
+//! [`LaneElem::accum_strip`]), which are wrapping integer ops and therefore
+//! bit-identical across tiers whenever the bounds hold.
 //!
 //! The batched path additionally retires a lane for the rest of a sample once
 //! its frontier is empty *and* the flipped weight can never re-ignite it —
@@ -106,6 +115,7 @@
 use crate::data::{Task, TimeSeries};
 use crate::esn::{Features, Perf};
 
+use super::simd::{Isa, LaneElem};
 use super::{Kernel, KernelBounds, KernelChoice, QuantEsn};
 
 /// Pre-quantized calibration inputs, shareable across every model whose input
@@ -216,9 +226,14 @@ pub struct CalibPlan<'a> {
     bounds: KernelBounds,
     /// Lane kernel every batched evaluation through this plan runs at.
     kernel: Kernel,
-    /// Narrow copy of `w_vals` for the i32 scatter (empty on the wide path;
+    /// ISA tier the lane strips dispatch to (probed once at build time, or
+    /// pinned by [`CalibPlan::build_pinned`] for bench runs).
+    isa: Isa,
+    /// Narrow copy of `w_vals` for the i32 scatter (empty off that path;
     /// the bounds guarantee the cast is lossless when narrow is selected).
     w_vals_i32: Vec<i32>,
+    /// Narrow copy of `w_vals` for the i16 scatter (empty off that path).
+    w_vals_i16: Vec<i16>,
 }
 
 /// Reusable per-worker scratch for [`CalibPlan::eval_flip`]. Epoch-stamped
@@ -270,6 +285,12 @@ pub const BATCH_LANES: usize = 8;
 /// plan by the [`KernelBounds`] overflow analysis (see the module docs).
 pub const BATCH_LANES_NARROW: usize = 16;
 
+/// Lane width of the **narrow16** (`i16`) batched path: 32 lanes fill one
+/// 512-bit register (or two AVX2 registers) per strip — the densest tier,
+/// selected only when the overflow bounds prove every intermediate fits
+/// `i16` (the paper's q ≤ 8 regime).
+pub const BATCH_LANES_NARROW16: usize = 32;
+
 /// One hypothetical single-weight perturbation, as consumed by the batched
 /// evaluator and the greedy packer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -280,74 +301,10 @@ pub struct FlipCandidate {
     pub new_val: i64,
 }
 
-/// Integer element of a lane vector: `i64` (wide oracle) or `i32` (narrow,
-/// used only when [`KernelBounds`] proves every intermediate fits). The
-/// narrow impl guards every narrowing/add/mul with `debug_assert!` overflow
-/// checks — they must never fire on a bound-approved model, and the property
-/// tests run the full benchmark grid under them.
-pub(crate) trait LaneElem: Copy + Default + PartialEq + std::fmt::Debug + 'static {
-    /// Narrow from the plan's `i64` domain (debug-checked).
-    fn from_i64(v: i64) -> Self;
-    fn to_i64(self) -> i64;
-    /// `a + b` (debug-checked in the narrow impl).
-    fn add(a: Self, b: Self) -> Self;
-    /// `a * b` (debug-checked in the narrow impl).
-    fn mul(a: Self, b: Self) -> Self;
-}
-
-impl LaneElem for i64 {
-    #[inline(always)]
-    fn from_i64(v: i64) -> i64 {
-        v
-    }
-    #[inline(always)]
-    fn to_i64(self) -> i64 {
-        self
-    }
-    #[inline(always)]
-    fn add(a: i64, b: i64) -> i64 {
-        a + b
-    }
-    #[inline(always)]
-    fn mul(a: i64, b: i64) -> i64 {
-        a * b
-    }
-}
-
-impl LaneElem for i32 {
-    #[inline(always)]
-    fn from_i64(v: i64) -> i32 {
-        debug_assert!(
-            i32::try_from(v).is_ok(),
-            "narrow-kernel overflow guard: {v} does not fit i32"
-        );
-        v as i32
-    }
-    #[inline(always)]
-    fn to_i64(self) -> i64 {
-        self as i64
-    }
-    #[inline(always)]
-    fn add(a: i32, b: i32) -> i32 {
-        debug_assert!(
-            a.checked_add(b).is_some(),
-            "narrow-kernel overflow guard: {a} + {b} overflows i32"
-        );
-        a.wrapping_add(b)
-    }
-    #[inline(always)]
-    fn mul(a: i32, b: i32) -> i32 {
-        debug_assert!(
-            a.checked_mul(b).is_some(),
-            "narrow-kernel overflow guard: {a} * {b} overflows i32"
-        );
-        a.wrapping_mul(b)
-    }
-}
-
 /// Epoch-stamped lane-vector frontier: per dirty neuron an `L`-wide vector of
 /// state deviations. Two of these double-buffer the batched frontier
-/// stepping.
+/// stepping. (The element trait and its runtime-dispatched SIMD strip
+/// primitives live in [`crate::quant::simd`].)
 struct LaneFrontier<E: LaneElem, const L: usize> {
     /// `n × L` deviations, valid where `stamp[j] == epoch`.
     dev: Vec<E>,
@@ -355,14 +312,15 @@ struct LaneFrontier<E: LaneElem, const L: usize> {
     /// Per dirty neuron: bitmask of lanes with a nonzero deviation. With
     /// disjoint-leaning packing most dirty neurons belong to few lanes, so
     /// the scatter iterates set bits instead of all `L`.
-    mask: Vec<u16>,
+    mask: Vec<u32>,
     /// Dirty neurons (some lane has a nonzero deviation).
     list: Vec<usize>,
     epoch: u64,
 }
 
-// The per-neuron lane mask is a u16.
-const _: () = assert!(BATCH_LANES <= 16 && BATCH_LANES_NARROW <= 16);
+// The per-neuron lane mask is a u32.
+const _: () =
+    assert!(BATCH_LANES <= 32 && BATCH_LANES_NARROW <= 32 && BATCH_LANES_NARROW16 <= 32);
 
 impl<E: LaneElem, const L: usize> LaneFrontier<E, L> {
     fn new(n: usize) -> Self {
@@ -436,19 +394,24 @@ impl<E: LaneElem, const L: usize> Lanes<E, L> {
 }
 
 /// Reusable per-worker scratch for [`CalibPlan::eval_flips_batched`] — the
-/// lane-vector counterpart of [`FlipScratch`]. Deliberately holds **both**
-/// kernel widths (a few KiB each at paper scale): the plan's [`Kernel`]
-/// selection picks which one a call normally touches, and the wide half
-/// doubles as the fallback target when a narrow plan is handed flip values
-/// outside the analyzed bound.
+/// lane-vector counterpart of [`FlipScratch`]. Deliberately holds **all
+/// three** kernel widths (a few KiB each at paper scale): the plan's
+/// [`Kernel`] selection picks which one a call normally touches, and the
+/// wide instantiation doubles as the fallback target when a narrow plan is
+/// handed flip values outside the analyzed bound.
 pub struct BatchScratch {
     wide: Lanes<i64, BATCH_LANES>,
     narrow: Lanes<i32, BATCH_LANES_NARROW>,
+    narrow16: Lanes<i16, BATCH_LANES_NARROW16>,
 }
 
 impl BatchScratch {
     pub fn new(n: usize, out_dim: usize) -> Self {
-        Self { wide: Lanes::new(n, out_dim), narrow: Lanes::new(n, out_dim) }
+        Self {
+            wide: Lanes::new(n, out_dim),
+            narrow: Lanes::new(n, out_dim),
+            narrow16: Lanes::new(n, out_dim),
+        }
     }
 
     pub fn for_plan(plan: &CalibPlan) -> Self {
@@ -491,6 +454,23 @@ impl<'a> CalibPlan<'a> {
         Self::build_with_inputs_and_kernel(model, calib, inputs, KernelChoice::Auto)
     }
 
+    /// Build a plan with both the lane kernel and the SIMD ISA tier pinned —
+    /// the bench harness's head-to-head entry point ([`Isa::detect`] is the
+    /// default everywhere else). Panics on a tier this machine cannot run
+    /// (executing `#[target_feature]` code without the feature is UB, so a
+    /// safe API must refuse rather than trust the caller); the strips
+    /// themselves are bit-identical across tiers either way.
+    pub fn build_pinned(
+        model: &QuantEsn,
+        calib: &'a [TimeSeries],
+        choice: KernelChoice,
+        isa: Isa,
+    ) -> Self {
+        assert!(isa.available(), "pinned ISA tier {} is not available on this machine", isa.name());
+        let inputs = QuantInputCache::build(model, calib);
+        Self::build_impl(model, calib, &inputs, choice, isa)
+    }
+
     /// Build a plan from pre-quantized inputs with an explicit lane-kernel
     /// override.
     pub fn build_with_inputs_and_kernel(
@@ -498,6 +478,16 @@ impl<'a> CalibPlan<'a> {
         calib: &'a [TimeSeries],
         inputs: &QuantInputCache,
         choice: KernelChoice,
+    ) -> Self {
+        Self::build_impl(model, calib, inputs, choice, Isa::detect())
+    }
+
+    fn build_impl(
+        model: &QuantEsn,
+        calib: &'a [TimeSeries],
+        inputs: &QuantInputCache,
+        choice: KernelChoice,
+        isa: Isa,
     ) -> Self {
         assert!(inputs.matches(model), "input cache quantizer mismatch");
         // A cache longer than the split is fine: sample `si` of the split is
@@ -649,9 +639,10 @@ impl<'a> CalibPlan<'a> {
         let base_perf = base_perf_from_samples(model.task, &samples);
 
         // Lane-kernel selection: the overflow bounds over this exact
-        // (model, calibration horizon) pair decide whether the i32×16 lanes
-        // are provably safe; the caller may pin wide (oracle/bench runs) or
-        // narrow (panics if the bound fails — never trades exactness).
+        // (model, calibration horizon) pair decide the narrowest provably
+        // safe lane width (i16×32, i32×16 or the i64×8 oracle); the caller
+        // may pin wide (oracle/bench runs) or a narrow tier (panics if the
+        // bound fails — never trades exactness).
         let t_max = samples.iter().map(|sp| sp.t).max().unwrap_or(0);
         let bounds = KernelBounds::analyze(model, t_max);
         let kernel = choice.resolve(bounds.scoring_kernel(), "scoring plan");
@@ -659,7 +650,13 @@ impl<'a> CalibPlan<'a> {
             Kernel::Narrow => {
                 model.w_r_values.iter().map(|&v| <i32 as LaneElem>::from_i64(v)).collect()
             }
-            Kernel::Wide => Vec::new(),
+            Kernel::Narrow16 | Kernel::Wide => Vec::new(),
+        };
+        let w_vals_i16 = match kernel {
+            Kernel::Narrow16 => {
+                model.w_r_values.iter().map(|&v| <i16 as LaneElem>::from_i64(v)).collect()
+            }
+            Kernel::Narrow | Kernel::Wide => Vec::new(),
         };
 
         let plan = Self {
@@ -681,7 +678,9 @@ impl<'a> CalibPlan<'a> {
             base_perf,
             bounds,
             kernel,
+            isa,
             w_vals_i32,
+            w_vals_i16,
         };
         debug_assert_eq!(
             base_perf,
@@ -703,11 +702,19 @@ impl<'a> CalibPlan<'a> {
         self.kernel
     }
 
-    /// Lane width of this plan's batched path: [`BATCH_LANES_NARROW`] = 16 on
-    /// the narrow kernel, [`BATCH_LANES`] = 8 on the wide one. The packer and
-    /// every `eval_flips_batched` caller size batches by this.
+    /// SIMD ISA tier this plan's lane strips dispatch to (probed at build
+    /// time, or pinned via [`CalibPlan::build_pinned`]).
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Lane width of this plan's batched path: [`BATCH_LANES_NARROW16`] = 32
+    /// on the i16 kernel, [`BATCH_LANES_NARROW`] = 16 on the i32 one,
+    /// [`BATCH_LANES`] = 8 on the wide oracle. The packer and every
+    /// `eval_flips_batched` caller size batches by this.
     pub fn lanes(&self) -> usize {
         match self.kernel {
+            Kernel::Narrow16 => BATCH_LANES_NARROW16,
             Kernel::Narrow => BATCH_LANES_NARROW,
             Kernel::Wide => BATCH_LANES,
         }
@@ -955,6 +962,27 @@ impl<'a> CalibPlan<'a> {
         assert!(flips.len() <= self.lanes(), "batch wider than the plan's lane width");
         debug_assert_eq!(model.n, self.n);
         debug_assert_eq!(model.w_r_values, self.w_vals, "plan built for a different baseline");
+        if self.kernel != Kernel::Wide
+            && flips.iter().any(|f| f.new_val.abs() > self.bounds.new_val_limit)
+        {
+            // The scatter bound was derived for flip values inside the
+            // q-bit range (every `flip_bit` output is). A hand-built
+            // candidate outside it would void the bound, so such batches
+            // route through the always-safe wide kernel instead — in
+            // ≤ BATCH_LANES chunks (lanes never interact, so chunking
+            // cannot change any lane's result); the scratch carries the
+            // wide instantiation precisely for this.
+            let mut out = Vec::with_capacity(flips.len());
+            for chunk in flips.chunks(BATCH_LANES) {
+                out.extend(self.eval_flips_batched_g::<i64, BATCH_LANES>(
+                    model,
+                    chunk,
+                    &mut sc.wide,
+                    &self.w_vals,
+                ));
+            }
+            return out;
+        }
         match self.kernel {
             Kernel::Wide => self.eval_flips_batched_g::<i64, BATCH_LANES>(
                 model,
@@ -962,33 +990,18 @@ impl<'a> CalibPlan<'a> {
                 &mut sc.wide,
                 &self.w_vals,
             ),
-            Kernel::Narrow => {
-                // The scatter bound was derived for flip values inside the
-                // q-bit range (every `flip_bit` output is). A hand-built
-                // candidate outside it would void the bound, so such batches
-                // route through the always-safe wide kernel instead — in
-                // ≤ BATCH_LANES chunks (lanes never interact, so chunking
-                // cannot change any lane's result); the scratch carries the
-                // wide instantiation precisely for this.
-                if flips.iter().any(|f| f.new_val.abs() > self.bounds.new_val_limit) {
-                    let mut out = Vec::with_capacity(flips.len());
-                    for chunk in flips.chunks(BATCH_LANES) {
-                        out.extend(self.eval_flips_batched_g::<i64, BATCH_LANES>(
-                            model,
-                            chunk,
-                            &mut sc.wide,
-                            &self.w_vals,
-                        ));
-                    }
-                    return out;
-                }
-                self.eval_flips_batched_g::<i32, BATCH_LANES_NARROW>(
-                    model,
-                    flips,
-                    &mut sc.narrow,
-                    &self.w_vals_i32,
-                )
-            }
+            Kernel::Narrow => self.eval_flips_batched_g::<i32, BATCH_LANES_NARROW>(
+                model,
+                flips,
+                &mut sc.narrow,
+                &self.w_vals_i32,
+            ),
+            Kernel::Narrow16 => self.eval_flips_batched_g::<i16, BATCH_LANES_NARROW16>(
+                model,
+                flips,
+                &mut sc.narrow16,
+                &self.w_vals_i16,
+            ),
         }
     }
 
@@ -1059,9 +1072,9 @@ impl<'a> CalibPlan<'a> {
                 }
                 let rd = &mut sc.row_delta[row * L..(row + 1) * L];
                 if dense {
-                    for l in 0..L {
-                        rd[l] = E::add(rd[l], E::mul(w, dv[l]));
-                    }
+                    // Full-width strip: runtime-dispatched SIMD MAC (scalar
+                    // in debug builds, so the overflow guards execute).
+                    E::madd_strip(rd, w, dv, self.isa);
                 } else {
                     let mut m = jmask;
                     while m != 0 {
@@ -1203,10 +1216,8 @@ impl<'a> CalibPlan<'a> {
                         let dv = &sc.cur.dev[j * L..(j + 1) * L];
                         let pd = &mut sc.pooled_dev[j * L..(j + 1) * L];
                         // Narrow safety: |pooled_dev| ≤ t_max·dev_max, the
-                        // plan's pooled bound.
-                        for l in 0..L {
-                            pd[l] = E::add(pd[l], dv[l]);
-                        }
+                        // plan's pooled bound. Dispatched strip accumulate.
+                        E::accum_strip(pd, dv, self.isa);
                         for (l, &d) in dv.iter().enumerate().take(b) {
                             if d != E::default() {
                                 sc.lane_pooled_any[l] = true;
@@ -1758,10 +1769,14 @@ mod tests {
         // Determinism: the packer is pure w.r.t. its inputs.
         assert_eq!(batches, plan.pack_batches(&cands));
         // At the scorer's real candidate density (q flips per slot) the
-        // overlap-tolerant top-up must keep the wider narrow lanes at least
-        // half full (deterministic for this fixed model; the Melborn sweep
-        // mirror measures the production config — EXPERIMENTS.md §Perf it. 6).
-        assert_eq!(plan.lanes(), BATCH_LANES_NARROW, "paper-shaped model must go narrow");
+        // overlap-tolerant top-up must keep the widest narrow lanes usefully
+        // full (deterministic for this fixed model; the Melborn sweep
+        // mirror measures the production config — EXPERIMENTS.md §Perf it. 7).
+        assert_eq!(
+            plan.lanes(),
+            BATCH_LANES_NARROW16,
+            "paper-shaped q=6 model must go narrow16"
+        );
         let dense_cands: Vec<FlipCandidate> = (0..plan.n_slots())
             .flat_map(|slot| {
                 (0..qm.q as u32).map(move |bit| (slot, bit))
@@ -1773,7 +1788,7 @@ mod tests {
             .collect();
         let dense_batches = plan.pack_batches(&dense_cands);
         let fill = dense_cands.len() as f64 / dense_batches.len() as f64;
-        assert!(fill >= 8.0, "mean lane fill regressed: {fill:.2} of 16");
+        assert!(fill >= 8.0, "mean lane fill regressed: {fill:.2} of 32");
     }
 
     /// The same packing through the wide-pinned plan must stay valid at 8
@@ -1845,6 +1860,24 @@ mod tests {
             for (f, perf) in wide_batch.iter().zip(&perfs) {
                 assert_eq!(*perf, narrow.eval_flip(&qm, f.slot, f.new_val, &mut seq));
             }
+            // Where the bounds allow the i16 tier, it must agree too — on
+            // chunked batches against wide and on one full 32-lane batch
+            // against the sequential oracle.
+            let auto = CalibPlan::build(&qm, &calib);
+            if auto.kernel() == Kernel::Narrow16 {
+                let mut s16 = BatchScratch::for_plan(&auto);
+                for chunk in cands.chunks(BATCH_LANES) {
+                    let a = wide.eval_flips_batched(&qm, chunk, &mut sw);
+                    let b = auto.eval_flips_batched(&qm, chunk, &mut s16);
+                    assert_eq!(a, b, "narrow16 != wide on chunk starting {:?}", chunk[0]);
+                }
+                let full: Vec<FlipCandidate> =
+                    cands.iter().copied().take(BATCH_LANES_NARROW16).collect();
+                let perfs = auto.eval_flips_batched(&qm, &full, &mut s16);
+                for (f, perf) in full.iter().zip(&perfs) {
+                    assert_eq!(*perf, auto.eval_flip(&qm, f.slot, f.new_val, &mut seq));
+                }
+            }
         }
     }
 
@@ -1886,13 +1919,13 @@ mod tests {
         let (qm, data) = melborn_model(6);
         let calib = &data.train[..12];
         let plan = CalibPlan::build(&qm, calib);
-        assert_eq!(plan.kernel(), Kernel::Narrow);
+        assert_eq!(plan.kernel(), Kernel::Narrow16);
         let mut sc = BatchScratch::for_plan(&plan);
         let mut seq = FlipScratch::for_plan(&plan);
-        // A full-width narrow batch whose first lane carries an out-of-range
-        // value — wider than the 8-lane wide kernel, so the fallback must
-        // also exercise its chunked path.
-        let mut flips: Vec<FlipCandidate> = (0..BATCH_LANES_NARROW)
+        // A full-width narrow16 batch whose first lane carries an
+        // out-of-range value — wider than the 8-lane wide kernel, so the
+        // fallback must also exercise its chunked path.
+        let mut flips: Vec<FlipCandidate> = (0..BATCH_LANES_NARROW16)
             .map(|slot| FlipCandidate {
                 slot,
                 new_val: flip_bit(plan.slot_value(slot), 1, qm.q),

@@ -1,0 +1,608 @@
+//! Runtime-dispatched explicit-SIMD lane primitives for the integer hot
+//! paths.
+//!
+//! Until PR 5 the lane-batched kernels (the scoring frontier scatter in
+//! [`rollout`](super::rollout) and the native inference rollout in
+//! [`batch`](super::batch)) relied on the autovectorizer noticing their
+//! fixed-width strip loops. This module makes the vectorization explicit and
+//! *runtime-probed*: the strip primitives ([`LaneElem::madd_strip`] — the
+//! multiply-accumulate every kernel is built from — and
+//! [`LaneElem::accum_strip`]) dispatch to `std::arch` AVX2 or AVX-512
+//! implementations selected once per plan/scratch build via
+//! [`Isa::detect`] (`is_x86_feature_detected!`), with a portable chunked
+//! scalar loop as the always-available fallback and the only tier on
+//! non-x86_64 targets.
+//!
+//! # Exactness
+//!
+//! Every strip op is a wrapping integer multiply-add. `vpmullw` /
+//! `vpmulld` / `vpmullq` compute exactly the low lane bits — i.e. the same
+//! value as `wrapping_mul` — and the overflow-bound analysis
+//! ([`super::KernelBounds`]) guarantees no narrow intermediate ever exceeds
+//! its lane width, so the SIMD tiers are **bit-identical** to the scalar
+//! tier, which is itself bit-identical per lane to the sequential oracles.
+//! The L3-h bench section and the `simd_tiers_agree` test assert this on
+//! real data for every available tier.
+//!
+//! # Debug builds
+//!
+//! In debug builds (`cfg!(debug_assertions)`) the strips always run the
+//! *checked* scalar loop regardless of the selected [`Isa`], so the
+//! narrow-element overflow guards ([`LaneElem::add`]/[`LaneElem::mul`]
+//! `debug_assert!`s) actually execute — CI's debug test step drives the full
+//! benchmark grid through them. Release builds dispatch to the probed tier.
+//!
+//! # Lane geometry
+//!
+//! | element | lanes/strip | AVX2 regs | AVX-512 regs |
+//! |---|---|---|---|
+//! | `i64` (wide oracle)           |  8 | 2 (add only¹) | 1 |
+//! | `i32` ([`super::Kernel::Narrow`])   | 16 | 2 | 1 |
+//! | `i16` ([`super::Kernel::Narrow16`]) | 32 | 2 | 1 |
+//!
+//! ¹ AVX2 has no 64-bit low multiply (`vpmullq` is AVX-512DQ), so the wide
+//! kernel's multiply-accumulate stays on the scalar tier under AVX2 — one
+//! more reason the bound-selected narrow tiers carry the speedup.
+
+/// ISA tier the lane strip primitives dispatch to. Ordered: a tier is
+/// [`Isa::available`] iff it is `<=` the probed maximum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable chunked scalar loops — always available, the only tier on
+    /// non-x86_64, and the tier every debug build runs (so the narrow-op
+    /// overflow guards execute).
+    Scalar,
+    /// AVX2 256-bit strips (`vpmullw`/`vpmulld` + adds).
+    Avx2,
+    /// AVX-512 512-bit strips; requires `avx512f + avx512bw + avx512dq`
+    /// (`bw` for the i16 ops, `dq` for the i64 multiply).
+    Avx512,
+}
+
+impl Isa {
+    /// Probe the best tier this machine supports. Cheap enough to call per
+    /// plan/scratch build (the `is_x86_feature_detected!` results are cached
+    /// by std), but the result is stored so kernels never re-probe per strip.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512bw")
+                && std::arch::is_x86_feature_detected!("avx512dq")
+            {
+                return Isa::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// Whether this tier can run on the current machine (the bench's
+    /// head-to-head grid iterates available tiers only).
+    pub fn available(self) -> bool {
+        self <= Self::detect()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+}
+
+/// Integer element of a lane vector: `i64` (wide oracle), `i32`
+/// ([`super::Kernel::Narrow`]) or `i16` ([`super::Kernel::Narrow16`], used
+/// only when [`super::KernelBounds`] proves every intermediate fits). The
+/// narrow impls guard every narrowing/add/mul with `debug_assert!` overflow
+/// checks — they must never fire on a bound-approved model, and the property
+/// tests run the full benchmark grid under them (debug builds route the
+/// strips below through these checked ops).
+pub(crate) trait LaneElem: Copy + Default + PartialEq + std::fmt::Debug + 'static {
+    /// Narrow from the plan's `i64` domain (debug-checked).
+    fn from_i64(v: i64) -> Self;
+    fn to_i64(self) -> i64;
+    /// `a + b` (debug-checked in the narrow impls).
+    fn add(a: Self, b: Self) -> Self;
+    /// `a * b` (debug-checked in the narrow impls).
+    fn mul(a: Self, b: Self) -> Self;
+    /// Strip multiply-accumulate `rd[l] += w·dv[l]` — the op every lane
+    /// kernel is built from. Release builds dispatch to `isa`; debug builds
+    /// always run the checked scalar loop.
+    fn madd_strip(rd: &mut [Self], w: Self, dv: &[Self], isa: Isa);
+    /// Strip accumulate `acc[l] += src[l]` (pooled-feature maintenance).
+    fn accum_strip(acc: &mut [Self], src: &[Self], isa: Isa);
+}
+
+/// Checked scalar strip MAC — the portable fallback and the debug-build tier.
+#[inline(always)]
+fn madd_scalar<E: LaneElem>(rd: &mut [E], w: E, dv: &[E]) {
+    for (r, &d) in rd.iter_mut().zip(dv) {
+        *r = E::add(*r, E::mul(w, d));
+    }
+}
+
+/// Checked scalar strip accumulate.
+#[inline(always)]
+fn accum_scalar<E: LaneElem>(acc: &mut [E], src: &[E]) {
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a = E::add(*a, s);
+    }
+}
+
+/// True when release-mode SIMD dispatch is active (debug builds pin the
+/// checked scalar tier so the overflow guards run).
+#[inline(always)]
+#[cfg(target_arch = "x86_64")]
+fn dispatch_simd() -> bool {
+    !cfg!(debug_assertions)
+}
+
+impl LaneElem for i64 {
+    #[inline(always)]
+    fn from_i64(v: i64) -> i64 {
+        v
+    }
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self
+    }
+    #[inline(always)]
+    fn add(a: i64, b: i64) -> i64 {
+        a + b
+    }
+    #[inline(always)]
+    fn mul(a: i64, b: i64) -> i64 {
+        a * b
+    }
+    #[inline]
+    fn madd_strip(rd: &mut [i64], w: i64, dv: &[i64], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // AVX2 has no 64-bit low multiply; only AVX-512DQ accelerates
+            // the wide kernel's MAC.
+            if dispatch_simd() && isa == Isa::Avx512 {
+                return unsafe { x86::madd_i64_avx512(rd, w, dv) };
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_scalar(rd, w, dv);
+    }
+    #[inline]
+    fn accum_strip(acc: &mut [i64], src: &[i64], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::accum_i64_avx512(acc, src) },
+                    Isa::Avx2 => return unsafe { x86::accum_i64_avx2(acc, src) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        accum_scalar(acc, src);
+    }
+}
+
+impl LaneElem for i32 {
+    #[inline(always)]
+    fn from_i64(v: i64) -> i32 {
+        debug_assert!(
+            i32::try_from(v).is_ok(),
+            "narrow-kernel overflow guard: {v} does not fit i32"
+        );
+        v as i32
+    }
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+    #[inline(always)]
+    fn add(a: i32, b: i32) -> i32 {
+        debug_assert!(
+            a.checked_add(b).is_some(),
+            "narrow-kernel overflow guard: {a} + {b} overflows i32"
+        );
+        a.wrapping_add(b)
+    }
+    #[inline(always)]
+    fn mul(a: i32, b: i32) -> i32 {
+        debug_assert!(
+            a.checked_mul(b).is_some(),
+            "narrow-kernel overflow guard: {a} * {b} overflows i32"
+        );
+        a.wrapping_mul(b)
+    }
+    #[inline]
+    fn madd_strip(rd: &mut [i32], w: i32, dv: &[i32], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::madd_i32_avx512(rd, w, dv) },
+                    Isa::Avx2 => return unsafe { x86::madd_i32_avx2(rd, w, dv) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_scalar(rd, w, dv);
+    }
+    #[inline]
+    fn accum_strip(acc: &mut [i32], src: &[i32], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::accum_i32_avx512(acc, src) },
+                    Isa::Avx2 => return unsafe { x86::accum_i32_avx2(acc, src) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        accum_scalar(acc, src);
+    }
+}
+
+impl LaneElem for i16 {
+    #[inline(always)]
+    fn from_i64(v: i64) -> i16 {
+        debug_assert!(
+            i16::try_from(v).is_ok(),
+            "narrow16-kernel overflow guard: {v} does not fit i16"
+        );
+        v as i16
+    }
+    #[inline(always)]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+    #[inline(always)]
+    fn add(a: i16, b: i16) -> i16 {
+        debug_assert!(
+            a.checked_add(b).is_some(),
+            "narrow16-kernel overflow guard: {a} + {b} overflows i16"
+        );
+        a.wrapping_add(b)
+    }
+    #[inline(always)]
+    fn mul(a: i16, b: i16) -> i16 {
+        debug_assert!(
+            a.checked_mul(b).is_some(),
+            "narrow16-kernel overflow guard: {a} * {b} overflows i16"
+        );
+        a.wrapping_mul(b)
+    }
+    #[inline]
+    fn madd_strip(rd: &mut [i16], w: i16, dv: &[i16], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::madd_i16_avx512(rd, w, dv) },
+                    Isa::Avx2 => return unsafe { x86::madd_i16_avx2(rd, w, dv) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_scalar(rd, w, dv);
+    }
+    #[inline]
+    fn accum_strip(acc: &mut [i16], src: &[i16], isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::accum_i16_avx512(acc, src) },
+                    Isa::Avx2 => return unsafe { x86::accum_i16_avx2(acc, src) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        accum_scalar(acc, src);
+    }
+}
+
+/// The `std::arch` strip implementations. Every function is `unsafe` to call
+/// because it requires its `target_feature` at runtime — callers go through
+/// the [`LaneElem`] dispatchers, which only select a tier [`Isa::detect`]
+/// reported available. Unaligned loads/stores throughout (the lane buffers
+/// are plain `Vec`s); tails shorter than one register fall back to wrapping
+/// scalar ops (the strip lengths used by the kernels — 8/16/32 — are always
+/// whole numbers of registers, so the tails are dead code kept for safety).
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_i16_avx2(rd: &mut [i16], w: i16, dv: &[i16]) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm256_set1_epi16(w);
+        let mut i = 0usize;
+        while i + 16 <= rd.len() {
+            let d = _mm256_loadu_si256(dv.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_loadu_si256(rd.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_add_epi16(r, _mm256_mullo_epi16(d, wv));
+            _mm256_storeu_si256(rd.as_mut_ptr().add(i) as *mut __m256i, s);
+            i += 16;
+        }
+        while i < rd.len() {
+            rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_i32_avx2(rd: &mut [i32], w: i32, dv: &[i32]) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm256_set1_epi32(w);
+        let mut i = 0usize;
+        while i + 8 <= rd.len() {
+            let d = _mm256_loadu_si256(dv.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_loadu_si256(rd.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_add_epi32(r, _mm256_mullo_epi32(d, wv));
+            _mm256_storeu_si256(rd.as_mut_ptr().add(i) as *mut __m256i, s);
+            i += 8;
+        }
+        while i < rd.len() {
+            rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_i16_avx2(acc: &mut [i16], src: &[i16]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 16 <= acc.len() {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi16(a, s));
+            i += 16;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_i32_avx2(acc: &mut [i32], src: &[i32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 8 <= acc.len() {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi32(a, s));
+            i += 8;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_i64_avx2(acc: &mut [i64], src: &[i64]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 4 <= acc.len() {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi64(a, s));
+            i += 4;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+
+    /// Unaligned 512-bit vector load via `ptr::read_unaligned` (compiles to
+    /// `vmovdqu64`; avoids depending on the exact pointer type the 512-bit
+    /// load/store intrinsics take). Carries the `avx512f` target feature so
+    /// the vector value never crosses a feature-mismatched call boundary.
+    ///
+    /// # Safety
+    /// AVX-512F verified at runtime, and 64 bytes from `p` in bounds.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn load512(p: *const u8) -> __m512i {
+        std::ptr::read_unaligned(p as *const __m512i)
+    }
+
+    /// Unaligned 512-bit vector store (see [`load512`]).
+    ///
+    /// # Safety
+    /// Same contract as [`load512`], for writing.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn store512(p: *mut u8, v: __m512i) {
+        std::ptr::write_unaligned(p as *mut __m512i, v);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F+BW support at runtime.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn madd_i16_avx512(rd: &mut [i16], w: i16, dv: &[i16]) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi16(w);
+        let mut i = 0usize;
+        while i + 32 <= rd.len() {
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            store512(rd.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi16(r, _mm512_mullo_epi16(d, wv)));
+            i += 32;
+        }
+        while i < rd.len() {
+            rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn madd_i32_avx512(rd: &mut [i32], w: i32, dv: &[i32]) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi32(w);
+        let mut i = 0usize;
+        while i + 16 <= rd.len() {
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            store512(rd.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi32(r, _mm512_mullo_epi32(d, wv)));
+            i += 16;
+        }
+        while i < rd.len() {
+            rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F+DQ support at runtime.
+    #[target_feature(enable = "avx512f,avx512dq")]
+    pub unsafe fn madd_i64_avx512(rd: &mut [i64], w: i64, dv: &[i64]) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi64(w);
+        let mut i = 0usize;
+        while i + 8 <= rd.len() {
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            store512(rd.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi64(r, _mm512_mullo_epi64(d, wv)));
+            i += 8;
+        }
+        while i < rd.len() {
+            rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F+BW support at runtime.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn accum_i16_avx512(acc: &mut [i16], src: &[i16]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 32 <= acc.len() {
+            let a = load512(acc.as_ptr().add(i) as *const u8);
+            let s = load512(src.as_ptr().add(i) as *const u8);
+            store512(acc.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi16(a, s));
+            i += 32;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn accum_i32_avx512(acc: &mut [i32], src: &[i32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 16 <= acc.len() {
+            let a = load512(acc.as_ptr().add(i) as *const u8);
+            let s = load512(src.as_ptr().add(i) as *const u8);
+            store512(acc.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi32(a, s));
+            i += 16;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn accum_i64_avx512(acc: &mut [i64], src: &[i64]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let mut i = 0usize;
+        while i + 8 <= acc.len() {
+            let a = load512(acc.as_ptr().add(i) as *const u8);
+            let s = load512(src.as_ptr().add(i) as *const u8);
+            store512(acc.as_mut_ptr().add(i) as *mut u8, _mm512_add_epi64(a, s));
+            i += 8;
+        }
+        while i < acc.len() {
+            acc[i] = acc[i].wrapping_add(src[i]);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_stable_and_available_is_monotone() {
+        let best = Isa::detect();
+        assert_eq!(best, Isa::detect());
+        assert!(Isa::Scalar.available());
+        for t in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+            assert_eq!(t.available(), t <= best);
+        }
+    }
+
+    /// Every available tier must compute the exact same strips as the
+    /// checked scalar loop, on all three element widths and on lengths that
+    /// exercise both full registers and (defensively) ragged tails. Note:
+    /// debug builds route every tier through the scalar loop, so the real
+    /// cross-check happens in release runs (`cargo bench`'s L3-h section
+    /// hard-asserts it on real sweep data too).
+    #[test]
+    fn simd_tiers_agree_with_scalar() {
+        fn case<E: LaneElem>(vals: &[i64], w: i64, len: usize) {
+            let dv: Vec<E> = (0..len).map(|i| E::from_i64(vals[i % vals.len()])).collect();
+            let base: Vec<E> =
+                (0..len).map(|i| E::from_i64(vals[(i * 7 + 3) % vals.len()])).collect();
+            let mut want = base.clone();
+            madd_scalar(&mut want, E::from_i64(w), &dv);
+            for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+                if !isa.available() {
+                    continue;
+                }
+                let mut got = base.clone();
+                E::madd_strip(&mut got, E::from_i64(w), &dv, isa);
+                assert_eq!(got, want, "madd {isa:?} len={len}");
+                let mut acc = base.clone();
+                let mut acc_want = base.clone();
+                accum_scalar(&mut acc_want, &dv);
+                E::accum_strip(&mut acc, &dv, isa);
+                assert_eq!(acc, acc_want, "accum {isa:?} len={len}");
+            }
+        }
+        let small = [-127i64, -31, -7, 0, 1, 7, 31, 127, 64, -3];
+        for len in [8usize, 16, 32, 5, 19, 33] {
+            case::<i16>(&small, 25, len);
+            case::<i32>(&small, 1999, len);
+            case::<i64>(&small, 123_456_789, len);
+        }
+    }
+}

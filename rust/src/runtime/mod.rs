@@ -5,11 +5,16 @@
 //! backends ship:
 //!
 //! - **Native** ([`NativeBackend`]) — lane-batched, bit-exact [`QuantEsn`]
-//!   rollouts on CPU ([`crate::quant::SAMPLE_LANES_NARROW`] = 16 narrow i32
-//!   samples per pass when the model's overflow bounds allow, else
-//!   [`crate::quant::SAMPLE_LANES`] = 8 wide i64 lanes; optional intra-batch
-//!   workers). No artifacts, no Python, serves classification *and*
-//!   regression; the default, and what CI exercises.
+//!   rollouts on CPU ([`crate::quant::SAMPLE_LANES_NARROW16`] = 32 narrow
+//!   i16 samples per pass when the model's overflow bounds prove the i16
+//!   state path safe, else [`crate::quant::SAMPLE_LANES_NARROW`] = 16 i32
+//!   lanes, else [`crate::quant::SAMPLE_LANES`] = 8 wide i64 lanes — with
+//!   the strip MACs dispatched to the probed SIMD tier, `quant::simd`;
+//!   optional intra-batch workers). No artifacts, no Python, serves
+//!   classification *and* regression; the default, and what CI exercises.
+//!   The coordinator can shard it per variant group
+//!   (`coordinator::ServeConfig::shards`) so mixed-variant serving scales
+//!   across cores instead of serializing on one engine.
 //! - **PJRT** ([`PjrtBackend`]) — AOT HLO-text artifacts produced by
 //!   `python/compile/aot.py`, compiled once on the CPU PJRT client
 //!   ([`Runtime`]) and executed from the hot path ([`pooled_states`] /

@@ -1,14 +1,21 @@
 //! The native execution backend: lane-batched, bit-exact [`QuantEsn`]
 //! rollouts on CPU — no compiled artifacts, no Python, no PJRT.
 //!
-//! Batches are split into [`LaneScratch::lanes`]-wide lane chunks (16 i32
-//! lanes when the model's overflow bounds allow, else 8 i64 lanes — see
+//! Batches are split into [`LaneScratch::lanes`]-wide lane chunks (32 i16
+//! lanes when the model's overflow bounds prove the i16 state path safe —
+//! the paper's q ≤ 8 regime — else 16 i32 lanes, else 8 i64 lanes; see
 //! `quant::bounds`; [`QuantEsn::classify_batch`] /
-//! [`QuantEsn::predict_batch`]); with `workers > 1` the chunks are
-//! distributed round-robin over scoped threads, each owning one reusable
-//! [`LaneScratch`]. Chunk results are placed by index, so output order — and
-//! every bit of every prediction — is independent of the worker count and of
-//! the kernel width.
+//! [`QuantEsn::predict_batch`]), with the strip MACs dispatched to the
+//! SIMD tier probed at scratch build (`quant::simd`). With `workers > 1`
+//! the chunks are distributed round-robin over scoped threads, each owning
+//! one reusable [`LaneScratch`]. Chunk results are placed by index, so
+//! output order — and every bit of every prediction — is independent of the
+//! worker count, the kernel width and the ISA tier.
+//!
+//! For *multi-variant* scale-out (one engine per variant group instead of
+//! one engine serializing all variants) see the coordinator's shard mode
+//! (`ServeConfig::shards`): each shard thread builds its own
+//! [`NativeBackend`] from the same config.
 
 use anyhow::{ensure, Result};
 
@@ -26,8 +33,10 @@ pub struct NativeConfig {
     /// serves a lane chunk at a time; more overlap chunks of large batches.
     pub workers: usize,
     /// Lane-kernel override (`rcx serve --kernel …`): `Auto` (default) lets
-    /// the overflow-bound analysis pick narrow i32×16 lanes whenever provably
-    /// safe; `Wide`/`Narrow` pin a path. Bit-identical either way.
+    /// the overflow-bound analysis pick the narrowest provably safe lane
+    /// width (i16×32 → i32×16 → i64×8); `Wide`/`Narrow`/`Narrow16` pin a
+    /// path. Bit-identical either way; the *resolved* kernel (not the
+    /// request) is what `rcx serve` logs at startup.
     pub kernel: KernelChoice,
 }
 
@@ -99,8 +108,8 @@ impl ExecBackend for NativeBackend {
         samples: &[&TimeSeries],
     ) -> Result<Vec<Prediction>> {
         ensure!(samples.len() <= self.cfg.max_batch, "batch overflows native backend cap");
-        // Worker sizing needs the chunk count, which needs the lane width —
-        // size for the widest chunking (narrow, 16) then clamp.
+        // Worker sizing needs the chunk count, which needs the lane width
+        // (8/16/32 by resolved kernel) — resolve first, then clamp.
         let lane_w = self.ensure_scratches(model, self.cfg.workers.max(1));
         let n_chunks = samples.len().div_ceil(lane_w);
         let workers = self.workers_for(n_chunks);
@@ -183,13 +192,19 @@ mod tests {
         let (qm, data) = melborn_model();
         let refs: Vec<&_> = data.test.iter().collect();
         let mut outs = Vec::new();
-        for kernel in [KernelChoice::Narrow, KernelChoice::Wide, KernelChoice::Auto] {
+        for kernel in [
+            KernelChoice::Narrow16,
+            KernelChoice::Narrow,
+            KernelChoice::Wide,
+            KernelChoice::Auto,
+        ] {
             let cfg = NativeConfig { max_batch: 64, workers: 2, kernel };
             let mut b = NativeBackend::new(cfg);
             outs.push(b.execute_batch(&qm, &refs).unwrap());
         }
-        assert_eq!(outs[0], outs[1], "narrow != wide through the backend");
-        assert_eq!(outs[0], outs[2], "auto != pinned through the backend");
+        assert_eq!(outs[0], outs[1], "narrow16 != narrow through the backend");
+        assert_eq!(outs[0], outs[2], "narrow16 != wide through the backend");
+        assert_eq!(outs[0], outs[3], "auto != pinned through the backend");
     }
 
     #[test]

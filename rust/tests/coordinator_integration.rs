@@ -19,9 +19,14 @@ use rcx::quant::{QuantEsn, QuantSpec};
 use rcx::runtime::NativeConfig;
 
 fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
+    native_cfg_sharded(max_batch, workers, 1)
+}
+
+fn native_cfg_sharded(max_batch: usize, workers: usize, shards: usize) -> ServeConfig {
     ServeConfig {
         backend: BackendConfig::Native(NativeConfig { max_batch, workers, ..Default::default() }),
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        shards,
     }
 }
 
@@ -164,6 +169,103 @@ fn out_of_range_variant_is_rejected_without_killing_the_server() {
     server.shutdown().unwrap();
 }
 
+/// Build a 4-variant registry (q ∈ {4, 5, 6, 8} of one trained model) and
+/// serve the same request stream at several shard counts; every shard count
+/// must produce the exact same predictions as the scalar golden model.
+#[test]
+fn sharded_serving_is_bit_identical_to_single_executor() {
+    let data = melborn_sized(7, 60, 40);
+    let res = Reservoir::init(ReservoirSpec::paper(30, 1, 150, 0.9, 1.0, 17));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let models: Vec<Arc<QuantEsn>> = [4u8, 5, 6, 8]
+        .iter()
+        .map(|&q| Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(q))))
+        .collect();
+    let specs: Vec<VariantSpec> = models
+        .iter()
+        .enumerate()
+        .map(|(i, qm)| VariantSpec::shared(format!("v{i}"), Arc::clone(qm)))
+        .collect();
+
+    let serve_all = |shards: usize| -> Vec<Prediction> {
+        let server = Server::start(native_cfg_sharded(8, 1, shards), specs.clone()).unwrap();
+        // Requested shard count sticks (clamped to the 4 variants).
+        assert_eq!(server.n_shards(), shards.clamp(1, 4));
+        let client = server.client();
+        let pending: Vec<_> = data
+            .test
+            .iter()
+            .enumerate()
+            .map(|(i, s)| client.submit(i % 4, s.clone()).unwrap())
+            .collect();
+        let out: Vec<Prediction> = pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv_timeout(Duration::from_secs(30)).expect("response lost").prediction
+            })
+            .collect();
+        let snap = server.metrics();
+        assert_eq!(snap.requests, data.test.len() as u64, "shards={shards}");
+        server.shutdown().unwrap();
+        out
+    };
+
+    let single = serve_all(1);
+    // Golden cross-check: routing really hit the intended variant models.
+    for (i, p) in single.iter().enumerate() {
+        let expect = models[i % 4].classify(&data.test[i]);
+        assert_eq!(*p, Prediction::Class(expect), "sample {i}");
+    }
+    for shards in [2usize, 3, 4, 9] {
+        assert_eq!(serve_all(shards), single, "shards={shards} diverged from single executor");
+    }
+}
+
+/// Sharded deadline flush: fewer requests than max_batch routed at variants
+/// living on *different* shards — each shard's own max_wait deadline must
+/// flush its partial batch; nothing may starve or cross shards.
+#[test]
+fn sharded_deadline_flush_answers_partial_batches() {
+    let (server, data, models) = {
+        let data = melborn_sized(21, 100, 60);
+        let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
+        let q8 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(8)));
+        let server = Server::start(
+            native_cfg_sharded(16, 1, 2),
+            vec![
+                VariantSpec::shared("q4", Arc::clone(&q4)),
+                VariantSpec::shared("q8", Arc::clone(&q8)),
+            ],
+        )
+        .unwrap();
+        (server, data, vec![q4, q8])
+    };
+    assert_eq!(server.n_shards(), 2);
+    let client = server.client();
+    // 3 requests per variant — far under max_batch 16, so only each shard's
+    // deadline can flush them.
+    let mut pending = Vec::new();
+    for (i, s) in data.test.iter().take(6).enumerate() {
+        pending.push((i % 2, i, client.submit(i % 2, s.clone()).unwrap()));
+    }
+    for (v, i, rx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
+        assert!(resp.batch_size <= 3, "impossible batch size {}", resp.batch_size);
+        let expect = models[v].classify(&data.test[i]);
+        assert_eq!(resp.prediction, Prediction::Class(expect), "sample {i} variant {v}");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.requests, 6);
+    // An out-of-range variant is still rejected without killing any shard.
+    let bad = client.submit(99, data.test[0].clone()).unwrap();
+    assert!(bad.recv_timeout(Duration::from_secs(5)).is_err());
+    let ok = client.infer(0, data.test[0].clone()).unwrap();
+    assert_eq!(ok.prediction, Prediction::Class(models[0].classify(&data.test[0])));
+    server.shutdown().unwrap();
+}
+
 #[test]
 fn graceful_shutdown_drains_queue() {
     let (server, data, _) = classification_setup(2);
@@ -194,6 +296,7 @@ fn startup_fails_cleanly_without_artifacts() {
                 artifact: "melborn_pooled".into(),
             },
             batcher: BatcherConfig::default(),
+            shards: 1,
         },
         vec![VariantSpec::new("x", model)],
     );
@@ -219,6 +322,7 @@ fn pjrt_backend_serves_if_artifacts_present() {
                 artifact: "melborn_pooled".into(),
             },
             batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
+            shards: 1,
         },
         vec![VariantSpec::shared("q4", Arc::clone(&q4))],
     )

@@ -1,24 +1,27 @@
 //! Exact-equivalence property tests for the incremental sensitivity engines:
 //! on every benchmark task, both feature-pooling modes and every paper
 //! bit-width, the sequential-incremental AND batched-incremental engines'
-//! Eq. 4 scores — on **both** lane kernels, narrow (i32×16) and wide
-//! (i64×8) — must be **bit-identical** (assert_eq on `f64`, no tolerance) to
-//! the dense flip → `evaluate_split` → restore oracle — which in turn must
-//! agree with the allocating `evaluate_split_reference` path under perturbed
-//! weights. Property tests additionally pin lane-level batched evaluation to
+//! Eq. 4 scores — on **every** lane kernel the bounds admit, narrow16
+//! (i16×32), narrow (i32×16) and wide (i64×8) — must be **bit-identical**
+//! (assert_eq on `f64`, no tolerance) to the dense
+//! flip → `evaluate_split` → restore oracle — which in turn must agree with
+//! the allocating `evaluate_split_reference` path under perturbed weights.
+//! Property tests additionally pin lane-level batched evaluation to
 //! sequential `eval_flip` under random (possibly support-overlapping) batch
 //! compositions. Running under `cargo test` (debug) also exercises the
-//! narrow kernel's `debug_assert!` overflow guards across the whole
+//! narrow kernels' `debug_assert!` overflow guards across the whole
 //! benchmark × pooling × bit-width grid — they must never fire on a
-//! bound-approved model.
+//! bound-approved model (debug builds route every SIMD strip through the
+//! checked scalar tier precisely so these guards execute).
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
 use rcx::data::Dataset;
 use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
 use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
 use rcx::quant::{
-    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, KernelChoice, QuantEsn,
-    QuantSpec, BATCH_LANES,
+    flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, Kernel, KernelBounds,
+    KernelChoice, LaneScratch, QuantEsn, QuantSpec, BATCH_LANES, BATCH_LANES_NARROW16,
+    SAMPLE_LANES_NARROW16,
 };
 use rcx::rng::{Pcg64, Rng};
 
@@ -48,8 +51,16 @@ fn henon() -> (EsnModel, Dataset) {
 }
 
 /// Full Eq. 4 sweep on all three engines — the batched one additionally on
-/// both pinned lane kernels; exact equality required everywhere.
-fn assert_engines_agree(model: &EsnModel, data: &Dataset, q: u8, max_calib: usize, tag: &str) {
+/// every pinned lane kernel the bounds admit; exact equality required
+/// everywhere. Returns whether the i16 tier engaged for this `(model, q)`
+/// so callers can assert it engages somewhere on their grid.
+fn assert_engines_agree(
+    model: &EsnModel,
+    data: &Dataset,
+    q: u8,
+    max_calib: usize,
+    tag: &str,
+) -> bool {
     let qm = QuantEsn::from_model(model, data, QuantSpec::bits(q));
     let mk = |engine, kernel| {
         SensitivityPruner::new(SensitivityConfig { parallelism: 2, max_calib, engine, kernel })
@@ -61,52 +72,94 @@ fn assert_engines_agree(model: &EsnModel, data: &Dataset, q: u8, max_calib: usiz
     assert_eq!(inc, dense, "{tag} q={q}: incremental != dense oracle");
     let batched = mk(Engine::IncrementalBatched, auto).scores(&qm, &data.train);
     assert_eq!(batched, dense, "{tag} q={q}: batched != dense oracle");
-    // Pinned kernels: the narrow (i32×16) path runs under its debug_assert
-    // overflow guards here; the wide (i64×8) path is the frozen oracle.
+    // Pinned kernels: the narrow paths run under their debug_assert overflow
+    // guards here; the wide (i64×8) path is the frozen oracle.
     let narrow = mk(Engine::IncrementalBatched, KernelChoice::Narrow).scores(&qm, &data.train);
     assert_eq!(narrow, dense, "{tag} q={q}: narrow kernel != dense oracle");
     let wide = mk(Engine::IncrementalBatched, KernelChoice::Wide).scores(&qm, &data.train);
     assert_eq!(wide, dense, "{tag} q={q}: wide kernel != dense oracle");
+    // The i16 tier only where the bounds prove it (pinning it past the bound
+    // panics by design) — compute them over the exact calib slice the
+    // scorers saw.
+    let calib = if max_calib > 0 && data.train.len() > max_calib {
+        &data.train[..max_calib]
+    } else {
+        &data.train[..]
+    };
+    let t_max = calib.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
+    let engages16 = KernelBounds::analyze(&qm, t_max).scoring_kernel() == Kernel::Narrow16;
+    if engages16 {
+        let n16 = mk(Engine::IncrementalBatched, KernelChoice::Narrow16).scores(&qm, &data.train);
+        assert_eq!(n16, dense, "{tag} q={q}: narrow16 kernel != dense oracle");
+    }
+    engages16
 }
 
 #[test]
 fn melborn_mean_state_all_bitwidths() {
     let (m, data) = melborn(Features::MeanState);
+    let mut engaged16 = false;
     for q in [4u8, 6, 8] {
-        assert_engines_agree(&m, &data, q, 20, "melborn/mean");
+        engaged16 |= assert_engines_agree(&m, &data, q, 20, "melborn/mean");
     }
+    assert!(engaged16, "no melborn/mean bit-width reached the i16 tier");
 }
 
 #[test]
 fn melborn_last_state_all_bitwidths() {
     let (m, data) = melborn(Features::LastState);
+    let mut engaged16 = false;
     for q in [4u8, 6, 8] {
-        assert_engines_agree(&m, &data, q, 20, "melborn/last");
+        engaged16 |= assert_engines_agree(&m, &data, q, 20, "melborn/last");
     }
+    assert!(engaged16, "no melborn/last bit-width reached the i16 tier");
 }
 
 #[test]
 fn pen_mean_state_all_bitwidths() {
     let (m, data) = pen(Features::MeanState);
+    let mut engaged16 = false;
     for q in [4u8, 6, 8] {
-        assert_engines_agree(&m, &data, q, 24, "pen/mean");
+        engaged16 |= assert_engines_agree(&m, &data, q, 24, "pen/mean");
     }
+    assert!(engaged16, "no pen/mean bit-width reached the i16 tier");
 }
 
 #[test]
 fn pen_last_state_all_bitwidths() {
     let (m, data) = pen(Features::LastState);
+    let mut engaged16 = false;
     for q in [4u8, 6, 8] {
-        assert_engines_agree(&m, &data, q, 24, "pen/last");
+        engaged16 |= assert_engines_agree(&m, &data, q, 24, "pen/last");
     }
+    assert!(engaged16, "no pen/last bit-width reached the i16 tier");
 }
 
 #[test]
 fn henon_regression_all_bitwidths() {
     let (m, data) = henon();
+    let mut engaged16 = false;
     for q in [4u8, 6, 8] {
-        assert_engines_agree(&m, &data, q, 0, "henon");
+        engaged16 |= assert_engines_agree(&m, &data, q, 0, "henon");
     }
+    assert!(engaged16, "no henon bit-width reached the i16 tier");
+}
+
+/// The acceptance-criterion anchor: under `Kernel::Auto` (no pins anywhere)
+/// a real q ≤ 8 benchmark model must land on the i16 path on BOTH hot paths
+/// — the scoring plan at 32 lanes and the inference scratch at 32 sample
+/// lanes.
+#[test]
+fn i16_path_engages_on_real_q4_models_under_auto() {
+    let (m, data) = melborn(Features::MeanState);
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+    let plan = CalibPlan::build(&qm, &data.train[..20]);
+    assert_eq!(plan.kernel(), Kernel::Narrow16, "scoring plan must auto-select i16");
+    assert_eq!(plan.lanes(), BATCH_LANES_NARROW16);
+    let sc = LaneScratch::for_model(&qm);
+    assert_eq!(sc.kernel(), Kernel::Narrow16, "inference scratch must auto-select i16");
+    assert_eq!(sc.lanes(), SAMPLE_LANES_NARROW16);
+    assert!(sc.isa().available());
 }
 
 /// The dense oracle itself is anchored to the allocating reference

@@ -7,10 +7,11 @@ Rust toolchain. This tool closes the loop:
 
 - the **iteration-4 engine table** rows (`| 1 | *BENCH_ci.json* | ...`) are
   replaced with the artifact's `l3b_engines.rows` timings, and
-- the `<!-- BENCH_CI:BEGIN -->...<!-- BENCH_CI:END -->` marker block in
-  iteration 6 is regenerated with a rendered snapshot of every section
-  (engines, pack fill at 8 and 16 lanes, the narrow-vs-wide L3-g kernel
-  head-to-head, the native kernel speedup, and the closed-loop serve grid).
+- the `<!-- BENCH_CI:BEGIN -->...<!-- BENCH_CI:END -->` marker block is
+  regenerated with a rendered snapshot of every section (engines, pack fill
+  at 8 and 16 lanes, the narrow-vs-wide L3-g kernel head-to-head, the L3-h
+  SIMD-dispatch grid — kernel width x ISA tier, the native kernel speedup,
+  and the closed-loop serve grid).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
@@ -35,12 +36,17 @@ SCHEMA = {
     "pack_fill": {"candidates", "batches", "mean_lane_fill"},
     "pack_fill_16": {"candidates", "batches", "mean_lane_fill", "lanes"},
     "l3g_kernel": {"wide_s", "narrow_s", "speedup", "bit_identical"},
+    "l3h_simd": {"rows", "bit_identical"},
     "native_kernel": {"samples", "lane_batched_us", "scalar_us", "speedup"},
     "serve_native": {"rows"},
 }
 L3B_ROW_KEYS = {
     "workers", "dense_s", "incremental_s", "batched_s",
     "speedup_incremental_vs_dense", "speedup_batched_vs_incremental",
+}
+L3H_ROW_KEYS = {
+    "kernel", "isa", "scoring_s", "classify_us", "scoring_speedup",
+    "classify_speedup",
 }
 SERVE_ROW_KEYS = {
     "max_batch", "workers", "clients", "requests", "req_per_s", "mean_batch",
@@ -68,8 +74,14 @@ def validate(bench):
         missing = SERVE_ROW_KEYS - set(row)
         if missing:
             fail(f"serve_native row {row} missing {sorted(missing)}")
+    for row in bench["l3h_simd"]["rows"]:
+        missing = L3H_ROW_KEYS - set(row)
+        if missing:
+            fail(f"l3h_simd row {row} missing {sorted(missing)}")
     if not bench["l3g_kernel"]["bit_identical"]:
         fail("l3g_kernel.bit_identical is false — the bench should have aborted")
+    if not bench["l3h_simd"]["bit_identical"]:
+        fail("l3h_simd.bit_identical is false — the bench should have aborted")
 
 
 def wname(workers):
@@ -107,6 +119,16 @@ def render_block(bench):
     out.append("|---|---|---|")
     out.append(f"| wide (i64x8) | {secs(g['wide_s'])} | 1.00x |")
     out.append(f"| narrow (i32x16) | {secs(g['narrow_s'])} | {g['speedup']:.2f}x |")
+    out.append("")
+    out.append("| L3-h kernel | isa | scoring | classify (64) | "
+               "scoring speedup | classify speedup |")
+    out.append("|---|---|---|---|---|---|")
+    for r in bench["l3h_simd"]["rows"]:
+        out.append(
+            f"| {r['kernel']} | {r['isa']} | {secs(r['scoring_s'])} | "
+            f"{r['classify_us']:.1f} us | {r['scoring_speedup']:.2f}x | "
+            f"{r['classify_speedup']:.2f}x |"
+        )
     out.append("")
     out.append("| pack fill | candidates | batches | mean fill |")
     out.append("|---|---|---|---|")

@@ -5,12 +5,17 @@ regression), CalibPlan caches, step_frontier, eval_flip_cls/reg, flip_bit,
 the batched multi-flip path (eval_flips_batched lane algebra, the packer
 with overlap-tolerant top-up, the dead-lane early exit via last_prev_nz),
 and the narrow-kernel overflow-bound analysis (quant::bounds): the mirror
-computes the same scatter/pooled bound formula, selects 16 narrow lanes or
-8 wide lanes exactly like `CalibPlan::build`, and — Python ints being exact —
-*proves* the bound on real data by asserting every narrow-path intermediate
-stays inside i32. Asserts bit-identical Perf for every (slot, bit) flip on
-random sparse models, sequentially and through packed batches, including a
-model deliberately constructed to FAIL the bound and take the wide fallback.
+computes the same scatter/pooled bound formula, selects the narrowest
+provably safe tier — 32 i16 lanes, 16 i32 lanes or the 8 wide i64 lanes —
+exactly like `CalibPlan::build`, and — Python ints being exact — *proves*
+the bound on real data by asserting every narrow-path intermediate stays
+inside the selected width (i16 for narrow16, i32 for narrow). Asserts
+bit-identical Perf for every (slot, bit) flip on random sparse models,
+sequentially and through packed batches, including models deliberately
+constructed to FAIL a bound and take the next-wider fallback (i16 → i32,
+i32 → wide). (The Rust SIMD dispatch needs no mirror of its own: all ISA
+tiers are wrapping integer strips, bit-identical to this algebra whenever
+the bounds hold.)
 
 Usage:
     python tools/frontier_mirror.py --check   # CI gate: all correctness cases
@@ -22,12 +27,18 @@ import bisect
 import sys
 import time
 
-# Lane widths of the two kernels (rollout.rs BATCH_LANES / BATCH_LANES_NARROW)
+# Lane widths of the kernels
+# (rollout.rs BATCH_LANES / BATCH_LANES_NARROW / BATCH_LANES_NARROW16)
 BATCH_LANES = 8
 BATCH_LANES_NARROW = 16
+BATCH_LANES_NARROW16 = 32
 
-# quant::bounds::I32_LIMIT
+# quant::bounds::{I32_LIMIT, I16_LIMIT}
 I32_MAX = 2**31 - 1
+I16_MAX = 2**15 - 1
+
+TIER_LANES = {"narrow16": BATCH_LANES_NARROW16, "narrow": BATCH_LANES_NARROW, "wide": BATCH_LANES}
+TIER_LIMIT = {"narrow16": I16_MAX, "narrow": I32_MAX, "wide": None}
 
 
 def qmax(q):
@@ -51,13 +62,18 @@ def kernel_bounds(model, t_max):
     corr_max = dw_max * m
     scatter_max = row_l1 * dev_max + corr_max
     pooled_max = t_max * dev_max
-    narrow = scatter_max <= I32_MAX and pooled_max <= I32_MAX
+    if scatter_max <= I16_MAX and pooled_max <= I16_MAX:
+        tier = "narrow16"
+    elif scatter_max <= I32_MAX and pooled_max <= I32_MAX:
+        tier = "narrow"
+    else:
+        tier = "wide"
     return {
         "scatter_max": scatter_max,
         "pooled_max": pooled_max,
         "new_val_limit": m,
-        "narrow": narrow,
-        "lanes": BATCH_LANES_NARROW if narrow else BATCH_LANES,
+        "tier": tier,
+        "lanes": TIER_LANES[tier],
     }
 
 
@@ -252,26 +268,33 @@ class Plan:
                 entry["racc"] = racc
                 entry["se"] = se
             self.sp.append(entry)
-        # Lane-kernel selection (mirror of CalibPlan::build + KernelChoice).
+        # Lane-kernel selection (mirror of CalibPlan::build + KernelChoice):
+        # auto takes the narrowest provably safe tier; a pin narrower than
+        # the bounds allow refuses (KernelChoice::resolve panics there).
         t_max = max((sp["T"] for sp in self.sp), default=0)
         self.bounds = kernel_bounds(model, t_max)
         if kernel == "auto":
-            self.narrow = self.bounds["narrow"]
+            self.tier = self.bounds["tier"]
         elif kernel == "wide":
-            self.narrow = False
+            self.tier = "wide"
         elif kernel == "narrow":
-            assert self.bounds["narrow"], "refusing kernel=narrow: bound fails"
-            self.narrow = True
+            assert self.bounds["tier"] != "wide", "refusing kernel=narrow: bound fails"
+            self.tier = "narrow"
+        elif kernel == "narrow16":
+            assert self.bounds["tier"] == "narrow16", "refusing kernel=narrow16: bound fails"
+            self.tier = "narrow16"
         else:
             raise ValueError(kernel)
-        self.lanes = BATCH_LANES_NARROW if self.narrow else BATCH_LANES
+        self.lanes = TIER_LANES[self.tier]
 
     def _ck(self, v):
         """Narrow-kernel overflow guard: the Python mirror of the Rust
         debug_assert!s — Python ints are exact, so asserting every narrow
-        intermediate fits i32 *proves* the bound held on this data."""
-        if self.narrow:
-            assert -I32_MAX - 1 <= v <= I32_MAX, f"narrow bound violated: {v}"
+        intermediate fits its lane width (i16 on the narrow16 tier, i32 on
+        narrow) *proves* the bound held on this data."""
+        limit = TIER_LIMIT[self.tier]
+        if limit is not None:
+            assert -limit - 1 <= v <= limit, f"{self.tier} bound violated: {v}"
         return v
 
     def step_frontier(self, sp, t, i0, j0, dw, dirty):
@@ -481,18 +504,20 @@ class Plan:
         m = self.m
         b = len(flips)
         assert b <= self.lanes
-        if self.narrow and any(abs(nv) > self.bounds["new_val_limit"] for (_s, nv) in flips):
+        if self.tier != "wide" and any(
+            abs(nv) > self.bounds["new_val_limit"] for (_s, nv) in flips
+        ):
             # Out-of-range hypothetical values void the scatter bound: route
             # the batch through the wide kernel in <= BATCH_LANES chunks
             # (lanes never interact), mirroring the Rust fallback.
-            saved = (self.narrow, self.lanes)
-            self.narrow, self.lanes = False, BATCH_LANES
+            saved = (self.tier, self.lanes)
+            self.tier, self.lanes = "wide", BATCH_LANES
             try:
                 out = []
                 for k in range(0, b, BATCH_LANES):
                     out.extend(self.eval_flips_batched(flips[k:k + BATCH_LANES]))
             finally:
-                self.narrow, self.lanes = saved
+                self.tier, self.lanes = saved
             return out
         dw = [nv - m.values[slot] for (slot, nv) in flips]
         i0 = [self.slot_rc[slot][0] for (slot, _nv) in flips]
@@ -704,7 +729,7 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
                           f"batched={perf} seq={seq}")
     # narrow plans: an out-of-range hypothetical value (never produced by
     # flip_bit) must take the wide fallback and still match sequential
-    if plan.narrow:
+    if plan.tier != "wide":
         flips = [(0, qmax(q) * 50), (1, flip_bit(model.values[1], 0, q))]
         perfs = plan.eval_flips_batched(flips)
         for (slot, nv), perf in zip(flips, perfs):
@@ -731,33 +756,57 @@ def run_checks():
     bad += run_case(6, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
     bad += run_case(7, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
     bad += run_case(8, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)  # washout == T edge
-    # Auto selection: these models' bounds all hold, so they run the narrow
-    # 16-lane algebra under the mirror's i32-range asserts.
+    # Auto selection: these low-q models' bounds hold at i16, so they run
+    # the narrow16 32-lane algebra under the mirror's exact i16-range
+    # asserts (Python ints are exact, so 0 assertion failures *proves* the
+    # bound on this data).
     bad += run_batched_case(11, "cls", "mean", n=12, q=4, T=10, n_samples=8,
-                            expect_lanes=BATCH_LANES_NARROW)
+                            expect_lanes=BATCH_LANES_NARROW16)
     bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6,
-                            expect_lanes=BATCH_LANES_NARROW)
+                            expect_lanes=BATCH_LANES_NARROW16)
     bad += run_batched_case(13, "cls", "last", n=12, q=4, T=10, n_samples=8)
     bad += run_batched_case(14, "cls", "last", n=10, q=8, T=6, n_samples=5)
     bad += run_batched_case(15, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5, out_dim=2)
     bad += run_batched_case(16, "reg", "mean", n=14, q=8, T=15, n_samples=2, washout=0, out_dim=1)
     bad += run_batched_case(17, "cls", "mean", n=8, q=4, T=1, n_samples=6)   # T=1 edge
     bad += run_batched_case(18, "reg", "mean", n=8, q=6, T=3, n_samples=2, washout=3)
-    # Pinned-wide (8-lane i64 oracle path) on the same shapes.
+    # Pinned tiers on the same shapes: wide (8-lane i64 oracle) and an
+    # explicit narrow16 pin (must not refuse on an i16-safe model), plus the
+    # middle i32 pin on an i16-capable model (wider-than-auto is legal).
     bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6,
                             kernel="wide", expect_lanes=BATCH_LANES)
     bad += run_batched_case(15, "reg", "mean", n=12, q=4, T=20, n_samples=3, washout=5,
                             out_dim=2, kernel="wide", expect_lanes=BATCH_LANES)
+    bad += run_batched_case(11, "cls", "mean", n=12, q=4, T=10, n_samples=8,
+                            kernel="narrow16", expect_lanes=BATCH_LANES_NARROW16)
+    bad += run_batched_case(12, "cls", "mean", n=16, q=6, T=8, n_samples=6,
+                            kernel="narrow", expect_lanes=BATCH_LANES_NARROW)
+    # Deliberately-failing i16: mid-inflated weights break the i16 scatter
+    # bound while staying inside i32 — auto must take the narrow (i32)
+    # fallback, and a narrow16 pin must refuse.
+    bad += run_batched_case(21, "cls", "mean", n=12, q=8, T=10, n_samples=6,
+                            inflate=30, expect_lanes=BATCH_LANES_NARROW)
+    bad += run_batched_case(22, "reg", "mean", n=10, q=8, T=12, n_samples=3, washout=2,
+                            out_dim=2, inflate=30, expect_lanes=BATCH_LANES_NARROW)
+    try:
+        run_batched_case(21, "cls", "mean", n=12, q=8, T=10, n_samples=6,
+                         inflate=30, kernel="narrow16")
+    except AssertionError as e:
+        assert "refusing kernel=narrow16" in str(e)
+        print("narrow16 pin correctly refused on an i32-only model")
+    else:
+        raise AssertionError("narrow16 pin must refuse past the i16 bound")
     # Forced wide FALLBACK: reservoir weights inflated until the scatter
-    # bound fails i32 — auto selection must reject narrow and the wide
-    # algebra must still match sequential exactly.
+    # bound fails i32 too — auto selection must reject both narrow tiers and
+    # the wide algebra must still match sequential exactly.
     bad += run_batched_case(19, "cls", "mean", n=12, q=8, T=10, n_samples=6,
                             inflate=10**8, expect_lanes=BATCH_LANES)
     bad += run_batched_case(20, "reg", "mean", n=10, q=8, T=12, n_samples=3, washout=2,
                             out_dim=2, inflate=10**8, expect_lanes=BATCH_LANES)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "frontier algorithm diverges from dense reference"
-    print("OK: incremental == batched == dense on all cases (narrow + wide kernels)")
+    print("OK: incremental == batched == dense on all cases "
+          "(narrow16 + narrow + wide kernels)")
 
 
 def run_perf():
@@ -781,7 +830,7 @@ def run_perf():
 
     order = sorted(range(len(cands)), key=lambda i: plan.support_row_span(cands[i][0]) + (i,))
     sorted_cands = [cands[i] for i in order]
-    for kernel in ("wide", "narrow"):
+    for kernel in ("wide", "narrow", "narrow16"):
         plan = Plan(model, kernel=kernel)
         t0 = time.perf_counter()
         batches = plan.pack_batches(sorted_cands)

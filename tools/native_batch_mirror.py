@@ -11,22 +11,32 @@ is bit-equality of the mirrored semantics.
 
 Since the narrow-kernel rework the mirror also carries the inference side of
 the overflow-bound analysis (`quant::bounds`): it computes the same
-`rec_acc`/`in_acc` worst-case formula, selects 16 narrow lanes or 8 wide
-lanes exactly like `LaneScratch::for_model`, and in narrow mode asserts every
-accumulator fits i32 (Python ints are exact, so the assert *proves* the bound
-on real data). One case deliberately FAILS the bound (inflated weights) and
-must take the wide fallback.
+`rec_acc`/`in_acc` worst-case formula, selects the narrowest provably safe
+tier — 32 i16 lanes, 16 i32 lanes or the 8 wide i64 lanes — exactly like
+`LaneScratch::for_model`, and in the narrow tiers asserts every accumulator
+fits the selected width (Python ints are exact, so the assert *proves* the
+bound on real data). Cases deliberately FAIL a bound (inflated weights) and
+must take the next-wider fallback: mid-inflation breaks i16 but not i32
+(→ 16 lanes), heavy inflation breaks both (→ the 8-lane wide oracle). The
+Rust SIMD dispatch needs no mirror: all ISA tiers are wrapping integer
+strips, bit-identical to this algebra whenever the bounds hold.
 
 Usage:
     python tools/native_batch_mirror.py   # the CI gate; no flags
 """
 import random
 
-from frontier_mirror import I32_MAX, Ladder, Model, argmax, qmax  # noqa: F401
+from frontier_mirror import I16_MAX, I32_MAX, Ladder, Model, argmax, qmax  # noqa: F401
 
-# Lane widths of the two kernels (batch.rs SAMPLE_LANES / SAMPLE_LANES_NARROW)
+# Lane widths of the kernels
+# (batch.rs SAMPLE_LANES / SAMPLE_LANES_NARROW / SAMPLE_LANES_NARROW16)
 SAMPLE_LANES = 8
 SAMPLE_LANES_NARROW = 16
+SAMPLE_LANES_NARROW16 = 32
+
+TIER_LANES = {"narrow16": SAMPLE_LANES_NARROW16, "narrow": SAMPLE_LANES_NARROW,
+              "wide": SAMPLE_LANES}
+TIER_LIMIT = {"narrow16": I16_MAX, "narrow": I32_MAX, "wide": None}
 
 # The mirror feeds raw 8-bit sensor words (±127), matching the Rust input
 # quantizer clamp qmax(max(8, q)) for q <= 8.
@@ -34,7 +44,9 @@ U_MAX = 127
 
 
 def inference_bounds(model, u_max=U_MAX):
-    """Mirror of quant::bounds::KernelBounds::analyze (inference side)."""
+    """Mirror of quant::bounds::KernelBounds::analyze (inference side):
+    narrowest tier whose rec_acc/in_acc/u_max (and, at i16, s_max) bounds
+    all hold, with the per-tier MeanState pooled horizon."""
     m = qmax(model.q)
     row_l1 = 0
     for i in range(model.n):
@@ -43,14 +55,24 @@ def inference_bounds(model, u_max=U_MAX):
     in_l1 = max((abs(w) for w in model.w_in), default=0)  # input_dim = 1
     rec_acc_max = row_l1 * m
     in_acc_max = in_l1 * u_max
-    narrow = rec_acc_max <= I32_MAX and in_acc_max <= I32_MAX and u_max <= I32_MAX
-    max_steps = I32_MAX // m if m > 0 else float("inf")
+    if (rec_acc_max <= I16_MAX and in_acc_max <= I16_MAX and u_max <= I16_MAX
+            and m <= I16_MAX):
+        tier = "narrow16"
+    elif rec_acc_max <= I32_MAX and in_acc_max <= I32_MAX and u_max <= I32_MAX:
+        tier = "narrow"
+    else:
+        tier = "wide"
+    max_steps = {
+        "narrow16": I16_MAX // m if m > 0 else float("inf"),
+        "narrow": I32_MAX // m if m > 0 else float("inf"),
+        "wide": float("inf"),
+    }
     return {
         "rec_acc_max": rec_acc_max,
         "in_acc_max": in_acc_max,
         "max_steps": max_steps,
-        "narrow": narrow,
-        "lanes": SAMPLE_LANES_NARROW if narrow else SAMPLE_LANES,
+        "tier": tier,
+        "lanes": TIER_LANES[tier],
     }
 
 
@@ -95,21 +117,27 @@ class Lanes:
     def __init__(self, model, kernel="auto"):
         self.bounds = inference_bounds(model)
         if kernel == "auto":
-            self.narrow = self.bounds["narrow"]
+            self.tier = self.bounds["tier"]
         elif kernel == "wide":
-            self.narrow = False
+            self.tier = "wide"
         elif kernel == "narrow":
-            assert self.bounds["narrow"], "refusing kernel=narrow: bound fails"
-            self.narrow = True
+            assert self.bounds["tier"] != "wide", "refusing kernel=narrow: bound fails"
+            self.tier = "narrow"
+        elif kernel == "narrow16":
+            assert self.bounds["tier"] == "narrow16", "refusing kernel=narrow16: bound fails"
+            self.tier = "narrow16"
         else:
             raise ValueError(kernel)
-        self.lanes = SAMPLE_LANES_NARROW if self.narrow else SAMPLE_LANES
-        self.max_steps = self.bounds["max_steps"] if self.narrow else float("inf")
+        self.narrow = self.tier != "wide"
+        self.lanes = TIER_LANES[self.tier]
+        self.max_steps = self.bounds["max_steps"][self.tier]
 
     def ck(self, v):
-        """Narrow overflow guard (mirror of the Rust debug_assert!s)."""
-        if self.narrow:
-            assert -I32_MAX - 1 <= v <= I32_MAX, f"narrow bound violated: {v}"
+        """Narrow overflow guard (mirror of the Rust debug_assert!s): the
+        value must fit the selected tier's lane element exactly."""
+        limit = TIER_LIMIT[self.tier]
+        if limit is not None:
+            assert -limit - 1 <= v <= limit, f"{self.tier} bound violated: {v}"
         return v
 
 
@@ -248,13 +276,13 @@ def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo,
 
 def run_checks():
     bad = 0
-    # Batch sizes crossing both lane boundaries, uniform and ragged lengths.
-    # Auto selection: these models' bounds hold, so the 16-lane narrow
-    # algebra runs under the mirror's i32-range asserts.
+    # Batch sizes crossing the lane boundaries, uniform and ragged lengths.
+    # Auto selection: these low-q models' bounds hold at i16, so the 32-lane
+    # narrow16 algebra runs under the mirror's exact i16-range asserts.
     bad += run_case(1, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
-                    n_samples=1, t_lo=10, t_hi=10, expect_lanes=SAMPLE_LANES_NARROW)
+                    n_samples=1, t_lo=10, t_hi=10, expect_lanes=SAMPLE_LANES_NARROW16)
     bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
-                    n_samples=33, t_lo=4, t_hi=20, expect_lanes=SAMPLE_LANES_NARROW)
+                    n_samples=33, t_lo=4, t_hi=20, expect_lanes=SAMPLE_LANES_NARROW16)
     bad += run_case(3, "cls", "last", n=12, q=4, washout=0, out_dim=3, nnz=4,
                     n_samples=17, t_lo=3, t_hi=15)
     bad += run_case(4, "cls", "last", n=10, q=8, washout=0, out_dim=2, nnz=3,
@@ -263,12 +291,42 @@ def run_checks():
                     n_samples=19, t_lo=2, t_hi=25)  # some T < washout -> empty rows
     bad += run_case(6, "reg", "mean", n=14, q=8, washout=0, out_dim=1, nnz=5,
                     n_samples=16, t_lo=6, t_hi=6)
-    # Pinned-wide (8-lane i64 oracle path).
+    # Batch widths crossing the 32-lane boundary (one full narrow16 pass + a
+    # ragged second pass).
+    bad += run_case(10, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=37, t_lo=3, t_hi=16, expect_lanes=SAMPLE_LANES_NARROW16)
+    # Pinned tiers: the 8-lane i64 oracle, an explicit narrow16 pin (must
+    # not refuse on an i16-safe model), and the middle i32 pin on an
+    # i16-capable model (wider than auto is always legal).
     bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
                     n_samples=33, t_lo=4, t_hi=20, kernel="wide",
                     expect_lanes=SAMPLE_LANES)
-    # Forced wide FALLBACK: inflated weights fail the rec_acc bound — auto
-    # must reject narrow, and the wide lanes must still match scalar.
+    bad += run_case(1, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=33, t_lo=5, t_hi=12, kernel="narrow16",
+                    expect_lanes=SAMPLE_LANES_NARROW16)
+    bad += run_case(2, "cls", "mean", n=16, q=6, washout=0, out_dim=4, nnz=5,
+                    n_samples=33, t_lo=4, t_hi=20, kernel="narrow",
+                    expect_lanes=SAMPLE_LANES_NARROW)
+    # Deliberately-failing i16: mid-inflated weights break the rec_acc i16
+    # bound but stay inside i32 — auto must take the 16-lane i32 fallback,
+    # and a narrow16 pin must refuse.
+    bad += run_case(11, "cls", "mean", n=12, q=8, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=4, t_hi=12, inflate=30,
+                    expect_lanes=SAMPLE_LANES_NARROW)
+    bad += run_case(12, "reg", "mean", n=10, q=8, washout=2, out_dim=2, nnz=3,
+                    n_samples=9, t_lo=3, t_hi=14, inflate=30,
+                    expect_lanes=SAMPLE_LANES_NARROW)
+    try:
+        run_case(11, "cls", "mean", n=12, q=8, washout=0, out_dim=3, nnz=4,
+                 n_samples=5, t_lo=4, t_hi=8, inflate=30, kernel="narrow16")
+    except AssertionError as e:
+        assert "refusing kernel=narrow16" in str(e)
+        print("narrow16 pin correctly refused on an i32-only model")
+    else:
+        raise AssertionError("narrow16 pin must refuse past the i16 bound")
+    # Forced wide FALLBACK: heavily inflated weights fail the rec_acc bound
+    # at i32 too — auto must reject both narrow tiers, and the wide lanes
+    # must still match scalar.
     bad += run_case(7, "cls", "mean", n=12, q=8, washout=0, out_dim=3, nnz=4,
                     n_samples=17, t_lo=4, t_hi=12, inflate=10**8,
                     expect_lanes=SAMPLE_LANES)
@@ -279,10 +337,10 @@ def run_checks():
     # long chunks to the scalar fallback, bit-identically.
     bad += run_case(9, "cls", "mean", n=12, q=6, washout=0, out_dim=3, nnz=4,
                     n_samples=17, t_lo=6, t_hi=18, clamp_steps=4,
-                    expect_lanes=SAMPLE_LANES_NARROW)
+                    expect_lanes=SAMPLE_LANES_NARROW16)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "lane-batched kernel diverges from the scalar reference"
-    print("OK: lane-batched == scalar on all cases (narrow + wide kernels)")
+    print("OK: lane-batched == scalar on all cases (narrow16 + narrow + wide kernels)")
 
 
 if __name__ == "__main__":
