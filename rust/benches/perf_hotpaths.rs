@@ -15,6 +15,9 @@
 //!   L3-h  SIMD dispatch head-to-head: every lane kernel (i16×32 / i32×16 /
 //!         i64×8) × every available ISA tier (scalar / AVX2 / AVX-512),
 //!         scoring + inference, with hard bit-identity asserts
+//!   L3-i  compacted (live-weight CSR) vs zeroed pruned models across the
+//!         pruning grid on all three benchmarks (bit-identity asserted,
+//!         MACs/step accounting) + sequential-vs-parallel DSE grid wall-clock
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
@@ -30,9 +33,12 @@ use rcx::coordinator::{
     BackendConfig, Batcher, BatcherConfig, Prediction, ServeConfig, Server, VariantSpec,
 };
 use rcx::data::Benchmark;
-use rcx::dse::calibration_split;
+use rcx::dse::{calibration_split, explore, DseRequest};
 use rcx::hw::{self, Topology};
-use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
+use rcx::pruning::{
+    prune_to_rate, select_prune_set, Engine, Method, Pruner, RandomPruner, SensitivityConfig,
+    SensitivityPruner,
+};
 use rcx::quant::{
     flip_bit, CalibPlan, FlipCandidate, Isa, Kernel, KernelChoice, LaneScratch, QuantEsn,
     QuantSpec, BATCH_LANES_NARROW,
@@ -424,6 +430,139 @@ fn main() {
             ));
         }
         report.add("serve_native", format!("{{\"rows\": [{rows}\n  ]}}"));
+    }
+
+    section("L3-i compacted vs zeroed CSR kernels (3 benchmarks x pruning grid) + parallel DSE");
+    {
+        let prune_grid: &[f64] = &[0.0, 15.0, 45.0, 75.0, 90.0];
+        let (warm, iters) = if smoke { (1, 5) } else { (2, 12) };
+        let mut rows = String::new();
+        let mut melborn_ratio_p90 = 0.0f64;
+        for bench in Benchmark::ALL {
+            let bcfg = BenchmarkConfig::paper(bench, 0);
+            let (bm, bdata) = bcfg.train(1, true);
+            let bqm = QuantEsn::from_model(&bm, &bdata, QuantSpec::bits(6));
+            let scores = RandomPruner::new(7).scores(&bqm, &bdata.train);
+            let base_macs = bqm.macs_per_step();
+            for &p in prune_grid {
+                let mut zeroed = bqm.clone();
+                zeroed.prune(&select_prune_set(&scores, p));
+                let compacted = prune_to_rate(&bqm, &scores, p);
+                // Hard bit-identity gates against the zeroed-CSR oracle on
+                // both the scalar and lane-batched paths (bench aborts
+                // otherwise) — this is the CI compaction correctness check.
+                assert_eq!(
+                    compacted.evaluate_split(&bdata.test),
+                    zeroed.evaluate_split(&bdata.test),
+                    "{} p={p}: compacted scalar eval != zeroed oracle",
+                    bench.name()
+                );
+                let mut sc_z = LaneScratch::for_model(&zeroed);
+                let mut sc_c = LaneScratch::for_model(&compacted);
+                assert_eq!(
+                    compacted.evaluate_split_batched(&bdata.test, &mut sc_c),
+                    zeroed.evaluate_split_batched(&bdata.test, &mut sc_z),
+                    "{} p={p}: compacted batched eval != zeroed oracle",
+                    bench.name()
+                );
+                let st_z =
+                    time_it(warm, iters, || zeroed.evaluate_split_batched(&bdata.test, &mut sc_z));
+                let st_c = time_it(warm, iters, || {
+                    compacted.evaluate_split_batched(&bdata.test, &mut sc_c)
+                });
+                let (mz, mc) = (zeroed.macs_per_step(), compacted.macs_per_step());
+                let macs_ratio = mz as f64 / mc.max(1) as f64;
+                let speedup = st_z.median.as_secs_f64() / st_c.median.as_secs_f64();
+                if bench == Benchmark::Melborn && p == 90.0 {
+                    melborn_ratio_p90 = base_macs as f64 / mc.max(1) as f64;
+                }
+                println!(
+                    "{:<8} p={p:<4} live {:>3}/{:<3}  MACs/step {mz:>3} -> {mc:>3} ({macs_ratio:.1}x)  \
+                     kernel {} on {}  eval {:>9.1?} -> {:>9.1?} ({speedup:.2}x)",
+                    bench.name(),
+                    compacted.live_weights(),
+                    compacted.structural_weights(),
+                    sc_c.kernel().name(),
+                    sc_c.isa().name(),
+                    st_z.median,
+                    st_c.median
+                );
+                if !rows.is_empty() {
+                    rows.push(',');
+                }
+                rows.push_str(&format!(
+                    concat!(
+                        "\n    {{\"benchmark\": \"{}\", \"p\": {p}, \"live\": {}, ",
+                        "\"structural\": {}, \"macs_zeroed\": {mz}, \"macs_compacted\": {mc}, ",
+                        "\"macs_ratio\": {macs_ratio:.3}, \"kernel\": \"{}\", \"isa\": \"{}\", ",
+                        "\"zeroed_us\": {:.1}, \"compacted_us\": {:.1}, \"speedup\": {speedup:.3}}}"
+                    ),
+                    bench.name(),
+                    compacted.live_weights(),
+                    compacted.structural_weights(),
+                    sc_c.kernel().name(),
+                    sc_c.isa().name(),
+                    st_z.median.as_secs_f64() * 1e6,
+                    st_c.median.as_secs_f64() * 1e6,
+                ));
+            }
+        }
+        // The acceptance floor: melborn p=90 compacted must execute >= 5x
+        // fewer recurrence MACs per step than the unpruned model.
+        assert!(
+            melborn_ratio_p90 >= 5.0,
+            "melborn p=90 MACs/step reduction {melborn_ratio_p90:.1}x < 5x"
+        );
+
+        // DSE grid wall-clock: sequential vs all-core workers over the same
+        // (q, p) grid; results must agree (the byte-level identity is pinned
+        // by `dse::tests::parallel_grid_matches_sequential_oracle`).
+        let dreq = |workers: usize| DseRequest {
+            q_levels: if smoke { vec![4, 6] } else { vec![4, 6, 8] },
+            pruning_rates: prune_grid.to_vec(),
+            method: Method::Random,
+            max_calib,
+            seed: 1,
+            kernel: KernelChoice::Auto,
+            workers,
+        };
+        let t0 = Instant::now();
+        let seq = explore(&model, &data, &dreq(1));
+        let t_seq = t0.elapsed();
+        let t0 = Instant::now();
+        let par = explore(&model, &data, &dreq(0));
+        let t_par = t0.elapsed();
+        assert_eq!(seq.configs.len(), par.configs.len());
+        for (a, b) in seq.configs.iter().zip(&par.configs) {
+            assert_eq!(
+                (a.q, a.p, a.perf, a.kernel, a.isa),
+                (b.q, b.p, b.perf, b.kernel, b.isa),
+                "parallel DSE grid diverged from sequential"
+            );
+        }
+        let dse_speedup = t_seq.as_secs_f64() / t_par.as_secs_f64();
+        println!(
+            "DSE grid ({} configs): sequential {t_seq:.3?}  parallel {t_par:.3?}  \
+             ({dse_speedup:.2}x)",
+            seq.configs.len()
+        );
+        report.add(
+            "l3i_compaction",
+            format!(
+                concat!(
+                    "{{\"bit_identical\": true, \"melborn_macs_ratio_p90\": {:.3}, ",
+                    "\"dse_configs\": {}, \"dse_sequential_s\": {:.6}, ",
+                    "\"dse_parallel_s\": {:.6}, \"dse_speedup\": {:.3}, ",
+                    "\"rows\": [{}\n  ]}}"
+                ),
+                melborn_ratio_p90,
+                seq.configs.len(),
+                t_seq.as_secs_f64(),
+                t_par.as_secs_f64(),
+                dse_speedup,
+                rows
+            ),
+        );
     }
 
     section("L1/L2 PJRT rollout (AOT XLA/Pallas artifact, batch=32, T=24)");

@@ -12,6 +12,10 @@ pub struct Metrics {
     batched_items: AtomicU64,
     /// Latency samples in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
+    /// Per-variant integer-MAC counter, keyed by routing key. A `Vec` (not a
+    /// map) keeps first-recorded order stable for reporting; the variant
+    /// count is small (a Pareto front), so linear scan beats hashing.
+    variant_macs: Mutex<Vec<(String, u64)>>,
 }
 
 /// Point-in-time snapshot.
@@ -31,6 +35,23 @@ impl Metrics {
     pub fn record_batch(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Credit `macs` executed integer MACs to a variant. Counts are exact
+    /// (steps × live recurrence weights), so a compacted variant's tally
+    /// grows `live/structural` slower than its zeroed twin's wall-clock
+    /// equivalent — the serving-side receipt that pruning paid off.
+    pub fn record_macs(&self, key: &str, macs: u64) {
+        let mut v = self.variant_macs.lock().expect("metrics poisoned");
+        match v.iter_mut().find(|(k, _)| k == key) {
+            Some((_, total)) => *total += macs,
+            None => v.push((key.to_string(), macs)),
+        }
+    }
+
+    /// Per-variant MAC totals in first-recorded order.
+    pub fn macs_by_variant(&self) -> Vec<(String, u64)> {
+        self.variant_macs.lock().expect("metrics poisoned").clone()
     }
 
     pub fn record_request(&self, latency: Duration) {
@@ -89,6 +110,18 @@ mod tests {
         assert!(s.p50_us >= 45 && s.p50_us <= 55, "{}", s.p50_us);
         assert!(s.p99_us >= 95);
         assert!(s.p95_us <= s.p99_us);
+    }
+
+    #[test]
+    fn macs_accumulate_per_variant() {
+        let m = Metrics::default();
+        m.record_macs("q4_p75", 100);
+        m.record_macs("q8_p0", 400);
+        m.record_macs("q4_p75", 50);
+        assert_eq!(
+            m.macs_by_variant(),
+            vec![("q4_p75".to_string(), 150), ("q8_p0".to_string(), 400)]
+        );
     }
 
     #[test]

@@ -159,6 +159,11 @@ impl Server {
         self.metrics.snapshot()
     }
 
+    /// Total integer MACs executed per variant key (first-served order).
+    pub fn macs_by_variant(&self) -> Vec<(String, u64)> {
+        self.metrics.macs_by_variant()
+    }
+
     /// Graceful shutdown: drains every shard's queue, joins all executors.
     pub fn shutdown(mut self) -> Result<()> {
         for tx in &self.txs {
@@ -286,7 +291,7 @@ fn executor(
             while let BatchDecision::Flush(n) = batchers[v].decide(now) {
                 let batch: Vec<Request> = queues[v].drain(..n).collect();
                 batchers[v].flushed(n, now);
-                run_batch(backend.as_mut(), &variants[v].model, batch, &metrics)?;
+                run_batch(backend.as_mut(), &variants[v], batch, &metrics)?;
             }
         }
     }
@@ -305,15 +310,24 @@ fn ingest(req: Request, queues: &mut [VecDeque<Request>], batchers: &mut [Batche
     }
 }
 
-/// Execute one batch through the backend and deliver responses.
+/// Execute one batch through the backend and deliver responses. The executed
+/// work is credited to the variant's MAC counter before dispatch: steps ×
+/// `macs_per_step()` is exact for the CSR representation actually served, so
+/// a compacted variant is billed only for its live weights.
 fn run_batch(
     backend: &mut dyn ExecBackend,
-    model: &QuantEsn,
+    spec: &VariantSpec,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) -> Result<()> {
+    let model: &QuantEsn = &spec.model;
     let n = batch.len();
     metrics.record_batch(n);
+    let macs: u64 = batch
+        .iter()
+        .map(|r| r.series.inputs.rows() as u64 * model.macs_per_step() as u64)
+        .sum();
+    metrics.record_macs(&spec.key, macs);
     let refs: Vec<&TimeSeries> = batch.iter().map(|r| &r.series).collect();
     let preds = backend.execute_batch(model, &refs)?;
     anyhow::ensure!(preds.len() == n, "backend returned {} predictions for {n}", preds.len());

@@ -14,7 +14,10 @@ use crate::data::{Dataset, TimeSeries};
 use crate::esn::{EsnModel, Perf};
 use crate::hw::{self, HwReport, Topology};
 use crate::pruning::{prune_with_compensation, Method, SensitivityConfig, SensitivityPruner};
-use crate::quant::{Isa, Kernel, KernelChoice, QuantEsn, QuantInputCache, QuantSpec};
+use crate::quant::{
+    resolve_inference, Isa, Kernel, KernelChoice, LaneScratch, QuantEsn, QuantInputCache,
+    QuantSpec,
+};
 
 /// DSE request: the paper's defaults are `Q = {4,6,8}`, `P = {15..90}`.
 #[derive(Clone, Debug)]
@@ -30,6 +33,11 @@ pub struct DseRequest {
     /// (`Auto` = overflow-bound-selected; `rcx dse --kernel …` pins a path
     /// for bench/triage runs). Bit-identical either way.
     pub kernel: KernelChoice,
+    /// Worker threads for the per-rate grid evaluation and `realize_hw`
+    /// (0 = one per available core). Scoring stays per-q (it is internally
+    /// parallel already); grid work is distributed round-robin and merged by
+    /// index, so [`DseResult::configs`] is byte-identical at any count.
+    pub workers: usize,
 }
 
 impl Default for DseRequest {
@@ -41,6 +49,7 @@ impl Default for DseRequest {
             max_calib: 192,
             seed: 7,
             kernel: KernelChoice::Auto,
+            workers: 0,
         }
     }
 }
@@ -59,6 +68,14 @@ pub struct AccelConfig {
     pub perf: Perf,
     /// Baseline (unpruned) performance at this q — `Perf^base(q)`.
     pub perf_base: Perf,
+    /// Inference lane kernel `KernelChoice::Auto` resolves to for *this*
+    /// config's model. Pruned models are compacted, and `KernelBounds`
+    /// derives safety from CSR row L1 norms that shrink with pruning — so a
+    /// q-level that stops at `Narrow` unpruned can re-qualify for
+    /// `Narrow16` at high p. This is the kernel serving will run.
+    pub kernel: Kernel,
+    /// SIMD ISA tier the resolved kernel dispatches to on this machine.
+    pub isa: Isa,
     pub model: Arc<QuantEsn>,
 }
 
@@ -135,12 +152,15 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
         // its weight arrays.
         let qmodel = Arc::new(QuantEsn::from_model(model, data, QuantSpec::bits(q)));
         let perf_base = qmodel.evaluate(data);
+        let (base_kernel, base_isa) = resolve_inference(&qmodel, KernelChoice::Auto);
         configs.push(AccelConfig {
             q,
             p: 0.0,
             method: req.method,
             perf: perf_base,
             perf_base,
+            kernel: base_kernel,
+            isa: base_isa,
             model: Arc::clone(&qmodel),
         });
         // Lines 5–8: score all weights.
@@ -169,26 +189,109 @@ pub fn explore(model: &EsnModel, data: &Dataset, req: &DseRequest) -> DseResult 
         };
         scoring_seconds += t0.elapsed().as_secs_f64();
         // Lines 9–13: prune at each rate (with synthesis-time readout
-        // constant refolding), measure.
-        for &p in &req.pruning_rates {
+        // constant refolding), measure. The per-rate work — prune, compact,
+        // compensate, evaluate — is independent across rates, so it fans out
+        // over scoped workers (round-robin, merged by rate index: `configs`
+        // ordering and every value are byte-identical at any worker count).
+        // Evaluation runs the lane-batched kernels, which are bit-identical
+        // to the scalar path and, on the compacted models, execute at
+        // live-weight MAC cost.
+        let rates = &req.pruning_rates;
+        let workers = resolve_workers(req.workers).min(rates.len().max(1));
+        let eval_rate = |p: f64| {
             let pruned = Arc::new(prune_with_compensation(&qmodel, &scores, p, calib));
-            let perf = pruned.evaluate(data);
-            configs.push(AccelConfig { q, p, method: req.method, perf, perf_base, model: pruned });
+            let mut sc = LaneScratch::for_model(&pruned);
+            let perf = pruned.evaluate_split_batched(&data.test, &mut sc);
+            // Re-resolve the inference kernel on the compacted model: pruning
+            // shrinks row L1 norms, so Auto can reach a narrower tier here.
+            let (kernel, isa) = resolve_inference(&pruned, KernelChoice::Auto);
+            AccelConfig { q, p, method: req.method, perf, perf_base, kernel, isa, model: pruned }
+        };
+        if workers <= 1 {
+            configs.extend(rates.iter().map(|&p| eval_rate(p)));
+        } else {
+            let mut merged: Vec<Option<AccelConfig>> = Vec::with_capacity(rates.len());
+            merged.resize_with(rates.len(), || None);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let eval_rate = &eval_rate;
+                    handles.push(scope.spawn(move || {
+                        let mut out: Vec<(usize, AccelConfig)> = Vec::new();
+                        for ri in (w..rates.len()).step_by(workers) {
+                            out.push((ri, eval_rate(rates[ri])));
+                        }
+                        out
+                    }));
+                }
+                for h in handles {
+                    for (ri, cfg) in h.join().expect("DSE grid worker panicked") {
+                        merged[ri] = Some(cfg);
+                    }
+                }
+            });
+            configs.extend(merged.into_iter().map(|c| c.expect("all rates evaluated")));
         }
     }
     DseResult { configs, scoring_seconds, kernels }
 }
 
+/// `0 = one worker per available core`, like the serving stack's knob.
+fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 /// Hardware evaluation of every configuration in a DSE result
 /// (the hardware-realization stage of Fig. 2, feeding Tables II/III).
+/// Parallel over configs with one worker per core; see [`realize_hw_with`].
 pub fn realize_hw(result: &DseResult, data: &Dataset) -> Vec<(AccelConfig, HwReport)> {
+    realize_hw_with(result, data, 0)
+}
+
+/// [`realize_hw`] with an explicit worker count (0 = one per core). Configs
+/// are embarrassingly parallel; they are distributed round-robin over scoped
+/// workers and merged by index, so the output order — one entry per config,
+/// in [`DseResult::configs`] order — is identical at any worker count.
+pub fn realize_hw_with(
+    result: &DseResult,
+    data: &Dataset,
+    workers: usize,
+) -> Vec<(AccelConfig, HwReport)> {
     let seq_len = data.test.first().map(|s| s.inputs.rows()).unwrap_or(1);
     let topo = Topology::for_task(data.task, seq_len);
-    result
-        .configs
-        .iter()
-        .map(|c| (c.clone(), hw::evaluate(&c.model, topo, &data.test)))
-        .collect()
+    let configs = &result.configs;
+    let workers = resolve_workers(workers).min(configs.len().max(1));
+    if workers <= 1 {
+        return configs
+            .iter()
+            .map(|c| (c.clone(), hw::evaluate(&c.model, topo, &data.test)))
+            .collect();
+    }
+    let mut merged: Vec<Option<(AccelConfig, HwReport)>> = Vec::with_capacity(configs.len());
+    merged.resize_with(configs.len(), || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for ci in (w..configs.len()).step_by(workers) {
+                    let c = &configs[ci];
+                    out.push((ci, (c.clone(), hw::evaluate(&c.model, topo, &data.test))));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (ci, pair) in h.join().expect("hw realization worker panicked") {
+                merged[ci] = Some(pair);
+            }
+        }
+    });
+    merged.into_iter().map(|p| p.expect("all configs realized")).collect()
 }
 
 /// Calibration subset: the scoring stage must not see the test split.
@@ -228,9 +331,61 @@ mod tests {
             if c.p == 0.0 {
                 assert_eq!(c.perf.value(), c.perf_base.value());
             } else {
-                let expect =
-                    ((c.p / 100.0) * c.model.n_weights() as f64).floor() as usize;
-                assert_eq!(c.model.n_weights() - c.model.live_weights() >= expect, true);
+                // Pruned models are compacted: measure the pruned count
+                // against the structural slot count, not the (shrunken)
+                // physical CSR length.
+                let structural = c.model.structural_weights();
+                let expect = ((c.p / 100.0) * structural as f64).floor() as usize;
+                assert!(structural - c.model.live_weights() >= expect);
+                assert_eq!(
+                    c.model.n_weights(),
+                    c.model.live_weights(),
+                    "pruned config must be compacted"
+                );
+            }
+        }
+    }
+
+    /// The parallel grid must produce configs byte-identical to the
+    /// sequential (workers = 1) oracle at any worker count — same order,
+    /// same perf bits, same models, same resolved kernels.
+    #[test]
+    fn parallel_grid_matches_sequential_oracle() {
+        let (m, data) = setup();
+        let mk = |workers: usize| DseRequest {
+            q_levels: vec![4, 6],
+            pruning_rates: vec![15.0, 45.0, 75.0],
+            method: Method::Random,
+            max_calib: 20,
+            seed: 4,
+            workers,
+            ..Default::default()
+        };
+        let seq = explore(&m, &data, &mk(1));
+        for workers in [2usize, 3, 7] {
+            let par = explore(&m, &data, &mk(workers));
+            assert_eq!(par.configs.len(), seq.configs.len(), "workers={workers}");
+            for (a, b) in par.configs.iter().zip(&seq.configs) {
+                assert_eq!((a.q, a.p), (b.q, b.p), "workers={workers}");
+                assert_eq!(a.perf, b.perf, "workers={workers} q={} p={}", a.q, a.p);
+                assert_eq!(a.perf_base, b.perf_base);
+                assert_eq!((a.kernel, a.isa), (b.kernel, b.isa));
+                assert_eq!(a.model.w_r_indptr, b.model.w_r_indptr);
+                assert_eq!(a.model.w_r_indices, b.model.w_r_indices);
+                assert_eq!(a.model.w_r_values, b.model.w_r_values);
+                assert_eq!(a.model.w_out, b.model.w_out);
+                assert_eq!(a.model.m_out, b.model.m_out);
+            }
+        }
+        // realize_hw: order and reports identical at any worker count.
+        let hw1 = realize_hw_with(&seq, &data, 1);
+        for workers in [2usize, 5] {
+            let hwn = realize_hw_with(&seq, &data, workers);
+            assert_eq!(hwn.len(), hw1.len());
+            for ((ca, ha), (cb, hb)) in hwn.iter().zip(&hw1) {
+                assert_eq!((ca.q, ca.p), (cb.q, cb.p), "workers={workers}");
+                assert_eq!(ha.luts, hb.luts);
+                assert_eq!(ha.ffs, hb.ffs);
             }
         }
     }

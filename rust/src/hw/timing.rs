@@ -94,8 +94,11 @@ impl TimingParams {
             1.0 + self.pipeline_alpha * log2_ceil(topo.t_unroll().max(1)) as f64;
         // Routing congestion tracks how much of the multiplier fabric is
         // still live; an empty netlist keeps (1 − β) of the nominal level
-        // delay (LUT + carry), a full one pays all of it.
-        let live_frac = model.live_weights() as f64 / model.n_weights().max(1) as f64;
+        // delay (LUT + carry), a full one pays all of it. Measured against
+        // the *structural* slot count so the estimate is invariant under CSR
+        // compaction (hardware sees live multipliers either way).
+        let live_frac =
+            model.live_weights() as f64 / model.structural_weights().max(1) as f64;
         let congestion = (1.0 - self.congestion_beta) + self.congestion_beta * live_frac;
         self.t_base_ns + t_level * depth * pipeline * congestion
     }

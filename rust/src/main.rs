@@ -120,6 +120,8 @@ fn print_help() {
          \u{20}  dse       [--method M] [--q 4,6,8]    Algorithm 1 over Q x P\n\
          \u{20}            [--kernel auto|narrow16|narrow|wide]  pin the scorer's\n\
          \u{20}            lane kernel (resolved kernel + ISA tier are reported)\n\
+         \u{20}            [--workers W] parallel (q,p) grid + hw realization\n\
+         \u{20}            (0 = all cores; results identical at any count)\n\
          \u{20}  synth     [--q Q] [--p P] [--rtl F]   hardware-realize one config\n\
          \u{20}  table1 | table2 | table3              reproduce paper tables\n\
          \u{20}  fig3 | fig4                           reproduce paper figures (CSV)\n\
@@ -170,6 +172,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         max_calib: args.flag_or("calib", 128)?,
         seed: 7,
         kernel: args.kernel()?,
+        workers: args.flag_or("workers", 0)?,
     };
     println!("DSE on {} with {} pruning...", b.name(), method.name());
     let r = explore(&model, &data, &req);
@@ -185,8 +188,21 @@ fn cmd_dse(args: &Args) -> Result<()> {
             k.requested.name()
         );
     }
+    // Per-config runtime cost: pruned models are compacted, so MACs/step is
+    // the count every kernel actually executes — and the inference kernel is
+    // re-resolved on the compacted bounds (high p can narrow it).
     for c in &r.configs {
-        println!("  s(q={}, p={:>4.0}%): {}", c.q, c.p, c.perf);
+        println!(
+            "  s(q={}, p={:>4.0}%): {}  [live {}/{}, {} MACs/step, kernel {} on {}]",
+            c.q,
+            c.p,
+            c.perf,
+            c.model.live_weights(),
+            c.model.structural_weights(),
+            c.model.macs_per_step(),
+            c.kernel.name(),
+            c.isa.name()
+        );
     }
     Ok(())
 }
@@ -383,11 +399,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for spec in registry.specs() {
             let (kern, isa) = rcx::quant::resolve_inference(&spec.model, ncfg.kernel);
             println!(
-                "variant {}: kernel={} isa={} (requested {})",
+                "variant {}: kernel={} isa={} (requested {}), live {}/{}, {} MACs/step",
                 spec.key,
                 kern.name(),
                 isa.name(),
-                ncfg.kernel.name()
+                ncfg.kernel.name(),
+                spec.model.live_weights(),
+                spec.model.structural_weights(),
+                spec.model.macs_per_step()
             );
         }
     }
@@ -458,5 +477,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.p50_us,
         m.p99_us
     );
+    for (key, macs) in server.macs_by_variant() {
+        println!("  variant {key}: {macs} MACs executed");
+    }
     server.shutdown()
 }

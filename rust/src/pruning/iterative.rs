@@ -11,7 +11,7 @@ use crate::data::TimeSeries;
 use crate::quant::QuantEsn;
 
 use super::{SensitivityConfig, SensitivityPruner};
-use super::{prune_with_compensation, select_prune_set, Pruner};
+use super::{compensate, select_prune_set, Pruner};
 
 /// Iterative sensitivity pruner configuration.
 #[derive(Clone, Copy, Debug)]
@@ -63,17 +63,21 @@ pub fn iterative_prune(
             .collect();
         let frac = 100.0 * step as f64 / total as f64;
         let slots = select_prune_set(&masked, frac);
+        // Stay on the zeroed (structural) representation inside the loop:
+        // scores, masks and `frac` are all relative to the original slot
+        // count, so compacting mid-loop would shrink the selection base.
         if cfg.refold {
-            current = prune_with_compensation(
-                &current,
-                &masked,
-                frac,
-                calib,
-            );
+            let mut next = current.clone();
+            next.prune(&slots);
+            compensate(&current, &mut next, calib);
+            current = next;
         } else {
             current.prune(&slots);
         }
     }
+    // Compact once at the end so iterative pruning's output executes at
+    // live-weight cost, like `prune_to_rate`'s.
+    current.compact();
     (current, rounds)
 }
 
@@ -124,8 +128,9 @@ mod tests {
             refold: false,
         };
         let (pruned, _) = iterative_prune(&qm, 75.0, &data.train[..15], &cfg);
-        // exact count: ⌊0.75·48⌋ = 36 pruned unless some already quantized to 0
-        let pruned_count = pruned.w_r_values.iter().filter(|&&v| v == 0).count();
+        // exact count: ⌊0.75·48⌋ = 36 pruned unless some already quantized to
+        // 0 (the output is compacted, so count against the structural slots)
+        let pruned_count = pruned.structural_weights() - pruned.live_weights();
         assert!(pruned_count >= 36, "{pruned_count}");
     }
 }

@@ -107,12 +107,35 @@ pub fn select_prune_set(scores: &[f64], p: f64) -> Vec<usize> {
     sel
 }
 
-/// Return a pruned copy of the model (the original is untouched).
+/// Return a pruned copy of the model (the original is untouched). The copy
+/// is **compacted**: the pruned CSR entries are physically removed
+/// ([`QuantEsn::compact`], exact — dropped zero-weight MACs cannot change
+/// any accumulator bit), so every downstream kernel's per-step cost scales
+/// with [`QuantEsn::live_weights`] instead of the structural slot count.
 pub fn prune_to_rate(model: &QuantEsn, scores: &[f64], p: f64) -> QuantEsn {
     assert_eq!(scores.len(), model.n_weights());
     let mut out = model.clone();
     out.prune(&select_prune_set(scores, p));
+    out.compact();
     out
+}
+
+/// Synthesis-time scale compensation shared by [`prune_with_compensation`]
+/// and the iterative pruner: measure per-neuron state magnitudes of `base`
+/// (pre-prune) and `out` (post-prune) on the calibration **inputs** (no
+/// labels, no fitting) and refold the readout constants by their ratio.
+pub fn compensate(base: &QuantEsn, out: &mut QuantEsn, calib: &[TimeSeries]) {
+    if calib.is_empty() {
+        return;
+    }
+    let before = base.state_magnitudes(calib);
+    let after = out.state_magnitudes(calib);
+    let gamma: Vec<f64> = before
+        .iter()
+        .zip(&after)
+        .map(|(&b, &a)| if b > 1e-9 { (a / b).max(1e-3) } else { 1.0 })
+        .collect();
+    out.refold_readout(&gamma);
 }
 
 /// Prune and refold the readout constants (synthesis-time scale
@@ -128,15 +151,8 @@ pub fn prune_with_compensation(
     calib: &[TimeSeries],
 ) -> QuantEsn {
     let mut out = prune_to_rate(model, scores, p);
-    if p > 0.0 && !calib.is_empty() {
-        let before = model.state_magnitudes(calib);
-        let after = out.state_magnitudes(calib);
-        let gamma: Vec<f64> = before
-            .iter()
-            .zip(&after)
-            .map(|(&b, &a)| if b > 1e-9 { (a / b).max(1e-3) } else { 1.0 })
-            .collect();
-        out.refold_readout(&gamma);
+    if p > 0.0 {
+        compensate(model, &mut out, calib);
     }
     out
 }

@@ -40,8 +40,8 @@
 //! This kernel is the compute core of the serving stack's
 //! [`NativeBackend`](crate::runtime::NativeBackend).
 
-use crate::data::TimeSeries;
-use crate::esn::Features;
+use crate::data::{Task, TimeSeries};
+use crate::esn::{Features, Perf};
 
 use super::simd::{Isa, LaneElem};
 use super::{Kernel, KernelBounds, KernelChoice, QuantEsn};
@@ -421,6 +421,44 @@ impl QuantEsn {
         }
         out
     }
+
+    /// Lane-batched split evaluation: the same `Perf` as
+    /// [`QuantEsn::evaluate_split`], computed from [`QuantEsn::classify_batch`]
+    /// / [`QuantEsn::predict_batch`] rollouts. **Bit-identical** to the scalar
+    /// path: per-sample predictions are exact (lanes never mix), and the float
+    /// reductions below replay `evaluate_split`'s formulas in its exact
+    /// (sample, step, dim) order. This is the DSE grid's per-config evaluator —
+    /// on compacted pruned models it runs at live-weight MAC cost.
+    pub fn evaluate_split_batched(&self, samples: &[TimeSeries], sc: &mut LaneScratch) -> Perf {
+        let refs: Vec<&TimeSeries> = samples.iter().collect();
+        match self.task {
+            Task::Classification => {
+                let preds = self.classify_batch(&refs, sc);
+                let correct = preds
+                    .iter()
+                    .zip(samples)
+                    .filter(|(&p, s)| Some(p) == s.label)
+                    .count();
+                Perf::Accuracy(correct as f64 / samples.len().max(1) as f64)
+            }
+            Task::Regression => {
+                let mut se = 0.0f64;
+                let mut count = 0usize;
+                for (sample, yhats) in samples.iter().zip(self.predict_batch(&refs, sc)) {
+                    let targets = sample.targets.as_ref().unwrap();
+                    for (k, yhat) in yhats.into_iter().enumerate() {
+                        let step = self.washout + k;
+                        for (d, v) in yhat.into_iter().enumerate() {
+                            let e = v - targets[(step, d)];
+                            se += e * e;
+                            count += 1;
+                        }
+                    }
+                }
+                Perf::Rmse((se / count.max(1) as f64).sqrt())
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -555,6 +593,43 @@ mod tests {
         let h8 = sc.max_steps;
         assert!(h8 < h4, "q=8 horizon must be tighter than q=4 ({h8} vs {h4})");
         assert_eq!(h8, (crate::quant::I16_LIMIT / crate::quant::qmax(8)) as usize);
+    }
+
+    /// `evaluate_split_batched` must reproduce the scalar `evaluate_split`
+    /// Perf bit-for-bit — the DSE grid substitutes it for the scalar call.
+    #[test]
+    fn evaluate_split_batched_matches_scalar() {
+        // Classification (melborn shape).
+        let data = melborn_sized(1, 60, 40);
+        let m = trained_cls(&data, 1, 11);
+        for q in [4u8, 6, 8] {
+            let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+            for choice in [KernelChoice::Auto, KernelChoice::Wide] {
+                let mut sc = LaneScratch::for_model_with(&qm, choice);
+                assert_eq!(
+                    qm.evaluate_split_batched(&data.test, &mut sc),
+                    qm.evaluate_split(&data.test),
+                    "cls q={q} {choice:?}"
+                );
+            }
+        }
+        // Regression (henon shape, MeanState + washout).
+        let hd = henon_sized(2, 300, 120);
+        let res = Reservoir::init(ReservoirSpec::paper(30, 1, 120, 0.9, 1.0, 3));
+        let hm = EsnModel::fit(
+            res,
+            &hd,
+            ReadoutSpec { lambda: 1e-4, washout: 15, features: Features::MeanState },
+        );
+        let qh = QuantEsn::from_model(&hm, &hd, QuantSpec::bits(8));
+        for choice in [KernelChoice::Auto, KernelChoice::Wide] {
+            let mut sc = LaneScratch::for_model_with(&qh, choice);
+            assert_eq!(
+                qh.evaluate_split_batched(&hd.test, &mut sc),
+                qh.evaluate_split(&hd.test),
+                "reg {choice:?}"
+            );
+        }
     }
 
     #[test]

@@ -46,10 +46,18 @@ pub struct QuantEsn {
 
     /// Dense quantized input weights (n × input_dim, row-major).
     pub w_in: Vec<i64>,
-    /// Reservoir CSR structure (positions fixed; pruning zeroes values).
+    /// Reservoir CSR structure. Pruning zeroes values in place; a subsequent
+    /// [`Self::compact`] rebuilds the arrays with the dead (zero) entries
+    /// physically removed, so every kernel's per-step MAC count drops to
+    /// [`Self::live_weights`]. Row order and within-row column order are
+    /// preserved either way.
     pub w_r_indptr: Vec<usize>,
     pub w_r_indices: Vec<usize>,
     pub w_r_values: Vec<i64>,
+    /// Structural weight-slot count at quantization time — the `ncrl` of
+    /// Table I. Invariant under [`Self::prune`] *and* [`Self::compact`],
+    /// unlike [`Self::n_weights`] which tracks the physical CSR length.
+    pub n_structural: usize,
     /// Quantized readout (out_dim × n, row-major) + float biases.
     pub w_out: Vec<i64>,
     /// Float readout weights (pre-quantization) — kept so synthesis-time
@@ -163,6 +171,7 @@ impl QuantEsn {
             }
             indptr.push(indices.len());
         }
+        let n_structural = values.len();
         // Scale alignment: acc_in has scale s_wi·s_u, acc_r has s_wr·s_s.
         // acc = m_in·acc_in + 2^F·acc_r ≈ 2^F·s_wr·s_s·a.
         let ratio = (qz_wr.scale * qz_s.scale) / (qz_wi.scale * qz_u.scale);
@@ -183,6 +192,7 @@ impl QuantEsn {
             w_r_indptr: indptr,
             w_r_indices: indices,
             w_r_values: values,
+            n_structural,
             w_out,
             w_out_f,
             bias_f,
@@ -199,15 +209,32 @@ impl QuantEsn {
         }
     }
 
-    /// Number of (structural) reservoir weight slots — the `ncrl` of Table I.
-    /// Pruned weights keep their slot with value 0.
+    /// Number of *physical* reservoir weight slots in the CSR arrays — the
+    /// valid index range for [`Self::flip_weight_bit`]/[`Self::set_weight`]/
+    /// [`Self::weight_pos`]. Equals [`Self::structural_weights`] on zeroed
+    /// models; shrinks to [`Self::live_weights`] after [`Self::compact`].
     pub fn n_weights(&self) -> usize {
         self.w_r_values.len()
+    }
+
+    /// Structural reservoir weight-slot count at quantization time — the
+    /// `ncrl` of Table I. Invariant under pruning and compaction; use this
+    /// (not [`Self::n_weights`]) when computing pruning rates.
+    pub fn structural_weights(&self) -> usize {
+        self.n_structural
     }
 
     /// Count of reservoir weights that are still live (nonzero).
     pub fn live_weights(&self) -> usize {
         self.w_r_values.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Recurrence MACs every kernel executes per reservoir step: the physical
+    /// CSR length. A zeroed model burns one MAC per structural slot; a
+    /// compacted model only per live weight — this is the count-based metric
+    /// the serve/DSE observability paths report.
+    pub fn macs_per_step(&self) -> usize {
+        self.w_r_values.len()
     }
 
     /// (row, col) of reservoir weight slot `idx`.
@@ -238,6 +265,36 @@ impl QuantEsn {
         for &i in slots {
             self.w_r_values[i] = 0;
         }
+    }
+
+    /// Rebuild the reservoir CSR with zero-valued (pruned) entries physically
+    /// removed, preserving row order and within-row column order. Exact:
+    /// a dropped entry contributed `0·s_prev[j] = 0` to a wrapping integer
+    /// accumulator, so no accumulator bit can change on any kernel tier —
+    /// only the per-step MAC count drops (to [`Self::live_weights`]).
+    /// [`Self::structural_weights`] is unaffected; slot indices into the CSR
+    /// arrays (scores, flip sets) are invalidated.
+    pub fn compact(&mut self) {
+        let live = self.live_weights();
+        if live == self.w_r_values.len() {
+            return;
+        }
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices = Vec::with_capacity(live);
+        let mut values = Vec::with_capacity(live);
+        indptr.push(0);
+        for i in 0..self.n {
+            for k in self.w_r_indptr[i]..self.w_r_indptr[i + 1] {
+                if self.w_r_values[k] != 0 {
+                    indices.push(self.w_r_indices[k]);
+                    values.push(self.w_r_values[k]);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        self.w_r_indptr = indptr;
+        self.w_r_indices = indices;
+        self.w_r_values = values;
     }
 
     /// Synthesis-time constant refolding: fold per-neuron state-scale factors
@@ -652,6 +709,56 @@ mod tests {
         assert_eq!(qm.w_r_values[5], 0);
         assert!(qm.live_weights() <= 247);
         assert_eq!(qm.n_weights(), 250);
+    }
+
+    #[test]
+    fn compact_preserves_live_entries_and_order() {
+        let (m, data) = trained_melborn();
+        let mut qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        // Prune a spread of slots (plus any natural zeros from quantization).
+        qm.prune(&(0..qm.n_weights()).step_by(3).collect::<Vec<_>>());
+        let live_before = qm.live_weights();
+        let structural = qm.structural_weights();
+        // Expected (row, col, value) sequence: live entries in CSR order.
+        let mut expect = Vec::new();
+        for i in 0..qm.n {
+            for k in qm.w_r_indptr[i]..qm.w_r_indptr[i + 1] {
+                if qm.w_r_values[k] != 0 {
+                    expect.push((i, qm.w_r_indices[k], qm.w_r_values[k]));
+                }
+            }
+        }
+        qm.compact();
+        assert_eq!(qm.live_weights(), live_before);
+        assert_eq!(qm.n_weights(), live_before);
+        assert_eq!(qm.macs_per_step(), live_before);
+        assert_eq!(qm.structural_weights(), structural);
+        let mut got = Vec::new();
+        for i in 0..qm.n {
+            for k in qm.w_r_indptr[i]..qm.w_r_indptr[i + 1] {
+                got.push((i, qm.w_r_indices[k], qm.w_r_values[k]));
+            }
+        }
+        assert_eq!(got, expect);
+        // Idempotent: a second compaction is a no-op.
+        let (ip, ix, vs) = (qm.w_r_indptr.clone(), qm.w_r_indices.clone(), qm.w_r_values.clone());
+        qm.compact();
+        assert_eq!(qm.w_r_indptr, ip);
+        assert_eq!(qm.w_r_indices, ix);
+        assert_eq!(qm.w_r_values, vs);
+    }
+
+    #[test]
+    fn compacted_evaluation_is_bit_identical() {
+        let (m, data) = trained_melborn();
+        let mut zeroed = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        zeroed.prune(&(0..zeroed.n_weights()).step_by(2).collect::<Vec<_>>());
+        let mut compacted = zeroed.clone();
+        compacted.compact();
+        assert_eq!(zeroed.evaluate(&data), compacted.evaluate(&data));
+        for s in data.test.iter().take(10) {
+            assert_eq!(zeroed.classify(s), compacted.classify(s));
+        }
     }
 
     #[test]

@@ -198,6 +198,8 @@ mod tests {
             method: crate::pruning::Method::Random,
             perf: Perf::Accuracy(perf),
             perf_base: Perf::Accuracy(0.9),
+            kernel: crate::quant::Kernel::Wide,
+            isa: crate::quant::Isa::Scalar,
             model: qm.clone(),
         };
         let results = vec![

@@ -266,6 +266,56 @@ fn sharded_deadline_flush_answers_partial_batches() {
     server.shutdown().unwrap();
 }
 
+/// Serving a **compacted** pruned variant next to its zeroed twin: every
+/// response must be bit-identical, while the MAC meter bills the compacted
+/// variant only for its live weights — the serving-side proof that pruning
+/// pays at runtime, in exact counted work rather than noisy wall-clock.
+#[test]
+fn compacted_variant_serves_bit_identical_responses_with_fewer_macs() {
+    use rcx::pruning::{prune_to_rate, select_prune_set, Pruner, RandomPruner};
+
+    let data = melborn_sized(21, 100, 60);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let scores = RandomPruner::new(9).scores(&qm, &data.train);
+    let mut zeroed = qm.clone();
+    zeroed.prune(&select_prune_set(&scores, 75.0));
+    let compacted = prune_to_rate(&qm, &scores, 75.0);
+    assert_eq!(compacted.live_weights(), zeroed.live_weights());
+    let (mps_z, mps_c) = (zeroed.macs_per_step() as u64, compacted.macs_per_step() as u64);
+    assert!(mps_z >= 2 * mps_c, "p=75 must at least halve MACs/step: {mps_z} vs {mps_c}");
+
+    let server = Server::start(
+        native_cfg(16, 2),
+        vec![VariantSpec::new("zeroed", zeroed), VariantSpec::new("compacted", compacted)],
+    )
+    .unwrap();
+    let client = server.client();
+    let vz = server.variant_index("zeroed").unwrap();
+    let vc = server.variant_index("compacted").unwrap();
+    let pending: Vec<_> = data
+        .test
+        .iter()
+        .map(|s| (client.submit(vz, s.clone()).unwrap(), client.submit(vc, s.clone()).unwrap()))
+        .collect();
+    for (i, (rz, rc)) in pending.into_iter().enumerate() {
+        let pz = rz.recv_timeout(Duration::from_secs(30)).expect("zeroed response lost");
+        let pc = rc.recv_timeout(Duration::from_secs(30)).expect("compacted response lost");
+        assert_eq!(pz.prediction, pc.prediction, "sample {i}: compacted serving diverged");
+    }
+
+    // MAC accounting: both variants saw the identical request stream, so the
+    // billed totals must be in the exact macs_per_step ratio.
+    let macs = server.macs_by_variant();
+    let total = |key: &str| macs.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap();
+    let (tz, tc) = (total("zeroed"), total("compacted"));
+    assert!(tz > 0 && tc > 0, "MAC meter never engaged: {tz}, {tc}");
+    assert_eq!(tz * mps_c, tc * mps_z, "billed MACs not in macs_per_step ratio");
+    assert!(tz >= 2 * tc, "compacted variant must be billed >=2x fewer MACs");
+    server.shutdown().unwrap();
+}
+
 #[test]
 fn graceful_shutdown_drains_queue() {
     let (server, data, _) = classification_setup(2);

@@ -15,9 +15,12 @@
 //! checked scalar tier precisely so these guards execute).
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
-use rcx::data::Dataset;
+use rcx::data::{Dataset, Task, TimeSeries};
 use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
-use rcx::pruning::{Engine, Pruner, SensitivityConfig, SensitivityPruner};
+use rcx::pruning::{
+    prune_to_rate, select_prune_set, Engine, Pruner, RandomPruner, SensitivityConfig,
+    SensitivityPruner,
+};
 use rcx::quant::{
     flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, Kernel, KernelBounds,
     KernelChoice, LaneScratch, QuantEsn, QuantSpec, BATCH_LANES, BATCH_LANES_NARROW16,
@@ -297,4 +300,115 @@ fn random_flip_batches_match_sequential_regression() {
     let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(8));
     // (henon's train split is one long sequence, not a sample list)
     assert_random_batches_match(&qm, &data.train, 13);
+}
+
+// ---------------------------------------------------------------------------
+// CSR compaction equivalence: physically removing pruned (zero) entries drops
+// wrapping-integer MACs whose contribution is exactly zero, so the compacted
+// model must be **bit-identical** to its zeroed twin on every inference
+// surface — scalar `evaluate_split`, every admissible lane kernel, and served
+// responses — while executing `live/structural` of the MACs.
+
+/// Prune `qm` to rate `p` two ways — zeroed in place vs `prune_to_rate`
+/// (which compacts) — and assert structural accounting plus bit-identical
+/// inference on the scalar path and every admissible lane kernel tier.
+fn assert_compaction_equivalent(qm: &QuantEsn, data: &Dataset, p: f64, tag: &str) {
+    let scores = RandomPruner::new(23).scores(qm, &data.train);
+    let mut zeroed = qm.clone();
+    zeroed.prune(&select_prune_set(&scores, p));
+    let compacted = prune_to_rate(qm, &scores, p);
+
+    // Structure: same live set, physically smaller arrays, fewer MACs.
+    assert_eq!(compacted.live_weights(), zeroed.live_weights(), "{tag}: live set differs");
+    assert_eq!(compacted.n_weights(), compacted.live_weights(), "{tag}: output not compact");
+    assert_eq!(
+        compacted.structural_weights(),
+        zeroed.structural_weights(),
+        "{tag}: structural count must survive compaction"
+    );
+    assert!(
+        compacted.macs_per_step() < zeroed.macs_per_step(),
+        "{tag}: compaction saved no MACs ({} vs {})",
+        compacted.macs_per_step(),
+        zeroed.macs_per_step()
+    );
+
+    // Scalar golden path.
+    assert_eq!(
+        compacted.evaluate_split(&data.test),
+        zeroed.evaluate_split(&data.test),
+        "{tag}: scalar evaluation diverged"
+    );
+
+    // Lane kernels: bounds are value-derived, so zeroed and compacted admit
+    // the same tiers; pin each admissible one plus Auto.
+    let refs: Vec<&TimeSeries> = data.test.iter().collect();
+    let mut choices = vec![KernelChoice::Auto, KernelChoice::Narrow, KernelChoice::Wide];
+    if KernelBounds::analyze(&compacted, 0).inference_kernel() == Kernel::Narrow16 {
+        choices.push(KernelChoice::Narrow16);
+    }
+    for choice in choices {
+        let mut sc_z = LaneScratch::for_model_with(&zeroed, choice);
+        let mut sc_c = LaneScratch::for_model_with(&compacted, choice);
+        assert_eq!(sc_c.kernel(), sc_z.kernel(), "{tag} {choice:?}: resolved tiers differ");
+        match data.task {
+            Task::Classification => assert_eq!(
+                compacted.classify_batch(&refs, &mut sc_c),
+                zeroed.classify_batch(&refs, &mut sc_z),
+                "{tag} {choice:?}: classify_batch diverged"
+            ),
+            Task::Regression => assert_eq!(
+                compacted.predict_batch(&refs, &mut sc_c),
+                zeroed.predict_batch(&refs, &mut sc_z),
+                "{tag} {choice:?}: predict_batch diverged"
+            ),
+        }
+    }
+}
+
+#[test]
+fn compaction_equivalence_melborn_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = melborn(features);
+        for q in [4u8, 6, 8] {
+            let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+            for p in [15.0, 60.0, 90.0] {
+                assert_compaction_equivalent(
+                    &qm,
+                    &data,
+                    p,
+                    &format!("melborn/{features:?} q={q} p={p}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compaction_equivalence_pen_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = pen(features);
+        for q in [4u8, 6, 8] {
+            let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+            for p in [15.0, 60.0, 90.0] {
+                assert_compaction_equivalent(
+                    &qm,
+                    &data,
+                    p,
+                    &format!("pen/{features:?} q={q} p={p}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compaction_equivalence_henon_regression() {
+    let (m, data) = henon();
+    for q in [4u8, 6, 8] {
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+        for p in [15.0, 60.0, 90.0] {
+            assert_compaction_equivalent(&qm, &data, p, &format!("henon q={q} p={p}"));
+        }
+    }
 }

@@ -11,7 +11,8 @@ Rust toolchain. This tool closes the loop:
   regenerated with a rendered snapshot of every section (engines, pack fill
   at 8 and 16 lanes, the narrow-vs-wide L3-g kernel head-to-head, the L3-h
   SIMD-dispatch grid — kernel width x ISA tier, the native kernel speedup,
-  and the closed-loop serve grid).
+  the closed-loop serve grid, and the L3-i compacted-vs-zeroed CSR grid with
+  the sequential-vs-parallel DSE wall-clock).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
@@ -39,6 +40,10 @@ SCHEMA = {
     "l3h_simd": {"rows", "bit_identical"},
     "native_kernel": {"samples", "lane_batched_us", "scalar_us", "speedup"},
     "serve_native": {"rows"},
+    "l3i_compaction": {
+        "rows", "bit_identical", "melborn_macs_ratio_p90", "dse_configs",
+        "dse_sequential_s", "dse_parallel_s", "dse_speedup",
+    },
 }
 L3B_ROW_KEYS = {
     "workers", "dense_s", "incremental_s", "batched_s",
@@ -51,6 +56,10 @@ L3H_ROW_KEYS = {
 SERVE_ROW_KEYS = {
     "max_batch", "workers", "clients", "requests", "req_per_s", "mean_batch",
     "p50_us", "p99_us",
+}
+L3I_ROW_KEYS = {
+    "benchmark", "p", "live", "structural", "macs_zeroed", "macs_compacted",
+    "macs_ratio", "kernel", "isa", "zeroed_us", "compacted_us", "speedup",
 }
 
 
@@ -78,10 +87,22 @@ def validate(bench):
         missing = L3H_ROW_KEYS - set(row)
         if missing:
             fail(f"l3h_simd row {row} missing {sorted(missing)}")
+    for row in bench["l3i_compaction"]["rows"]:
+        missing = L3I_ROW_KEYS - set(row)
+        if missing:
+            fail(f"l3i_compaction row {row} missing {sorted(missing)}")
     if not bench["l3g_kernel"]["bit_identical"]:
         fail("l3g_kernel.bit_identical is false — the bench should have aborted")
     if not bench["l3h_simd"]["bit_identical"]:
         fail("l3h_simd.bit_identical is false — the bench should have aborted")
+    comp = bench["l3i_compaction"]
+    if not comp["bit_identical"]:
+        fail("l3i_compaction.bit_identical is false — the bench should have aborted")
+    if comp["melborn_macs_ratio_p90"] < 5.0:
+        fail(
+            "l3i_compaction.melborn_macs_ratio_p90 = "
+            f"{comp['melborn_macs_ratio_p90']} < 5.0 — compaction regressed"
+        )
 
 
 def wname(workers):
@@ -157,6 +178,25 @@ def render_block(bench):
             f"{r['req_per_s']:.0f} | {r['mean_batch']:.1f} | {r['p50_us']} | "
             f"{r['p99_us']} |"
         )
+    c = bench["l3i_compaction"]
+    out.append("")
+    out.append("| L3-i compaction | p | live/structural | MACs/step (zeroed -> compacted) | "
+               "kernel | eval speedup |")
+    out.append("|---|---|---|---|---|---|")
+    for r in c["rows"]:
+        out.append(
+            f"| {r['benchmark']} | {r['p']:.0f}% | {r['live']}/{r['structural']} | "
+            f"{r['macs_zeroed']} -> {r['macs_compacted']} ({r['macs_ratio']:.1f}x) | "
+            f"{r['kernel']}/{r['isa']} | {r['speedup']:.2f}x |"
+        )
+    out.append("")
+    out.append(
+        f"DSE grid ({c['dse_configs']} configs): sequential "
+        f"{secs(c['dse_sequential_s'])} vs parallel {secs(c['dse_parallel_s'])} "
+        f"— {c['dse_speedup']:.2f}x, byte-identical results; melborn p=90 "
+        f"compacted executes {c['melborn_macs_ratio_p90']:.1f}x fewer MACs/step "
+        f"than unpruned (floor: 5x)."
+    )
     return "\n".join(out)
 
 

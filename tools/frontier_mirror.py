@@ -9,7 +9,10 @@ computes the same scatter/pooled bound formula, selects the narrowest
 provably safe tier — 32 i16 lanes, 16 i32 lanes or the 8 wide i64 lanes —
 exactly like `CalibPlan::build`, and — Python ints being exact — *proves*
 the bound on real data by asserting every narrow-path intermediate stays
-inside the selected width (i16 for narrow16, i32 for narrow). Asserts
+inside the selected width (i16 for narrow16, i32 for narrow), plus the
+pruned-CSR compaction transform (`compact`): dense evaluation and the bound
+analysis must be representation-invariant between a zeroed and a physically
+compacted reservoir. Asserts
 bit-identical Perf for every (slot, bit) flip on random sparse models,
 sequentially and through packed batches, including models deliberately
 constructed to FAIL a bound and take the next-wider fallback (i16 → i32,
@@ -21,6 +24,7 @@ Usage:
     python tools/frontier_mirror.py --check   # CI gate: all correctness cases
     python tools/frontier_mirror.py --perf    # timing: sequential vs batched
 """
+import copy
 import math
 import random
 import bisect
@@ -75,6 +79,24 @@ def kernel_bounds(model, t_max):
         "tier": tier,
         "lanes": TIER_LANES[tier],
     }
+
+
+def compact(model):
+    """Mirror of QuantEsn::compact(): rebuild the reservoir CSR with the
+    dead (zero, i.e. pruned) entries physically removed, preserving row and
+    column order. Dropping a zero-weight wrapping-integer MAC cannot change
+    any accumulator bit, so every downstream evaluation must stay
+    bit-identical while executing only the live weights."""
+    mc = copy.copy(model)
+    indptr, indices, values = [0], [], []
+    for i in range(model.n):
+        for k in range(model.indptr[i], model.indptr[i + 1]):
+            if model.values[k] != 0:
+                indices.append(model.indices[k])
+                values.append(model.values[k])
+        indptr.append(len(indices))
+    mc.indptr, mc.indices, mc.values = indptr, indices, values
+    return mc
 
 
 def flip_bit(v, bit, q):
@@ -746,6 +768,38 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
     return mismatches
 
 
+def run_compaction_case(seed, task, features, n, q, T, n_samples, frac,
+                        washout=0, out_dim=3, nnz=4):
+    """Pruned-CSR compaction (mirror of prune_to_rate → QuantEsn::compact):
+    zero `frac`% of the slots, rebuild the arrays without them, and assert
+    (a) live (row, col, value) order is preserved, (b) the bound analysis
+    re-resolves identically on both representations (value-derived: dead
+    slots contribute zero L1 either way), and (c) the dense evaluation is
+    bit-identical zeroed vs compacted."""
+    rng = random.Random(seed)
+    model = Model(rng, n, q, task, features, washout, out_dim, nnz, T, n_samples)
+    zeroed = copy.copy(model)
+    zeroed.values = list(model.values)
+    k = int(frac / 100.0 * len(zeroed.values))
+    for idx in rng.sample(range(len(zeroed.values)), k):
+        zeroed.values[idx] = 0
+    comp = compact(zeroed)
+    live = sum(1 for v in zeroed.values if v != 0)
+    assert len(comp.values) == live and len(comp.indptr) == n + 1
+    want = [(i, zeroed.indices[j], zeroed.values[j]) for i in range(n)
+            for j in range(zeroed.indptr[i], zeroed.indptr[i + 1]) if zeroed.values[j] != 0]
+    got = [(i, comp.indices[j], comp.values[j]) for i in range(n)
+           for j in range(comp.indptr[i], comp.indptr[i + 1])]
+    assert got == want, "compaction must preserve live (row, col, value) order"
+    t_max = max(len(u) for u, _, _ in model.samples)
+    bz, bc = kernel_bounds(zeroed, t_max), kernel_bounds(comp, t_max)
+    assert bz["tier"] == bc["tier"], "bound tier must be representation-invariant"
+    mism = 0 if comp.evaluate(comp.values) == zeroed.evaluate(zeroed.values) else 1
+    print(f"compaction(task={task}, feat={features}, n={n}, q={q}, p={frac}%, "
+          f"live={live}/{len(zeroed.values)}, tier={bc['tier']}): {mism} mismatches")
+    return mism
+
+
 def run_checks():
     bad = 0
     bad += run_case(1, "cls", "mean", n=12, q=4, T=10, n_samples=8)
@@ -803,6 +857,13 @@ def run_checks():
                             inflate=10**8, expect_lanes=BATCH_LANES)
     bad += run_batched_case(20, "reg", "mean", n=10, q=8, T=12, n_samples=3, washout=2,
                             out_dim=2, inflate=10**8, expect_lanes=BATCH_LANES)
+    # Pruned-CSR compaction: physically removing dead slots must leave the
+    # dense evaluation and the bound re-resolution bit-identical (the
+    # inference-side lane suite lives in native_batch_mirror.py).
+    bad += run_compaction_case(31, "cls", "mean", n=14, q=6, T=10, n_samples=8, frac=60)
+    bad += run_compaction_case(32, "cls", "last", n=12, q=4, T=10, n_samples=8, frac=90)
+    bad += run_compaction_case(33, "reg", "mean", n=12, q=8, T=14, n_samples=3, frac=75,
+                               washout=3, out_dim=2)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "frontier algorithm diverges from dense reference"
     print("OK: incremental == batched == dense on all cases "

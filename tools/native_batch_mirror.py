@@ -21,12 +21,21 @@ must take the next-wider fallback: mid-inflation breaks i16 but not i32
 Rust SIMD dispatch needs no mirror: all ISA tiers are wrapping integer
 strips, bit-identical to this algebra whenever the bounds hold.
 
+The compaction suite mirrors `prune_to_rate → QuantEsn::compact`: a pruned
+model's zeroed and physically-compacted CSRs must serve bit-identical
+classify/predict through the auto-selected lanes, and the pruned bounds must
+re-resolve the kernel tier — one case engineers a genuine narrowing (q=8
+unpruned lands on i32; one live slot per row shrinks the row L1 under the
+i16 bound → 32 lanes), with already-narrowest and inflated-wide controls
+asserting the tier must NOT move.
+
 Usage:
     python tools/native_batch_mirror.py   # the CI gate; no flags
 """
+import copy
 import random
 
-from frontier_mirror import I16_MAX, I32_MAX, Ladder, Model, argmax, qmax  # noqa: F401
+from frontier_mirror import I16_MAX, I32_MAX, Ladder, Model, argmax, compact, qmax  # noqa: F401
 
 # Lane widths of the kernels
 # (batch.rs SAMPLE_LANES / SAMPLE_LANES_NARROW / SAMPLE_LANES_NARROW16)
@@ -274,6 +283,85 @@ def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo,
     return mismatches
 
 
+# ---- pruning + compaction (mirror of pruning::prune_to_rate → compact) ----
+
+def pruned_zeroed(m, frac, rng):
+    """The zeroed twin: `frac`% of the CSR slots set to 0 in place."""
+    mz = copy.copy(m)
+    mz.values = list(m.values)
+    k = int(frac / 100.0 * len(mz.values))
+    for idx in rng.sample(range(len(mz.values)), k):
+        mz.values[idx] = 0
+    return mz
+
+
+def pruned_keep_row_min(m):
+    """Keep only the smallest-|w| live slot per row — the deterministic
+    maximal row-L1 shrink, used to drive the pruned-bound tier flip."""
+    mz = copy.copy(m)
+    mz.values = list(m.values)
+    for i in range(m.n):
+        ks = [k for k in range(m.indptr[i], m.indptr[i + 1]) if mz.values[k] != 0]
+        if not ks:
+            continue
+        keep = min(ks, key=lambda k: (abs(mz.values[k]), k))
+        for k in ks:
+            if k != keep:
+                mz.values[k] = 0
+    return mz
+
+
+def run_compaction_case(seed, task, features, n, q, washout, out_dim, nnz,
+                        n_samples, t_lo, t_hi, frac=None, keep_row_min=False,
+                        inflate=None, expect_tier_before=None, expect_tier_after=None):
+    """Inference-side compaction equivalence + pruned-bound re-resolution:
+    prune a model (random fraction, or the deterministic per-row-min shrink),
+    compact the pruned CSR, and assert (a) zeroed and compacted re-resolve to
+    the SAME tier (bounds are value-derived), (b) `expect_tier_before/after`
+    pin whether pruning flips the unpruned model's auto tier, and (c)
+    classify/predict through the auto-selected lanes are bit-identical:
+    compacted == zeroed == scalar reference."""
+    rng = random.Random(seed)
+    m = Model(rng, n, q, task, features, washout, out_dim, nnz, t_hi, 1)
+    if inflate:
+        m.values = [v * inflate for v in m.values]
+    mz = pruned_keep_row_min(m) if keep_row_min else pruned_zeroed(m, frac, rng)
+    mc = compact(mz)
+    live = sum(1 for v in mz.values if v != 0)
+    assert len(mc.values) == live, "compaction must keep exactly the live slots"
+    tier_before = inference_bounds(m)["tier"]
+    lz, lc = Lanes(mz), Lanes(mc)
+    assert lz.tier == lc.tier, "zeroed and compacted must re-resolve identically"
+    if expect_tier_before is not None:
+        assert tier_before == expect_tier_before, \
+            f"unpruned tier: expected {expect_tier_before}, got {tier_before}"
+    if expect_tier_after is not None:
+        assert lc.tier == expect_tier_after, \
+            f"pruned tier: expected {expect_tier_after}, got {lc.tier}"
+    samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
+    if task == "cls":
+        got_z = classify_batch(mz, lz, samples)
+        got_c = classify_batch(mc, lc, samples)
+        want = [scalar_classify(mz, u) for u in samples]
+    else:
+        got_z = predict_batch(mz, lz, samples)
+        got_c = predict_batch(mc, lc, samples)
+        want = [scalar_predict(mz, u) for u in samples]
+    mismatches = 0
+    for i, (gc, gz, w) in enumerate(zip(got_c, got_z, want)):
+        if gc != gz or gc != w:
+            mismatches += 1
+            if mismatches <= 3:
+                print(f"  COMPACT MISMATCH seed={seed} sample={i}: "
+                      f"compacted={gc} zeroed={gz} scalar={w}")
+    print(
+        f"compaction(task={task}, feat={features}, n={n}, q={q}, live={live}/"
+        f"{len(mz.values)}, tier {tier_before} -> {lc.tier}, lanes={lc.lanes}): "
+        f"{mismatches} mismatches"
+    )
+    return mismatches
+
+
 def run_checks():
     bad = 0
     # Batch sizes crossing the lane boundaries, uniform and ragged lengths.
@@ -338,6 +426,31 @@ def run_checks():
     bad += run_case(9, "cls", "mean", n=12, q=6, washout=0, out_dim=3, nnz=4,
                     n_samples=17, t_lo=6, t_hi=18, clamp_steps=4,
                     expect_lanes=SAMPLE_LANES_NARROW16)
+    # Pruned-CSR compaction + pruned-bound re-resolution. The q=8 model's
+    # unpruned row L1 breaks the i16 bound (auto = 16-lane i32); pruning to
+    # one live slot per row shrinks it under 32767/127, so the SAME model
+    # re-resolves to the 32-lane i16 tier after pruning — the kernel
+    # narrowing the Rust `KernelChoice::Auto` path must reproduce.
+    bad += run_compaction_case(41, "cls", "mean", n=14, q=8, washout=0, out_dim=3,
+                               nnz=6, n_samples=33, t_lo=4, t_hi=14, keep_row_min=True,
+                               expect_tier_before="narrow", expect_tier_after="narrow16")
+    # Must-NOT-flip controls: a q=4 model is already on the narrowest tier
+    # (pruning cannot narrow further) ...
+    bad += run_compaction_case(42, "cls", "mean", n=12, q=4, washout=0, out_dim=3,
+                               nnz=4, n_samples=33, t_lo=3, t_hi=16, frac=60,
+                               expect_tier_before="narrow16", expect_tier_after="narrow16")
+    # ... and a heavily-inflated model stays wide even at one slot per row
+    # (a single surviving weight still breaks the i32 bound).
+    bad += run_compaction_case(43, "cls", "mean", n=12, q=8, washout=0, out_dim=3,
+                               nnz=4, n_samples=17, t_lo=4, t_hi=12, inflate=10**8,
+                               keep_row_min=True,
+                               expect_tier_before="wide", expect_tier_after="wide")
+    # Regression through the compacted CSR (random prune, ragged batch).
+    bad += run_compaction_case(44, "reg", "mean", n=12, q=6, washout=4, out_dim=2,
+                               nnz=5, n_samples=19, t_lo=2, t_hi=20, frac=75)
+    # Last-state pooling at a high rate.
+    bad += run_compaction_case(45, "cls", "last", n=12, q=6, washout=0, out_dim=3,
+                               nnz=5, n_samples=17, t_lo=3, t_hi=15, frac=90)
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "lane-batched kernel diverges from the scalar reference"
     print("OK: lane-batched == scalar on all cases (narrow16 + narrow + wide kernels)")
