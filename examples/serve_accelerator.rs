@@ -51,27 +51,37 @@ fn main() -> anyhow::Result<()> {
     // cores. Bit-identical to a single executor at any shard count.
     let shards = if matches!(backend, BackendConfig::Native(_)) { 2 } else { 1 };
     println!("starting coordinator on the {} backend ({shards} shard(s))...", backend.name());
+    // QoS envelope: a bounded queue sheds (typed rejection) instead of
+    // growing forever — irrelevant at this example's offered load, but the
+    // high-water report below shows the bound holding.
     let server = Server::start(
-        ServeConfig {
-            backend,
-            batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) },
-            shards,
-        },
+        ServeConfig::builder()
+            .backend(backend)
+            .batcher(
+                BatcherConfig::builder()
+                    .max_batch(32)
+                    .max_wait(Duration::from_millis(2))
+                    .build(),
+            )
+            .shards(shards)
+            .queue_cap(4096)
+            .build(),
         registry.specs(),
     )?;
     let client = server.client();
 
     for key in server.variant_keys().to_vec() {
-        let v = server.variant_index(&key).unwrap();
+        let h = server.handle(&key)?;
         let t0 = Instant::now();
         let pending: Vec<_> = data
             .test
             .iter()
-            .map(|s| client.submit(v, s.clone()).unwrap())
+            .map(|s| client.submit(&h, s.clone()).expect("under cap: admitted"))
             .collect();
         let mut correct = 0usize;
         for (i, rx) in pending.into_iter().enumerate() {
             let resp = rx.recv()?;
+            assert_eq!(resp.served_by.as_ref(), h.key(), "no pressure, no degradation");
             if let Prediction::Class(c) = resp.prediction {
                 if Some(c) == data.test[i].label {
                     correct += 1;
@@ -92,5 +102,9 @@ fn main() -> anyhow::Result<()> {
         "coordinator: {} requests over {} batches (mean {:.1}/batch), latency p50 {} us / p95 {} us / p99 {} us",
         m.requests, m.batches, m.mean_batch, m.p50_us, m.p95_us, m.p99_us
     );
-    server.shutdown()
+    let report = server.shutdown()?;
+    for (key, hw) in &report.queue_highwater {
+        println!("  [{key}] queue high-water {hw} (cap 4096)");
+    }
+    Ok(())
 }

@@ -18,6 +18,10 @@
 //!   L3-i  compacted (live-weight CSR) vs zeroed pruned models across the
 //!         pruning grid on all three benchmarks (bit-identity asserted,
 //!         MACs/step accounting) + sequential-vs-parallel DSE grid wall-clock
+//!   L3-j  overload QoS: offered-load sweep against a bounded-queue server
+//!         with the Pareto-ladder degrade walk on — served/shed/degraded
+//!         accounting (exact), queue high-water vs cap, p50/p99 under
+//!         pressure
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
@@ -30,7 +34,7 @@ use std::time::Instant;
 use rcx::bench::{section, smoke_mode, time_it, JsonReport};
 use rcx::config::BenchmarkConfig;
 use rcx::coordinator::{
-    BackendConfig, Batcher, BatcherConfig, Prediction, ServeConfig, Server, VariantSpec,
+    BackendConfig, Batcher, BatcherConfig, Prediction, Rejected, ServeConfig, Server, VariantSpec,
 };
 use rcx::data::Benchmark;
 use rcx::dse::{calibration_split, explore, DseRequest};
@@ -369,22 +373,24 @@ fn main() {
         let mut rows = String::new();
         for &(max_batch, workers) in grid {
             let server = Server::start(
-                ServeConfig {
-                    backend: BackendConfig::Native(NativeConfig {
+                ServeConfig::builder()
+                    .backend(BackendConfig::Native(NativeConfig {
                         max_batch,
                         workers,
                         ..Default::default()
-                    }),
-                    batcher: BatcherConfig {
-                        max_batch,
-                        max_wait: std::time::Duration::from_millis(2),
-                    },
-                    shards: 1,
-                },
+                    }))
+                    .batcher(
+                        BatcherConfig::builder()
+                            .max_batch(max_batch)
+                            .max_wait(std::time::Duration::from_millis(2))
+                            .build(),
+                    )
+                    .build(),
                 vec![VariantSpec::new("q6", qm.clone())],
             )
             .expect("native server start");
             let client = server.client();
+            let h = server.handle("q6").expect("resolve q6");
             let t0 = Instant::now();
             // Closed loop: enough client threads to saturate the batch cap
             // (2× max_batch), so flushes happen at capacity and the grid
@@ -394,11 +400,12 @@ fn main() {
             std::thread::scope(|scope| {
                 for c in 0..n_clients {
                     let client = client.clone();
+                    let h = h.clone();
                     let data = &data;
                     scope.spawn(move || {
                         for i in (c..n_requests).step_by(n_clients) {
                             let s = &data.test[i % data.test.len()];
-                            let resp = client.infer(0, s.clone()).expect("request failed");
+                            let resp = client.infer(&h, s.clone()).expect("request failed");
                             let Prediction::Class(_) = resp.prediction else {
                                 panic!("unexpected prediction kind")
                             };
@@ -430,6 +437,120 @@ fn main() {
             ));
         }
         report.add("serve_native", format!("{{\"rows\": [{rows}\n  ]}}"));
+    }
+
+    section("L3-j overload QoS (bounded queue + deadline batcher + Pareto-ladder degrade)");
+    {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        // The primary and its Pareto-ladder fallback: same model, p=75
+        // compacted — strictly fewer executed MACs, bit-exact for itself.
+        let scores = RandomPruner::new(11).scores(&qm, &data.train);
+        let cheap = prune_to_rate(&qm, &scores, 75.0);
+        assert!(cheap.macs_per_step() < qm.macs_per_step(), "fallback must be strictly cheaper");
+        let queue_cap = 16usize;
+        let scfg = ServeConfig::builder()
+            .backend(BackendConfig::Native(NativeConfig {
+                max_batch: 8,
+                workers: 1,
+                ..Default::default()
+            }))
+            .batcher(
+                BatcherConfig::builder()
+                    .max_batch(8)
+                    .max_wait(std::time::Duration::from_millis(1))
+                    .build(),
+            )
+            .queue_cap(queue_cap)
+            .degrade(true)
+            .build();
+        let (_, degrade_at) = scfg.qos_limits();
+        let loads: &[usize] = if smoke { &[4, 32] } else { &[4, 16, 64] };
+        let per_client: usize = if smoke { 16 } else { 32 };
+        let mut rows = String::new();
+        for &clients in loads {
+            let server = Server::start(
+                scfg.clone(),
+                vec![
+                    VariantSpec::new("q6", qm.clone()).with_fallback("cheap"),
+                    VariantSpec::new("cheap", cheap.clone()),
+                ],
+            )
+            .expect("overload server start");
+            let client = server.client();
+            let h = server.handle("q6").expect("resolve q6");
+            let served = AtomicU64::new(0);
+            let shed = AtomicU64::new(0);
+            let degraded = AtomicU64::new(0);
+            let offered = (clients * per_client) as u64;
+            let t0 = Instant::now();
+            // Open-ish loop: every client hammers the primary; admission
+            // either serves (possibly via the degrade spill to "cheap"),
+            // or sheds with the typed QueueFull — nothing blocks, nothing
+            // panics, and the accounting below must balance exactly.
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let client = client.clone();
+                    let h = h.clone();
+                    let data = &data;
+                    let (served, shed, degraded) = (&served, &shed, &degraded);
+                    scope.spawn(move || {
+                        for i in 0..per_client {
+                            let s = &data.test[(c * per_client + i) % data.test.len()];
+                            match client.submit(&h, s.clone()) {
+                                Ok(rx) => {
+                                    let resp = rx.recv().expect("admitted request lost");
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                    if resp.served_by.as_ref() == "cheap" {
+                                        degraded.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                Err(Rejected::QueueFull) => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => panic!("unexpected rejection: {e}"),
+                            }
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let (served, shed, degraded) =
+                (served.into_inner(), shed.into_inner(), degraded.into_inner());
+            let m = server.metrics();
+            let highwater = server.queue_highwater().iter().map(|&(_, hw)| hw).max().unwrap_or(0);
+            // Exact QoS accounting gates (the bench aborts otherwise).
+            assert_eq!(served + shed, offered, "accounting leak: every submit lands once");
+            assert!(served > 0 && m.requests == served, "served vs metered mismatch");
+            assert_eq!(m.degraded, degraded, "degrade meter vs served_by labels");
+            assert!(highwater <= queue_cap as u64, "queue exceeded its cap");
+            server.shutdown().expect("overload shutdown");
+            let rps = served as f64 / wall;
+            println!(
+                "clients={clients:<3} offered={offered:<5} served={served:<5} shed={shed:<5} \
+                 degraded={degraded:<5} {rps:>7.0} req/s  p50 {} us  p99 {} us  highwater {}",
+                m.p50_us, m.p99_us, highwater
+            );
+            if !rows.is_empty() {
+                rows.push(',');
+            }
+            rows.push_str(&format!(
+                concat!(
+                    "\n    {{\"clients\": {clients}, \"offered\": {offered}, ",
+                    "\"served\": {served}, \"shed\": {shed}, \"degraded\": {degraded}, ",
+                    "\"req_per_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, ",
+                    "\"highwater\": {}}}"
+                ),
+                rps, m.p50_us, m.p99_us, highwater
+            ));
+        }
+        report.add(
+            "l3j_overload",
+            format!(
+                "{{\"queue_cap\": {queue_cap}, \"degrade_at\": {degrade_at}, \
+                 \"rows\": [{rows}\n  ]}}"
+            ),
+        );
     }
 
     section("L3-i compacted vs zeroed CSR kernels (3 benchmarks x pruning grid) + parallel DSE");

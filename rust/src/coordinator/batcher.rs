@@ -1,21 +1,70 @@
 //! Dynamic batching policy: flush a variant's queue when it reaches the
-//! artifact batch capacity or when its oldest request exceeds the wait
-//! budget. Pure logic — fully unit-testable without threads.
+//! artifact batch capacity, when its oldest request exceeds the wait budget,
+//! or when waiting any longer would push a queued request past its deadline
+//! (minus a configurable slack for the backend pass itself). Pure logic —
+//! fully unit-testable without threads.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// Batching knobs.
+/// Batching knobs. `#[non_exhaustive]`: construct via
+/// [`BatcherConfig::builder`] (or `Default`) so new knobs stop being
+/// breaking edits across `main.rs`, tests and benches.
+#[non_exhaustive]
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Hard batch cap (≤ the AOT artifact's batch dimension).
     pub max_batch: usize,
     /// Max time the oldest queued request may wait before a forced flush.
     pub max_wait: Duration,
+    /// Margin subtracted from the earliest queued request deadline when
+    /// scheduling a deadline-driven flush: the batch must *start* early
+    /// enough for the backend pass to finish before the deadline. Zero means
+    /// "flush exactly at the deadline" — the expiry check then drops the
+    /// request instead of serving it late (deterministic, used in tests).
+    pub deadline_slack: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            deadline_slack: Duration::from_micros(500),
+        }
+    }
+}
+
+impl BatcherConfig {
+    pub fn builder() -> BatcherConfigBuilder {
+        BatcherConfigBuilder { cfg: Self::default() }
+    }
+}
+
+/// Builder for [`BatcherConfig`] — unset knobs keep their defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfigBuilder {
+    cfg: BatcherConfig,
+}
+
+impl BatcherConfigBuilder {
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.cfg.max_wait = max_wait;
+        self
+    }
+
+    pub fn deadline_slack(mut self, slack: Duration) -> Self {
+        self.cfg.deadline_slack = slack;
+        self
+    }
+
+    pub fn build(self) -> BatcherConfig {
+        self.cfg
     }
 }
 
@@ -30,25 +79,34 @@ pub enum BatchDecision {
     Flush(usize),
 }
 
-/// Per-variant batching state.
+/// Per-variant batching state. Tracks one optional deadline per queued
+/// request, FIFO-aligned with the owner's request queue (`push_deadline` on
+/// ingest, `flushed(n)` drops the first `n`).
 #[derive(Clone, Debug)]
 pub struct Batcher {
     cfg: BatcherConfig,
     queued: usize,
     oldest: Option<Instant>,
+    deadlines: VecDeque<Option<Instant>>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Self { cfg, queued: 0, oldest: None }
+        Self { cfg, queued: 0, oldest: None, deadlines: VecDeque::new() }
     }
 
-    /// Record an arrival.
+    /// Record an arrival with no deadline.
     pub fn push(&mut self, now: Instant) {
+        self.push_deadline(now, None);
+    }
+
+    /// Record an arrival carrying an optional deadline.
+    pub fn push_deadline(&mut self, now: Instant, deadline: Option<Instant>) {
         if self.queued == 0 {
             self.oldest = Some(now);
         }
         self.queued += 1;
+        self.deadlines.push_back(deadline);
     }
 
     pub fn len(&self) -> usize {
@@ -59,7 +117,9 @@ impl Batcher {
         self.queued == 0
     }
 
-    /// Decide: flush, wait, or idle.
+    /// Decide: flush, wait, or idle. A queued deadline pulls the flush point
+    /// forward to `deadline - deadline_slack` when that beats the age-based
+    /// `oldest + max_wait` point; capacity always flushes immediately.
     pub fn decide(&self, now: Instant) -> BatchDecision {
         if self.queued == 0 {
             return BatchDecision::Idle;
@@ -67,19 +127,25 @@ impl Batcher {
         if self.queued >= self.cfg.max_batch {
             return BatchDecision::Flush(self.cfg.max_batch);
         }
-        let age = now.duration_since(self.oldest.expect("queued > 0 implies oldest"));
-        if age >= self.cfg.max_wait {
+        let mut flush_at = self.oldest.expect("queued > 0 implies oldest") + self.cfg.max_wait;
+        if let Some(d) = self.deadlines.iter().flatten().copied().min() {
+            let latest_start = d.checked_sub(self.cfg.deadline_slack).unwrap_or(now);
+            flush_at = flush_at.min(latest_start);
+        }
+        if now >= flush_at {
             BatchDecision::Flush(self.queued)
         } else {
-            BatchDecision::Wait(self.cfg.max_wait - age)
+            BatchDecision::Wait(flush_at - now)
         }
     }
 
     /// Record a flush of `n` requests; the remaining queue restarts its age
-    /// clock at `now` (conservative: slightly early flushes, never starvation).
+    /// clock at `now` (conservative: slightly early flushes, never starvation)
+    /// and keeps its remaining deadlines.
     pub fn flushed(&mut self, n: usize, now: Instant) {
         assert!(n <= self.queued, "flushed more than queued");
         self.queued -= n;
+        self.deadlines.drain(..n);
         self.oldest = if self.queued > 0 { Some(now) } else { None };
     }
 }
@@ -89,7 +155,10 @@ mod tests {
     use super::*;
 
     fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
-        BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+        BatcherConfig::builder()
+            .max_batch(max_batch)
+            .max_wait(Duration::from_millis(wait_ms))
+            .build()
     }
 
     #[test]
@@ -148,5 +217,53 @@ mod tests {
             panic!("expected wait");
         };
         assert!(w2 < w1);
+    }
+
+    #[test]
+    fn request_deadline_pulls_flush_earlier_than_max_wait() {
+        // max_wait alone would flush at t0+1000ms; a request due at t0+10ms
+        // with 2ms slack must force the flush by t0+8ms.
+        let b_cfg = BatcherConfig::builder()
+            .max_batch(100)
+            .max_wait(Duration::from_millis(1000))
+            .deadline_slack(Duration::from_millis(2))
+            .build();
+        let mut b = Batcher::new(b_cfg);
+        let t0 = Instant::now();
+        b.push(t0);
+        b.push_deadline(t0, Some(t0 + Duration::from_millis(10)));
+        let BatchDecision::Wait(w) = b.decide(t0) else {
+            panic!("expected wait before the deadline window");
+        };
+        assert_eq!(w, Duration::from_millis(8), "wait must target deadline - slack");
+        assert_eq!(b.decide(t0 + Duration::from_millis(8)), BatchDecision::Flush(2));
+        // An already-due deadline (slack underflows `now`) flushes at once.
+        let mut b2 = Batcher::new(b_cfg);
+        b2.push_deadline(t0, Some(t0 + Duration::from_millis(1)));
+        assert_eq!(b2.decide(t0 + Duration::from_millis(1)), BatchDecision::Flush(1));
+    }
+
+    #[test]
+    fn flushed_drops_deadline_entries_in_fifo_order() {
+        let b_cfg = BatcherConfig::builder()
+            .max_batch(2)
+            .max_wait(Duration::from_millis(1000))
+            .deadline_slack(Duration::ZERO)
+            .build();
+        let mut b = Batcher::new(b_cfg);
+        let t0 = Instant::now();
+        // Two deadline-free arrivals fill a capacity batch ahead of one
+        // deadline-carrying arrival.
+        b.push(t0);
+        b.push(t0);
+        b.push_deadline(t0, Some(t0 + Duration::from_millis(5)));
+        assert_eq!(b.decide(t0), BatchDecision::Flush(2));
+        b.flushed(2, t0);
+        // The surviving entry's deadline still governs the next flush.
+        assert!(matches!(b.decide(t0), BatchDecision::Wait(_)));
+        assert_eq!(b.decide(t0 + Duration::from_millis(5)), BatchDecision::Flush(1));
+        b.flushed(1, t0 + Duration::from_millis(5));
+        assert!(b.is_empty());
+        assert_eq!(b.decide(t0 + Duration::from_millis(6)), BatchDecision::Idle);
     }
 }

@@ -1,4 +1,7 @@
-//! Serving metrics: counters + latency quantiles, lock-light.
+//! Serving metrics: counters + latency quantiles, lock-light. PR 7 adds the
+//! QoS counters — typed submit rejections (queue-full / deadline / shutdown /
+//! unknown variant), flush-time expiries and Pareto-ladder degradations — all
+//! surfaced through [`MetricsSnapshot`] and the server's shutdown report.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -10,6 +13,12 @@ pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     batched_items: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_deadline: AtomicU64,
+    rejected_shutdown: AtomicU64,
+    rejected_unknown_variant: AtomicU64,
+    expired: AtomicU64,
+    degraded: AtomicU64,
     /// Latency samples in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     /// Per-variant integer-MAC counter, keyed by routing key. A `Vec` (not a
@@ -27,6 +36,21 @@ pub struct MetricsSnapshot {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Submits rejected because the target queue was at its cap.
+    pub rejected_full: u64,
+    /// Submits rejected because the deadline had already passed.
+    pub rejected_deadline: u64,
+    /// Submits rejected because the server was shutting down.
+    pub rejected_shutdown: u64,
+    /// Requests routed at a variant the receiving shard does not serve
+    /// (previously a silent drop — now counted and reported).
+    pub rejected_unknown_variant: u64,
+    /// Admitted requests dropped at flush time: their deadline passed while
+    /// they sat in the queue, so no backend pass was wasted on them.
+    pub expired: u64,
+    /// Admitted requests spilled to a fallback variant by the Pareto-ladder
+    /// degrade walk (served bit-exactly by the *fallback*'s model).
+    pub degraded: u64,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -52,6 +76,30 @@ impl Metrics {
     /// Per-variant MAC totals in first-recorded order.
     pub fn macs_by_variant(&self) -> Vec<(String, u64)> {
         self.variant_macs.lock().expect("metrics poisoned").clone()
+    }
+
+    pub fn record_rejected_full(&self) {
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected_deadline(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected_shutdown(&self) {
+        self.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_unknown_variant(&self) {
+        self.rejected_unknown_variant.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_expired(&self, n: u64) {
+        self.expired.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_request(&self, latency: Duration) {
@@ -87,6 +135,12 @@ impl Metrics {
             p50_us: q(0.50),
             p95_us: q(0.95),
             p99_us: q(0.99),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            rejected_unknown_variant: self.rejected_unknown_variant.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
     }
 }
@@ -125,9 +179,30 @@ mod tests {
     }
 
     #[test]
+    fn qos_counters_land_in_snapshot() {
+        let m = Metrics::default();
+        m.record_rejected_full();
+        m.record_rejected_full();
+        m.record_rejected_deadline();
+        m.record_rejected_shutdown();
+        m.record_unknown_variant();
+        m.record_expired(3);
+        m.record_degraded();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_full, 2);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.rejected_shutdown, 1);
+        assert_eq!(s.rejected_unknown_variant, 1);
+        assert_eq!(s.expired, 3);
+        assert_eq!(s.degraded, 1);
+    }
+
+    #[test]
     fn empty_snapshot_is_zero() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.rejected_full, 0);
+        assert_eq!(s.degraded, 0);
     }
 }

@@ -1,27 +1,49 @@
 //! L3 serving coordinator: request router + dynamic batcher over a pluggable
-//! execution backend.
+//! execution backend, with a QoS envelope for overload.
 //!
 //! Architecture (std threads; a dedicated executor thread owns the
 //! [`crate::runtime::ExecBackend`] — built in-thread because the PJRT
 //! backend's handles are `!Send`):
 //!
 //! ```text
-//! clients ──ShardRouter──▶ executor shard 0..S   (S = ServeConfig::shards)
-//!                            ├─ router: its variant group, local queues
-//!                            ├─ batcher: flush on max_batch or max_wait
-//!                            ├─ backend.execute_batch   (one engine/shard)
-//!                            │    ├─ native: lane-batched bit-exact
-//!                            │    │          QuantEsn rollouts (i16/i32/i64
-//!                            │    │          lanes, SIMD-dispatched strips,
-//!                            │    │          optional intra-batch workers)
-//!                            │    └─ pjrt:   AOT XLA/Pallas artifact
-//!                            └─ respond via per-request channel
+//! clients ── admission ──ShardRouter──▶ executor shard 0..S
+//!              │  shutdown gate             (S = ServeConfig::shards)
+//!              │  deadline check              ├─ router: its variant group,
+//!              │  degrade walk (Pareto        │          local bounded queues
+//!              │    ladder: spill to a        ├─ batcher: flush on max_batch,
+//!              │    cheaper variant under     │    max_wait, or deadline-slack
+//!              │    pressure)                 ├─ expiry: drop dead requests
+//!              │  bounded-queue CAS           │    before the backend pass
+//!              ▼                              ├─ backend.execute_batch
+//!        typed Rejected                       │    ├─ native: lane-batched
+//!        {QueueFull, Deadline,                │    │   bit-exact QuantEsn
+//!         ShuttingDown}                       │    │   rollouts (i16/i32/i64
+//!                                             │    │   lanes, SIMD strips)
+//!                                             │    └─ pjrt: AOT XLA/Pallas
+//!                                             └─ respond via channel
 //! ```
+//!
+//! The QoS pipeline ([`Rejected`], [`ServeConfig::queue_cap`] and friends):
+//! submits are admitted or refused with a **typed error** on the client
+//! thread — shutdown gate, deadline admission (already-expired work is never
+//! queued), then a CAS against the chosen variant's bounded queue depth.
+//! Under pressure the **Pareto-ladder degrade walk** spills new requests
+//! down each variant's declared `fallback` chain — a cheaper (q, p) point of
+//! the same DSE front — trading accuracy for headroom exactly the way the
+//! paper's sensitivity grid intends; [`Response::served_by`] reports who
+//! answered, and degradation changes routing only, never arithmetic. At
+//! flush time the executor drops requests whose deadline already passed
+//! before paying for a backend pass. Everything is accounted: typed
+//! rejection counters, expiries, degradations and per-variant queue
+//! high-water marks land in [`MetricsSnapshot`] and the [`ShutdownReport`].
 //!
 //! Variants are shared handles ([`VariantSpec`]/[`VariantRegistry`]): a DSE
 //! run's whole Pareto front hot-loads as routable variants without cloning
-//! weights (`DseResult::variant_registry`, `dse::pareto_variants`). The
-//! native backend serves classification ([`Prediction::Class`]) and per-step
+//! weights — fallback chain included (`DseResult::variant_registry`,
+//! `dse::pareto_variants`). Clients address variants through key-resolved
+//! [`VariantHandle`]s ([`Server::handle`]); the old index-based submit
+//! survives one PR as the deprecated `Client::submit_index` shim. The native
+//! backend serves classification ([`Prediction::Class`]) and per-step
 //! regression ([`Prediction::Values`]), so all three paper benchmarks are
 //! servable with no compiled artifacts present. With `shards > 1` the
 //! [`ShardRouter`] pins each variant group to its own executor thread (its
@@ -34,10 +56,13 @@ mod metrics;
 mod registry;
 mod server;
 
-pub use batcher::{BatchDecision, Batcher, BatcherConfig};
+pub use batcher::{BatchDecision, Batcher, BatcherConfig, BatcherConfigBuilder};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ShardRouter, VariantRegistry};
-pub use server::{Client, Request, Response, ServeConfig, Server, VariantSpec};
+pub use server::{
+    Client, Rejected, Request, Response, ServeConfig, ServeConfigBuilder, Server, ShutdownReport,
+    VariantHandle, VariantSpec,
+};
 
 // Re-exported so serving call-sites need only this module.
 pub use crate::runtime::{BackendConfig, Prediction};

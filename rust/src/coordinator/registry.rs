@@ -61,7 +61,9 @@ impl VariantRegistry {
         Self::default()
     }
 
-    /// Register (or replace) a variant; returns its routing index.
+    /// Register (or replace) a variant; returns its routing index. Replacing
+    /// a model keeps both the index and any previously declared fallback
+    /// edge (the ladder describes keys, not model revisions).
     pub fn insert(&mut self, key: impl Into<String>, model: Arc<QuantEsn>) -> usize {
         let key = key.into();
         if let Some(i) = self.entries.iter().position(|e| e.key == key) {
@@ -70,6 +72,20 @@ impl VariantRegistry {
         } else {
             self.entries.push(VariantSpec::shared(key, model));
             self.entries.len() - 1
+        }
+    }
+
+    /// Declare `key`'s Pareto-ladder fallback (the cheaper variant overload
+    /// spills to when degradation is enabled). Returns `false` when `key` is
+    /// not registered. The edge itself is validated — target registered,
+    /// acyclic, not more expensive — at `Server::start`.
+    pub fn set_fallback(&mut self, key: &str, fallback: impl Into<String>) -> bool {
+        match self.entries.iter_mut().find(|e| e.key == key) {
+            Some(e) => {
+                e.fallback = Some(fallback.into());
+                true
+            }
+            None => false,
         }
     }
 
@@ -125,6 +141,27 @@ mod tests {
         // Specs share, not clone: same allocation behind both handles.
         let specs = reg.specs();
         assert!(Arc::ptr_eq(&specs[1].model, &q8));
+    }
+
+    #[test]
+    fn fallback_edges_survive_replacement_and_reach_specs() {
+        let data = melborn_sized(1, 20, 10);
+        let res = Reservoir::init(ReservoirSpec::paper(10, 1, 30, 0.9, 1.0, 1));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
+        let q8 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(8)));
+
+        let mut reg = VariantRegistry::new();
+        reg.insert("q8", Arc::clone(&q8));
+        reg.insert("q4", Arc::clone(&q4));
+        assert!(reg.set_fallback("q8", "q4"));
+        assert!(!reg.set_fallback("missing", "q4"), "unknown key must refuse");
+        let specs = reg.specs();
+        assert_eq!(specs[0].fallback.as_deref(), Some("q4"));
+        assert_eq!(specs[1].fallback, None);
+        // Replacing the model keeps the declared ladder edge.
+        reg.insert("q8", Arc::clone(&q4));
+        assert_eq!(reg.specs()[0].fallback.as_deref(), Some("q4"));
     }
 
     #[test]

@@ -1,5 +1,34 @@
 //! The serving loop: router over model variants, dynamic batching, execution
-//! through the pluggable [`ExecBackend`], response delivery.
+//! through the pluggable [`ExecBackend`], response delivery — with QoS under
+//! overload: bounded per-variant queues, deadline admission/expiry, and
+//! Pareto-ladder graceful degradation.
+//!
+//! # QoS pipeline (PR 7)
+//!
+//! A submit is admitted or rejected **on the client thread**, before anything
+//! is enqueued:
+//!
+//! 1. shutdown gate → [`Rejected::ShuttingDown`];
+//! 2. deadline admission (an already-expired deadline is refused instead of
+//!    wasting queue space) → [`Rejected::Deadline`];
+//! 3. Pareto-ladder degrade walk: if the target variant's queue depth is at
+//!    or past the pressure threshold (`ServeConfig::degrade_at`) and
+//!    degradation is enabled, the request spills down the variant's
+//!    `fallback` chain — a *cheaper* point of the same DSE front (fewer
+//!    `macs_per_step()`, validated at startup) — to the first point with
+//!    room. Degradation changes **routing only**, never arithmetic: the
+//!    fallback serves its own bit-exact answer, [`Response::served_by`]
+//!    reports whose it was, and the MAC meter bills the serving variant;
+//! 4. bounded admission: a CAS on the chosen variant's depth counter
+//!    reserves a queue slot or returns [`Rejected::QueueFull`]. The counter
+//!    is released when the executor drains the request at flush time, so the
+//!    recorded per-variant high-water mark provably never exceeds
+//!    `ServeConfig::queue_cap`.
+//!
+//! At flush time the executor drops requests whose deadline has already
+//! passed (`Metrics::record_expired`) before paying for a backend pass; the
+//! batcher schedules flushes at `deadline - deadline_slack` so admitted
+//! requests normally make it (see [`super::BatcherConfig`]).
 //!
 //! # Sharded (multi-executor) mode
 //!
@@ -9,13 +38,23 @@
 //! global index), each shard thread builds its **own** backend engine from
 //! the shared [`BackendConfig`] and runs the full ingest → per-variant queue
 //! → deadline-aware batcher → execute loop over just its group. Clients
-//! route at submit time (pure arithmetic, no cross-shard locks); metrics
-//! aggregate into one shared sink. Because lane kernels never mix samples
-//! across batches, shard count — like worker count and kernel width — cannot
-//! change a single served bit; it only changes which core computes it
-//! (asserted by `sharded_serving_is_bit_identical_to_single_executor`).
+//! route at submit time (pure arithmetic, no cross-shard locks; a degrade
+//! spill is just a different route); metrics aggregate into one shared sink.
+//! Because lane kernels never mix samples across batches, shard count — like
+//! worker count and kernel width — cannot change a single served bit; it
+//! only changes which core computes it (asserted by
+//! `sharded_serving_is_bit_identical_to_single_executor`).
+//!
+//! # Client API
+//!
+//! Variants are addressed by **key-resolved handles**, not raw indices:
+//! [`Server::handle`] resolves a routing key against the registry once, and
+//! [`Client::submit`] takes the [`VariantHandle`]. The index-based submit
+//! survives one PR as the deprecated [`Client::submit_index`] shim.
 
 use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -39,20 +78,36 @@ pub struct VariantSpec {
     /// Routing key, e.g. `"q4_p15"`.
     pub key: String,
     pub model: Arc<QuantEsn>,
+    /// Key of the cheaper variant overload spills to when this variant's
+    /// queue crosses the pressure threshold (`ServeConfig::degrade_at`).
+    /// Must name a registered variant whose backend cost hint is no higher
+    /// than this one's — validated (with the whole chain) at
+    /// [`Server::start`]. `dse::pareto_variants` emits the chain down the
+    /// Pareto front automatically.
+    pub fallback: Option<String>,
 }
 
 impl VariantSpec {
     pub fn new(key: impl Into<String>, model: QuantEsn) -> Self {
-        Self { key: key.into(), model: Arc::new(model) }
+        Self { key: key.into(), model: Arc::new(model), fallback: None }
     }
 
     /// Wrap an already-shared model handle.
     pub fn shared(key: impl Into<String>, model: Arc<QuantEsn>) -> Self {
-        Self { key: key.into(), model }
+        Self { key: key.into(), model, fallback: None }
+    }
+
+    /// Declare the Pareto-ladder spill target for overload degradation.
+    pub fn with_fallback(mut self, key: impl Into<String>) -> Self {
+        self.fallback = Some(key.into());
+        self
     }
 }
 
-/// Server configuration: which engine to execute on, and how to batch.
+/// Server configuration: which engine to execute on, how to batch, and the
+/// QoS envelope. `#[non_exhaustive]`: construct via [`ServeConfig::builder`]
+/// (or `Default`) so future knobs stop being breaking edits.
+#[non_exhaustive]
 #[derive(Clone, Debug, Default)]
 pub struct ServeConfig {
     pub backend: BackendConfig,
@@ -62,22 +117,151 @@ pub struct ServeConfig {
     /// clamped to the variant count at startup. Predictions are bit-identical
     /// at any shard count.
     pub shards: usize,
+    /// Per-variant queue cap: a submit finding the chosen variant's queue at
+    /// this depth is rejected with [`Rejected::QueueFull`] instead of
+    /// enqueuing forever. 0 = unbounded (the pre-QoS behavior).
+    pub queue_cap: usize,
+    /// Deadline attached to every [`Client::submit`] that does not carry its
+    /// own (via [`Client::submit_within`]). `None` = requests never expire.
+    pub default_deadline: Option<Duration>,
+    /// Enable the Pareto-ladder degrade walk over `VariantSpec::fallback`
+    /// chains. Off by default: declared fallbacks are inert until opted in.
+    pub degrade: bool,
+    /// Queue depth at (or past) which new submits spill to the variant's
+    /// fallback. 0 = auto: half the queue cap when bounded, else twice the
+    /// batcher's max_batch.
+    pub degrade_at: usize,
 }
 
-/// One inference request. `variant` is the index **within the receiving
-/// shard's group** (the [`Client`] translates global → local at submit time;
-/// with one shard the two coincide).
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: Self::default() }
+    }
+
+    /// Effective `(queue cap, degrade threshold)` after resolving the `0 =
+    /// unbounded / auto` conventions.
+    pub fn qos_limits(&self) -> (usize, usize) {
+        let cap = if self.queue_cap == 0 { usize::MAX } else { self.queue_cap };
+        let degrade_at = if self.degrade_at == 0 {
+            if self.queue_cap == 0 {
+                2 * self.batcher.max_batch.max(1)
+            } else {
+                (cap / 2).max(1)
+            }
+        } else {
+            self.degrade_at.min(cap)
+        };
+        (cap, degrade_at)
+    }
+}
+
+/// Builder for [`ServeConfig`] — unset knobs keep their defaults.
+#[derive(Clone, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn backend(mut self, backend: BackendConfig) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.cfg.batcher = batcher;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.cfg.queue_cap = cap;
+        self
+    }
+
+    pub fn default_deadline(mut self, deadline: Duration) -> Self {
+        self.cfg.default_deadline = Some(deadline);
+        self
+    }
+
+    pub fn degrade(mut self, on: bool) -> Self {
+        self.cfg.degrade = on;
+        self
+    }
+
+    pub fn degrade_at(mut self, depth: usize) -> Self {
+        self.cfg.degrade_at = depth;
+        self
+    }
+
+    pub fn build(self) -> ServeConfig {
+        self.cfg
+    }
+}
+
+/// Why a submit was refused. Typed so callers can shed load (`QueueFull`),
+/// drop stale work (`Deadline`) or stop retrying (`ShuttingDown`) instead of
+/// parsing error strings; converts into `anyhow::Error` via `?`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The chosen variant's bounded queue is at `ServeConfig::queue_cap`.
+    QueueFull,
+    /// The request's deadline had already passed at submit time.
+    Deadline,
+    /// The server is shutting down (or already gone).
+    ShuttingDown,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejected::QueueFull => write!(f, "rejected: variant queue at capacity"),
+            Rejected::Deadline => write!(f, "rejected: deadline already expired at submit"),
+            Rejected::ShuttingDown => write!(f, "rejected: server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// A routing key resolved once against the server's registry
+/// ([`Server::handle`]). Cheap to clone and share across client threads;
+/// only meaningful for the server that issued it.
+#[derive(Clone, Debug)]
+pub struct VariantHandle {
+    key: Arc<str>,
+    index: usize,
+}
+
+impl VariantHandle {
+    /// The routing key this handle resolves.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+}
+
+/// One inference request. Internal: the variant field is the index **within
+/// the receiving shard's group** (the [`Client`] translates global → local
+/// at submit time), which must not leak through a public API.
 pub struct Request {
-    pub variant: usize,
-    pub series: TimeSeries,
-    pub submitted: Instant,
-    pub respond: Sender<Response>,
+    variant: usize,
+    series: TimeSeries,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    respond: Sender<Response>,
 }
 
 /// One inference response.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub prediction: Prediction,
+    /// Routing key of the variant that actually computed this prediction —
+    /// the requested one, or its Pareto-ladder fallback when the degrade
+    /// walk spilled the request under pressure.
+    pub served_by: Arc<str>,
     pub latency: Duration,
     pub batch_size: usize,
 }
@@ -87,6 +271,43 @@ enum Control {
     Shutdown,
 }
 
+/// QoS state shared by the server, every client and every executor: the
+/// admission counters the bounded queues are enforced on, and the resolved
+/// fallback chain. Depths are incremented at submit admission and
+/// decremented when the executor drains the request at flush time, so
+/// `depth <= cap` holds at every instant and the high-water marks are exact.
+struct Qos {
+    cap: usize,
+    degrade: bool,
+    degrade_at: usize,
+    default_deadline: Option<Duration>,
+    /// Per-variant resolved fallback index (validated acyclic + cheaper).
+    fallbacks: Vec<Option<usize>>,
+    depths: Vec<AtomicUsize>,
+    highwater: Vec<AtomicU64>,
+    shutting_down: AtomicBool,
+}
+
+/// Everything [`Server::shutdown`] learned while draining: the final metrics
+/// snapshot (including the QoS rejection/expiry/degradation counters), the
+/// per-variant MAC bill, and the per-variant queue-depth high-water marks.
+#[derive(Clone, Debug)]
+pub struct ShutdownReport {
+    pub metrics: MetricsSnapshot,
+    /// Total integer MACs executed per variant key (first-served order).
+    pub macs_by_variant: Vec<(String, u64)>,
+    /// Per-variant peak queue depth over the server's lifetime, in variant
+    /// order. Never exceeds `ServeConfig::queue_cap` when one is set.
+    pub queue_highwater: Vec<(String, u64)>,
+}
+
+/// One executor shard's slice of the variant table: its specs in local-index
+/// order plus each one's global index (for the shared depth counters).
+struct ShardCtx {
+    specs: Vec<VariantSpec>,
+    globals: Vec<usize>,
+}
+
 /// Running server: one executor thread per shard, each owning its own
 /// execution backend (one shard total unless `ServeConfig::shards` asks for
 /// more).
@@ -94,6 +315,7 @@ pub struct Server {
     txs: Vec<Sender<Control>>,
     router: ShardRouter,
     metrics: Arc<Metrics>,
+    qos: Arc<Qos>,
     variants: Vec<String>,
     joins: Vec<JoinHandle<Result<()>>>,
 }
@@ -101,11 +323,25 @@ pub struct Server {
 impl Server {
     /// Start the executor shard(s). Backends are built *inside* their shard
     /// threads (PJRT handles are `!Send`); startup failures (missing
-    /// artifacts, compile errors) from any shard propagate out of this call.
+    /// artifacts, compile errors) from any shard propagate out of this call,
+    /// as does an invalid fallback chain (unknown key, self-reference,
+    /// cycle, or a "fallback" the backend would serve at *higher* cost).
     pub fn start(cfg: ServeConfig, variants: Vec<VariantSpec>) -> Result<Server> {
         anyhow::ensure!(!variants.is_empty(), "no variants to serve");
-        let metrics = Arc::new(Metrics::default());
         let keys: Vec<String> = variants.iter().map(|v| v.key.clone()).collect();
+        let fallbacks = resolve_fallbacks(&cfg.backend, &variants, &keys)?;
+        let (cap, degrade_at) = cfg.qos_limits();
+        let qos = Arc::new(Qos {
+            cap,
+            degrade: cfg.degrade,
+            degrade_at,
+            default_deadline: cfg.default_deadline,
+            fallbacks,
+            depths: (0..variants.len()).map(|_| AtomicUsize::new(0)).collect(),
+            highwater: (0..variants.len()).map(|_| AtomicU64::new(0)).collect(),
+            shutting_down: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::default());
         let router = ShardRouter::new(variants.len(), cfg.shards.max(1));
         let mut txs = Vec::with_capacity(router.n_shards());
         let mut joins = Vec::with_capacity(router.n_shards());
@@ -113,15 +349,19 @@ impl Server {
         for shard in 0..router.n_shards() {
             // The shard's variant group, in local-index order (the executor's
             // queue index *is* the local index the router computes).
-            let group: Vec<VariantSpec> =
-                router.group(shard, variants.len()).map(|v| variants[v].clone()).collect();
+            let globals: Vec<usize> = router.group(shard, variants.len()).collect();
+            let ctx = ShardCtx {
+                specs: globals.iter().map(|&v| variants[v].clone()).collect(),
+                globals,
+            };
             let (tx, rx) = mpsc::channel::<Control>();
             let m2 = Arc::clone(&metrics);
+            let q2 = Arc::clone(&qos);
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let cfg2 = cfg.clone();
             let join = std::thread::Builder::new()
                 .name(format!("rcx-executor-{shard}"))
-                .spawn(move || executor(cfg2, group, rx, m2, ready_tx))
+                .spawn(move || executor(cfg2, ctx, rx, m2, q2, ready_tx))
                 .context("spawn executor")?;
             txs.push(tx);
             joins.push(join);
@@ -132,22 +372,32 @@ impl Server {
         for ready_rx in readies {
             ready_rx.recv().context("executor died during startup")??;
         }
-        Ok(Server { txs, router, metrics, variants: keys, joins })
+        Ok(Server { txs, router, metrics, qos, variants: keys, joins })
     }
 
-    /// A cloneable client handle (owns the shard routing table).
+    /// A cloneable client handle (owns the shard routing table and the
+    /// shared QoS admission state).
     pub fn client(&self) -> Client {
-        Client { txs: Arc::new(self.txs.clone()), router: self.router }
+        Client {
+            txs: Arc::new(self.txs.clone()),
+            router: self.router,
+            metrics: Arc::clone(&self.metrics),
+            qos: Arc::clone(&self.qos),
+        }
+    }
+
+    /// Resolve a routing key to a submit handle. Errors on unknown keys, so
+    /// a typo fails once at resolution instead of per-request at serve time.
+    pub fn handle(&self, key: &str) -> Result<VariantHandle> {
+        let index = self.variants.iter().position(|k| k == key).with_context(|| {
+            format!("unknown variant {key:?} (serving: {})", self.variants.join(", "))
+        })?;
+        Ok(VariantHandle { key: Arc::from(key), index })
     }
 
     /// Number of executor shards actually running (after clamping).
     pub fn n_shards(&self) -> usize {
         self.router.n_shards()
-    }
-
-    /// Routing index of a variant key.
-    pub fn variant_index(&self, key: &str) -> Option<usize> {
-        self.variants.iter().position(|k| k == key)
     }
 
     /// Routing keys in variant-index order.
@@ -164,77 +414,273 @@ impl Server {
         self.metrics.macs_by_variant()
     }
 
-    /// Graceful shutdown: drains every shard's queue, joins all executors.
-    pub fn shutdown(mut self) -> Result<()> {
+    /// Per-variant peak queue depth so far, in variant order.
+    pub fn queue_highwater(&self) -> Vec<(String, u64)> {
+        self.variants
+            .iter()
+            .cloned()
+            .zip(self.qos.highwater.iter().map(|h| h.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Graceful shutdown: gates new submits, drains every shard's queue
+    /// (admitted work is still served — age/deadline waits no longer apply),
+    /// joins all executors, and aggregates **every** shard failure into one
+    /// error instead of keeping only the last.
+    pub fn shutdown(mut self) -> Result<ShutdownReport> {
+        self.qos.shutting_down.store(true, Ordering::Release);
         for tx in &self.txs {
             let _ = tx.send(Control::Shutdown);
         }
-        let mut result = Ok(());
-        for j in self.joins.drain(..) {
+        let n_shards = self.joins.len();
+        let mut failures: Vec<String> = Vec::new();
+        for (shard, j) in self.joins.drain(..).enumerate() {
             match j.join() {
-                Ok(r) => {
-                    if let Err(e) = r {
-                        result = Err(e);
-                    }
-                }
-                Err(_) => result = Err(anyhow::anyhow!("executor panicked")),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(format!("shard {shard}: {e:#}")),
+                Err(_) => failures.push(format!("shard {shard}: executor panicked")),
             }
         }
-        result
+        anyhow::ensure!(
+            failures.is_empty(),
+            "{} of {n_shards} executor shard(s) failed: {}",
+            failures.len(),
+            failures.join("; ")
+        );
+        Ok(ShutdownReport {
+            metrics: self.metrics.snapshot(),
+            macs_by_variant: self.metrics.macs_by_variant(),
+            queue_highwater: self.queue_highwater(),
+        })
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
+        self.qos.shutting_down.store(true, Ordering::Release);
         for tx in &self.txs {
             let _ = tx.send(Control::Shutdown);
         }
-        for j in self.joins.drain(..) {
-            let _ = j.join();
+        for (shard, j) in self.joins.drain(..).enumerate() {
+            // A `Drop` can't return errors, but it must not swallow them
+            // either: log shard failures and executor panics.
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("rcx executor shard {shard} failed during drop: {e:#}"),
+                Err(_) => eprintln!("rcx executor shard {shard} panicked (joined during drop)"),
+            }
         }
     }
 }
 
+/// Resolve each variant's declared fallback key to an index, validating the
+/// ladder: keys must exist, no variant may fall back to itself, chains must
+/// be acyclic, and every edge must point at a variant the backend serves at
+/// no higher cost (the whole point of degrading).
+fn resolve_fallbacks(
+    backend: &BackendConfig,
+    variants: &[VariantSpec],
+    keys: &[String],
+) -> Result<Vec<Option<usize>>> {
+    let mut fallbacks = Vec::with_capacity(variants.len());
+    for (i, v) in variants.iter().enumerate() {
+        let fb = match &v.fallback {
+            None => None,
+            Some(fk) => {
+                let j = keys.iter().position(|k| k == fk).with_context(|| {
+                    format!("variant {}: fallback {fk:?} is not a registered variant", v.key)
+                })?;
+                anyhow::ensure!(j != i, "variant {} lists itself as fallback", v.key);
+                let (ci, cj) =
+                    (backend.cost_hint(&v.model), backend.cost_hint(&variants[j].model));
+                anyhow::ensure!(
+                    cj <= ci,
+                    "variant {}: fallback {fk} costs more than the primary ({cj} > {ci} \
+                     backend cost units) — a degrade must go down the Pareto ladder",
+                    v.key
+                );
+                Some(j)
+            }
+        };
+        fallbacks.push(fb);
+    }
+    for start in 0..fallbacks.len() {
+        let mut cur = start;
+        let mut hops = 0usize;
+        while let Some(next) = fallbacks[cur] {
+            hops += 1;
+            anyhow::ensure!(
+                hops <= fallbacks.len(),
+                "fallback chain starting at {} is cyclic",
+                keys[start]
+            );
+            cur = next;
+        }
+    }
+    Ok(fallbacks)
+}
+
 /// Cloneable request submitter: routes each request to the shard owning its
-/// variant (pure arithmetic — no locks on the submit path).
+/// variant (pure arithmetic plus one CAS on the admission counter — no locks
+/// on the submit path).
 #[derive(Clone)]
 pub struct Client {
     txs: Arc<Vec<Sender<Control>>>,
     router: ShardRouter,
+    metrics: Arc<Metrics>,
+    qos: Arc<Qos>,
 }
 
 impl Client {
-    /// Submit asynchronously; returns the response channel.
-    pub fn submit(&self, variant: usize, series: TimeSeries) -> Result<Receiver<Response>> {
-        let (shard, local) = self.router.route(variant);
-        let (resp_tx, resp_rx) = mpsc::channel();
-        self.txs[shard]
-            .send(Control::Req(Request {
-                variant: local,
-                series,
-                submitted: Instant::now(),
-                respond: resp_tx,
-            }))
-            .map_err(|_| anyhow::anyhow!("server is down"))?;
-        Ok(resp_rx)
+    /// Submit asynchronously; returns the response channel, or a typed
+    /// [`Rejected`] when admission refuses the request. The server's
+    /// `default_deadline` (if any) applies.
+    pub fn submit(
+        &self,
+        variant: &VariantHandle,
+        series: TimeSeries,
+    ) -> Result<Receiver<Response>, Rejected> {
+        let deadline = self.qos.default_deadline.map(|d| Instant::now() + d);
+        self.submit_inner(variant.index, series, deadline)
+    }
+
+    /// Submit with an explicit per-request latency budget: the deadline is
+    /// `now + budget`, overriding the server default.
+    pub fn submit_within(
+        &self,
+        variant: &VariantHandle,
+        series: TimeSeries,
+        budget: Duration,
+    ) -> Result<Receiver<Response>, Rejected> {
+        self.submit_inner(variant.index, series, Some(Instant::now() + budget))
     }
 
     /// Submit and block for the response (classification or regression).
-    pub fn infer(&self, variant: usize, series: TimeSeries) -> Result<Response> {
+    pub fn infer(&self, variant: &VariantHandle, series: TimeSeries) -> Result<Response> {
         let rx = self.submit(variant, series)?;
         rx.recv().context("server dropped the request")
+    }
+
+    /// Deprecated index-based submit, kept one PR so call sites migrate to
+    /// [`Server::handle`] + [`Client::submit`]. In-range indices go through
+    /// the full QoS admission path; an out-of-range index keeps the legacy
+    /// semantics — the receiving shard's ingest rejects (and now counts) it,
+    /// failing that caller's recv.
+    #[deprecated(note = "resolve a VariantHandle via Server::handle and use Client::submit")]
+    pub fn submit_index(&self, variant: usize, series: TimeSeries) -> Result<Receiver<Response>> {
+        if variant < self.qos.depths.len() {
+            let deadline = self.qos.default_deadline.map(|d| Instant::now() + d);
+            return self.submit_inner(variant, series, deadline).map_err(anyhow::Error::new);
+        }
+        let (shard, local) = self.router.route(variant);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request {
+            variant: local,
+            series,
+            submitted: Instant::now(),
+            deadline: None,
+            respond: resp_tx,
+        };
+        self.txs[shard].send(Control::Req(req)).map_err(|_| anyhow::anyhow!("server is down"))?;
+        Ok(resp_rx)
+    }
+
+    fn submit_inner(
+        &self,
+        primary: usize,
+        series: TimeSeries,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Response>, Rejected> {
+        if self.qos.shutting_down.load(Ordering::Acquire) {
+            self.metrics.record_rejected_shutdown();
+            return Err(Rejected::ShuttingDown);
+        }
+        let now = Instant::now();
+        if deadline.is_some_and(|d| d <= now) {
+            self.metrics.record_rejected_deadline();
+            return Err(Rejected::Deadline);
+        }
+        let variant = self.admit(primary)?;
+        if variant != primary {
+            self.metrics.record_degraded();
+        }
+        let (shard, local) = self.router.route(variant);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request { variant: local, series, submitted: now, deadline, respond: resp_tx };
+        if self.txs[shard].send(Control::Req(req)).is_err() {
+            // Release the admission slot the dead executor will never drain.
+            self.qos.depths[variant].fetch_sub(1, Ordering::AcqRel);
+            self.metrics.record_rejected_shutdown();
+            return Err(Rejected::ShuttingDown);
+        }
+        Ok(resp_rx)
+    }
+
+    /// Pick the serving variant (Pareto-ladder degrade walk) and reserve a
+    /// queue slot on it, or reject. The reservation CAS only increments a
+    /// depth that is strictly below the cap, which is what makes the
+    /// high-water bound exact rather than best-effort.
+    fn admit(&self, primary: usize) -> Result<usize, Rejected> {
+        let chosen = self.choose_variant(primary);
+        let qos = &*self.qos;
+        let admitted = qos.depths[chosen].fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+            (d < qos.cap).then_some(d + 1)
+        });
+        match admitted {
+            Ok(prev) => {
+                qos.highwater[chosen].fetch_max(prev as u64 + 1, Ordering::AcqRel);
+                Ok(chosen)
+            }
+            Err(_) => {
+                self.metrics.record_rejected_full();
+                Err(Rejected::QueueFull)
+            }
+        }
+    }
+
+    /// The degrade walk: the first chain point under the pressure threshold
+    /// (primary preferred), else the first with any room under the cap, else
+    /// the primary (whose admission CAS will reject). Depth reads here are
+    /// advisory — only the CAS in [`Client::admit`] is authoritative.
+    fn choose_variant(&self, primary: usize) -> usize {
+        let qos = &*self.qos;
+        if !qos.degrade {
+            return primary;
+        }
+        let mut cur = primary;
+        for _ in 0..=qos.fallbacks.len() {
+            if qos.depths[cur].load(Ordering::Acquire) < qos.degrade_at {
+                return cur;
+            }
+            match qos.fallbacks[cur] {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        let mut cur = primary;
+        for _ in 0..=qos.fallbacks.len() {
+            if qos.depths[cur].load(Ordering::Acquire) < qos.cap {
+                return cur;
+            }
+            match qos.fallbacks[cur] {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        primary
     }
 }
 
 /// Executor: one shard's serving loop. Owns its own backend engine; routes
 /// over its variant group (local indices), batches per variant with
-/// deadline-aware flush, executes, responds. With one shard this is the
-/// whole server.
+/// deadline-aware flush, drops expired work, executes, responds. With one
+/// shard this is the whole server.
 fn executor(
     cfg: ServeConfig,
-    variants: Vec<VariantSpec>,
+    ctx: ShardCtx,
     rx: Receiver<Control>,
     metrics: Arc<Metrics>,
+    qos: Arc<Qos>,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
     let mut backend = match cfg.backend.build() {
@@ -250,7 +696,11 @@ fn executor(
     let max_batch = cfg.batcher.max_batch.min(backend.max_batch());
     let bcfg = BatcherConfig { max_batch, ..cfg.batcher };
 
-    let nvar = variants.len();
+    let ShardCtx { specs, globals } = ctx;
+    let nvar = specs.len();
+    // Shared `Arc<str>` keys so every response labels its serving variant
+    // without a per-request allocation.
+    let keys: Vec<Arc<str>> = specs.iter().map(|s| Arc::from(s.key.as_str())).collect();
     let mut queues: Vec<VecDeque<Request>> = (0..nvar).map(|_| VecDeque::new()).collect();
     let mut batchers: Vec<Batcher> = (0..nvar).map(|_| Batcher::new(bcfg)).collect();
     let mut running = true;
@@ -271,11 +721,11 @@ fn executor(
         };
         match rx.recv_timeout(timeout) {
             Ok(Control::Req(req)) => {
-                ingest(req, &mut queues, &mut batchers);
+                ingest(req, &mut queues, &mut batchers, &metrics);
                 // Drain whatever else is already queued without blocking.
                 while let Ok(c) = rx.try_recv() {
                     match c {
-                        Control::Req(r) => ingest(r, &mut queues, &mut batchers),
+                        Control::Req(r) => ingest(r, &mut queues, &mut batchers, &metrics),
                         Control::Shutdown => running = false,
                     }
                 }
@@ -285,13 +735,51 @@ fn executor(
             Err(RecvTimeoutError::Disconnected) => running = false,
         }
 
-        // 2. Flush every variant whose batcher says so.
+        // 2. Flush every variant whose batcher says so — or everything,
+        // when draining for shutdown (age/deadline waits no longer apply:
+        // admitted work must not starve behind a long max_wait).
         let now = Instant::now();
         for v in 0..nvar {
-            while let BatchDecision::Flush(n) = batchers[v].decide(now) {
-                let batch: Vec<Request> = queues[v].drain(..n).collect();
+            loop {
+                let n = match batchers[v].decide(now) {
+                    BatchDecision::Flush(n) => n,
+                    _ if !running && !queues[v].is_empty() => queues[v].len().min(max_batch),
+                    _ => break,
+                };
+                let drained: Vec<Request> = queues[v].drain(..n).collect();
                 batchers[v].flushed(n, now);
-                run_batch(backend.as_mut(), &variants[v], batch, &metrics)?;
+                // Release the admission slots this drain frees.
+                qos.depths[globals[v]].fetch_sub(n, Ordering::AcqRel);
+                // Deadline expiry: drop dead requests *before* paying for a
+                // backend pass (their respond senders drop, failing the
+                // callers' recv).
+                let mut live = Vec::with_capacity(drained.len());
+                let mut expired = 0u64;
+                for req in drained {
+                    if req.deadline.is_some_and(|d| d <= now) {
+                        expired += 1;
+                    } else {
+                        live.push(req);
+                    }
+                }
+                if expired > 0 {
+                    metrics.record_expired(expired);
+                }
+                if !live.is_empty() {
+                    run_batch(backend.as_mut(), &specs[v], &keys[v], live, &metrics)?;
+                }
+            }
+        }
+    }
+    // Requests that raced past the shutting-down gate land here after the
+    // queues drained: release their admission slots (their respond senders
+    // drop, failing the callers' recv).
+    while let Ok(c) = rx.try_recv() {
+        if let Control::Req(req) = c {
+            if req.variant < nvar {
+                qos.depths[globals[req.variant]].fetch_sub(1, Ordering::AcqRel);
+            } else {
+                metrics.record_unknown_variant();
             }
         }
     }
@@ -299,24 +787,34 @@ fn executor(
 }
 
 /// Enqueue one request. A request routed at a nonexistent variant is
-/// rejected alone — dropping its response sender fails that caller's recv
-/// with "server dropped the request" — rather than killing the executor and
-/// with it every other client's in-flight work.
-fn ingest(req: Request, queues: &mut [VecDeque<Request>], batchers: &mut [Batcher]) {
+/// rejected alone — recorded in the unknown-variant rejection counter (it
+/// used to be a silent drop), and dropping its response sender fails that
+/// caller's recv with "server dropped the request" — rather than killing the
+/// executor and with it every other client's in-flight work.
+fn ingest(
+    req: Request,
+    queues: &mut [VecDeque<Request>],
+    batchers: &mut [Batcher],
+    metrics: &Metrics,
+) {
     let v = req.variant;
     if v < queues.len() {
-        batchers[v].push(Instant::now());
+        batchers[v].push_deadline(Instant::now(), req.deadline);
         queues[v].push_back(req);
+    } else {
+        metrics.record_unknown_variant();
     }
 }
 
 /// Execute one batch through the backend and deliver responses. The executed
 /// work is credited to the variant's MAC counter before dispatch: steps ×
 /// `macs_per_step()` is exact for the CSR representation actually served, so
-/// a compacted variant is billed only for its live weights.
+/// a compacted variant is billed only for its live weights — and a degraded
+/// request is billed to the fallback that actually served it.
 fn run_batch(
     backend: &mut dyn ExecBackend,
     spec: &VariantSpec,
+    served_by: &Arc<str>,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) -> Result<()> {
@@ -335,7 +833,12 @@ fn run_batch(
     for (req, prediction) in batch.into_iter().zip(preds) {
         let latency = done.duration_since(req.submitted);
         metrics.record_request(latency);
-        let _ = req.respond.send(Response { prediction, latency, batch_size: n });
+        let _ = req.respond.send(Response {
+            prediction,
+            served_by: Arc::clone(served_by),
+            latency,
+            batch_size: n,
+        });
     }
     Ok(())
 }

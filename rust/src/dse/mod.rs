@@ -125,12 +125,33 @@ impl DseResult {
 }
 
 /// The hardware Pareto front of a realized DSE result as a variant registry —
-/// what `rcx serve --variants pareto` hot-loads.
+/// what `rcx serve --variants pareto` hot-loads. The front is also emitted as
+/// a **degradation ladder**: every variant's `fallback` points at the next
+/// front point with strictly fewer executed MACs per step (ties broken toward
+/// lower q), so under overload the serving QoS walk spills traffic down the
+/// very accuracy/cost trade-off the DSE explored. Strictly-decreasing
+/// `(macs_per_step, q)` makes the chain acyclic by construction, and the
+/// cheapest point is the ladder's floor (no fallback).
 pub fn pareto_variants(results: &[(AccelConfig, HwReport)]) -> VariantRegistry {
     let mut reg = VariantRegistry::new();
-    for i in hw::pareto_configs(results) {
+    let front = hw::pareto_configs(results);
+    for &i in &front {
         let c = &results[i].0;
         reg.insert(c.variant_key(), Arc::clone(&c.model));
+    }
+    let mut ladder: Vec<&AccelConfig> = front.iter().map(|&i| &results[i].0).collect();
+    ladder.sort_by(|a, b| {
+        (b.model.macs_per_step(), b.q)
+            .cmp(&(a.model.macs_per_step(), a.q))
+            .then_with(|| a.variant_key().cmp(&b.variant_key()))
+    });
+    for w in 0..ladder.len() {
+        let cost = (ladder[w].model.macs_per_step(), ladder[w].q);
+        if let Some(next) =
+            ladder[w + 1..].iter().find(|c| (c.model.macs_per_step(), c.q) < cost)
+        {
+            reg.set_fallback(&ladder[w].variant_key(), next.variant_key());
+        }
     }
     reg
 }
@@ -476,5 +497,29 @@ mod tests {
         for (key, &i) in preg.keys().zip(front.iter()) {
             assert_eq!(key, hw[i].0.variant_key());
         }
+
+        // The front doubles as a degradation ladder: every fallback points
+        // at a registered variant with strictly fewer executed MACs (ties
+        // broken toward lower q), the chain covers the whole front (all but
+        // the cheapest point link down), and the floor has nowhere to go.
+        let specs = preg.specs();
+        let cost_of = |key: &str| {
+            let m = preg.get(key).expect("ladder edge must stay inside the registry");
+            (m.macs_per_step(), m.q)
+        };
+        let mut n_fallbacks = 0;
+        for s in &specs {
+            if let Some(fb) = &s.fallback {
+                n_fallbacks += 1;
+                assert!(
+                    cost_of(fb) < cost_of(&s.key),
+                    "fallback {fb} must be strictly cheaper than {}",
+                    s.key
+                );
+            }
+        }
+        assert_eq!(n_fallbacks, specs.len() - 1, "all but the floor must link down");
+        let floor = specs.iter().min_by_key(|s| cost_of(&s.key)).expect("front is non-empty");
+        assert!(floor.fallback.is_none(), "the cheapest point has no fallback");
     }
 }

@@ -128,12 +128,20 @@ fn print_help() {
          \u{20}  serve     [--backend native|pjrt] [--q 4,8 | --variants pareto]\n\
          \u{20}            [--requests N] [--max-batch B] [--workers W]\n\
          \u{20}            [--shards S] [--kernel auto|narrow16|narrow|wide]\n\
+         \u{20}            [--queue-cap N] [--default-deadline-ms MS] [--degrade]\n\
          \u{20}            batching inference coordinator; the native backend\n\
          \u{20}            serves every benchmark bit-exactly with no artifacts\n\
          \u{20}            (i16x32 / i32x16 lanes when the overflow bounds allow,\n\
          \u{20}            SIMD-dispatched; startup logs the *resolved* kernel),\n\
          \u{20}            `--shards S` runs one executor per variant group,\n\
-         \u{20}            `--variants pareto` hot-loads a DSE Pareto front"
+         \u{20}            `--variants pareto` hot-loads a DSE Pareto front\n\
+         \u{20}            (with its degradation ladder). QoS: `--queue-cap N`\n\
+         \u{20}            bounds each variant queue (submits past it shed with\n\
+         \u{20}            a typed rejection), `--default-deadline-ms` expires\n\
+         \u{20}            stale work before the backend pass, `--degrade`\n\
+         \u{20}            spills overload down the Pareto ladder (the response\n\
+         \u{20}            reports which variant served it; routing-only, bits\n\
+         \u{20}            unchanged)"
     );
 }
 
@@ -356,6 +364,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(other) => bail!("--variants: expected `pareto`, got {other:?}"),
         None => {
             let mut reg = VariantRegistry::new();
+            let mut qs: Vec<u8> = Vec::new();
             for q in args
                 .flag("q")
                 .unwrap_or("4")
@@ -365,6 +374,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let q = q?;
                 let qm = QuantEsn::from_model(&model, &data, QuantSpec::bits(q));
                 reg.insert(format!("q{q}"), std::sync::Arc::new(qm));
+                qs.push(q);
+            }
+            // The bit-width list is its own degradation ladder: each width
+            // falls back to the next lower one (`--degrade` to activate).
+            qs.sort_unstable();
+            qs.dedup();
+            for w in qs.windows(2) {
+                reg.set_fallback(&format!("q{}", w[1]), format!("q{}", w[0]));
             }
             reg
         }
@@ -412,16 +429,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let shards: usize = args.flag_or("shards", 1)?;
-    let server = Server::start(
-        ServeConfig {
-            backend,
-            batcher: BatcherConfig { max_batch, ..Default::default() },
-            shards,
-        },
-        registry.specs(),
-    )?;
+    let queue_cap: usize = args.flag_or("queue-cap", 0)?;
+    let deadline_ms: u64 = args.flag_or("default-deadline-ms", 0)?;
+    let degrade = args.flag("degrade").is_some();
+    let mut scfg = ServeConfig::builder()
+        .backend(backend)
+        .batcher(BatcherConfig::builder().max_batch(max_batch).build())
+        .shards(shards)
+        .queue_cap(queue_cap)
+        .degrade(degrade);
+    if deadline_ms > 0 {
+        scfg = scfg.default_deadline(std::time::Duration::from_millis(deadline_ms));
+    }
+    let server = Server::start(scfg.build(), registry.specs())?;
     let client = server.client();
     let keys: Vec<String> = server.variant_keys().to_vec();
+    let handles = keys.iter().map(|k| server.handle(k)).collect::<Result<Vec<_>>>()?;
     println!(
         "serving {n_requests} requests on the {backend_name} backend \
          ({}, {} shard(s), variants: {})...",
@@ -431,17 +454,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
+    let (mut shed_full, mut shed_deadline) = (0u64, 0u64);
     for i in 0..n_requests {
         let s = &data.test[i % data.test.len()];
         // Round-robin the variants so multi-variant routing is exercised.
-        pending.push(client.submit(i % keys.len(), s.clone())?);
+        // Typed rejections are the point of the QoS layer: under a queue cap
+        // this open loop sheds instead of blocking or dying.
+        match client.submit(&handles[i % handles.len()], s.clone()) {
+            Ok(rx) => pending.push((i, rx)),
+            Err(rcx::coordinator::Rejected::QueueFull) => shed_full += 1,
+            Err(rcx::coordinator::Rejected::Deadline) => shed_deadline += 1,
+            Err(e @ rcx::coordinator::Rejected::ShuttingDown) => bail!(e),
+        }
     }
-    // Score classification by accuracy, regression by RMSE.
+    // Score classification by accuracy, regression by RMSE — over the
+    // answered requests only (shed/expired work never produced bits).
+    let mut answered = 0u64;
+    let mut dropped = 0u64;
+    let mut degraded_seen = 0u64;
     let mut correct = 0usize;
     let (mut se, mut count) = (0.0f64, 0usize);
-    for (i, rx) in pending.into_iter().enumerate() {
+    for (i, rx) in pending {
         let sample = &data.test[i % data.test.len()];
-        match rx.recv()?.prediction {
+        let resp = match rx.recv() {
+            Ok(r) => r,
+            // An admitted request whose deadline passed in the queue: the
+            // executor dropped it before the backend pass.
+            Err(_) => {
+                dropped += 1;
+                continue;
+            }
+        };
+        answered += 1;
+        if resp.served_by.as_ref() != keys[i % keys.len()].as_str() {
+            degraded_seen += 1;
+        }
+        match resp.prediction {
             Prediction::Class(c) => {
                 if Some(c) == sample.label {
                     correct += 1;
@@ -462,23 +510,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     let m = server.metrics();
-    // Sanity gates (the CI serve-smoke step relies on a nonzero exit here).
-    anyhow::ensure!(m.requests == n_requests as u64, "lost responses: {}", m.requests);
-    anyhow::ensure!(m.p99_us >= m.p50_us && m.p99_us > 0, "degenerate latency percentiles");
+    // Sanity gates (the CI serve-smoke step relies on a nonzero exit here):
+    // every offered request is accounted for exactly once, served work shows
+    // sane latency percentiles, and no queue ever exceeded its cap.
+    anyhow::ensure!(m.requests == answered, "lost responses: {} != {answered}", m.requests);
+    anyhow::ensure!(
+        answered + shed_full + shed_deadline + dropped == n_requests as u64,
+        "request accounting leak"
+    );
+    if answered > 0 {
+        anyhow::ensure!(m.p99_us >= m.p50_us && m.p99_us > 0, "degenerate latency percentiles");
+    }
+    let highwater = server.queue_highwater();
+    anyhow::ensure!(
+        queue_cap == 0 || highwater.iter().all(|(_, hw)| *hw <= queue_cap as u64),
+        "queue high-water exceeded --queue-cap"
+    );
     let quality = match data.task {
-        Task::Classification => format!("acc {:.3}", correct as f64 / n_requests as f64),
+        Task::Classification => format!("acc {:.3}", correct as f64 / answered.max(1) as f64),
         Task::Regression => format!("rmse {:.4}", (se / count.max(1) as f64).sqrt()),
     };
     println!(
-        "done in {:.3}s: {:.0} req/s, {quality}, mean batch {:.1}, p50 {} us, p99 {} us",
+        "done in {:.3}s: {answered}/{n_requests} answered ({:.0} req/s), {quality}, \
+         mean batch {:.1}, p50 {} us, p99 {} us",
         wall.as_secs_f64(),
-        n_requests as f64 / wall.as_secs_f64(),
+        answered as f64 / wall.as_secs_f64(),
         m.mean_batch,
         m.p50_us,
         m.p99_us
     );
-    for (key, macs) in server.macs_by_variant() {
+    println!(
+        "  qos: shed {} (queue-full) + {} (deadline at submit), expired in queue {}, \
+         degraded {} (client-observed {degraded_seen})",
+        m.rejected_full, m.rejected_deadline, m.expired, m.degraded
+    );
+    let report = server.shutdown()?;
+    for (key, macs) in &report.macs_by_variant {
         println!("  variant {key}: {macs} MACs executed");
     }
-    server.shutdown()
+    for (key, hw) in &report.queue_highwater {
+        println!("  variant {key}: queue high-water {hw}");
+    }
+    Ok(())
 }

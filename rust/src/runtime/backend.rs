@@ -49,6 +49,15 @@ pub trait ExecBackend {
         model: &QuantEsn,
         samples: &[&TimeSeries],
     ) -> Result<Vec<Prediction>>;
+
+    /// Relative per-step cost of serving `model` on this backend, in
+    /// whatever unit the backend actually pays (integer MACs here). The QoS
+    /// layer uses this to validate that a Pareto-ladder fallback really is
+    /// cheaper *for the engine that will run it*. Default: the live
+    /// (executed) MAC count.
+    fn cost_hint(&self, model: &QuantEsn) -> u64 {
+        model.macs_per_step() as u64
+    }
 }
 
 /// Serializable backend choice: built into a live [`ExecBackend`] inside the
@@ -92,6 +101,18 @@ impl BackendConfig {
         match self {
             BackendConfig::Native(_) => "native",
             BackendConfig::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Per-step serving cost hint without building the backend (the QoS
+    /// layer validates fallback ladders at `Server::start`, before any
+    /// engine exists). Native executes the compacted CSR, so its cost is the
+    /// live MAC count; a PJRT artifact is dense — every structural weight
+    /// slot executes whether pruned or not.
+    pub fn cost_hint(&self, model: &QuantEsn) -> u64 {
+        match self {
+            BackendConfig::Native(_) => model.macs_per_step() as u64,
+            BackendConfig::Pjrt { .. } => model.structural_weights() as u64,
         }
     }
 }

@@ -102,6 +102,13 @@ impl ExecBackend for NativeBackend {
         self.cfg.max_batch
     }
 
+    /// Native executes the compacted CSR directly, so serving cost tracks
+    /// the *live* recurrence weights — a pruned+compacted fallback really is
+    /// cheaper here, which is what the QoS ladder validation checks.
+    fn cost_hint(&self, model: &QuantEsn) -> u64 {
+        model.macs_per_step() as u64
+    }
+
     fn execute_batch(
         &mut self,
         model: &QuantEsn,
@@ -235,6 +242,27 @@ mod tests {
         for (s, p) in refs.iter().zip(&preds) {
             assert_eq!(*p, Prediction::Values(qm.predict(s)));
         }
+    }
+
+    /// Cost hints must track what the engine actually pays: native bills
+    /// live (compacted) MACs, a dense PJRT artifact bills structural slots.
+    #[test]
+    fn cost_hint_tracks_live_macs() {
+        use crate::pruning::{prune_to_rate, Pruner, RandomPruner};
+        use crate::runtime::BackendConfig;
+
+        let (qm, data) = melborn_model();
+        let scores = RandomPruner::new(7).scores(&qm, &data.train);
+        let pruned = prune_to_rate(&qm, &scores, 75.0);
+        assert!(pruned.macs_per_step() < qm.macs_per_step(), "compaction must drop live MACs");
+
+        let native = NativeBackend::new(NativeConfig::default());
+        assert_eq!(native.cost_hint(&qm), qm.macs_per_step() as u64);
+        assert!(native.cost_hint(&pruned) < native.cost_hint(&qm));
+        assert_eq!(BackendConfig::native().cost_hint(&pruned), pruned.macs_per_step() as u64);
+        // Dense artifacts execute every structural slot, pruned or not.
+        let pjrt = BackendConfig::Pjrt { artifact_dir: "x".into(), artifact: "y".into() };
+        assert_eq!(pjrt.cost_hint(&pruned), pruned.structural_weights() as u64);
     }
 
     #[test]

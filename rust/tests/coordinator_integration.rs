@@ -2,15 +2,17 @@
 //! with no compiled artifacts — these tests always run (the PJRT variants at
 //! the bottom still skip without `make artifacts`). Covers request → batched
 //! execute → response end-to-end, mixed-variant routing, the forced-flush
-//! deadline, regression serving, graceful shutdown, and bit-identity of the
-//! served predictions against the golden `QuantEsn` evaluation.
+//! deadline, regression serving, graceful shutdown, bit-identity of the
+//! served predictions against the golden `QuantEsn` evaluation, and the QoS
+//! envelope: bounded-queue backpressure, deadline admission/expiry, and
+//! Pareto-ladder degradation (routing-only — the fallback's own bits).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
 use rcx::coordinator::{
-    BackendConfig, BatcherConfig, Prediction, ServeConfig, Server, VariantSpec,
+    BackendConfig, BatcherConfig, Prediction, Rejected, ServeConfig, Server, VariantSpec,
 };
 use rcx::data::generators::{henon_sized, melborn_sized};
 use rcx::data::Dataset;
@@ -23,11 +25,16 @@ fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
 }
 
 fn native_cfg_sharded(max_batch: usize, workers: usize, shards: usize) -> ServeConfig {
-    ServeConfig {
-        backend: BackendConfig::Native(NativeConfig { max_batch, workers, ..Default::default() }),
-        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        shards,
-    }
+    ServeConfig::builder()
+        .backend(BackendConfig::Native(NativeConfig { max_batch, workers, ..Default::default() }))
+        .batcher(
+            BatcherConfig::builder()
+                .max_batch(max_batch)
+                .max_wait(Duration::from_millis(2))
+                .build(),
+        )
+        .shards(shards)
+        .build()
 }
 
 fn classification_setup(workers: usize) -> (Server, Dataset, Vec<Arc<QuantEsn>>) {
@@ -51,24 +58,25 @@ fn classification_setup(workers: usize) -> (Server, Dataset, Vec<Arc<QuantEsn>>)
 fn serves_correct_predictions_for_all_requests() {
     let (server, data, models) = classification_setup(2);
     let client = server.client();
-    let v4 = server.variant_index("q4").unwrap();
-    let v8 = server.variant_index("q8").unwrap();
+    let handles = [server.handle("q4").unwrap(), server.handle("q8").unwrap()];
 
     // Fire all test samples concurrently at both variants (mixed routing).
     let mut pending = Vec::new();
     for (i, s) in data.test.iter().enumerate() {
-        let v = if i % 2 == 0 { v4 } else { v8 };
-        pending.push((i, v, client.submit(v, s.clone()).unwrap()));
+        let v = i % 2;
+        pending.push((i, v, client.submit(&handles[v], s.clone()).unwrap()));
     }
     for (i, v, rx) in pending {
         let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
         let expect = models[v].classify(&data.test[i]);
         assert_eq!(resp.prediction, Prediction::Class(expect), "sample {i} variant {v}");
+        assert_eq!(resp.served_by.as_ref(), handles[v].key(), "served_by must name the variant");
     }
 
     let snap = server.metrics();
     assert_eq!(snap.requests, data.test.len() as u64);
     assert!(snap.mean_batch > 1.5, "batching never engaged: {}", snap.mean_batch);
+    assert_eq!(snap.degraded, 0, "no pressure, no degradation");
     server.shutdown().unwrap();
 }
 
@@ -78,8 +86,9 @@ fn native_serving_is_bit_identical_to_golden_evaluate() {
     // `QuantEsn::evaluate` on the same split exactly — not approximately.
     let (server, data, models) = classification_setup(1);
     let client = server.client();
+    let h = server.handle("q4").unwrap();
     let pending: Vec<_> =
-        data.test.iter().map(|s| client.submit(0, s.clone()).unwrap()).collect();
+        data.test.iter().map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     let mut correct = 0usize;
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
@@ -97,8 +106,9 @@ fn forced_flush_deadline_answers_partial_batches() {
     // Fewer requests than max_batch: only the max_wait deadline can flush.
     let (server, data, _) = classification_setup(1);
     let client = server.client();
+    let h = server.handle("q4").unwrap();
     let pending: Vec<_> =
-        data.test.iter().take(3).map(|s| client.submit(0, s.clone()).unwrap()).collect();
+        data.test.iter().take(3).map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     for rx in pending {
         let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
         assert!(resp.batch_size <= 3, "impossible batch size {}", resp.batch_size);
@@ -124,12 +134,13 @@ fn regression_serving_end_to_end() {
         Server::start(native_cfg(8, 2), vec![VariantSpec::shared("q8", Arc::clone(&qm))])
             .unwrap();
     let client = server.client();
+    let h = server.handle("q8").unwrap();
 
     // Several concurrent copies of the test trajectory → batched execution.
     let reps = 6usize;
     let sample = data.test[0].clone();
     let pending: Vec<_> =
-        (0..reps).map(|_| client.submit(0, sample.clone()).unwrap()).collect();
+        (0..reps).map(|_| client.submit(&h, sample.clone()).unwrap()).collect();
     let want = qm.predict(&sample);
     for rx in pending {
         let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
@@ -156,17 +167,53 @@ fn regression_serving_end_to_end() {
     server.shutdown().unwrap();
 }
 
+/// The deprecated index-based shim: in-range indices still serve through the
+/// QoS path; an out-of-range index keeps the legacy semantics — the shard's
+/// ingest rejects it alone (now *counted*, no longer a silent drop) without
+/// killing the server.
 #[test]
-fn out_of_range_variant_is_rejected_without_killing_the_server() {
+#[allow(deprecated)]
+fn deprecated_index_shim_serves_and_counts_unknown_variants() {
     let (server, data, models) = classification_setup(1);
     let client = server.client();
-    // The bad request alone is rejected (its response channel is dropped)...
-    let bad = client.submit(99, data.test[0].clone()).unwrap();
+    let bad = client.submit_index(99, data.test[0].clone()).unwrap();
     assert!(bad.recv_timeout(Duration::from_secs(5)).is_err(), "bad variant must be rejected");
     // ...while the server keeps serving well-behaved clients.
-    let resp = client.infer(0, data.test[0].clone()).unwrap();
+    let ok = client.submit_index(0, data.test[0].clone()).unwrap();
+    let resp = ok.recv_timeout(Duration::from_secs(10)).expect("response lost");
     assert_eq!(resp.prediction, Prediction::Class(models[0].classify(&data.test[0])));
-    server.shutdown().unwrap();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.rejected_unknown_variant, 1, "unknown variant must be counted");
+    assert_eq!(report.metrics.requests, 1);
+}
+
+/// Handle resolution is a property of keys, not shard layout: the same key
+/// resolves and serves correctly at any shard count, and unknown keys fail
+/// at resolution time (not per-request at serve time).
+#[test]
+fn handles_resolve_keys_across_shard_counts() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(6)));
+    let keys = ["a", "b", "c", "d", "e"];
+    let specs: Vec<VariantSpec> =
+        keys.iter().map(|k| VariantSpec::shared(*k, Arc::clone(&qm))).collect();
+    let sample = data.test[0].clone();
+    let want = Prediction::Class(qm.classify(&sample));
+    for shards in [1usize, 2, 3, 5, 9] {
+        let server = Server::start(native_cfg_sharded(8, 1, shards), specs.clone()).unwrap();
+        assert!(server.handle("nope").is_err(), "unknown key must fail at resolution");
+        let client = server.client();
+        for k in keys {
+            let h = server.handle(k).unwrap();
+            assert_eq!(h.key(), k);
+            let resp = client.infer(&h, sample.clone()).unwrap();
+            assert_eq!(resp.prediction, want, "key {k} shards {shards}");
+            assert_eq!(resp.served_by.as_ref(), k, "key {k} shards {shards}");
+        }
+        server.shutdown().unwrap();
+    }
 }
 
 /// Build a 4-variant registry (q ∈ {4, 5, 6, 8} of one trained model) and
@@ -192,11 +239,12 @@ fn sharded_serving_is_bit_identical_to_single_executor() {
         // Requested shard count sticks (clamped to the 4 variants).
         assert_eq!(server.n_shards(), shards.clamp(1, 4));
         let client = server.client();
+        let handles: Vec<_> = (0..4).map(|i| server.handle(&format!("v{i}")).unwrap()).collect();
         let pending: Vec<_> = data
             .test
             .iter()
             .enumerate()
-            .map(|(i, s)| client.submit(i % 4, s.clone()).unwrap())
+            .map(|(i, s)| client.submit(&handles[i % 4], s.clone()).unwrap())
             .collect();
         let out: Vec<Prediction> = pending
             .into_iter()
@@ -244,11 +292,12 @@ fn sharded_deadline_flush_answers_partial_batches() {
     };
     assert_eq!(server.n_shards(), 2);
     let client = server.client();
+    let handles = [server.handle("q4").unwrap(), server.handle("q8").unwrap()];
     // 3 requests per variant — far under max_batch 16, so only each shard's
     // deadline can flush them.
     let mut pending = Vec::new();
     for (i, s) in data.test.iter().take(6).enumerate() {
-        pending.push((i % 2, i, client.submit(i % 2, s.clone()).unwrap()));
+        pending.push((i % 2, i, client.submit(&handles[i % 2], s.clone()).unwrap()));
     }
     for (v, i, rx) in pending {
         let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
@@ -258,11 +307,6 @@ fn sharded_deadline_flush_answers_partial_batches() {
     }
     let snap = server.metrics();
     assert_eq!(snap.requests, 6);
-    // An out-of-range variant is still rejected without killing any shard.
-    let bad = client.submit(99, data.test[0].clone()).unwrap();
-    assert!(bad.recv_timeout(Duration::from_secs(5)).is_err());
-    let ok = client.infer(0, data.test[0].clone()).unwrap();
-    assert_eq!(ok.prediction, Prediction::Class(models[0].classify(&data.test[0])));
     server.shutdown().unwrap();
 }
 
@@ -292,12 +336,12 @@ fn compacted_variant_serves_bit_identical_responses_with_fewer_macs() {
     )
     .unwrap();
     let client = server.client();
-    let vz = server.variant_index("zeroed").unwrap();
-    let vc = server.variant_index("compacted").unwrap();
+    let hz = server.handle("zeroed").unwrap();
+    let hc = server.handle("compacted").unwrap();
     let pending: Vec<_> = data
         .test
         .iter()
-        .map(|s| (client.submit(vz, s.clone()).unwrap(), client.submit(vc, s.clone()).unwrap()))
+        .map(|s| (client.submit(&hz, s.clone()).unwrap(), client.submit(&hc, s.clone()).unwrap()))
         .collect();
     for (i, (rz, rc)) in pending.into_iter().enumerate() {
         let pz = rz.recv_timeout(Duration::from_secs(30)).expect("zeroed response lost");
@@ -316,13 +360,208 @@ fn compacted_variant_serves_bit_identical_responses_with_fewer_macs() {
     server.shutdown().unwrap();
 }
 
+/// Backpressure: with a queue cap of 8 and a batcher that cannot flush on
+/// its own (max_wait 30s, max_batch 64), exactly 8 of 13 submits are
+/// admitted and the rest come back as typed `QueueFull` — no blocking, no
+/// panic, no queue ever deeper than the cap (exact, via the high-water
+/// metric). Shutdown force-drains the admitted 8.
+#[test]
+fn overload_rejects_at_queue_cap_with_typed_errors() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let cfg = ServeConfig::builder()
+        .backend(BackendConfig::native())
+        .batcher(BatcherConfig::builder().max_batch(64).max_wait(Duration::from_secs(30)).build())
+        .queue_cap(8)
+        .build();
+    let server = Server::start(cfg, vec![VariantSpec::new("q6", qm)]).unwrap();
+    let client = server.client();
+    let h = server.handle("q6").unwrap();
+    let sample = data.test[0].clone();
+    let mut admitted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..13 {
+        match client.submit(&h, sample.clone()) {
+            Ok(rx) => admitted.push(rx),
+            Err(e) => {
+                assert_eq!(e, Rejected::QueueFull, "only QueueFull expected under cap");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(admitted.len(), 8, "exactly the cap is admitted");
+    assert_eq!(rejected, 5);
+    let report = server.shutdown().unwrap();
+    for rx in admitted {
+        rx.recv_timeout(Duration::from_secs(10)).expect("admitted request must still be served");
+    }
+    assert_eq!(report.metrics.requests, 8);
+    assert_eq!(report.metrics.rejected_full, 5);
+    let hw = report.queue_highwater.iter().find(|(k, _)| k == "q6").unwrap().1;
+    assert_eq!(hw, 8, "high-water must hit and never exceed the cap");
+    // After shutdown every submit is refused with the typed shutdown error.
+    assert_eq!(client.submit(&h, sample).unwrap_err(), Rejected::ShuttingDown);
+}
+
+/// Deadline QoS, both edges: an already-expired deadline is refused at
+/// submit (no queue space wasted), and an admitted request whose deadline
+/// passes while queued is dropped at flush time *before* the backend pass —
+/// counted as expired, its sender closed — while live requests are served.
+#[test]
+fn expired_requests_drop_before_the_backend_pass() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    // Slack 0 makes the schedule deterministic: the flush fires exactly at
+    // the earliest queued deadline, at which instant that request is — by
+    // definition — expired, while deadline-free and far-deadline requests
+    // survive the same flush.
+    let cfg = ServeConfig::builder()
+        .backend(BackendConfig::native())
+        .batcher(
+            BatcherConfig::builder()
+                .max_batch(64)
+                .max_wait(Duration::from_secs(30))
+                .deadline_slack(Duration::ZERO)
+                .build(),
+        )
+        .build();
+    let server = Server::start(cfg, vec![VariantSpec::new("q6", qm)]).unwrap();
+    let client = server.client();
+    let h = server.handle("q6").unwrap();
+    let sample = data.test[0].clone();
+
+    // Submit-time admission: a zero budget is already expired.
+    assert_eq!(
+        client.submit_within(&h, sample.clone(), Duration::ZERO).unwrap_err(),
+        Rejected::Deadline
+    );
+
+    let rx_live = client.submit(&h, sample.clone()).unwrap();
+    let rx_dead = client.submit_within(&h, sample.clone(), Duration::from_millis(25)).unwrap();
+    let rx_slack = client.submit_within(&h, sample.clone(), Duration::from_secs(10)).unwrap();
+    assert!(
+        rx_dead.recv_timeout(Duration::from_secs(10)).is_err(),
+        "expired request must be dropped, not served late"
+    );
+    rx_live.recv_timeout(Duration::from_secs(10)).expect("deadline-free request must be served");
+    rx_slack.recv_timeout(Duration::from_secs(10)).expect("far-deadline request must be served");
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.expired, 1);
+    assert_eq!(report.metrics.rejected_deadline, 1);
+    assert_eq!(report.metrics.requests, 2, "only the live requests reach the backend");
+}
+
+/// The acceptance anchor: degradation is **routing-only**. A request spilled
+/// down the Pareto ladder is served bit-identically to submitting directly
+/// to the fallback variant, labeled with the fallback's key, and MAC-billed
+/// to the fallback at its exact `macs_per_step()`.
+#[test]
+fn degraded_requests_spill_to_fallback_bit_identically() {
+    use rcx::pruning::{prune_to_rate, Pruner, RandomPruner};
+
+    let data = melborn_sized(21, 100, 60);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let scores = RandomPruner::new(9).scores(&qm, &data.train);
+    let cheap = prune_to_rate(&qm, &scores, 75.0);
+    let (mps_p, mps_c) = (qm.macs_per_step() as u64, cheap.macs_per_step() as u64);
+    assert!(mps_c < mps_p, "the fallback must be strictly cheaper");
+
+    // degrade_at=1: the second in-flight request for the primary spills.
+    // max_wait 30s + max_batch 64 keep everything queued until shutdown
+    // drains, so the spill decision is deterministic, not timing-dependent.
+    let cfg = ServeConfig::builder()
+        .backend(BackendConfig::native())
+        .batcher(BatcherConfig::builder().max_batch(64).max_wait(Duration::from_secs(30)).build())
+        .shards(2)
+        .queue_cap(64)
+        .degrade(true)
+        .degrade_at(1)
+        .build();
+    let server = Server::start(
+        cfg,
+        vec![
+            VariantSpec::new("q6_p0", qm.clone()).with_fallback("q6_p75"),
+            VariantSpec::new("q6_p75", cheap.clone()),
+        ],
+    )
+    .unwrap();
+    let client = server.client();
+    let hp = server.handle("q6_p0").unwrap();
+    let hf = server.handle("q6_p75").unwrap();
+    let sample = data.test[0].clone();
+
+    let r1 = client.submit(&hp, sample.clone()).unwrap(); // primary, depth 0→1
+    let r2 = client.submit(&hp, sample.clone()).unwrap(); // primary at degrade_at → spills
+    let r3 = client.submit(&hf, sample.clone()).unwrap(); // direct-to-fallback control
+    let report = server.shutdown().unwrap();
+
+    let p1 = r1.recv_timeout(Duration::from_secs(10)).expect("primary response lost");
+    let p2 = r2.recv_timeout(Duration::from_secs(10)).expect("degraded response lost");
+    let p3 = r3.recv_timeout(Duration::from_secs(10)).expect("direct fallback response lost");
+    // Labels: the response reports who actually served it.
+    assert_eq!(p1.served_by.as_ref(), "q6_p0");
+    assert_eq!(p2.served_by.as_ref(), "q6_p75", "spilled request must be labeled degraded");
+    assert_eq!(p3.served_by.as_ref(), "q6_p75");
+    // Routing-only: the degraded answer is the fallback's own bits — equal
+    // to both the direct submission and the scalar golden model.
+    assert_eq!(p2.prediction, p3.prediction, "degraded bits != direct fallback bits");
+    assert_eq!(p2.prediction, Prediction::Class(cheap.classify(&sample)));
+    assert_eq!(p1.prediction, Prediction::Class(qm.classify(&sample)));
+
+    // Exact MAC billing: 1 request × steps × mps on the primary, 2 on the
+    // fallback (the spilled one is billed to the variant that executed it).
+    let steps = sample.inputs.rows() as u64;
+    let billed = |key: &str| {
+        report.macs_by_variant.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap()
+    };
+    assert_eq!(billed("q6_p0"), steps * mps_p);
+    assert_eq!(billed("q6_p75"), 2 * steps * mps_c);
+    assert_eq!(report.metrics.degraded, 1);
+    let hw = |key: &str| {
+        report.queue_highwater.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap()
+    };
+    assert_eq!(hw("q6_p0"), 1);
+    assert_eq!(hw("q6_p75"), 2);
+}
+
+/// A fallback edge that would *raise* serving cost must be refused at
+/// startup — the ladder only ever goes down.
+#[test]
+fn uphill_fallback_is_refused_at_startup() {
+    use rcx::pruning::{prune_to_rate, Pruner, RandomPruner};
+
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let cheap = prune_to_rate(&qm, &RandomPruner::new(9).scores(&qm, &data.train), 75.0);
+    let err = Server::start(
+        native_cfg(8, 1),
+        vec![
+            // cheap → expensive: uphill, must be rejected.
+            VariantSpec::new("cheap", cheap).with_fallback("full"),
+            VariantSpec::new("full", qm),
+        ],
+    );
+    assert!(err.is_err(), "uphill fallback must fail Server::start");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("Pareto ladder"), "unexpected error: {msg}");
+}
+
 #[test]
 fn graceful_shutdown_drains_queue() {
     let (server, data, _) = classification_setup(2);
     let client = server.client();
+    let h = server.handle("q4").unwrap();
     let mut pending = Vec::new();
     for s in data.test.iter().take(20) {
-        pending.push(client.submit(0, s.clone()).unwrap());
+        pending.push(client.submit(&h, s.clone()).unwrap());
     }
     server.shutdown().unwrap();
     // Every already-submitted request must still be answered.
@@ -340,14 +579,12 @@ fn startup_fails_cleanly_without_artifacts() {
     let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
     let model = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
     let err = Server::start(
-        ServeConfig {
-            backend: BackendConfig::Pjrt {
+        ServeConfig::builder()
+            .backend(BackendConfig::Pjrt {
                 artifact_dir: "/nonexistent".into(),
                 artifact: "melborn_pooled".into(),
-            },
-            batcher: BatcherConfig::default(),
-            shards: 1,
-        },
+            })
+            .build(),
         vec![VariantSpec::new("x", model)],
     );
     assert!(err.is_err());
@@ -366,20 +603,25 @@ fn pjrt_backend_serves_if_artifacts_present() {
     let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
     let q4 = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(4)));
     let server = Server::start(
-        ServeConfig {
-            backend: BackendConfig::Pjrt {
+        ServeConfig::builder()
+            .backend(BackendConfig::Pjrt {
                 artifact_dir: "artifacts".into(),
                 artifact: "melborn_pooled".into(),
-            },
-            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) },
-            shards: 1,
-        },
+            })
+            .batcher(
+                BatcherConfig::builder()
+                    .max_batch(16)
+                    .max_wait(Duration::from_millis(2))
+                    .build(),
+            )
+            .build(),
         vec![VariantSpec::shared("q4", Arc::clone(&q4))],
     )
     .unwrap();
     let client = server.client();
+    let h = server.handle("q4").unwrap();
     let pending: Vec<_> =
-        data.test.iter().map(|s| client.submit(0, s.clone()).unwrap()).collect();
+        data.test.iter().map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     for (i, rx) in pending.into_iter().enumerate() {
         let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
         assert_eq!(resp.prediction, Prediction::Class(q4.classify(&data.test[i])), "sample {i}");

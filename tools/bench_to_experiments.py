@@ -11,8 +11,10 @@ Rust toolchain. This tool closes the loop:
   regenerated with a rendered snapshot of every section (engines, pack fill
   at 8 and 16 lanes, the narrow-vs-wide L3-g kernel head-to-head, the L3-h
   SIMD-dispatch grid — kernel width x ISA tier, the native kernel speedup,
-  the closed-loop serve grid, and the L3-i compacted-vs-zeroed CSR grid with
-  the sequential-vs-parallel DSE wall-clock).
+  the closed-loop serve grid, the L3-j overload-QoS sweep — served/shed/
+  degraded accounting plus the queue high-water vs cap gate, and the L3-i
+  compacted-vs-zeroed CSR grid with the sequential-vs-parallel DSE
+  wall-clock).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
@@ -40,6 +42,7 @@ SCHEMA = {
     "l3h_simd": {"rows", "bit_identical"},
     "native_kernel": {"samples", "lane_batched_us", "scalar_us", "speedup"},
     "serve_native": {"rows"},
+    "l3j_overload": {"queue_cap", "degrade_at", "rows"},
     "l3i_compaction": {
         "rows", "bit_identical", "melborn_macs_ratio_p90", "dse_configs",
         "dse_sequential_s", "dse_parallel_s", "dse_speedup",
@@ -56,6 +59,10 @@ L3H_ROW_KEYS = {
 SERVE_ROW_KEYS = {
     "max_batch", "workers", "clients", "requests", "req_per_s", "mean_batch",
     "p50_us", "p99_us",
+}
+L3J_ROW_KEYS = {
+    "clients", "offered", "served", "shed", "degraded", "req_per_s",
+    "p50_us", "p99_us", "highwater",
 }
 L3I_ROW_KEYS = {
     "benchmark", "p", "live", "structural", "macs_zeroed", "macs_compacted",
@@ -91,6 +98,18 @@ def validate(bench):
         missing = L3I_ROW_KEYS - set(row)
         if missing:
             fail(f"l3i_compaction row {row} missing {sorted(missing)}")
+    qos = bench["l3j_overload"]
+    for row in qos["rows"]:
+        missing = L3J_ROW_KEYS - set(row)
+        if missing:
+            fail(f"l3j_overload row {row} missing {sorted(missing)}")
+        if row["served"] + row["shed"] != row["offered"]:
+            fail(f"l3j_overload row {row} leaks requests (served+shed != offered)")
+        if row["highwater"] > qos["queue_cap"]:
+            fail(
+                f"l3j_overload row {row} breached the queue cap "
+                f"({row['highwater']} > {qos['queue_cap']}) — backpressure regressed"
+            )
     if not bench["l3g_kernel"]["bit_identical"]:
         fail("l3g_kernel.bit_identical is false — the bench should have aborted")
     if not bench["l3h_simd"]["bit_identical"]:
@@ -177,6 +196,20 @@ def render_block(bench):
             f"| max_batch={r['max_batch']} | {r['workers']} | {r['clients']} | "
             f"{r['req_per_s']:.0f} | {r['mean_batch']:.1f} | {r['p50_us']} | "
             f"{r['p99_us']} |"
+        )
+    q = bench["l3j_overload"]
+    out.append("")
+    out.append(
+        f"| overload (L3-j, cap={q['queue_cap']}, degrade_at={q['degrade_at']}) "
+        "| offered | served | shed | degraded | req/s | p50 us | p99 us | "
+        "high-water |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in q["rows"]:
+        out.append(
+            f"| clients={r['clients']} | {r['offered']} | {r['served']} | "
+            f"{r['shed']} | {r['degraded']} | {r['req_per_s']:.0f} | "
+            f"{r['p50_us']} | {r['p99_us']} | {r['highwater']} |"
         )
     c = bench["l3i_compaction"]
     out.append("")
