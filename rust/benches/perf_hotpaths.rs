@@ -22,6 +22,10 @@
 //!         with the Pareto-ladder degrade walk on — served/shed/degraded
 //!         accounting (exact), queue high-water vs cap, p50/p99 under
 //!         pressure
+//!   L3-k  prepared sliced-ELL execution plans vs the CSR-walk oracle:
+//!         64-sample classify on unpruned + p=90 compacted models and the
+//!         col-ordered batched scoring sweep vs the sequential slot-walk
+//!         (bit-identity asserted, static indirection cost model in JSON)
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
@@ -44,8 +48,8 @@ use rcx::pruning::{
     SensitivityPruner,
 };
 use rcx::quant::{
-    flip_bit, CalibPlan, FlipCandidate, Isa, Kernel, KernelChoice, LaneScratch, QuantEsn,
-    QuantSpec, BATCH_LANES_NARROW,
+    flip_bit, CalibPlan, FlipCandidate, Isa, Kernel, KernelChoice, LaneScratch, PreparedPlan,
+    QuantEsn, QuantSpec, BATCH_LANES_NARROW,
 };
 use rcx::runtime::{pooled_states, NativeConfig, Runtime};
 
@@ -681,6 +685,108 @@ fn main() {
                 t_seq.as_secs_f64(),
                 t_par.as_secs_f64(),
                 dse_speedup,
+                rows
+            ),
+        );
+    }
+
+    section("L3-k prepared sliced-ELL plans vs CSR oracle (inference + scoring, bit-identity asserted)");
+    {
+        // Inference: the production prepared path (sliced-ELL, width-typed
+        // weights, pre-quantized input strips) against the retained CSR-walk
+        // oracle over the same 64-sample batch — on the unpruned model (one
+        // uniform slice) and a p=90 compacted model (ragged live rows, where
+        // the layout earns its keep). Hard bit-identity gates; the JSON also
+        // carries the static per-step indirection cost model for both
+        // layouts (the mirror-measured counts live in the Python mirrors).
+        let (warm, iters) = if smoke { (1, 8) } else { (3, 30) };
+        let refs: Vec<&_> = data.test.iter().take(64).collect();
+        let scores = RandomPruner::new(7).scores(&qm, &data.train);
+        let p90 = prune_to_rate(&qm, &scores, 90.0);
+        let mut rows = String::new();
+        for (tag, m) in [("melborn_p0", &qm), ("melborn_p90", &p90)] {
+            let mut sc_p = LaneScratch::for_model(m);
+            let mut sc_o = LaneScratch::for_model(m);
+            assert_eq!(
+                m.classify_batch(&refs, &mut sc_p),
+                m.classify_batch_csr(&refs, &mut sc_o),
+                "{tag}: prepared classify != CSR oracle"
+            );
+            let st_p = time_it(warm, iters, || m.classify_batch(&refs, &mut sc_p));
+            let st_c = time_it(warm, iters, || m.classify_batch_csr(&refs, &mut sc_o));
+            let speedup = st_c.median.as_secs_f64() / st_p.median.as_secs_f64();
+            let plan = PreparedPlan::build(m, sc_p.kernel());
+            let (w_min, w_max) = plan.width_range();
+            let nnz = m.w_r_indices.len();
+            // CSR per-step irregular-access model: indptr bounds (2 per
+            // row + 1 shared), column loads, weight loads — plus one i64 →
+            // lane-element convert per weight; the prepared layout has 0.
+            let ind_csr = 2 * (m.n + 1) + 2 * nnz;
+            println!(
+                "{tag:<12} kernel {} on {}  {} slice(s) width {w_min}..={w_max}  \
+                 indirections/step {} -> {} (+{nnz} converts -> 0)  \
+                 classify {:>9.1?} -> {:>9.1?} ({speedup:.2}x)",
+                sc_p.kernel().name(),
+                sc_p.isa().name(),
+                plan.n_slices(),
+                ind_csr,
+                plan.step_indirections(),
+                st_c.median,
+                st_p.median
+            );
+            if !rows.is_empty() {
+                rows.push(',');
+            }
+            rows.push_str(&format!(
+                concat!(
+                    "\n    {{\"model\": \"{tag}\", \"kernel\": \"{}\", \"isa\": \"{}\", ",
+                    "\"n_slices\": {}, \"width_min\": {w_min}, \"width_max\": {w_max}, ",
+                    "\"indirections_csr\": {ind_csr}, \"indirections_prepared\": {}, ",
+                    "\"weight_converts_csr\": {nnz}, \"weight_converts_prepared\": 0, ",
+                    "\"csr_us\": {:.1}, \"prepared_us\": {:.1}, \"speedup\": {speedup:.3}}}"
+                ),
+                sc_p.kernel().name(),
+                sc_p.isa().name(),
+                plan.n_slices(),
+                plan.step_indirections(),
+                st_c.median.as_secs_f64() * 1e6,
+                st_p.median.as_secs_f64() * 1e6,
+            ));
+        }
+        // Scoring: the batched engine now runs col-ordered width-typed
+        // scatter weights + masked-SIMD sparse strips; the sequential
+        // incremental engine keeps the slot-indexed walk and is the oracle.
+        let mk = |engine| {
+            SensitivityPruner::new(SensitivityConfig {
+                parallelism: 1,
+                max_calib,
+                engine,
+                ..Default::default()
+            })
+        };
+        let t0 = Instant::now();
+        let seq = mk(Engine::Incremental).scores(&qm, calib);
+        let t_seq = t0.elapsed();
+        let t0 = Instant::now();
+        let bat = mk(Engine::IncrementalBatched).scores(&qm, calib);
+        let t_bat = t0.elapsed();
+        assert_eq!(bat, seq, "col-ordered batched scoring != sequential slot-walk oracle");
+        let sc_speedup = t_seq.as_secs_f64() / t_bat.as_secs_f64();
+        println!(
+            "scoring: sequential(slot-walk) {t_seq:>10.3?}  batched(col-ordered) {t_bat:>10.3?}  \
+             ({sc_speedup:.2}x)"
+        );
+        report.add(
+            "l3k_prepared",
+            format!(
+                concat!(
+                    "{{\"bit_identical\": true, \"samples\": 64, ",
+                    "\"scoring_sequential_s\": {:.6}, \"scoring_batched_s\": {:.6}, ",
+                    "\"scoring_speedup\": {:.3}, \"rows\": [{}\n  ]}}"
+                ),
+                t_seq.as_secs_f64(),
+                t_bat.as_secs_f64(),
+                sc_speedup,
                 rows
             ),
         );

@@ -411,19 +411,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Startup report: the kernel each variant *resolves* to (the bound
     // analysis decides; a pin past its bound fails fast right here) plus the
-    // probed ISA tier — not the requested `--kernel` value.
+    // probed ISA tier — not the requested `--kernel` value — and the shape of
+    // the prepared sliced-ELL plan the hot path will actually execute.
     if let BackendConfig::Native(ncfg) = &backend {
         for spec in registry.specs() {
             let (kern, isa) = rcx::quant::resolve_inference(&spec.model, ncfg.kernel);
+            let plan = rcx::quant::PreparedPlan::build(&spec.model, kern);
+            let (w_min, w_max) = plan.width_range();
             println!(
-                "variant {}: kernel={} isa={} (requested {}), live {}/{}, {} MACs/step",
+                "variant {}: kernel={} isa={} (requested {}), live {}/{}, {} MACs/step, \
+                 prepared {} slice(s) width {w_min}..={w_max}",
                 spec.key,
                 kern.name(),
                 isa.name(),
                 ncfg.kernel.name(),
                 spec.model.live_weights(),
                 spec.model.structural_weights(),
-                spec.model.macs_per_step()
+                spec.model.macs_per_step(),
+                plan.n_slices()
             );
         }
     }

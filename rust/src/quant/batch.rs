@@ -37,14 +37,46 @@
 //! autovectorizer; all tiers are wrapping integer ops and bit-identical
 //! under the proven bounds.
 //!
+//! # Prepared plans: what the hot loop actually executes
+//!
+//! The production entry points ([`QuantEsn::classify_batch`] /
+//! [`QuantEsn::predict_batch`]) do **not** walk the model's CSR arrays.
+//! [`LaneScratch`] owns a [`PreparedPlan`] — width-typed weights in a
+//! row-length-sliced ELL layout plus a pre-narrowed input matrix (see
+//! [`super::plan`]) — rebuilt only when the model content fingerprint or the
+//! kernel changes, and input sequences are quantized once per sample
+//! ([`PreparedInputs`]) before the rollout, so the per-step loop performs no
+//! `i64 → E` weight widening, no `indptr` chasing and no input quantization.
+//! The CSR walk survives as the bit-identical oracle
+//! ([`QuantEsn::classify_batch_csr`] / [`QuantEsn::predict_batch_csr`]): same
+//! multiset of wrapping-integer MACs per neuron, hence the same accumulator
+//! bits, just the pre-layout memory traffic.
+//!
 //! This kernel is the compute core of the serving stack's
 //! [`NativeBackend`](crate::runtime::NativeBackend).
 
 use crate::data::{Task, TimeSeries};
 use crate::esn::{Features, Perf};
 
+use super::plan::{PreparedInputs, PreparedPlan, PreparedWeights};
 use super::simd::{Isa, LaneElem};
 use super::{Kernel, KernelBounds, KernelChoice, QuantEsn};
+
+/// Which recurrence layout a rollout runs on: the prepared sliced-ELL plan
+/// (production) or the model's CSR arrays (the bit-identical oracle kept for
+/// tests, benches and the mirrors).
+enum RecWeights<'p, E: LaneElem> {
+    Ell(&'p PreparedWeights<E>),
+    Csr,
+}
+
+impl<E: LaneElem> Clone for RecWeights<'_, E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<E: LaneElem> Copy for RecWeights<'_, E> {}
 
 /// Samples processed per **wide** (i64) lane-batched rollout pass. Mirrors
 /// [`super::BATCH_LANES`] (8 × i64 = two AVX2 vectors per strip).
@@ -114,6 +146,11 @@ pub struct LaneScratch {
     max_steps: usize,
     /// ISA tier the accumulator strips dispatch to.
     isa: Isa,
+    /// Prepared sliced-ELL weights for the model this scratch last served.
+    /// Lazily (re)built by [`LaneScratch::ensure_prepared`]; fingerprint-
+    /// gated because the native backend reuses scratches across *models* of
+    /// identical geometry (multi-variant serving).
+    prepared: Option<PreparedPlan>,
 }
 
 impl LaneScratch {
@@ -141,7 +178,38 @@ impl LaneScratch {
             Kernel::Narrow => LaneKernel::Narrow(LaneBuf::new(model.n, model.input_dim)),
             Kernel::Wide => LaneKernel::Wide(LaneBuf::new(model.n, model.input_dim)),
         };
-        Self { imp, max_steps: bounds.max_steps_for(kernel), isa }
+        Self { imp, max_steps: bounds.max_steps_for(kernel), isa, prepared: None }
+    }
+
+    /// Make sure this scratch holds a [`PreparedPlan`] built from exactly
+    /// `model`'s weights for the selected kernel. Cheap when current (one
+    /// O(nnz) fingerprint pass); rebuilds the layout otherwise. Called by
+    /// every prepared entry point, so serving scratches reused across
+    /// same-geometry variants can never run stale weights.
+    pub fn ensure_prepared(&mut self, model: &QuantEsn) {
+        let kernel = self.kernel();
+        let stale = match &self.prepared {
+            Some(p) => p.kernel() != kernel || !p.matches(model),
+            None => true,
+        };
+        if stale {
+            self.prepared = Some(PreparedPlan::build(model, kernel));
+        }
+    }
+
+    /// Install an externally built plan (e.g. one from
+    /// [`PreparedPlan::build_with_row_order`] — the slice-permutation
+    /// property tests route through here). Refuses a plan built for a
+    /// different kernel or from different weights.
+    pub fn install_prepared(&mut self, model: &QuantEsn, plan: PreparedPlan) {
+        assert_eq!(plan.kernel(), self.kernel(), "prepared plan kernel mismatch");
+        assert!(plan.matches(model), "prepared plan built from different weights");
+        self.prepared = Some(plan);
+    }
+
+    /// The currently installed prepared plan, if any (startup reporting).
+    pub fn prepared(&self) -> Option<&PreparedPlan> {
+        self.prepared.as_ref()
     }
 
     /// Lane kernel this scratch runs.
@@ -202,7 +270,59 @@ impl QuantEsn {
     /// model's bounds — so the extra lanes are free register fill, not extra
     /// work, and the overflow guards cannot fire on them. The ladder applies
     /// to occupied, active lanes only.
+    ///
+    /// This is the **prepared** step: weights arrive already narrowed to `E`
+    /// and the recurrence walks the sliced-ELL layout — rows visited in
+    /// slice order, each row's MACs a fixed-trip-count strip. Per-row
+    /// accumulators are independent, so the visiting order cannot change any
+    /// bit; `step_lanes_csr_g` below is the order-of-record oracle.
+    #[allow(clippy::too_many_arguments)]
     fn step_lanes_g<E: LaneElem, const L: usize>(
+        &self,
+        prep: &PreparedWeights<E>,
+        width: usize,
+        u_int: &[E],
+        s_prev: &[E],
+        s_next: &mut [E],
+        active: &[bool; L],
+        isa: Isa,
+    ) {
+        debug_assert!(width <= L);
+        debug_assert_eq!((prep.n, prep.input_dim), (self.n, self.input_dim));
+        let f = self.f_bits;
+        let input_dim = self.input_dim;
+        for sl in &prep.slices {
+            for r in 0..sl.n_rows {
+                let i = prep.rows[sl.rows_at + r] as usize;
+                // Input projection, lane-wide, pre-narrowed weights.
+                let mut acc_in = [E::default(); L];
+                let wrow = &prep.w_in[i * input_dim..(i + 1) * input_dim];
+                for k in 0..input_dim {
+                    E::madd_strip(&mut acc_in, wrow[k], &u_int[k * L..(k + 1) * L], isa);
+                }
+                // Recurrence: this row's slice-contiguous fixed-width run.
+                let mut acc_r = [E::default(); L];
+                let base = sl.data_at + r * sl.width;
+                for k in 0..sl.width {
+                    let c = prep.cols[base + k] as usize;
+                    E::madd_strip(&mut acc_r, prep.vals[base + k], &s_prev[c * L..c * L + L], isa);
+                }
+                let out = &mut s_next[i * L..(i + 1) * L];
+                for l in 0..width {
+                    if active[l] {
+                        let acc = self.m_in * acc_in[l].to_i64() + (acc_r[l].to_i64() << f);
+                        out[l] = E::from_i64(self.ladder.apply(acc));
+                    }
+                }
+            }
+        }
+    }
+
+    /// CSR oracle twin of [`QuantEsn::step_lanes_g`]: walks the model-of-
+    /// record arrays, widening each weight per MAC — the exact pre-layout
+    /// hot loop, kept bit-identical for the equivalence suite, the L3-k
+    /// head-to-head and the Python mirrors.
+    fn step_lanes_csr_g<E: LaneElem, const L: usize>(
         &self,
         width: usize,
         u_int: &[E],
@@ -245,9 +365,17 @@ impl QuantEsn {
     /// has run. `pool` controls whether the pooled accumulator is maintained
     /// at all: classification needs it, per-step regression does not (and
     /// skipping it also removes the only narrow quantity that grows with T).
+    ///
+    /// `pre` carries each lane's input sequence already quantized (one
+    /// `T × input_dim` row-major strip per sample, aligned with `chunk`) —
+    /// the per-step lane fill is an integer load + narrowing, never a
+    /// `qz_u.quantize` call.
+    #[allow(clippy::too_many_arguments)]
     fn rollout_lanes_g<E: LaneElem, const L: usize>(
         &self,
         chunk: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        w: RecWeights<E>,
         buf: &mut LaneBuf<E, L>,
         pool: bool,
         isa: Isa,
@@ -255,6 +383,7 @@ impl QuantEsn {
     ) {
         assert!(chunk.len() <= L, "chunk wider than the scratch lane width");
         assert_eq!((buf.n, buf.input_dim), (self.n, self.input_dim), "scratch geometry mismatch");
+        debug_assert_eq!(pre.len(), chunk.len());
         buf.reset();
         let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
         let mut active = [false; L];
@@ -262,16 +391,23 @@ impl QuantEsn {
             for (l, s) in chunk.iter().enumerate() {
                 active[l] = t < s.inputs.rows();
                 if active[l] {
-                    let urow = s.inputs.row(t);
+                    let urow = &pre[l][t * self.input_dim..(t + 1) * self.input_dim];
                     for k in 0..self.input_dim {
-                        buf.u_int[k * L + l] = E::from_i64(self.qz_u.quantize(urow[k]));
+                        buf.u_int[k * L + l] = E::from_i64(urow[k]);
                     }
                 }
             }
             // Split-borrow the state double buffer around the generic step.
             {
                 let LaneBuf { u_int, s_prev, s_next, .. } = &mut *buf;
-                self.step_lanes_g::<E, L>(chunk.len(), u_int, s_prev, s_next, &active, isa);
+                match w {
+                    RecWeights::Ell(p) => {
+                        self.step_lanes_g::<E, L>(p, chunk.len(), u_int, s_prev, s_next, &active, isa)
+                    }
+                    RecWeights::Csr => {
+                        self.step_lanes_csr_g::<E, L>(chunk.len(), u_int, s_prev, s_next, &active, isa)
+                    }
+                }
             }
             if pool {
                 match self.features {
@@ -298,10 +434,18 @@ impl QuantEsn {
                         }
                     }
                     Features::LastState => {
-                        for (l, s) in chunk.iter().enumerate() {
-                            if t + 1 == s.inputs.rows() {
-                                for j in 0..self.n {
-                                    buf.pooled[j * L + l] = buf.s_next[j * L + l];
+                        // Full chunks whose every lane ends on this step (the
+                        // common equal-length serving case) capture with one
+                        // contiguous buffer copy; only ragged chunks pay the
+                        // strided per-lane column walk.
+                        if chunk.len() == L && chunk.iter().all(|s| t + 1 == s.inputs.rows()) {
+                            buf.pooled.copy_from_slice(&buf.s_next);
+                        } else {
+                            for (l, s) in chunk.iter().enumerate() {
+                                if t + 1 == s.inputs.rows() {
+                                    for j in 0..self.n {
+                                        buf.pooled[j * L + l] = buf.s_next[j * L + l];
+                                    }
                                 }
                             }
                         }
@@ -323,14 +467,17 @@ impl QuantEsn {
     }
 
     /// Width-generic classification over one already-chunked slice.
+    #[allow(clippy::too_many_arguments)]
     fn classify_chunk_g<E: LaneElem, const L: usize>(
         &self,
         chunk: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        w: RecWeights<E>,
         buf: &mut LaneBuf<E, L>,
         isa: Isa,
         out: &mut Vec<usize>,
     ) {
-        self.rollout_lanes_g::<E, L>(chunk, buf, true, isa, None);
+        self.rollout_lanes_g::<E, L>(chunk, pre, w, buf, true, isa, None);
         for (l, s) in chunk.iter().enumerate() {
             for j in 0..self.n {
                 buf.col[j] = buf.pooled[j * L + l].to_i64();
@@ -345,14 +492,64 @@ impl QuantEsn {
 
     /// Lane-batched classification: one class index per sample, bit-identical
     /// to calling [`QuantEsn::classify`] on each sample. Any batch length —
-    /// chunked internally into [`LaneScratch::lanes`]-wide passes.
+    /// chunked internally into [`LaneScratch::lanes`]-wide passes. Runs the
+    /// prepared sliced-ELL layout (built/refreshed on `sc` automatically) and
+    /// quantizes each sample's inputs exactly once.
     pub fn classify_batch(&self, samples: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<usize> {
+        let pre = PreparedInputs::build(self, samples);
+        self.classify_batch_pre(samples, pre.rows(), sc)
+    }
+
+    /// [`QuantEsn::classify_batch`] with caller-supplied pre-quantized input
+    /// strips (the native backend builds one [`PreparedInputs`] per request
+    /// and fans aligned sub-slices to its worker chunks).
+    pub fn classify_batch_with_inputs(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &PreparedInputs,
+        sc: &mut LaneScratch,
+    ) -> Vec<usize> {
+        assert!(pre.matches(self), "prepared inputs built with a different quantizer");
+        assert_eq!(pre.len(), samples.len(), "prepared inputs not aligned with samples");
+        self.classify_batch_pre(samples, pre.rows(), sc)
+    }
+
+    /// CSR-oracle twin of [`QuantEsn::classify_batch`]: same lane batching,
+    /// same pre-quantized inputs, but the recurrence walks the model-of-
+    /// record CSR arrays. Kept bit-identical for the equivalence suite and
+    /// the L3-k prepared-vs-CSR head-to-head.
+    pub fn classify_batch_csr(&self, samples: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<usize> {
+        let pre = PreparedInputs::build(self, samples);
+        self.classify_batch_impl(samples, pre.rows(), sc, false)
+    }
+
+    pub(crate) fn classify_batch_pre(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        sc: &mut LaneScratch,
+    ) -> Vec<usize> {
+        self.classify_batch_impl(samples, pre, sc, true)
+    }
+
+    fn classify_batch_impl(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        sc: &mut LaneScratch,
+        use_prepared: bool,
+    ) -> Vec<usize> {
         assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        assert_eq!(pre.len(), samples.len(), "pre-quantized rows not aligned with samples");
+        if use_prepared {
+            sc.ensure_prepared(self);
+        }
         let lanes = sc.lanes();
-        let max_steps = sc.max_steps;
-        let isa = sc.isa;
+        let LaneScratch { imp, max_steps, isa, prepared } = sc;
+        let (max_steps, isa) = (*max_steps, *isa);
+        let plan = prepared.as_ref();
         let mut out = Vec::with_capacity(samples.len());
-        for chunk in samples.chunks(lanes) {
+        for (ci, chunk) in samples.chunks(lanes).enumerate() {
             // A lone sample (low-load flush, or the tail chunk) would pay
             // every lane's MAC work for one lane of output — the scalar
             // path is bit-identical and lane-count× cheaper there.
@@ -360,9 +557,17 @@ impl QuantEsn {
                 out.push(self.classify(chunk[0]));
                 continue;
             }
+            let pre_chunk = &pre[ci * lanes..ci * lanes + chunk.len()];
             let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
-            match &mut sc.imp {
-                LaneKernel::Wide(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
+            match imp {
+                LaneKernel::Wide(buf) => {
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_wide())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                }
                 // MeanState pooled sums grow with T; past the selected
                 // width's proven horizon the scalar path is the bit-identical
                 // fallback.
@@ -371,8 +576,22 @@ impl QuantEsn {
                 {
                     out.extend(chunk.iter().map(|s| self.classify(s)));
                 }
-                LaneKernel::Narrow(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
-                LaneKernel::Narrow16(buf) => self.classify_chunk_g(chunk, buf, isa, &mut out),
+                LaneKernel::Narrow(buf) => {
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_narrow())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                }
+                LaneKernel::Narrow16(buf) => {
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_narrow16())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                }
             }
         }
         out
@@ -380,20 +599,71 @@ impl QuantEsn {
 
     /// Lane-batched per-step regression: one `(T − washout) × out_dim`
     /// prediction list per sample, bit-identical to [`QuantEsn::predict`].
+    /// Prepared layout + once-per-sample input quantization, like
+    /// [`QuantEsn::classify_batch`].
     pub fn predict_batch(
         &self,
         samples: &[&TimeSeries],
         sc: &mut LaneScratch,
     ) -> Vec<Vec<Vec<f64>>> {
+        let pre = PreparedInputs::build(self, samples);
+        self.predict_batch_pre(samples, pre.rows(), sc)
+    }
+
+    /// [`QuantEsn::predict_batch`] with caller-supplied pre-quantized inputs.
+    pub fn predict_batch_with_inputs(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &PreparedInputs,
+        sc: &mut LaneScratch,
+    ) -> Vec<Vec<Vec<f64>>> {
+        assert!(pre.matches(self), "prepared inputs built with a different quantizer");
+        assert_eq!(pre.len(), samples.len(), "prepared inputs not aligned with samples");
+        self.predict_batch_pre(samples, pre.rows(), sc)
+    }
+
+    /// CSR-oracle twin of [`QuantEsn::predict_batch`].
+    pub fn predict_batch_csr(
+        &self,
+        samples: &[&TimeSeries],
+        sc: &mut LaneScratch,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let pre = PreparedInputs::build(self, samples);
+        self.predict_batch_impl(samples, pre.rows(), sc, false)
+    }
+
+    pub(crate) fn predict_batch_pre(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        sc: &mut LaneScratch,
+    ) -> Vec<Vec<Vec<f64>>> {
+        self.predict_batch_impl(samples, pre, sc, true)
+    }
+
+    fn predict_batch_impl(
+        &self,
+        samples: &[&TimeSeries],
+        pre: &[Vec<i64>],
+        sc: &mut LaneScratch,
+        use_prepared: bool,
+    ) -> Vec<Vec<Vec<f64>>> {
         assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        assert_eq!(pre.len(), samples.len(), "pre-quantized rows not aligned with samples");
+        if use_prepared {
+            sc.ensure_prepared(self);
+        }
         let lanes = sc.lanes();
-        let isa = sc.isa;
+        let LaneScratch { imp, isa, prepared, .. } = sc;
+        let isa = *isa;
+        let plan = prepared.as_ref();
         let mut out: Vec<Vec<Vec<f64>>> = Vec::with_capacity(samples.len());
-        for chunk in samples.chunks(lanes) {
+        for (ci, chunk) in samples.chunks(lanes).enumerate() {
             if chunk.len() == 1 {
                 out.push(self.predict(chunk[0]));
                 continue;
             }
+            let pre_chunk = &pre[ci * lanes..ci * lanes + chunk.len()];
             let base = out.len();
             for s in chunk {
                 out.push(Vec::with_capacity(s.inputs.rows().saturating_sub(self.washout)));
@@ -407,15 +677,30 @@ impl QuantEsn {
             };
             // `pool: false` — per-step regression never reads the pooled
             // feature, and with it disabled no narrow value grows with T.
-            match &mut sc.imp {
+            match imp {
                 LaneKernel::Wide(buf) => {
-                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_wide())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
                 }
                 LaneKernel::Narrow(buf) => {
-                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_narrow())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
                 }
                 LaneKernel::Narrow16(buf) => {
-                    self.rollout_lanes_g(chunk, buf, false, isa, Some(&mut emit))
+                    let w = if use_prepared {
+                        RecWeights::Ell(plan.unwrap().as_narrow16())
+                    } else {
+                        RecWeights::Csr
+                    };
+                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
                 }
             }
         }
@@ -639,5 +924,77 @@ mod tests {
         let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
         let mut sc = LaneScratch::for_model(&qm);
         assert!(qm.classify_batch(&[], &mut sc).is_empty());
+    }
+
+    /// The prepared sliced-ELL path and the CSR oracle must agree bit-for-bit
+    /// on every kernel, and `with_inputs` entry points must match internal
+    /// quantization exactly.
+    #[test]
+    fn prepared_matches_csr_oracle_and_with_inputs_entry_points() {
+        let data = melborn_sized(3, 40, 30);
+        let m = trained_cls(&data, 1, 7);
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let refs: Vec<&TimeSeries> = data.test.iter().take(33).collect();
+        let pre = PreparedInputs::build(&qm, &refs);
+        for choice in [KernelChoice::Narrow16, KernelChoice::Narrow, KernelChoice::Wide] {
+            let mut sc = LaneScratch::for_model_with(&qm, choice);
+            let prepared = qm.classify_batch(&refs, &mut sc);
+            assert!(sc.prepared().is_some(), "classify_batch must install a plan");
+            assert_eq!(prepared, qm.classify_batch_csr(&refs, &mut sc), "{choice:?}");
+            assert_eq!(prepared, qm.classify_batch_with_inputs(&refs, &pre, &mut sc), "{choice:?}");
+        }
+    }
+
+    /// Any row permutation of the slicing produces the same bits — per-row
+    /// accumulators are independent and wrapping adds commute.
+    #[test]
+    fn installed_permuted_plan_is_bit_identical() {
+        let data = melborn_sized(3, 40, 30);
+        let m = trained_cls(&data, 1, 7);
+        let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+        let refs: Vec<&TimeSeries> = data.test.iter().take(17).collect();
+        let mut sc = LaneScratch::for_model(&qm);
+        let baseline = qm.classify_batch(&refs, &mut sc);
+        // Reversed order plus a deterministic LCG shuffle.
+        let mut orders = vec![(0..qm.n).rev().collect::<Vec<usize>>()];
+        let mut shuffled: Vec<usize> = (0..qm.n).collect();
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        for i in (1..shuffled.len()).rev() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            shuffled.swap(i, (state >> 33) as usize % (i + 1));
+        }
+        orders.push(shuffled);
+        for order in orders {
+            let plan = PreparedPlan::build_with_row_order(&qm, sc.kernel(), &order);
+            sc.install_prepared(&qm, plan);
+            assert_eq!(qm.classify_batch(&refs, &mut sc), baseline);
+        }
+    }
+
+    /// The stale-plan guard: serving a same-geometry model with different
+    /// weights through a reused scratch must rebuild the plan, not reuse it.
+    #[test]
+    fn reused_scratch_rebuilds_plan_for_same_geometry_different_weights() {
+        let data = melborn_sized(1, 30, 20);
+        let m = trained_cls(&data, 1, 5);
+        let q4 = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+        let mut q4b = q4.clone();
+        q4b.set_weight(0, q4.w_r_values[0] ^ 1);
+        let refs: Vec<&TimeSeries> = data.test.iter().take(9).collect();
+        let mut sc = LaneScratch::for_model(&q4);
+        let a = qm_classify_both(&q4, &refs, &mut sc);
+        let b = qm_classify_both(&q4b, &refs, &mut sc);
+        // Each model's prepared result equals its own CSR oracle even though
+        // the two models share one scratch.
+        assert_eq!(a.0, a.1);
+        assert_eq!(b.0, b.1);
+    }
+
+    fn qm_classify_both(
+        qm: &QuantEsn,
+        refs: &[&TimeSeries],
+        sc: &mut LaneScratch,
+    ) -> (Vec<usize>, Vec<usize>) {
+        (qm.classify_batch(refs, sc), qm.classify_batch_csr(refs, sc))
     }
 }

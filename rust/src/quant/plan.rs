@@ -1,0 +1,410 @@
+//! Prepared execution plans: the weight/input layout the inference hot loops
+//! actually run on.
+//!
+//! The CSR arrays on [`QuantEsn`] are the *model of record* — compaction,
+//! pruning, bound analysis and the scalar oracle all operate on them — but
+//! they are a poor execution layout: every lane-batched reservoir step used
+//! to re-widen each live weight from `i64` into the lane element type
+//! (`E::from_i64` per MAC), chase ragged per-row `indptr` indirection that
+//! pruning makes *worse* (short, irregular rows), and re-quantize input
+//! sequences inside the per-step lane loop. A real accelerator compiles all
+//! of that away at load time; this module does the same in software:
+//!
+//! - [`PreparedWeights`] stores the input matrix and the live recurrence
+//!   weights **pre-converted to the resolved lane element type** (i16 / i32 /
+//!   i64 — the conversion is the exact same debug-checked narrowing the old
+//!   hot loop performed per step, done once), and re-lays the recurrence CSR
+//!   into a **row-length-sliced ELL**: rows are bucketed by their live
+//!   nonzero count, and each slice stores its rows' column indices and
+//!   weights contiguously, row-major, at a fixed per-row width — so the
+//!   inner MAC loop runs fixed-trip-count strips with no `indptr` chasing.
+//! - [`PreparedPlan`] is the public, width-erased handle: built once per
+//!   (model, kernel), carrying a content fingerprint so scratch owners that
+//!   are reused across *models* of identical geometry (multi-variant serving)
+//!   rebuild exactly when the weights actually changed.
+//! - [`PreparedInputs`] quantizes a request's input sequences **once per
+//!   sample** (the same 8-bit sensor-word quantization as
+//!   [`super::QuantInputCache`]), so `qz_u.quantize` disappears from the
+//!   per-(step, lane) rollout loop.
+//!
+//! # Exactness
+//!
+//! The sliced layout changes *iteration order*, never values: each row keeps
+//! its full set of (column, weight) pairs in its original in-row order, rows
+//! are merely visited in slice order, and every per-row accumulator is an
+//! independent wrapping-integer sum — the same multiset of MACs per row
+//! produces the same accumulator bits on any tier (wrapping adds commute).
+//! [`super::KernelBounds`] is value-derived (row L1 norms, clamps), so the
+//! re-layout cannot change bounds or kernel selection either. The CSR paths
+//! are kept as bit-identical oracles
+//! ([`QuantEsn::classify_batch_csr`] / [`QuantEsn::predict_batch_csr`]), the
+//! equivalence suite and both Python mirrors cross-check every configuration,
+//! and [`PreparedPlan::build_with_row_order`] exists precisely so a property
+//! test can prove an *arbitrary* row permutation of the slicing leaves every
+//! output bit unchanged.
+
+use crate::data::TimeSeries;
+
+use super::simd::LaneElem;
+use super::{Kernel, QuantEsn};
+
+/// One row-length bucket of the sliced-ELL layout: `n_rows` rows, each with
+/// exactly `width` live entries, stored row-major and slice-contiguous.
+pub(crate) struct EllSlice {
+    /// Live entries per row — the fixed trip count of the inner MAC loop.
+    pub width: usize,
+    /// First index into [`PreparedWeights::rows`].
+    pub rows_at: usize,
+    /// Rows in this slice.
+    pub n_rows: usize,
+    /// First index into [`PreparedWeights::cols`] / [`PreparedWeights::vals`].
+    pub data_at: usize,
+}
+
+/// Width-typed prepared weights (see the module docs). One instantiation per
+/// lane element type; the serving scratch and the bench harness reach it
+/// through [`PreparedPlan`].
+pub(crate) struct PreparedWeights<E: LaneElem> {
+    pub n: usize,
+    pub input_dim: usize,
+    /// Dense `n × input_dim` input weights, pre-narrowed to the lane element.
+    pub w_in: Vec<E>,
+    /// Row-length buckets, ascending width under the default order.
+    pub slices: Vec<EllSlice>,
+    /// Row ids, slice-contiguous — every reservoir row exactly once.
+    pub rows: Vec<u32>,
+    /// Column indices, slice-contiguous row-major.
+    pub cols: Vec<u32>,
+    /// Live weights, same layout as `cols`, pre-narrowed.
+    pub vals: Vec<E>,
+}
+
+fn build_weights<E: LaneElem>(model: &QuantEsn, order: &[usize]) -> PreparedWeights<E> {
+    let n = model.n;
+    assert_eq!(order.len(), n, "row order must cover every reservoir row");
+    debug_assert!(
+        {
+            let mut seen = vec![false; n];
+            order.iter().all(|&i| i < n && !std::mem::replace(&mut seen[i], true))
+        },
+        "row order must be a permutation of 0..n"
+    );
+    assert!(n <= u32::MAX as usize && model.w_r_values.len() <= u32::MAX as usize);
+    let w_in = model.w_in.iter().map(|&v| E::from_i64(v)).collect();
+    let mut slices: Vec<EllSlice> = Vec::new();
+    let mut rows = Vec::with_capacity(n);
+    let mut cols = Vec::with_capacity(model.w_r_values.len());
+    let mut vals = Vec::with_capacity(model.w_r_values.len());
+    for &i in order {
+        let nnz = model.w_r_indptr[i + 1] - model.w_r_indptr[i];
+        if slices.last().map(|s| s.width) != Some(nnz) {
+            slices.push(EllSlice {
+                width: nnz,
+                rows_at: rows.len(),
+                n_rows: 0,
+                data_at: cols.len(),
+            });
+        }
+        slices.last_mut().unwrap().n_rows += 1;
+        rows.push(i as u32);
+        for k in model.w_r_indptr[i]..model.w_r_indptr[i + 1] {
+            cols.push(model.w_r_indices[k] as u32);
+            vals.push(E::from_i64(model.w_r_values[k]));
+        }
+    }
+    PreparedWeights { n, input_dim: model.input_dim, w_in, slices, rows, cols, vals }
+}
+
+/// Rows stably sorted by live nonzero count — the default slicing, which
+/// minimizes the slice count (every equal-width run is one slice).
+fn default_order(model: &QuantEsn) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..model.n).collect();
+    order.sort_by_key(|&i| model.w_r_indptr[i + 1] - model.w_r_indptr[i]);
+    order
+}
+
+enum PreparedImp {
+    Wide(PreparedWeights<i64>),
+    Narrow(PreparedWeights<i32>),
+    Narrow16(PreparedWeights<i16>),
+}
+
+/// A prepared inference plan: width-typed sliced-ELL weights for one
+/// (model, kernel) pair, plus the content fingerprint that invalidates it.
+/// Built by [`PreparedPlan::build`] (or installed on a
+/// [`super::LaneScratch`] via `install_prepared` for permutation tests and
+/// bench pinning).
+pub struct PreparedPlan {
+    imp: PreparedImp,
+    kernel: Kernel,
+    fp: u64,
+}
+
+impl PreparedPlan {
+    /// Prepare `model`'s weights for `kernel` under the default (row-length
+    /// sorted) slicing. The kernel must already be resolved — callers get it
+    /// from [`super::resolve_inference`] or a built scratch; preparing a
+    /// narrow tier the bounds did not approve would trip the same
+    /// debug-checked narrowing the per-step path used to.
+    pub fn build(model: &QuantEsn, kernel: Kernel) -> Self {
+        Self::build_with_row_order(model, kernel, &default_order(model))
+    }
+
+    /// Prepare with an explicit row visiting order (any permutation of
+    /// `0..n`). Slices are maximal equal-width runs of the given order, so a
+    /// permutation changes the bucketing — and, per the layout-exactness
+    /// argument in the module docs, cannot change any output bit. Exists for
+    /// the property tests; everything else uses [`PreparedPlan::build`].
+    pub fn build_with_row_order(model: &QuantEsn, kernel: Kernel, order: &[usize]) -> Self {
+        let imp = match kernel {
+            Kernel::Wide => PreparedImp::Wide(build_weights(model, order)),
+            Kernel::Narrow => PreparedImp::Narrow(build_weights(model, order)),
+            Kernel::Narrow16 => PreparedImp::Narrow16(build_weights(model, order)),
+        };
+        Self { imp, kernel, fp: fingerprint(model) }
+    }
+
+    /// Lane kernel this plan's weights are typed for.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// True when this plan was prepared from exactly `model`'s weights —
+    /// geometry AND content. Scratch owners reused across same-geometry
+    /// models (multi-variant serving) must gate on this, not on geometry.
+    pub fn matches(&self, model: &QuantEsn) -> bool {
+        self.fp == fingerprint(model)
+    }
+
+    /// Number of row-length slices (fixed-trip-count groups).
+    pub fn n_slices(&self) -> usize {
+        match &self.imp {
+            PreparedImp::Wide(p) => p.slices.len(),
+            PreparedImp::Narrow(p) => p.slices.len(),
+            PreparedImp::Narrow16(p) => p.slices.len(),
+        }
+    }
+
+    /// `(min, max)` live entries per row across the slices.
+    pub fn width_range(&self) -> (usize, usize) {
+        let widths = |s: &[EllSlice]| {
+            let lo = s.iter().map(|x| x.width).min().unwrap_or(0);
+            let hi = s.iter().map(|x| x.width).max().unwrap_or(0);
+            (lo, hi)
+        };
+        match &self.imp {
+            PreparedImp::Wide(p) => widths(&p.slices),
+            PreparedImp::Narrow(p) => widths(&p.slices),
+            PreparedImp::Narrow16(p) => widths(&p.slices),
+        }
+    }
+
+    /// Irregular index loads one reservoir step pays on this layout
+    /// (per-slice directory reads + one row id per row + one column id per
+    /// live entry), vs. the CSR walk's `2·(n+1)` indptr bounds + `nnz` column
+    /// loads + `nnz` weight-widening conversions. The Python mirrors count
+    /// the same quantities on real rollouts (EXPERIMENTS.md §Perf it. 10).
+    pub fn step_indirections(&self) -> usize {
+        let count = |p_n: usize, slices: usize, nnz: usize| 3 * slices + p_n + nnz;
+        match &self.imp {
+            PreparedImp::Wide(p) => count(p.n, p.slices.len(), p.cols.len()),
+            PreparedImp::Narrow(p) => count(p.n, p.slices.len(), p.cols.len()),
+            PreparedImp::Narrow16(p) => count(p.n, p.slices.len(), p.cols.len()),
+        }
+    }
+
+    pub(crate) fn as_wide(&self) -> &PreparedWeights<i64> {
+        match &self.imp {
+            PreparedImp::Wide(p) => p,
+            _ => unreachable!("prepared plan width mismatch (wide)"),
+        }
+    }
+
+    pub(crate) fn as_narrow(&self) -> &PreparedWeights<i32> {
+        match &self.imp {
+            PreparedImp::Narrow(p) => p,
+            _ => unreachable!("prepared plan width mismatch (narrow)"),
+        }
+    }
+
+    pub(crate) fn as_narrow16(&self) -> &PreparedWeights<i16> {
+        match &self.imp {
+            PreparedImp::Narrow16(p) => p,
+            _ => unreachable!("prepared plan width mismatch (narrow16)"),
+        }
+    }
+}
+
+/// FNV-1a over everything the prepared layout depends on: geometry, input
+/// weights and the recurrence CSR (structure + values). O(nnz + n·input_dim)
+/// — negligible against a rollout, cheap enough to re-check per batch.
+fn fingerprint(model: &QuantEsn) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    };
+    eat(model.n as u64);
+    eat(model.input_dim as u64);
+    for &w in &model.w_in {
+        eat(w as u64);
+    }
+    for &p in &model.w_r_indptr {
+        eat(p as u64);
+    }
+    for &c in &model.w_r_indices {
+        eat(c as u64);
+    }
+    for &v in &model.w_r_values {
+        eat(v as u64);
+    }
+    h
+}
+
+/// Per-request pre-quantized input strips: each sample's `T × input_dim`
+/// inputs quantized **once**, row-major, instead of once per (step, lane)
+/// inside the rollout loop. The native backend builds one per
+/// `execute_batch` call and hands worker chunks aligned sub-slices; the
+/// public batch entry points build one internally when not given one.
+pub struct PreparedInputs {
+    rows: Vec<Vec<i64>>,
+    scale: f64,
+    bias: f64,
+    q: u8,
+}
+
+impl PreparedInputs {
+    /// Quantize every sample's inputs once with `model`'s input quantizer.
+    pub fn build(model: &QuantEsn, samples: &[&TimeSeries]) -> Self {
+        let mut rows = Vec::with_capacity(samples.len());
+        for s in samples {
+            let t = s.inputs.rows();
+            let mut v = Vec::with_capacity(t * model.input_dim);
+            for step in 0..t {
+                let row = s.inputs.row(step);
+                for k in 0..model.input_dim {
+                    v.push(model.qz_u.quantize(row[k]));
+                }
+            }
+            rows.push(v);
+        }
+        Self { rows, scale: model.qz_u.scale, bias: model.qz_u.bias, q: model.qz_u.q }
+    }
+
+    /// True when these strips were produced by a quantizer identical to
+    /// `model`'s — reusing them is bit-exact.
+    pub fn matches(&self, model: &QuantEsn) -> bool {
+        self.scale == model.qz_u.scale && self.bias == model.qz_u.bias && self.q == model.qz_u.q
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Per-sample quantized rows, aligned with the samples passed to `build`.
+    pub(crate) fn rows(&self) -> &[Vec<i64>] {
+        &self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::melborn_sized;
+    use crate::esn::{EsnModel, ReadoutSpec, Reservoir, ReservoirSpec};
+    use crate::pruning::{prune_to_rate, Pruner, RandomPruner};
+    use crate::quant::QuantSpec;
+
+    fn model(q: u8) -> (QuantEsn, crate::data::Dataset) {
+        let data = melborn_sized(1, 40, 24);
+        let res = Reservoir::init(ReservoirSpec::paper(24, 1, 96, 0.9, 1.0, 5));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        (QuantEsn::from_model(&m, &data, QuantSpec::bits(q)), data)
+    }
+
+    /// Layout invariants: every row exactly once, per-row (col, val) runs
+    /// identical to the CSR row in order, slice widths equal the row nnz.
+    fn assert_layout_matches_csr(p: &PreparedWeights<i64>, qm: &QuantEsn) {
+        let mut seen = vec![false; p.n];
+        for sl in &p.slices {
+            for r in 0..sl.n_rows {
+                let row = p.rows[sl.rows_at + r] as usize;
+                assert!(!std::mem::replace(&mut seen[row], true), "row {row} visited twice");
+                let lo = qm.w_r_indptr[row];
+                assert_eq!(sl.width, qm.w_r_indptr[row + 1] - lo, "row {row} width");
+                let base = sl.data_at + r * sl.width;
+                for k in 0..sl.width {
+                    assert_eq!(p.cols[base + k] as usize, qm.w_r_indices[lo + k]);
+                    assert_eq!(p.vals[base + k], qm.w_r_values[lo + k]);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some row never visited");
+        assert_eq!(p.w_in, qm.w_in);
+    }
+
+    #[test]
+    fn sliced_layout_covers_csr_exactly_including_ragged_pruned_rows() {
+        let (qm, data) = model(6);
+        assert_layout_matches_csr(PreparedPlan::build(&qm, Kernel::Wide).as_wide(), &qm);
+        // Random pruning + compaction produces genuinely ragged row lengths
+        // (incl. empty rows) — the case the slicing exists for.
+        let scores = RandomPruner::new(23).scores(&qm, &data.train);
+        let pruned = prune_to_rate(&qm, &scores, 80.0);
+        let plan = PreparedPlan::build(&pruned, Kernel::Wide);
+        assert_layout_matches_csr(plan.as_wide(), &pruned);
+        assert!(plan.n_slices() >= 2, "pruned model should produce several width buckets");
+        // Default order sorts by width: slice widths strictly ascend.
+        let p = plan.as_wide();
+        for w in p.slices.windows(2) {
+            assert!(w[0].width < w[1].width);
+        }
+    }
+
+    #[test]
+    fn arbitrary_row_order_keeps_the_same_per_row_runs() {
+        let (qm, _) = model(4);
+        let order: Vec<usize> = (0..qm.n).rev().collect();
+        let plan = PreparedPlan::build_with_row_order(&qm, Kernel::Wide, &order);
+        assert_layout_matches_csr(plan.as_wide(), &qm);
+    }
+
+    #[test]
+    fn fingerprint_tracks_weight_content_not_just_geometry() {
+        let (qm, _) = model(6);
+        let plan = PreparedPlan::build(&qm, Kernel::Wide);
+        assert!(plan.matches(&qm));
+        let mut other = qm.clone();
+        let old = other.w_r_values[0];
+        other.set_weight(0, old + 1);
+        assert!(!plan.matches(&other), "same geometry, different weights must not match");
+        other.set_weight(0, old);
+        assert!(plan.matches(&other));
+    }
+
+    #[test]
+    fn prepared_inputs_match_per_step_quantization() {
+        let (qm, data) = model(8);
+        let refs: Vec<&crate::data::TimeSeries> = data.test.iter().take(5).collect();
+        let pre = PreparedInputs::build(&qm, &refs);
+        assert!(pre.matches(&qm));
+        assert_eq!(pre.len(), 5);
+        for (s, row) in refs.iter().zip(pre.rows()) {
+            for t in 0..s.inputs.rows() {
+                for k in 0..qm.input_dim {
+                    assert_eq!(
+                        row[t * qm.input_dim + k],
+                        qm.qz_u.quantize(s.inputs.row(t)[k])
+                    );
+                }
+            }
+        }
+    }
+}

@@ -102,7 +102,14 @@
 //! AVX-512) and the frontier scatter's dense branch and pooled accumulation
 //! run through the probed strip primitives ([`LaneElem::madd_strip`] /
 //! [`LaneElem::accum_strip`]), which are wrapping integer ops and therefore
-//! bit-identical across tiers whenever the bounds hold.
+//! bit-identical across tiers whenever the bounds hold. Since PR 8 the
+//! sparse few-lane branch is masked SIMD too
+//! ([`LaneElem::madd_strip_masked`]: write-masked stores on the vector
+//! tiers, the original bit-walk on the scalar tier), and the plan carries
+//! its scatter weights **reverse-index-ordered** (`col_w[k] =
+//! w_vals[col_slots[k]]`, pre-narrowed to the selected lane element), so
+//! the hot scatter loop does one contiguous weight load per MAC instead of
+//! a slot indirection plus an `i64` re-narrow.
 //!
 //! The batched path additionally retires a lane for the rest of a sample once
 //! its frontier is empty *and* the flipped weight can never re-ignite it —
@@ -229,11 +236,16 @@ pub struct CalibPlan<'a> {
     /// ISA tier the lane strips dispatch to (probed once at build time, or
     /// pinned by [`CalibPlan::build_pinned`] for bench runs).
     isa: Isa,
-    /// Narrow copy of `w_vals` for the i32 scatter (empty off that path;
+    /// Reverse-index-ordered weights: `col_w[k] = w_vals[col_slots[k]]`, so
+    /// the batched scatter reads its weight contiguously at `k` instead of
+    /// bouncing through `col_slots` twice per MAC. Always built — it is also
+    /// the wide-fallback weight array for out-of-bound hand-built flips.
+    col_w: Vec<i64>,
+    /// Narrow copy of `col_w` for the i32 scatter (empty off that path;
     /// the bounds guarantee the cast is lossless when narrow is selected).
-    w_vals_i32: Vec<i32>,
-    /// Narrow copy of `w_vals` for the i16 scatter (empty off that path).
-    w_vals_i16: Vec<i16>,
+    col_w_i32: Vec<i32>,
+    /// Narrow copy of `col_w` for the i16 scatter (empty off that path).
+    col_w_i16: Vec<i16>,
 }
 
 /// Reusable per-worker scratch for [`CalibPlan::eval_flip`]. Epoch-stamped
@@ -646,16 +658,20 @@ impl<'a> CalibPlan<'a> {
         let t_max = samples.iter().map(|sp| sp.t).max().unwrap_or(0);
         let bounds = KernelBounds::analyze(model, t_max);
         let kernel = choice.resolve(bounds.scoring_kernel(), "scoring plan");
-        let w_vals_i32 = match kernel {
-            Kernel::Narrow => {
-                model.w_r_values.iter().map(|&v| <i32 as LaneElem>::from_i64(v)).collect()
-            }
+        // Prepared scatter weights: re-order the baseline weights to reverse-
+        // index (CSC) order once at build time, so the hot scatter loop reads
+        // `col_w[k]` directly instead of `w_vals[col_slots[k]]` — one
+        // contiguous load per MAC in place of a dependent double indirection.
+        // The wide copy is always built (it also serves the out-of-bound
+        // wide fallback); the narrow copies only for the selected kernel
+        // (the bounds guarantee those casts are lossless).
+        let col_w: Vec<i64> = col_slots.iter().map(|&s| model.w_r_values[s]).collect();
+        let col_w_i32 = match kernel {
+            Kernel::Narrow => col_w.iter().map(|&v| <i32 as LaneElem>::from_i64(v)).collect(),
             Kernel::Narrow16 | Kernel::Wide => Vec::new(),
         };
-        let w_vals_i16 = match kernel {
-            Kernel::Narrow16 => {
-                model.w_r_values.iter().map(|&v| <i16 as LaneElem>::from_i64(v)).collect()
-            }
+        let col_w_i16 = match kernel {
+            Kernel::Narrow16 => col_w.iter().map(|&v| <i16 as LaneElem>::from_i64(v)).collect(),
             Kernel::Narrow | Kernel::Wide => Vec::new(),
         };
 
@@ -679,8 +695,9 @@ impl<'a> CalibPlan<'a> {
             bounds,
             kernel,
             isa,
-            w_vals_i32,
-            w_vals_i16,
+            col_w,
+            col_w_i32,
+            col_w_i16,
         };
         debug_assert_eq!(
             base_perf,
@@ -978,7 +995,7 @@ impl<'a> CalibPlan<'a> {
                     model,
                     chunk,
                     &mut sc.wide,
-                    &self.w_vals,
+                    &self.col_w,
                 ));
             }
             return out;
@@ -988,26 +1005,27 @@ impl<'a> CalibPlan<'a> {
                 model,
                 flips,
                 &mut sc.wide,
-                &self.w_vals,
+                &self.col_w,
             ),
             Kernel::Narrow => self.eval_flips_batched_g::<i32, BATCH_LANES_NARROW>(
                 model,
                 flips,
                 &mut sc.narrow,
-                &self.w_vals_i32,
+                &self.col_w_i32,
             ),
             Kernel::Narrow16 => self.eval_flips_batched_g::<i16, BATCH_LANES_NARROW16>(
                 model,
                 flips,
                 &mut sc.narrow16,
-                &self.w_vals_i16,
+                &self.col_w_i16,
             ),
         }
     }
 
     /// Width-generic body of [`CalibPlan::eval_flips_batched`]: `E`/`L` are
-    /// `(i64, 8)` (wide) or `(i32, 16)` (narrow); `w_e` is the plan's weight
-    /// array at the lane element width.
+    /// `(i64, 8)` (wide) or `(i32, 16)` (narrow); `w_e` is the plan's
+    /// reverse-index-ordered weight array (`col_w*`) at the lane element
+    /// width — indexed by scatter position `k`, not by slot.
     fn eval_flips_batched_g<E: LaneElem, const L: usize>(
         &self,
         model: &QuantEsn,
@@ -1059,12 +1077,15 @@ impl<'a> CalibPlan<'a> {
             let dv = &sc.cur.dev[j * L..(j + 1) * L];
             let jmask = sc.cur.mask[j];
             // Disjoint-leaning packing makes few-lane dirty neurons the
-            // common case: iterate set bits then, full unrolled width when
-            // the lanes are dense enough to vectorize profitably.
+            // common case: masked strip over the set bits then, full
+            // unrolled width when the lanes are dense enough that masking
+            // buys nothing.
             let dense = jmask.count_ones() as usize >= L / 2;
             for k in self.col_indptr[j]..self.col_indptr[j + 1] {
                 let row = self.col_rows[k];
-                let w = w_e[self.col_slots[k]];
+                // `col_w` is reverse-index-ordered at build time, so the
+                // weight load is contiguous in `k` — no slot indirection.
+                let w = w_e[k];
                 if sc.row_stamp[row] != sc.row_epoch {
                     sc.row_stamp[row] = sc.row_epoch;
                     sc.row_delta[row * L..(row + 1) * L].fill(E::default());
@@ -1076,12 +1097,11 @@ impl<'a> CalibPlan<'a> {
                     // in debug builds, so the overflow guards execute).
                     E::madd_strip(rd, w, dv, self.isa);
                 } else {
-                    let mut m = jmask;
-                    while m != 0 {
-                        let l = m.trailing_zeros() as usize;
-                        rd[l] = E::add(rd[l], E::mul(w, dv[l]));
-                        m &= m - 1;
-                    }
+                    // Sparse few-lane scatter: masked/gather strip — only
+                    // the set lanes are updated (write-masked stores on the
+                    // SIMD tiers, a bit-walk on the scalar tier, which also
+                    // runs the debug overflow guards).
+                    E::madd_strip_masked(rd, w, dv, jmask, self.isa);
                 }
             }
         }

@@ -113,6 +113,15 @@ pub(crate) trait LaneElem: Copy + Default + PartialEq + std::fmt::Debug + 'stati
     /// kernel is built from. Release builds dispatch to `isa`; debug builds
     /// always run the checked scalar loop.
     fn madd_strip(rd: &mut [Self], w: Self, dv: &[Self], isa: Isa);
+    /// **Masked** strip MAC: `rd[l] += w·dv[l]` only for lanes whose `mask`
+    /// bit is set (bit `l` ↔ lane `l`; bits at or beyond the strip length
+    /// are ignored). The sparse few-lane frontier scatter runs on this. The
+    /// scalar tier (and every debug build) bit-walks the set bits through
+    /// the checked ops — cheap when the mask is sparse and the overflow
+    /// guards still execute; AVX-512 uses native mask registers, AVX2
+    /// emulates the mask with per-lane bit tests (i64 on AVX2 falls back to
+    /// the bit-walk — no 64-bit low multiply below AVX-512DQ).
+    fn madd_strip_masked(rd: &mut [Self], w: Self, dv: &[Self], mask: u32, isa: Isa);
     /// Strip accumulate `acc[l] += src[l]` (pooled-feature maintenance).
     fn accum_strip(acc: &mut [Self], src: &[Self], isa: Isa);
 }
@@ -130,6 +139,22 @@ fn madd_scalar<E: LaneElem>(rd: &mut [E], w: E, dv: &[E]) {
 fn accum_scalar<E: LaneElem>(acc: &mut [E], src: &[E]) {
     for (a, &s) in acc.iter_mut().zip(src) {
         *a = E::add(*a, s);
+    }
+}
+
+/// Checked scalar masked strip MAC: bit-walk over the set mask bits (the
+/// pre-PR-8 sparse scatter loop, verbatim) — and the debug-build tier, so
+/// the narrow overflow guards run on exactly the lanes that are written.
+#[inline(always)]
+fn madd_masked_scalar<E: LaneElem>(rd: &mut [E], w: E, dv: &[E], mask: u32) {
+    let mut m = mask;
+    while m != 0 {
+        let l = m.trailing_zeros() as usize;
+        if l >= rd.len() {
+            break;
+        }
+        rd[l] = E::add(rd[l], E::mul(w, dv[l]));
+        m &= m - 1;
     }
 }
 
@@ -171,6 +196,20 @@ impl LaneElem for i64 {
         #[cfg(not(target_arch = "x86_64"))]
         let _ = isa;
         madd_scalar(rd, w, dv);
+    }
+    #[inline]
+    fn madd_strip_masked(rd: &mut [i64], w: i64, dv: &[i64], mask: u32, isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            // Same AVX2 gap as the unmasked wide MAC: only AVX-512DQ has a
+            // 64-bit low multiply, so AVX2 keeps the scalar bit-walk.
+            if dispatch_simd() && isa == Isa::Avx512 {
+                return unsafe { x86::madd_i64_avx512_masked(rd, w, dv, mask) };
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_masked_scalar(rd, w, dv, mask);
     }
     #[inline]
     fn accum_strip(acc: &mut [i64], src: &[i64], isa: Isa) {
@@ -236,6 +275,22 @@ impl LaneElem for i32 {
         madd_scalar(rd, w, dv);
     }
     #[inline]
+    fn madd_strip_masked(rd: &mut [i32], w: i32, dv: &[i32], mask: u32, isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::madd_i32_avx512_masked(rd, w, dv, mask) },
+                    Isa::Avx2 => return unsafe { x86::madd_i32_avx2_masked(rd, w, dv, mask) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_masked_scalar(rd, w, dv, mask);
+    }
+    #[inline]
     fn accum_strip(acc: &mut [i32], src: &[i32], isa: Isa) {
         #[cfg(target_arch = "x86_64")]
         {
@@ -297,6 +352,22 @@ impl LaneElem for i16 {
         #[cfg(not(target_arch = "x86_64"))]
         let _ = isa;
         madd_scalar(rd, w, dv);
+    }
+    #[inline]
+    fn madd_strip_masked(rd: &mut [i16], w: i16, dv: &[i16], mask: u32, isa: Isa) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if dispatch_simd() {
+                match isa {
+                    Isa::Avx512 => return unsafe { x86::madd_i16_avx512_masked(rd, w, dv, mask) },
+                    Isa::Avx2 => return unsafe { x86::madd_i16_avx2_masked(rd, w, dv, mask) },
+                    Isa::Scalar => {}
+                }
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = isa;
+        madd_masked_scalar(rd, w, dv, mask);
     }
     #[inline]
     fn accum_strip(acc: &mut [i16], src: &[i16], isa: Isa) {
@@ -363,6 +434,87 @@ mod x86 {
         }
         while i < rd.len() {
             rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            i += 1;
+        }
+    }
+
+    /// Emulated-mask i16 strip MAC: AVX2 has no mask registers, so lane
+    /// `l` of each register tests its own bit of the (shifted) mask — the
+    /// broadcast mask word ANDed with per-lane bit constants, compared for
+    /// equality, yields an all-ones/all-zeros lane mask that gates the
+    /// product before the add. Bit `i + l` of `mask` ↔ global lane `i + l`;
+    /// bits at or beyond the strip length are ignored.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_i16_avx2_masked(rd: &mut [i16], w: i16, dv: &[i16], mask: u32) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm256_set1_epi16(w);
+        // Lane l holds 1 << l (0x8000 is i16::MIN's bit pattern).
+        let sel = _mm256_set_epi16(
+            i16::MIN,
+            0x4000,
+            0x2000,
+            0x1000,
+            0x0800,
+            0x0400,
+            0x0200,
+            0x0100,
+            0x0080,
+            0x0040,
+            0x0020,
+            0x0010,
+            0x0008,
+            0x0004,
+            0x0002,
+            0x0001,
+        );
+        let m64 = mask as u64;
+        let mut i = 0usize;
+        while i + 16 <= rd.len() {
+            let bits = if i < 64 { ((m64 >> i) & 0xFFFF) as u16 } else { 0 };
+            let bv = _mm256_set1_epi16(bits as i16);
+            let lane_mask = _mm256_cmpeq_epi16(_mm256_and_si256(bv, sel), sel);
+            let d = _mm256_loadu_si256(dv.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_loadu_si256(rd.as_ptr().add(i) as *const __m256i);
+            let prod = _mm256_and_si256(_mm256_mullo_epi16(d, wv), lane_mask);
+            _mm256_storeu_si256(rd.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi16(r, prod));
+            i += 16;
+        }
+        while i < rd.len() {
+            if i < 64 && (m64 >> i) & 1 == 1 {
+                rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            }
+            i += 1;
+        }
+    }
+
+    /// Emulated-mask i32 strip MAC (see [`madd_i16_avx2_masked`]).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_i32_avx2_masked(rd: &mut [i32], w: i32, dv: &[i32], mask: u32) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm256_set1_epi32(w);
+        let sel = _mm256_set_epi32(0x80, 0x40, 0x20, 0x10, 0x08, 0x04, 0x02, 0x01);
+        let m64 = mask as u64;
+        let mut i = 0usize;
+        while i + 8 <= rd.len() {
+            let bits = if i < 64 { ((m64 >> i) & 0xFF) as i32 } else { 0 };
+            let bv = _mm256_set1_epi32(bits);
+            let lane_mask = _mm256_cmpeq_epi32(_mm256_and_si256(bv, sel), sel);
+            let d = _mm256_loadu_si256(dv.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_loadu_si256(rd.as_ptr().add(i) as *const __m256i);
+            let prod = _mm256_and_si256(_mm256_mullo_epi32(d, wv), lane_mask);
+            _mm256_storeu_si256(rd.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi32(r, prod));
+            i += 8;
+        }
+        while i < rd.len() {
+            if i < 64 && (m64 >> i) & 1 == 1 {
+                rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            }
             i += 1;
         }
     }
@@ -501,6 +653,87 @@ mod x86 {
         }
     }
 
+    /// Native-mask i16 strip MAC: the frontier's lane bitmask maps straight
+    /// onto an AVX-512 mask register — one masked add gates the whole strip
+    /// with zero emulation overhead. Bits at or beyond the strip length are
+    /// ignored.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F+BW support at runtime.
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn madd_i16_avx512_masked(rd: &mut [i16], w: i16, dv: &[i16], mask: u32) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi16(w);
+        let m64 = mask as u64;
+        let mut i = 0usize;
+        while i + 32 <= rd.len() {
+            let k = if i < 64 { (m64 >> i) as __mmask32 } else { 0 };
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            let s = _mm512_mask_add_epi16(r, k, r, _mm512_mullo_epi16(d, wv));
+            store512(rd.as_mut_ptr().add(i) as *mut u8, s);
+            i += 32;
+        }
+        while i < rd.len() {
+            if i < 64 && (m64 >> i) & 1 == 1 {
+                rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            }
+            i += 1;
+        }
+    }
+
+    /// Native-mask i32 strip MAC (see [`madd_i16_avx512_masked`]).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn madd_i32_avx512_masked(rd: &mut [i32], w: i32, dv: &[i32], mask: u32) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi32(w);
+        let m64 = mask as u64;
+        let mut i = 0usize;
+        while i + 16 <= rd.len() {
+            let k = if i < 64 { (m64 >> i) as __mmask16 } else { 0 };
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            let s = _mm512_mask_add_epi32(r, k, r, _mm512_mullo_epi32(d, wv));
+            store512(rd.as_mut_ptr().add(i) as *mut u8, s);
+            i += 16;
+        }
+        while i < rd.len() {
+            if i < 64 && (m64 >> i) & 1 == 1 {
+                rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            }
+            i += 1;
+        }
+    }
+
+    /// Native-mask i64 strip MAC (see [`madd_i16_avx512_masked`]).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F+DQ support at runtime.
+    #[target_feature(enable = "avx512f,avx512dq")]
+    pub unsafe fn madd_i64_avx512_masked(rd: &mut [i64], w: i64, dv: &[i64], mask: u32) {
+        debug_assert_eq!(rd.len(), dv.len());
+        let wv = _mm512_set1_epi64(w);
+        let m64 = mask as u64;
+        let mut i = 0usize;
+        while i + 8 <= rd.len() {
+            let k = if i < 64 { (m64 >> i) as __mmask8 } else { 0 };
+            let d = load512(dv.as_ptr().add(i) as *const u8);
+            let r = load512(rd.as_ptr().add(i) as *const u8);
+            let s = _mm512_mask_add_epi64(r, k, r, _mm512_mullo_epi64(d, wv));
+            store512(rd.as_mut_ptr().add(i) as *mut u8, s);
+            i += 8;
+        }
+        while i < rd.len() {
+            if i < 64 && (m64 >> i) & 1 == 1 {
+                rd[i] = rd[i].wrapping_add(w.wrapping_mul(dv[i]));
+            }
+            i += 1;
+        }
+    }
+
     /// # Safety
     /// Caller must have verified AVX-512F+BW support at runtime.
     #[target_feature(enable = "avx512f,avx512bw")]
@@ -603,6 +836,38 @@ mod tests {
             case::<i16>(&small, 25, len);
             case::<i32>(&small, 1999, len);
             case::<i64>(&small, 123_456_789, len);
+        }
+    }
+
+    /// The masked strip MAC's contract is *pure* — only masked lanes are
+    /// written, whatever the unmasked lanes hold (the frontier call site
+    /// additionally guarantees unmasked deviations are zero, but the
+    /// primitive must not rely on it). Every available tier vs the checked
+    /// scalar bit-walk, on deliberately nonzero unmasked lanes.
+    #[test]
+    fn masked_madd_tiers_agree_with_scalar_bit_walk() {
+        fn case<E: LaneElem>(vals: &[i64], w: i64, len: usize, mask: u32) {
+            let dv: Vec<E> = (0..len).map(|i| E::from_i64(vals[i % vals.len()])).collect();
+            let base: Vec<E> =
+                (0..len).map(|i| E::from_i64(vals[(i * 5 + 2) % vals.len()])).collect();
+            let mut want = base.clone();
+            madd_masked_scalar(&mut want, E::from_i64(w), &dv, mask);
+            for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+                if !isa.available() {
+                    continue;
+                }
+                let mut got = base.clone();
+                E::madd_strip_masked(&mut got, E::from_i64(w), &dv, mask, isa);
+                assert_eq!(got, want, "masked madd {isa:?} len={len} mask={mask:#x}");
+            }
+        }
+        let small = [-127i64, -31, -7, 0, 1, 7, 31, 127, 64, -3];
+        for len in [8usize, 16, 32, 5, 19, 33] {
+            for mask in [0u32, 1, 0b1010, 0x8000_0001, 0x00ff_ff00, u32::MAX] {
+                case::<i16>(&small, 25, len, mask);
+                case::<i32>(&small, 1999, len, mask);
+                case::<i64>(&small, 123_456_789, len, mask);
+            }
         }
     }
 }

@@ -12,6 +12,20 @@
 //! output order — and every bit of every prediction — is independent of the
 //! worker count, the kernel width and the ISA tier.
 //!
+//! # Prepared execution plans
+//!
+//! The rollouts run the *prepared* layout (`quant::plan`): each worker
+//! scratch carries a fingerprint-gated [`crate::quant::PreparedPlan`]
+//! holding the model's weights pre-narrowed to the
+//! lane element type in a row-length-sliced ELL layout, and every
+//! `execute_batch` call quantizes the request's input sequences **once** into
+//! a [`PreparedInputs`] strip, fanning aligned sub-slices to the worker
+//! chunks — so the per-step hot loop performs no weight widening, no CSR
+//! `indptr` chasing and no input quantization. Plans are invalidated by
+//! weight *content* (not geometry): multi-variant serving reuses these
+//! scratches across same-shaped models, and the fingerprint is what makes
+//! that safe.
+//!
 //! For *multi-variant* scale-out (one engine per variant group instead of
 //! one engine serializing all variants) see the coordinator's shard mode
 //! (`ServeConfig::shards`): each shard thread builds its own
@@ -20,7 +34,7 @@
 use anyhow::{ensure, Result};
 
 use crate::data::{Task, TimeSeries};
-use crate::quant::{Kernel, KernelBounds, KernelChoice, LaneScratch, QuantEsn};
+use crate::quant::{Kernel, KernelBounds, KernelChoice, LaneScratch, PreparedInputs, QuantEsn};
 
 use super::backend::{ExecBackend, Prediction};
 
@@ -118,11 +132,14 @@ impl ExecBackend for NativeBackend {
         // Worker sizing needs the chunk count, which needs the lane width
         // (8/16/32 by resolved kernel) — resolve first, then clamp.
         let lane_w = self.ensure_scratches(model, self.cfg.workers.max(1));
+        // Quantize the whole request's input sequences exactly once; worker
+        // chunks get aligned sub-slices instead of re-quantizing per step.
+        let pre = PreparedInputs::build(model, samples);
         let n_chunks = samples.len().div_ceil(lane_w);
         let workers = self.workers_for(n_chunks);
         if workers <= 1 {
             let sc = &mut self.scratches[0];
-            return Ok(predict_chunk(model, samples, sc));
+            return Ok(predict_chunk(model, samples, pre.rows(), sc));
         }
         // Round-robin the lane chunks over scoped workers; merge by index.
         let chunks: Vec<&[&TimeSeries]> = samples.chunks(lane_w).collect();
@@ -132,10 +149,13 @@ impl ExecBackend for NativeBackend {
             let mut handles = Vec::with_capacity(workers);
             for (w, sc) in self.scratches.iter_mut().enumerate().take(workers) {
                 let chunks = &chunks;
+                let pre = &pre;
                 handles.push(scope.spawn(move || {
                     let mut out: Vec<(usize, Vec<Prediction>)> = Vec::new();
                     for ci in (w..chunks.len()).step_by(workers) {
-                        out.push((ci, predict_chunk(model, chunks[ci], sc)));
+                        let at = ci * lane_w;
+                        let rows = &pre.rows()[at..at + chunks[ci].len()];
+                        out.push((ci, predict_chunk(model, chunks[ci], rows, sc)));
                     }
                     out
                 }));
@@ -150,14 +170,20 @@ impl ExecBackend for NativeBackend {
     }
 }
 
-/// One lane chunk through the task-appropriate kernel.
-fn predict_chunk(model: &QuantEsn, chunk: &[&TimeSeries], sc: &mut LaneScratch) -> Vec<Prediction> {
+/// One lane chunk through the task-appropriate kernel, on the prepared
+/// layout with the request's pre-quantized input rows for this chunk.
+fn predict_chunk(
+    model: &QuantEsn,
+    chunk: &[&TimeSeries],
+    pre: &[Vec<i64>],
+    sc: &mut LaneScratch,
+) -> Vec<Prediction> {
     match model.task {
         Task::Classification => {
-            model.classify_batch(chunk, sc).into_iter().map(Prediction::Class).collect()
+            model.classify_batch_pre(chunk, pre, sc).into_iter().map(Prediction::Class).collect()
         }
         Task::Regression => {
-            model.predict_batch(chunk, sc).into_iter().map(Prediction::Values).collect()
+            model.predict_batch_pre(chunk, pre, sc).into_iter().map(Prediction::Values).collect()
         }
     }
 }

@@ -360,6 +360,58 @@ fn compacted_variant_serves_bit_identical_responses_with_fewer_macs() {
     server.shutdown().unwrap();
 }
 
+/// Serving through the prepared sliced-ELL execution plan: the native backend
+/// now runs every batch through `PreparedPlan` + `PreparedInputs`, and this
+/// pins the whole serving stack (batcher → shards → prepared lane kernels) to
+/// the scalar golden model on a **ragged** pruned variant — multiple ELL
+/// slice widths — next to its unpruned twin. Used by CI's bench-smoke job as
+/// the prepared-plan serve smoke.
+#[test]
+fn prepared_plan_serving_matches_scalar_golden_model() {
+    use rcx::pruning::{prune_to_rate, Pruner, RandomPruner};
+    use rcx::quant::PreparedPlan;
+
+    let data = melborn_sized(21, 100, 60);
+    let res = Reservoir::init(ReservoirSpec::paper(50, 1, 250, 0.9, 1.0, 11));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let scores = RandomPruner::new(9).scores(&qm, &data.train);
+    let pruned = prune_to_rate(&qm, &scores, 75.0);
+    // The pruned live rows must be ragged enough to exercise >1 slice width.
+    let (kern, _) = rcx::quant::resolve_inference(&pruned, rcx::quant::KernelChoice::Auto);
+    let plan = PreparedPlan::build(&pruned, kern);
+    assert!(plan.n_slices() >= 2, "p=75 model unexpectedly uniform: {} slice", plan.n_slices());
+
+    let server = Server::start(
+        native_cfg(16, 2),
+        vec![VariantSpec::new("full", qm.clone()), VariantSpec::new("pruned", pruned.clone())],
+    )
+    .unwrap();
+    let client = server.client();
+    let hf = server.handle("full").unwrap();
+    let hp = server.handle("pruned").unwrap();
+    let pending: Vec<_> = data
+        .test
+        .iter()
+        .map(|s| (client.submit(&hf, s.clone()).unwrap(), client.submit(&hp, s.clone()).unwrap()))
+        .collect();
+    for (i, (rf, rp)) in pending.into_iter().enumerate() {
+        let pf = rf.recv_timeout(Duration::from_secs(30)).expect("full response lost");
+        let pp = rp.recv_timeout(Duration::from_secs(30)).expect("pruned response lost");
+        assert_eq!(
+            pf.prediction,
+            Prediction::Class(qm.classify(&data.test[i])),
+            "sample {i}: prepared serving diverged from the scalar golden model"
+        );
+        assert_eq!(
+            pp.prediction,
+            Prediction::Class(pruned.classify(&data.test[i])),
+            "sample {i}: prepared serving of the ragged pruned variant diverged"
+        );
+    }
+    server.shutdown().unwrap();
+}
+
 /// Backpressure: with a queue cap of 8 and a batcher that cannot flush on
 /// its own (max_wait 30s, max_batch 64), exactly 8 of 13 submits are
 /// admitted and the rest come back as typed `QueueFull` — no blocking, no

@@ -13,6 +13,11 @@
 //! benchmark × pooling × bit-width grid — they must never fire on a
 //! bound-approved model (debug builds route every SIMD strip through the
 //! checked scalar tier precisely so these guards execute).
+//!
+//! The bottom sections pin the *inference* layouts the same way: CSR
+//! compaction (pruned-zero removal) and the prepared sliced-ELL execution
+//! plans must both be bit-identical to their CSR oracles on the full
+//! benchmark × pooling × bit-width × prune-rate × kernel grid.
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
 use rcx::data::{Dataset, Task, TimeSeries};
@@ -23,8 +28,8 @@ use rcx::pruning::{
 };
 use rcx::quant::{
     flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, Kernel, KernelBounds,
-    KernelChoice, LaneScratch, QuantEsn, QuantSpec, BATCH_LANES, BATCH_LANES_NARROW16,
-    SAMPLE_LANES_NARROW16,
+    KernelChoice, LaneScratch, PreparedInputs, PreparedPlan, QuantEsn, QuantSpec, BATCH_LANES,
+    BATCH_LANES_NARROW16, SAMPLE_LANES_NARROW16,
 };
 use rcx::rng::{Pcg64, Rng};
 
@@ -410,5 +415,130 @@ fn compaction_equivalence_henon_regression() {
         for p in [15.0, 60.0, 90.0] {
             assert_compaction_equivalent(&qm, &data, p, &format!("henon q={q} p={p}"));
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prepared-plan equivalence: the sliced-ELL prepared layout reorders rows and
+// pre-narrows weights but performs the exact same multiset of wrapping-integer
+// MACs per row, so the production batch entry points (which build/reuse a
+// PreparedPlan and PreparedInputs) must be **bit-identical** to the retained
+// CSR-walk oracle (`classify_batch_csr` / `predict_batch_csr`) on every
+// benchmark, both pooling modes, every bit-width, every prune rate and every
+// admissible lane kernel tier — including any slice-bucket row permutation.
+
+/// One `(model, data)` cell of the prepared-vs-oracle grid: every admissible
+/// kernel tier (plus Auto), the production prepared path, the shared-inputs
+/// entry point, and the CSR oracle must all agree exactly.
+fn assert_prepared_equivalent(qm: &QuantEsn, data: &Dataset, tag: &str) {
+    let refs: Vec<&TimeSeries> = data.test.iter().collect();
+    let pre = PreparedInputs::build(qm, &refs);
+    let mut choices = vec![KernelChoice::Auto, KernelChoice::Narrow, KernelChoice::Wide];
+    if KernelBounds::analyze(qm, 0).inference_kernel() == Kernel::Narrow16 {
+        choices.push(KernelChoice::Narrow16);
+    }
+    for choice in choices {
+        let mut sc_p = LaneScratch::for_model_with(qm, choice);
+        let mut sc_o = LaneScratch::for_model_with(qm, choice);
+        match data.task {
+            Task::Classification => {
+                let oracle = qm.classify_batch_csr(&refs, &mut sc_o);
+                assert_eq!(
+                    qm.classify_batch(&refs, &mut sc_p),
+                    oracle,
+                    "{tag} {choice:?}: prepared classify != CSR oracle"
+                );
+                assert_eq!(
+                    qm.classify_batch_with_inputs(&refs, &pre, &mut sc_p),
+                    oracle,
+                    "{tag} {choice:?}: with_inputs classify != CSR oracle"
+                );
+            }
+            Task::Regression => {
+                let oracle = qm.predict_batch_csr(&refs, &mut sc_o);
+                assert_eq!(
+                    qm.predict_batch(&refs, &mut sc_p),
+                    oracle,
+                    "{tag} {choice:?}: prepared predict != CSR oracle"
+                );
+                assert_eq!(
+                    qm.predict_batch_with_inputs(&refs, &pre, &mut sc_p),
+                    oracle,
+                    "{tag} {choice:?}: with_inputs predict != CSR oracle"
+                );
+            }
+        }
+    }
+}
+
+/// Sweep one benchmark through q × p; p = 0 keeps the unpruned model, the
+/// rest go through `prune_to_rate` so the prepared layout sees ragged live
+/// row lengths (multiple ELL slices).
+fn prepared_grid(m: &EsnModel, data: &Dataset, tag: &str) {
+    for q in [4u8, 6, 8] {
+        let qm = QuantEsn::from_model(m, data, QuantSpec::bits(q));
+        assert_prepared_equivalent(&qm, data, &format!("{tag} q={q} p=0"));
+        let scores = RandomPruner::new(23).scores(&qm, &data.train);
+        for p in [15.0, 60.0, 90.0] {
+            let pruned = prune_to_rate(&qm, &scores, p);
+            assert_prepared_equivalent(&pruned, data, &format!("{tag} q={q} p={p}"));
+        }
+    }
+}
+
+#[test]
+fn prepared_equivalence_melborn_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = melborn(features);
+        prepared_grid(&m, &data, &format!("melborn/{features:?}"));
+    }
+}
+
+#[test]
+fn prepared_equivalence_pen_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = pen(features);
+        prepared_grid(&m, &data, &format!("pen/{features:?}"));
+    }
+}
+
+#[test]
+fn prepared_equivalence_henon_regression() {
+    let (m, data) = henon();
+    prepared_grid(&m, &data, "henon");
+}
+
+/// Property: the row order fed to the slicer is pure layout — ANY
+/// permutation of the rows (random shuffles and the reverse of the default
+/// nnz-sorted order) produces a plan whose outputs are bit-identical to the
+/// CSR oracle, because each row's accumulator is an independent wrapping
+/// sum over the same multiset of MACs.
+#[test]
+fn slice_bucket_row_permutation_cannot_change_outputs() {
+    let (m, data) = melborn(Features::MeanState);
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let scores = RandomPruner::new(23).scores(&qm, &data.train);
+    let pruned = prune_to_rate(&qm, &scores, 60.0);
+    let refs: Vec<&TimeSeries> = data.test.iter().collect();
+    let mut sc_o = LaneScratch::for_model(&pruned);
+    let oracle = pruned.classify_batch_csr(&refs, &mut sc_o);
+    let mut rng = Pcg64::seed(41);
+    for round in 0..8 {
+        let mut order: Vec<usize> = (0..pruned.n).collect();
+        if round == 0 {
+            order.reverse();
+        } else {
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+        }
+        let mut sc = LaneScratch::for_model(&pruned);
+        let plan = PreparedPlan::build_with_row_order(&pruned, sc.kernel(), &order);
+        sc.install_prepared(&pruned, plan);
+        assert_eq!(
+            pruned.classify_batch(&refs, &mut sc),
+            oracle,
+            "round {round}: permuted row order changed the served labels"
+        );
     }
 }

@@ -12,9 +12,10 @@ Rust toolchain. This tool closes the loop:
   at 8 and 16 lanes, the narrow-vs-wide L3-g kernel head-to-head, the L3-h
   SIMD-dispatch grid — kernel width x ISA tier, the native kernel speedup,
   the closed-loop serve grid, the L3-j overload-QoS sweep — served/shed/
-  degraded accounting plus the queue high-water vs cap gate, and the L3-i
+  degraded accounting plus the queue high-water vs cap gate, the L3-i
   compacted-vs-zeroed CSR grid with the sequential-vs-parallel DSE
-  wall-clock).
+  wall-clock, and the L3-k prepared sliced-ELL plan vs CSR-oracle
+  head-to-head with its static indirection/convert cost model).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
@@ -47,6 +48,10 @@ SCHEMA = {
         "rows", "bit_identical", "melborn_macs_ratio_p90", "dse_configs",
         "dse_sequential_s", "dse_parallel_s", "dse_speedup",
     },
+    "l3k_prepared": {
+        "rows", "bit_identical", "samples", "scoring_sequential_s",
+        "scoring_batched_s", "scoring_speedup",
+    },
 }
 L3B_ROW_KEYS = {
     "workers", "dense_s", "incremental_s", "batched_s",
@@ -67,6 +72,11 @@ L3J_ROW_KEYS = {
 L3I_ROW_KEYS = {
     "benchmark", "p", "live", "structural", "macs_zeroed", "macs_compacted",
     "macs_ratio", "kernel", "isa", "zeroed_us", "compacted_us", "speedup",
+}
+L3K_ROW_KEYS = {
+    "model", "kernel", "isa", "n_slices", "width_min", "width_max",
+    "indirections_csr", "indirections_prepared", "weight_converts_csr",
+    "weight_converts_prepared", "csr_us", "prepared_us", "speedup",
 }
 
 
@@ -122,6 +132,23 @@ def validate(bench):
             "l3i_compaction.melborn_macs_ratio_p90 = "
             f"{comp['melborn_macs_ratio_p90']} < 5.0 — compaction regressed"
         )
+    prep = bench["l3k_prepared"]
+    if not prep["bit_identical"]:
+        fail("l3k_prepared.bit_identical is false — the bench should have aborted")
+    for row in prep["rows"]:
+        missing = L3K_ROW_KEYS - set(row)
+        if missing:
+            fail(f"l3k_prepared row {row} missing {sorted(missing)}")
+        if row["weight_converts_prepared"] != 0:
+            fail(
+                f"l3k_prepared row {row} reports per-step weight converts on "
+                "the prepared path — the width-typed layout regressed"
+            )
+        if row["indirections_prepared"] >= row["indirections_csr"]:
+            fail(
+                f"l3k_prepared row {row}: prepared layout no longer reduces "
+                "per-step indirections vs CSR"
+            )
 
 
 def wname(workers):
@@ -229,6 +256,27 @@ def render_block(bench):
         f"— {c['dse_speedup']:.2f}x, byte-identical results; melborn p=90 "
         f"compacted executes {c['melborn_macs_ratio_p90']:.1f}x fewer MACs/step "
         f"than unpruned (floor: 5x)."
+    )
+    pk = bench["l3k_prepared"]
+    out.append("")
+    out.append("| L3-k prepared plan | kernel | slices (widths) | "
+               "indirections/step (CSR -> prepared) | converts/step | "
+               "classify speedup |")
+    out.append("|---|---|---|---|---|---|")
+    for r in pk["rows"]:
+        out.append(
+            f"| {r['model']} | {r['kernel']}/{r['isa']} | "
+            f"{r['n_slices']} ({r['width_min']}..{r['width_max']}) | "
+            f"{r['indirections_csr']} -> {r['indirections_prepared']} | "
+            f"{r['weight_converts_csr']} -> {r['weight_converts_prepared']} | "
+            f"{r['speedup']:.2f}x |"
+        )
+    out.append("")
+    out.append(
+        f"L3-k classify rows ran {pk['samples']}-sample batches; scoring: "
+        f"sequential slot-walk {secs(pk['scoring_sequential_s'])} vs "
+        f"col-ordered batched {secs(pk['scoring_batched_s'])} — "
+        f"{pk['scoring_speedup']:.2f}x, bit-identical."
     )
     return "\n".join(out)
 

@@ -12,13 +12,18 @@ the bound on real data by asserting every narrow-path intermediate stays
 inside the selected width (i16 for narrow16, i32 for narrow), plus the
 pruned-CSR compaction transform (`compact`): dense evaluation and the bound
 analysis must be representation-invariant between a zeroed and a physically
-compacted reservoir. Asserts
+compacted reservoir. The batched plan mirrors CalibPlan's reverse-index-
+ordered scatter weights (`col_w`) — the lane step reads its weight aligned
+with the column walk, no per-MAC slot indirection — while the sequential
+`eval_flip` keeps the slot-indexed walk as the oracle, so a weight-ordering
+bug cannot cancel out. Asserts
 bit-identical Perf for every (slot, bit) flip on random sparse models,
-sequentially and through packed batches, including models deliberately
-constructed to FAIL a bound and take the next-wider fallback (i16 → i32,
-i32 → wide). (The Rust SIMD dispatch needs no mirror of its own: all ISA
-tiers are wrapping integer strips, bit-identical to this algebra whenever
-the bounds hold.)
+sequentially and through packed batches — including ragged physically
+compacted (pruned) models — and models deliberately constructed to FAIL a
+bound and take the next-wider fallback (i16 → i32, i32 → wide). (The Rust
+SIMD dispatch needs no mirror of its own: all ISA tiers — including the
+masked strip the sparse few-lane scatter branch now uses — are wrapping
+integer strips, bit-identical to this algebra whenever the bounds hold.)
 
 Usage:
     python tools/frontier_mirror.py --check   # CI gate: all correctness cases
@@ -241,6 +246,12 @@ class Plan:
                 j = model.indices[k]
                 self.col[j].append((i, k))
                 self.slot_rc.append((i, j))
+        # Reverse-index-ordered scatter weights (mirror of CalibPlan::col_w):
+        # the batched step reads its weight aligned with the (row, slot) walk
+        # instead of bouncing through the slot index — `col_w[j][idx]` is the
+        # weight of `col[j][idx]`. The sequential `eval_flip` keeps the
+        # slot-indexed walk and is the oracle the batched path is pinned to.
+        self.col_w = [[model.values[k] for (_i, k) in self.col[j]] for j in range(n)]
         # per-sample caches
         self.sp = []
         for u, label, tgt in model.samples:
@@ -467,13 +478,17 @@ class Plan:
         delta = {}
         for j, dv in cur.items():
             # mirror of the Rust lane mask: scatter only lanes with a nonzero
-            # deviation at this neuron (adding w*0 would be identical)
+            # deviation at this neuron. The Rust sparse branch is now a masked
+            # SIMD strip (madd_strip_masked) — algebraically the same per-lane
+            # update walk as this nz list, and adding w*0 on the unmasked
+            # dense branch would be identical either way.
             nz = [l for l in range(L) if dv[l] != 0]
-            for (row, k) in self.col[j]:
+            for (row, _k), w in zip(self.col[j], self.col_w[j]):
+                # weight comes from the plan's col-ordered copy, mirroring
+                # CalibPlan::col_w — no per-MAC slot indirection
                 rd = delta.get(row)
                 if rd is None:
                     rd = delta[row] = [0] * L
-                w = m.values[k]
                 for l in nz:
                     rd[l] = self._ck(rd[l] + self._ck(w * dv[l]))
         for l in range(b):
@@ -695,7 +710,7 @@ def all_candidates(model):
 
 
 def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_dim=3,
-                     nnz=4, kernel="auto", expect_lanes=None, inflate=None):
+                     nnz=4, kernel="auto", expect_lanes=None, inflate=None, frac=None):
     """Mirror of the Rust batched scorer's pipeline: locality-sort all
     candidates by support row span, pack batches (overlap-tolerant top-up),
     evaluate each batch through the lane algebra, and compare every lane
@@ -703,11 +718,19 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
     no-op-containing) batches that the packer never promises to produce.
     `kernel` pins the lane width like KernelChoice; `inflate` multiplies the
     reservoir weights to construct a model that FAILS the overflow bound
-    (the forced wide-fallback case); `expect_lanes` asserts the selection."""
+    (the forced wide-fallback case); `expect_lanes` asserts the selection;
+    `frac` prunes `frac`% of the slots and compacts the CSR first, so the
+    plan's col-ordered weight copy is exercised on a ragged live-only model
+    (the batched scorer runs post-compaction in the Rust DSE loop)."""
     rng = random.Random(seed)
     model = Model(rng, n, q, task, features, washout, out_dim, nnz, T, n_samples)
     if inflate:
         model.values = [v * inflate for v in model.values]
+    if frac is not None:
+        k = int(frac / 100.0 * len(model.values))
+        for idx in rng.sample(range(len(model.values)), k):
+            model.values[idx] = 0
+        model = compact(model)
     plan = Plan(model, kernel=kernel)
     if expect_lanes is not None:
         assert plan.lanes == expect_lanes, \
@@ -762,8 +785,9 @@ def run_batched_case(seed, task, features, n, q, T, n_samples, washout=0, out_di
                 print(f"  FALLBACK MISMATCH seed={seed} slot={slot} nv={nv}: "
                       f"batched={perf} seq={seq}")
     fill = len(cands) / max(len(batches), 1)
+    ptag = f", p={frac}% live={len(model.values)}" if frac is not None else ""
     print(f"batched(task={task}, feat={features}, n={n}, q={q}, T={T}, ns={n_samples}, "
-          f"wo={washout}, lanes={plan.lanes}): {len(batches)} batches "
+          f"wo={washout}, lanes={plan.lanes}{ptag}): {len(batches)} batches "
           f"(fill {fill:.2f}), {total} lanes, {mismatches} mismatches")
     return mismatches
 
@@ -857,6 +881,19 @@ def run_checks():
                             inflate=10**8, expect_lanes=BATCH_LANES)
     bad += run_batched_case(20, "reg", "mean", n=10, q=8, T=12, n_samples=3, washout=2,
                             out_dim=2, inflate=10**8, expect_lanes=BATCH_LANES)
+    # Col-ordered weights on ragged compacted models: the batched scorer's
+    # plan carries its scatter weights reverse-index-ordered (CalibPlan::
+    # col_w), so run the full batched-vs-sequential sweep on pruned models
+    # whose compacted rows have wildly uneven lengths — plus a pruned
+    # bound-failing model that must take the wide fallback through the same
+    # col-ordered array.
+    bad += run_batched_case(41, "cls", "mean", n=14, q=6, T=10, n_samples=8, frac=60,
+                            expect_lanes=BATCH_LANES_NARROW16)
+    bad += run_batched_case(42, "cls", "last", n=12, q=4, T=10, n_samples=8, frac=90)
+    bad += run_batched_case(43, "reg", "mean", n=12, q=8, T=12, n_samples=3, frac=75,
+                            washout=3, out_dim=2)
+    bad += run_batched_case(44, "cls", "mean", n=12, q=8, T=10, n_samples=6, frac=50,
+                            inflate=10**8, expect_lanes=BATCH_LANES)
     # Pruned-CSR compaction: physically removing dead slots must leave the
     # dense evaluation and the bound re-resolution bit-identical (the
     # inference-side lane suite lives in native_batch_mirror.py).
@@ -867,7 +904,8 @@ def run_checks():
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "frontier algorithm diverges from dense reference"
     print("OK: incremental == batched == dense on all cases "
-          "(narrow16 + narrow + wide kernels)")
+          "(narrow16 + narrow + wide kernels, col-ordered scatter weights, "
+          "ragged compacted models)")
 
 
 def run_perf():

@@ -29,6 +29,19 @@ unpruned lands on i32; one live slot per row shrinks the row L1 under the
 i16 bound → 32 lanes), with already-narrowest and inflated-wide controls
 asserting the tier must NOT move.
 
+The prepared-plan suite mirrors `quant/plan.rs` (`PreparedPlan` /
+`PreparedWeights`): live rows re-laid into a row-length-sliced ELL (rows
+stably bucketed by nnz, column ids and weights slice-contiguous) must serve
+bit-identical classify/predict to the CSR walk — including on a ragged-row
+pruned+compacted model (multiple slice widths), under an arbitrary row
+permutation, and on a bound-failing inflated model that falls back to the
+wide tier. Both step kernels **count their irregular loads and i64→lane
+weight converts as they execute**, so the per-step indirection reduction
+quoted in EXPERIMENTS.md §Perf is measured here, not modeled: CSR walks
+2·(n+1) indptr bounds + nnz column ids + nnz weight loads each needing a
+convert; the sliced layout walks 3 descriptors per slice + n row ids + nnz
+column ids with zero converts (weights are pre-typed at build).
+
 Usage:
     python tools/native_batch_mirror.py   # the CI gate; no flags
 """
@@ -150,25 +163,97 @@ class Lanes:
         return v
 
 
-def step_lanes(m, lk, width, u_lanes, s_prev, s_next, active):
+def step_lanes(m, lk, width, u_lanes, s_prev, s_next, active, stats=None):
     L = lk.lanes
     for i in range(m.n):
         # input projection, lane-wide (input_dim = 1)
         acc_in = [lk.ck(m.w_in[i] * u_lanes[l]) for l in range(width)]
         acc_r = [0] * L
+        if stats is not None:
+            stats["irregular"] += 2  # indptr[i], indptr[i+1]
         for k in range(m.indptr[i], m.indptr[i + 1]):
             w = m.values[k]
             base = m.indices[k] * L
+            if stats is not None:
+                # column id load + weight load, and the weight needs an
+                # i64 -> lane-element convert on every step (batch.rs
+                # `step_lanes_csr_g`'s E::from_i64)
+                stats["irregular"] += 2
+                stats["converts"] += 1
             for l in range(width):
                 acc_r[l] = lk.ck(acc_r[l] + lk.ck(w * s_prev[base + l]))
         for l in range(width):
             if active[l]:
                 # the m_in multiply and the << F shift widen to i64 first
                 s_next[i * L + l] = m.ladder.apply(m.m_in * acc_in[l] + (acc_r[l] << m.f))
+    if stats is not None:
+        stats["steps"] += 1
 
 
-def rollout_lanes(m, lk, chunk, pool, emit):
-    """chunk: list of u_int sequences (≤ lk.lanes). emit(t, l, col)."""
+# ---- prepared sliced-ELL layout (mirror of quant/plan.rs PreparedWeights) ----
+
+class Sliced:
+    """Row-length-sliced ELL re-layout of a model's CSR: rows bucketed into
+    maximal equal-nnz runs of a row order (default: stably sorted by nnz, the
+    mirror of plan.rs `default_order`), column ids and weights slice-
+    contiguous so the inner MAC loop runs fixed trip counts with no indptr
+    chasing. Pure layout: each row keeps its own MACs in CSR order, so every
+    per-row accumulator is the identical integer sum."""
+
+    def __init__(self, m, order=None):
+        if order is None:
+            order = sorted(range(m.n), key=lambda i: m.indptr[i + 1] - m.indptr[i])
+        assert sorted(order) == list(range(m.n)), "order must be a row permutation"
+        self.slices = []  # dicts: width / rows_at / n_rows / data_at
+        self.rows, self.cols, self.vals = [], [], []
+        for i in order:
+            nnz = m.indptr[i + 1] - m.indptr[i]
+            if not self.slices or self.slices[-1]["width"] != nnz:
+                self.slices.append({"width": nnz, "rows_at": len(self.rows),
+                                    "n_rows": 0, "data_at": len(self.vals)})
+            self.slices[-1]["n_rows"] += 1
+            self.rows.append(i)
+            for k in range(m.indptr[i], m.indptr[i + 1]):
+                self.cols.append(m.indices[k])
+                self.vals.append(m.values[k])
+
+
+def step_lanes_prepared(m, lk, sl, width, u_lanes, s_prev, s_next, active, stats=None):
+    """Mirror of batch.rs `step_lanes_g` over the sliced-ELL layout: same
+    per-row integer sums as `step_lanes`, different traversal order across
+    rows (row order is free — accumulators are per-row independent)."""
+    L = lk.lanes
+    for s in sl.slices:
+        if stats is not None:
+            stats["irregular"] += 3  # slice descriptor: width/rows_at/data_at
+        for r in range(s["n_rows"]):
+            i = sl.rows[s["rows_at"] + r]
+            if stats is not None:
+                stats["irregular"] += 1  # row id load
+            acc_in = [lk.ck(m.w_in[i] * u_lanes[l]) for l in range(width)]
+            acc_r = [0] * L
+            base = s["data_at"] + r * s["width"]
+            for k in range(s["width"]):
+                w = sl.vals[base + k]  # contiguous, pre-typed: no convert
+                cbase = sl.cols[base + k] * L
+                if stats is not None:
+                    stats["irregular"] += 1  # column id load
+                for l in range(width):
+                    acc_r[l] = lk.ck(acc_r[l] + lk.ck(w * s_prev[cbase + l]))
+            for l in range(width):
+                if active[l]:
+                    s_next[i * L + l] = m.ladder.apply(m.m_in * acc_in[l] + (acc_r[l] << m.f))
+    if stats is not None:
+        stats["steps"] += 1
+
+
+def new_stats():
+    return {"irregular": 0, "converts": 0, "steps": 0}
+
+
+def rollout_lanes(m, lk, chunk, pool, emit, sl=None, stats=None):
+    """chunk: list of u_int sequences (≤ lk.lanes). emit(t, l, col).
+    `sl` routes the step through the prepared sliced-ELL layout."""
     L = lk.lanes
     assert len(chunk) <= L
     s_prev = [0] * (m.n * L)
@@ -182,7 +267,10 @@ def rollout_lanes(m, lk, chunk, pool, emit):
             active[l] = t < len(u)
             if active[l]:
                 u_lanes[l] = u[t]
-        step_lanes(m, lk, len(chunk), u_lanes, s_prev, s_next, active)
+        if sl is None:
+            step_lanes(m, lk, len(chunk), u_lanes, s_prev, s_next, active, stats)
+        else:
+            step_lanes_prepared(m, lk, sl, len(chunk), u_lanes, s_prev, s_next, active, stats)
         if pool:
             if m.features == "mean":
                 for j in range(m.n):
@@ -201,7 +289,7 @@ def rollout_lanes(m, lk, chunk, pool, emit):
     return pooled
 
 
-def classify_batch(m, lk, samples):
+def classify_batch(m, lk, samples, sl=None, stats=None):
     L = lk.lanes
     out = []
     for k in range(0, len(samples), L):
@@ -213,7 +301,8 @@ def classify_batch(m, lk, samples):
             # scalar fallback: lone sample, or narrow pooled horizon exceeded
             out.extend(scalar_classify(m, u) for u in chunk)
             continue
-        pooled = rollout_lanes(m, lk, chunk, True, lambda t, l, col: None)
+        pooled = rollout_lanes(m, lk, chunk, True, lambda t, l, col: None,
+                               sl=sl, stats=stats)
         for l, u in enumerate(chunk):
             col = [pooled[j * L + l] for j in range(m.n)]
             t_factor = float(len(u)) if m.features == "mean" else 1.0
@@ -221,7 +310,7 @@ def classify_batch(m, lk, samples):
     return out
 
 
-def predict_batch(m, lk, samples):
+def predict_batch(m, lk, samples, sl=None, stats=None):
     out = []
     for k in range(0, len(samples), lk.lanes):
         chunk = samples[k:k + lk.lanes]
@@ -237,7 +326,7 @@ def predict_batch(m, lk, samples):
                 out[base + l].append(readout_from_state(m, col))
 
         # pool=False: per-step regression never reads the pooled feature
-        rollout_lanes(m, lk, chunk, False, emit)
+        rollout_lanes(m, lk, chunk, False, emit, sl=sl, stats=stats)
     return out
 
 
@@ -362,6 +451,73 @@ def run_compaction_case(seed, task, features, n, q, washout, out_dim, nnz,
     return mismatches
 
 
+def run_prepared_case(seed, task, features, n, q, washout, out_dim, nnz,
+                      n_samples, t_lo, t_hi, frac=None, inflate=None,
+                      permute=None, expect_tier=None, min_slices=1,
+                      perf_tag=None):
+    """Prepared sliced-ELL equivalence + measured indirection counts: build
+    the model (optionally pruned+compacted for ragged live rows, optionally
+    weight-inflated past the narrow bounds to force the wide fallback),
+    re-lay it sliced (optionally under a row permutation), and assert the
+    prepared path is bit-identical to the CSR walk and to the scalar
+    reference. Both step kernels count their irregular loads/converts as they
+    run; the per-step totals are printed (and returned for the melborn-shaped
+    PERF line EXPERIMENTS.md quotes)."""
+    rng = random.Random(seed)
+    m = Model(rng, n, q, task, features, washout, out_dim, nnz, t_hi, 1)
+    if inflate:
+        m.values = [v * inflate for v in m.values]
+    if frac is not None:
+        m = compact(pruned_zeroed(m, frac, rng))
+    lk = Lanes(m)
+    if expect_tier is not None:
+        assert lk.tier == expect_tier, f"expected tier {expect_tier}, got {lk.tier}"
+    order = None
+    if permute == "reverse":
+        order = list(range(m.n - 1, -1, -1))
+    elif permute == "shuffle":
+        order = list(range(m.n))
+        rng.shuffle(order)
+    sl = Sliced(m, order)
+    assert len(sl.slices) >= min_slices, \
+        f"expected >= {min_slices} slice widths, got {len(sl.slices)}"
+    samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
+    st_csr, st_ell = new_stats(), new_stats()
+    if task == "cls":
+        got = classify_batch(m, lk, samples, sl=sl, stats=st_ell)
+        csr = classify_batch(m, lk, samples, stats=st_csr)
+        want = [scalar_classify(m, u) for u in samples]
+    else:
+        got = predict_batch(m, lk, samples, sl=sl, stats=st_ell)
+        csr = predict_batch(m, lk, samples, stats=st_csr)
+        want = [scalar_predict(m, u) for u in samples]
+    mismatches = 0
+    for i, (g, c, w) in enumerate(zip(got, csr, want)):
+        if g != c or g != w:
+            mismatches += 1
+            if mismatches <= 3:
+                print(f"  PREPARED MISMATCH seed={seed} sample={i}: "
+                      f"sliced={g} csr={c} scalar={w}")
+    assert st_ell["steps"] == st_csr["steps"], "layouts executed different step counts"
+    steps = max(st_ell["steps"], 1)
+    ind_c, ind_e = st_csr["irregular"] / steps, st_ell["irregular"] / steps
+    print(
+        f"prepared(task={task}, feat={features}, n={m.n}, q={q}, "
+        f"nnz={len(m.values)}, tier={lk.tier}, slices={len(sl.slices)}"
+        f"{', permuted' if permute else ''}): {mismatches} mismatches; "
+        f"measured/step: irregular {ind_c:.0f} -> {ind_e:.0f}, "
+        f"converts {st_csr['converts'] // steps} -> {st_ell['converts']}"
+    )
+    if perf_tag:
+        print(
+            f"PERF {perf_tag}: n={m.n} live_nnz={len(m.values)} "
+            f"slices={len(sl.slices)} indirections/step csr={ind_c:.0f} "
+            f"sliced={ind_e:.0f} ({ind_c / ind_e:.2f}x fewer) "
+            f"converts/step {st_csr['converts'] // steps} -> 0"
+        )
+    return mismatches
+
+
 def run_checks():
     bad = 0
     # Batch sizes crossing the lane boundaries, uniform and ragged lengths.
@@ -451,9 +607,42 @@ def run_checks():
     # Last-state pooling at a high rate.
     bad += run_compaction_case(45, "cls", "last", n=12, q=6, washout=0, out_dim=3,
                                nnz=5, n_samples=17, t_lo=3, t_hi=15, frac=90)
+    # Prepared sliced-ELL layout vs the CSR walk (quant/plan.rs mirror).
+    # Unpruned model: uniform row length, a single slice.
+    bad += run_prepared_case(51, "cls", "mean", n=16, q=6, washout=0, out_dim=4,
+                             nnz=5, n_samples=33, t_lo=4, t_hi=20)
+    # Ragged-row pruned+compacted model: random pruning leaves uneven live
+    # rows, so the slicer must produce multiple widths — the layout's whole
+    # point — and stay bit-identical through them.
+    bad += run_prepared_case(52, "cls", "mean", n=16, q=6, washout=0, out_dim=4,
+                             nnz=5, n_samples=33, t_lo=4, t_hi=18, frac=60,
+                             min_slices=2)
+    bad += run_prepared_case(53, "reg", "mean", n=12, q=6, washout=4, out_dim=2,
+                             nnz=5, n_samples=19, t_lo=2, t_hi=20, frac=75,
+                             min_slices=2)
+    # Row-order freedom: reversed and shuffled slice bucket orders cannot
+    # change any output (per-row sums are independent).
+    bad += run_prepared_case(52, "cls", "mean", n=16, q=6, washout=0, out_dim=4,
+                             nnz=5, n_samples=33, t_lo=4, t_hi=18, frac=60,
+                             min_slices=2, permute="reverse")
+    bad += run_prepared_case(54, "cls", "last", n=14, q=4, washout=0, out_dim=3,
+                             nnz=4, n_samples=21, t_lo=3, t_hi=15, frac=50,
+                             permute="shuffle")
+    # Bound-failing model: heavy inflation breaks both narrow tiers, so the
+    # prepared plan is built at the wide fallback — and must still match.
+    bad += run_prepared_case(55, "cls", "mean", n=12, q=8, washout=0, out_dim=3,
+                             nnz=4, n_samples=17, t_lo=4, t_hi=12, inflate=10**8,
+                             expect_tier="wide")
+    # The melborn-shaped p=90 measurement EXPERIMENTS.md §Perf iteration 10
+    # quotes: same (n=50, q=6, out_dim=10, nnz/row=5, T=24) reservoir as
+    # frontier_mirror.run_perf, pruned 90% and compacted.
+    bad += run_prepared_case(56, "cls", "mean", n=50, q=6, washout=0, out_dim=10,
+                             nnz=5, n_samples=32, t_lo=24, t_hi=24, frac=90,
+                             min_slices=2, perf_tag="melborn_p90")
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "lane-batched kernel diverges from the scalar reference"
-    print("OK: lane-batched == scalar on all cases (narrow16 + narrow + wide kernels)")
+    print("OK: lane-batched == scalar on all cases "
+          "(narrow16 + narrow + wide kernels, CSR + prepared sliced-ELL layouts)")
 
 
 if __name__ == "__main__":
