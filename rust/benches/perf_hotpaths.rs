@@ -26,7 +26,16 @@
 //!         64-sample classify on unpruned + p=90 compacted models and the
 //!         col-ordered batched scoring sweep vs the sequential slot-walk
 //!         (bit-identity asserted, static indirection cost model in JSON)
+//!   L3-l  lane-batched readout vs the per-lane gather oracle: pooled
+//!         classification scoring and per-step regression emission, strip
+//!         MACs over the lane-major buffers vs n·L strided column loads —
+//!         bit-identity asserted, 0 strided readout loads gated in JSON
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
+//!
+//! The L3-h/k/l JSON sections also record which SIMD ISA tiers were
+//! *available* on the runner vs actually *run* (`tiers_available` /
+//! `tiers_run`) — the `bench_to_experiments.py` validator fails CI when an
+//! available tier silently stops being exercised.
 //!
 //! Before/after numbers for the optimization pass live in EXPERIMENTS.md
 //! §Perf. `RCX_BENCH_SMOKE=1` shrinks the grid for the CI `bench-smoke` job;
@@ -35,7 +44,7 @@
 
 use std::time::Instant;
 
-use rcx::bench::{section, smoke_mode, time_it, JsonReport};
+use rcx::bench::{section, smoke_mode, time_it, BenchStats, JsonReport};
 use rcx::config::BenchmarkConfig;
 use rcx::coordinator::{
     BackendConfig, Batcher, BatcherConfig, Prediction, Rejected, ServeConfig, Server, VariantSpec,
@@ -247,6 +256,7 @@ fn main() {
         let refs: Vec<&_> = data.test.iter().take(64).collect();
         let scalar_cls: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
         let mut rows = String::new();
+        let mut tiers_run: Vec<&'static str> = Vec::new();
         let mut baseline: Option<(f64, f64, Vec<rcx::esn::Perf>)> = None;
         for &choice in &kernels {
             // Candidates/sort/packing depend on the kernel width but not the
@@ -277,6 +287,9 @@ fn main() {
                 let scoring_s = t0.elapsed().as_secs_f64();
                 let perfs: Vec<rcx::esn::Perf> =
                     perfs.into_iter().map(|p| p.expect("unpacked candidate")).collect();
+                if !tiers_run.contains(&isa.name()) {
+                    tiers_run.push(isa.name());
+                }
                 // Inference through a pinned scratch.
                 let mut lsc = LaneScratch::for_model_pinned(&qm, choice, isa);
                 assert_eq!(
@@ -320,7 +333,19 @@ fn main() {
                 ));
             }
         }
-        report.add("l3h_simd", format!("{{\"bit_identical\": true, \"rows\": [{rows}\n  ]}}"));
+        let avail: Vec<&str> = tiers.iter().map(|t| t.name()).collect();
+        report.add(
+            "l3h_simd",
+            format!(
+                concat!(
+                    "{{\"bit_identical\": true, \"tiers_available\": {}, ",
+                    "\"tiers_run\": {}, \"rows\": [{}\n  ]}}"
+                ),
+                tier_json(&avail),
+                tier_json(&tiers_run),
+                rows
+            ),
+        );
     }
 
     section("L3-c hardware model evaluation (cost+timing+activity+power)");
@@ -704,9 +729,13 @@ fn main() {
         let scores = RandomPruner::new(7).scores(&qm, &data.train);
         let p90 = prune_to_rate(&qm, &scores, 90.0);
         let mut rows = String::new();
+        let mut tiers_run: Vec<&'static str> = Vec::new();
         for (tag, m) in [("melborn_p0", &qm), ("melborn_p90", &p90)] {
             let mut sc_p = LaneScratch::for_model(m);
             let mut sc_o = LaneScratch::for_model(m);
+            if !tiers_run.contains(&sc_p.isa().name()) {
+                tiers_run.push(sc_p.isa().name());
+            }
             assert_eq!(
                 m.classify_batch(&refs, &mut sc_p),
                 m.classify_batch_csr(&refs, &mut sc_o),
@@ -781,12 +810,120 @@ fn main() {
             format!(
                 concat!(
                     "{{\"bit_identical\": true, \"samples\": 64, ",
+                    "\"tiers_available\": {}, \"tiers_run\": {}, ",
                     "\"scoring_sequential_s\": {:.6}, \"scoring_batched_s\": {:.6}, ",
                     "\"scoring_speedup\": {:.3}, \"rows\": [{}\n  ]}}"
                 ),
+                tier_json(&available_tier_names()),
+                tier_json(&tiers_run),
                 t_seq.as_secs_f64(),
                 t_bat.as_secs_f64(),
                 sc_speedup,
+                rows
+            ),
+        );
+    }
+
+    section("L3-l lane-batched readout vs per-lane gather oracle (bit-identity + 0 strided loads)");
+    {
+        // The readout stage used to be the last gather-bound scalar stage:
+        // per (step, lane) the oracle walks one lane's column out of the
+        // lane-major buffer (`n` strided loads, stride L) and runs the
+        // scalar readout (classification additionally allocating a scores
+        // Vec per sample). The prepared path MACs broadcast-weight strips
+        // over the contiguous lane-major buffers instead — 0 strided
+        // readout loads, 0 hot-loop allocations — and must stay
+        // bit-identical. The strided/alloc counts below are the static cost
+        // model; the mirror-measured counts live in the Python mirrors.
+        let (warm, iters) = if smoke { (1, 8) } else { (3, 30) };
+        let mut rows = String::new();
+        let mut tiers_run: Vec<&'static str> = Vec::new();
+
+        // Classification: pooled-feature scoring (melborn, q=6).
+        {
+            let refs: Vec<&_> = data.test.iter().take(64).collect();
+            let mut sc_p = LaneScratch::for_model(&qm);
+            let mut sc_o = LaneScratch::for_model(&qm);
+            assert_eq!(
+                qm.classify_batch(&refs, &mut sc_p),
+                qm.classify_batch_csr(&refs, &mut sc_o),
+                "melborn: strip readout != gather oracle"
+            );
+            let st_p = time_it(warm, iters, || qm.classify_batch(&refs, &mut sc_p));
+            let st_o = time_it(warm, iters, || qm.classify_batch_csr(&refs, &mut sc_o));
+            let widened = sc_p.prepared().expect("plan installed").readout().widened();
+            rows.push_str(&readout_row(
+                "melborn_cls",
+                "per_chunk",
+                &sc_p,
+                widened,
+                qm.n * sc_p.lanes(),
+                sc_p.lanes(),
+                &st_o,
+                &st_p,
+            ));
+            if !tiers_run.contains(&sc_p.isa().name()) {
+                tiers_run.push(sc_p.isa().name());
+            }
+        }
+
+        // Regression: per-step emission (henon, q=6). The paper split is one
+        // long test sequence — window it so the batch actually fills lanes.
+        {
+            let hcfg = BenchmarkConfig::paper(Benchmark::Henon, 0);
+            let (hm, hdata) = hcfg.train(1, true);
+            let hqm = QuantEsn::from_model(&hm, &hdata, QuantSpec::bits(6));
+            let long = &hdata.test[0];
+            let dim = long.inputs.cols();
+            let win = 100usize;
+            let n_win = (long.inputs.rows() / win).min(if smoke { 8 } else { 16 });
+            assert!(n_win >= 2, "need >= 2 windows to exercise the lane path");
+            let windows: Vec<rcx::data::TimeSeries> = (0..n_win)
+                .map(|i| {
+                    let d = long.inputs.as_slice()[i * win * dim..(i + 1) * win * dim].to_vec();
+                    rcx::data::TimeSeries {
+                        inputs: rcx::linalg::Mat::from_vec(win, dim, d),
+                        label: None,
+                        targets: None,
+                    }
+                })
+                .collect();
+            let hrefs: Vec<&_> = windows.iter().collect();
+            let mut sc_p = LaneScratch::for_model(&hqm);
+            let mut sc_o = LaneScratch::for_model(&hqm);
+            assert_eq!(
+                hqm.predict_batch(&hrefs, &mut sc_p),
+                hqm.predict_batch_csr(&hrefs, &mut sc_o),
+                "henon: strip readout != gather oracle"
+            );
+            let st_p = time_it(warm, iters, || hqm.predict_batch(&hrefs, &mut sc_p));
+            let st_o = time_it(warm, iters, || hqm.predict_batch_csr(&hrefs, &mut sc_o));
+            let widened = sc_p.prepared().expect("plan installed").readout().widened();
+            rows.push(',');
+            rows.push_str(&readout_row(
+                "henon_reg",
+                "per_step",
+                &sc_p,
+                widened,
+                hqm.n * sc_p.lanes(),
+                0,
+                &st_o,
+                &st_p,
+            ));
+            if !tiers_run.contains(&sc_p.isa().name()) {
+                tiers_run.push(sc_p.isa().name());
+            }
+        }
+
+        report.add(
+            "l3l_readout",
+            format!(
+                concat!(
+                    "{{\"bit_identical\": true, \"strided_readout_loads_prepared\": 0, ",
+                    "\"tiers_available\": {}, \"tiers_run\": {}, \"rows\": [{}\n  ]}}"
+                ),
+                tier_json(&available_tier_names()),
+                tier_json(&tiers_run),
                 rows
             ),
         );
@@ -831,4 +968,63 @@ fn locality_sorted(plan: &CalibPlan, cands: &[FlipCandidate]) -> Vec<FlipCandida
         (span.0, span.1, i)
     });
     order.iter().map(|&i| cands[i]).collect()
+}
+
+/// One L3-l row: static readout cost model (strided loads / temp allocs per
+/// `unit`, both 0 on the prepared path by construction) plus the measured
+/// oracle-vs-prepared head-to-head.
+#[allow(clippy::too_many_arguments)]
+fn readout_row(
+    tag: &str,
+    unit: &str,
+    sc: &LaneScratch,
+    widened: bool,
+    strided_oracle: usize,
+    temp_allocs_oracle: usize,
+    st_oracle: &BenchStats,
+    st_prepared: &BenchStats,
+) -> String {
+    let speedup = st_oracle.median.as_secs_f64() / st_prepared.median.as_secs_f64();
+    println!(
+        "{tag:<12} kernel {} on {}  widened {widened}  strided readout loads {unit} \
+         {strided_oracle} -> 0  temp allocs {temp_allocs_oracle} -> 0  \
+         {:>9.1?} -> {:>9.1?} ({speedup:.2}x)",
+        sc.kernel().name(),
+        sc.isa().name(),
+        st_oracle.median,
+        st_prepared.median
+    );
+    format!(
+        concat!(
+            "\n    {{\"model\": \"{}\", \"unit\": \"{}\", \"kernel\": \"{}\", \"isa\": \"{}\", ",
+            "\"widened\": {}, \"strided_loads_oracle\": {}, \"strided_loads_prepared\": 0, ",
+            "\"temp_allocs_oracle\": {}, \"temp_allocs_prepared\": 0, ",
+            "\"oracle_us\": {:.1}, \"prepared_us\": {:.1}, \"speedup\": {:.3}}}"
+        ),
+        tag,
+        unit,
+        sc.kernel().name(),
+        sc.isa().name(),
+        widened,
+        strided_oracle,
+        temp_allocs_oracle,
+        st_oracle.median.as_secs_f64() * 1e6,
+        st_prepared.median.as_secs_f64() * 1e6,
+        speedup
+    )
+}
+
+/// Names of every SIMD ISA tier available on this machine.
+fn available_tier_names() -> Vec<&'static str> {
+    [Isa::Scalar, Isa::Avx2, Isa::Avx512]
+        .into_iter()
+        .filter(|t| t.available())
+        .map(|t| t.name())
+        .collect()
+}
+
+/// JSON array of ISA tier names.
+fn tier_json(names: &[&str]) -> String {
+    let quoted: Vec<String> = names.iter().map(|n| format!("\"{n}\"")).collect();
+    format!("[{}]", quoted.join(", "))
 }

@@ -30,6 +30,12 @@
 //! batcher schedules flushes at `deadline - deadline_slack` so admitted
 //! requests normally make it (see [`super::BatcherConfig`]).
 //!
+//! Executor ingest also quantizes each admitted request's input strip
+//! exactly once ([`PreparedStrip`]); every batch assembled at flush time
+//! shares the cached strips by `Arc` ([`PreparedInputs::assemble`]) and runs
+//! through [`ExecBackend::execute_prepared`], so a request re-batched across
+//! flush decisions is never re-quantized.
+//!
 //! # Sharded (multi-executor) mode
 //!
 //! With `ServeConfig::shards > 1` the server runs one executor thread per
@@ -63,7 +69,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::data::TimeSeries;
-use crate::quant::QuantEsn;
+use crate::quant::{PreparedInputs, PreparedStrip, QuantEsn};
 use crate::runtime::{BackendConfig, ExecBackend, Prediction};
 
 use super::batcher::{BatchDecision, Batcher, BatcherConfig};
@@ -252,6 +258,13 @@ pub struct Request {
     submitted: Instant,
     deadline: Option<Instant>,
     respond: Sender<Response>,
+    /// The series quantized against the serving variant's input quantizer,
+    /// built **once** at executor ingest. Re-batching never re-quantizes: a
+    /// request deferred across several flush decisions contributes the same
+    /// `Arc`-shared strip to every batch assembly (`PreparedInputs::
+    /// assemble` verifies the quantizer still matches and re-quantizes only
+    /// on mismatch, so this stays a pure work-avoidance cache).
+    strip: Option<PreparedStrip>,
 }
 
 /// One inference response.
@@ -580,6 +593,7 @@ impl Client {
             submitted: Instant::now(),
             deadline: None,
             respond: resp_tx,
+            strip: None,
         };
         self.txs[shard].send(Control::Req(req)).map_err(|_| anyhow::anyhow!("server is down"))?;
         Ok(resp_rx)
@@ -606,7 +620,14 @@ impl Client {
         }
         let (shard, local) = self.router.route(variant);
         let (resp_tx, resp_rx) = mpsc::channel();
-        let req = Request { variant: local, series, submitted: now, deadline, respond: resp_tx };
+        let req = Request {
+            variant: local,
+            series,
+            submitted: now,
+            deadline,
+            respond: resp_tx,
+            strip: None,
+        };
         if self.txs[shard].send(Control::Req(req)).is_err() {
             // Release the admission slot the dead executor will never drain.
             self.qos.depths[variant].fetch_sub(1, Ordering::AcqRel);
@@ -721,11 +742,11 @@ fn executor(
         };
         match rx.recv_timeout(timeout) {
             Ok(Control::Req(req)) => {
-                ingest(req, &mut queues, &mut batchers, &metrics);
+                ingest(req, &specs, &mut queues, &mut batchers, &metrics);
                 // Drain whatever else is already queued without blocking.
                 while let Ok(c) = rx.try_recv() {
                     match c {
-                        Control::Req(r) => ingest(r, &mut queues, &mut batchers, &metrics),
+                        Control::Req(r) => ingest(r, &specs, &mut queues, &mut batchers, &metrics),
                         Control::Shutdown => running = false,
                     }
                 }
@@ -791,14 +812,21 @@ fn executor(
 /// used to be a silent drop), and dropping its response sender fails that
 /// caller's recv with "server dropped the request" — rather than killing the
 /// executor and with it every other client's in-flight work.
+///
+/// Admission is where the request's input strip is quantized, exactly once:
+/// every later flush that re-batches this request hands `run_batch` the
+/// cached `Arc`-shared strip instead of re-quantizing the series per
+/// backend pass.
 fn ingest(
-    req: Request,
+    mut req: Request,
+    specs: &[VariantSpec],
     queues: &mut [VecDeque<Request>],
     batchers: &mut [Batcher],
     metrics: &Metrics,
 ) {
     let v = req.variant;
     if v < queues.len() {
+        req.strip = Some(PreparedStrip::build(&specs[v].model, &req.series));
         batchers[v].push_deadline(Instant::now(), req.deadline);
         queues[v].push_back(req);
     } else {
@@ -827,7 +855,13 @@ fn run_batch(
         .sum();
     metrics.record_macs(&spec.key, macs);
     let refs: Vec<&TimeSeries> = batch.iter().map(|r| &r.series).collect();
-    let preds = backend.execute_batch(model, &refs)?;
+    // Compose the batch's prepared inputs from the strips quantized at
+    // admission (Arc clones; `assemble` re-verifies every strip against
+    // this model and re-quantizes mismatches, so correctness never depends
+    // on the cache).
+    let strips: Vec<Option<PreparedStrip>> = batch.iter().map(|r| r.strip.clone()).collect();
+    let pre = PreparedInputs::assemble(model, &refs, &strips);
+    let preds = backend.execute_prepared(model, &refs, &pre)?;
     anyhow::ensure!(preds.len() == n, "backend returned {} predictions for {n}", preds.len());
     let done = Instant::now();
     for (req, prediction) in batch.into_iter().zip(preds) {

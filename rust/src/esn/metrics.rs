@@ -47,6 +47,19 @@ pub fn argmax(xs: &[f64]) -> usize {
     best
 }
 
+/// Integer argmax with the same tie-breaking as [`argmax`]. Exact at every
+/// magnitude — integer scores above 2^53 would collide if compared through
+/// `f64`.
+pub fn argmax_i64(xs: &[i64]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +89,16 @@ mod tests {
     fn argmax_ties() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_i64_exact_above_f64_mantissa() {
+        assert_eq!(argmax_i64(&[1, 3, 3]), 1);
+        assert_eq!(argmax_i64(&[5]), 0);
+        // Adjacent integers beyond 2^53 collapse to the same f64; the integer
+        // compare must still separate them.
+        let big = 1i64 << 54;
+        assert_eq!((big + 1) as f64, big as f64, "test premise: f64 is lossy here");
+        assert_eq!(argmax_i64(&[big, big + 1]), 1);
     }
 }

@@ -25,11 +25,35 @@
 //! kernel at `(i16, 32)` — 32 state lanes per 512-bit register — falling
 //! back to `(i32, 16)` and ultimately the bit-identical `(i64, 8)` oracle.
 //! The widening points (the `m_in` multiply, the `<< F` shift, the ladder
-//! input and every readout) always compute in `i64`, so every narrow kernel
-//! is exact whenever selected; the one quantity that grows with sequence
-//! length (the `MeanState` pooled accumulator, `≤ T·qmax`) is guarded per
-//! chunk: sequences longer than [`KernelBounds::max_steps_for`] the selected
-//! width take the scalar path instead (bit-identical, just unbatched).
+//! input, and the readout *finalization* — the `m_out` multiply and the
+//! dequantizing divide) always compute in `i64`/`f64`, so every narrow
+//! kernel is exact whenever selected; the quantities that grow with
+//! sequence length (the `MeanState` pooled accumulator `≤ T·qmax`, and its
+//! readout accumulator `≤ T·Σ|w_out|·qmax`) are guarded per chunk:
+//! sequences longer than [`KernelBounds::max_steps_for`] the selected width
+//! take the scalar path, and pooled readouts past
+//! [`KernelBounds::readout_max_steps_for`] widen the readout accumulation
+//! to i64 strips (bit-identical, still gather-free).
+//!
+//! # Lane-batched readout: the last stage is gather-free too
+//!
+//! The readout runs directly on the lane-major `s_next`/`pooled` buffers:
+//! for every output row `c`, a broadcast-weight strip MAC over features `j`
+//! accumulates `acc[c·L + l] += w_out[c·n + j] · s[j·L + l]` through the
+//! same [`crate::quant::simd`] dispatch as the recurrence — contiguous
+//! vector loads, zero per-lane column gathers, zero hot-loop allocation.
+//! The accumulator element is selected per model by
+//! [`KernelBounds::readout_fits`] (`Σ_j |w_out[c,j]| · s_max` against the
+//! lane limit), with `w_out` pre-narrowed once in the scratch's
+//! [`PreparedPlan`] (see [`super::plan::PreparedReadout`]); a failed bound
+//! widens each feature strip once into a contiguous i64 row instead —
+//! never a gather. Scores and emits replay the scalar
+//! [`QuantEsn::readout_scores`] / [`QuantEsn::readout_from_state`] algebra
+//! in the same feature order with the same widening points, so every output
+//! bit is identical; the CSR-oracle entry points keep the per-lane
+//! gather-and-widen protocol (`n` strided loads per (step, lane)) as the
+//! measured baseline the `perf_hotpaths` L3-l gate holds the prepared path
+//! against (0 strided readout loads).
 //!
 //! The per-neuron accumulator strips run through the runtime-dispatched
 //! explicit-SIMD primitives of [`crate::quant::simd`] (scalar / AVX2 /
@@ -55,6 +79,8 @@
 //! This kernel is the compute core of the serving stack's
 //! [`NativeBackend`](crate::runtime::NativeBackend).
 
+use std::sync::Arc;
+
 use crate::data::{Task, TimeSeries};
 use crate::esn::{Features, Perf};
 
@@ -78,6 +104,38 @@ impl<E: LaneElem> Clone for RecWeights<'_, E> {
 
 impl<E: LaneElem> Copy for RecWeights<'_, E> {}
 
+/// How a chunk's readout consumes the lane-major state/pooled buffers.
+enum ReadoutMode<'p, E: LaneElem> {
+    /// CSR-oracle protocol: gather each lane's column into `buf.col` and run
+    /// the scalar readout — `n` strided loads per (step, lane) plus the
+    /// oracle's per-call allocation. Kept bit-identical as the measured
+    /// baseline the prepared path is gated against (L3-l).
+    Gather,
+    /// Lane-element strip accumulation over bound-approved pre-narrowed
+    /// readout weights: contiguous loads only, zero allocation.
+    Lanes(&'p [E]),
+    /// i64 strip accumulation (readout bound failed, or a `MeanState` chunk
+    /// past the readout horizon): each feature strip widens once into the
+    /// contiguous `buf.row_wide`, weights come straight from
+    /// `QuantEsn::w_out` — still zero strided loads.
+    Widened,
+}
+
+/// Per-step consumer of freshly written states inside
+/// [`QuantEsn::rollout_lanes_g`].
+enum StepEmit<'a, E: LaneElem> {
+    /// No per-step consumer (classification reads the pooled buffer after
+    /// the rollout).
+    None,
+    /// CSR-oracle protocol: gather each active lane's state column into
+    /// `buf.col` and call back — the strided baseline.
+    Gather(&'a mut dyn FnMut(usize, usize, &[i64])),
+    /// Prepared per-step regression readout: lane-batched strip MACs over
+    /// `s_next` (post-washout only), dequantized into each lane's output
+    /// list. `w_e: None` is the i64-widened fallback.
+    Strips { w_e: Option<&'a [E]>, out: &'a mut [Vec<Vec<f64>>] },
+}
+
 /// Samples processed per **wide** (i64) lane-batched rollout pass. Mirrors
 /// [`super::BATCH_LANES`] (8 × i64 = two AVX2 vectors per strip).
 pub const SAMPLE_LANES: usize = 8;
@@ -94,6 +152,7 @@ pub const SAMPLE_LANES_NARROW16: usize = 32;
 struct LaneBuf<E: LaneElem, const L: usize> {
     n: usize,
     input_dim: usize,
+    out_dim: usize,
     /// Lane-major state double buffer (`n × L`).
     s_prev: Vec<E>,
     s_next: Vec<E>,
@@ -101,20 +160,33 @@ struct LaneBuf<E: LaneElem, const L: usize> {
     u_int: Vec<E>,
     /// Lane-major pooled feature accumulator (`n × L`).
     pooled: Vec<E>,
-    /// Gather buffer for one lane's state column (`n`, always i64 — readouts
-    /// consume i64).
+    /// Lane-major readout accumulators (`out_dim × L`): the lane-element
+    /// buffer when the readout bound approved the narrow accumulation, the
+    /// i64 buffer for the widened fallback. Fully overwritten before every
+    /// read, so [`LaneBuf::reset`] never has to touch them.
+    racc: Vec<E>,
+    racc_wide: Vec<i64>,
+    /// One feature strip widened to i64 (`L`) — the widened readout's
+    /// contiguous staging row (widen once per feature, reuse per class).
+    row_wide: Vec<i64>,
+    /// Gather buffer for one lane's state column (`n`, always i64) — only
+    /// the CSR-oracle readout protocol uses it.
     col: Vec<i64>,
 }
 
 impl<E: LaneElem, const L: usize> LaneBuf<E, L> {
-    fn new(n: usize, input_dim: usize) -> Self {
+    fn new(n: usize, input_dim: usize, out_dim: usize) -> Self {
         Self {
             n,
             input_dim,
+            out_dim,
             s_prev: vec![E::default(); n * L],
             s_next: vec![E::default(); n * L],
             u_int: vec![E::default(); input_dim * L],
             pooled: vec![E::default(); n * L],
+            racc: vec![E::default(); out_dim * L],
+            racc_wide: vec![0; out_dim * L],
+            row_wide: vec![0; L],
             col: vec![0; n],
         }
     }
@@ -144,6 +216,10 @@ pub struct LaneScratch {
     /// Longest sequence the selected kernel's `MeanState` pooled accumulator
     /// provably supports; longer chunks fall back to the scalar path.
     max_steps: usize,
+    /// Longest sequence the lane-element readout accumulation provably
+    /// supports over `MeanState` pooled features; longer chunks widen the
+    /// readout to i64 strips (still lane-batched, still gather-free).
+    readout_max_steps: usize,
     /// ISA tier the accumulator strips dispatch to.
     isa: Isa,
     /// Prepared sliced-ELL weights for the model this scratch last served.
@@ -173,12 +249,19 @@ impl LaneScratch {
         assert!(isa.available(), "pinned ISA tier {} is not available on this machine", isa.name());
         let bounds = KernelBounds::analyze(model, 0);
         let kernel = choice.resolve(bounds.inference_kernel(), "inference kernel");
+        let (n, d, c) = (model.n, model.input_dim, model.out_dim);
         let imp = match kernel {
-            Kernel::Narrow16 => LaneKernel::Narrow16(LaneBuf::new(model.n, model.input_dim)),
-            Kernel::Narrow => LaneKernel::Narrow(LaneBuf::new(model.n, model.input_dim)),
-            Kernel::Wide => LaneKernel::Wide(LaneBuf::new(model.n, model.input_dim)),
+            Kernel::Narrow16 => LaneKernel::Narrow16(LaneBuf::new(n, d, c)),
+            Kernel::Narrow => LaneKernel::Narrow(LaneBuf::new(n, d, c)),
+            Kernel::Wide => LaneKernel::Wide(LaneBuf::new(n, d, c)),
         };
-        Self { imp, max_steps: bounds.max_steps_for(kernel), isa, prepared: None }
+        Self {
+            imp,
+            max_steps: bounds.max_steps_for(kernel),
+            readout_max_steps: bounds.readout_max_steps_for(kernel),
+            isa,
+            prepared: None,
+        }
     }
 
     /// Make sure this scratch holds a [`PreparedPlan`] built from exactly
@@ -237,21 +320,104 @@ impl LaneScratch {
         }
     }
 
-    /// Refresh the narrow pooled-horizon guard from a freshly analyzed
-    /// model. The horizon depends on the model's `q`, not just its geometry,
-    /// so callers that reuse one scratch across *models* (multi-variant
-    /// serving swaps models per batch) must refresh it per model — a q=4
-    /// horizon silently over-approves q=8 sequences otherwise.
+    /// Refresh the narrow pooled-horizon guards from a freshly analyzed
+    /// model. The horizons depend on the model's `q` and readout content,
+    /// not just its geometry, so callers that reuse one scratch across
+    /// *models* (multi-variant serving swaps models per batch) must refresh
+    /// them per model — a q=4 horizon silently over-approves q=8 sequences
+    /// otherwise.
     pub fn refresh_horizon(&mut self, bounds: &KernelBounds) {
         self.max_steps = bounds.max_steps_for(self.kernel());
+        self.readout_max_steps = bounds.readout_max_steps_for(self.kernel());
     }
 
-    fn geometry(&self) -> (usize, usize) {
+    fn geometry(&self) -> (usize, usize, usize) {
         match &self.imp {
-            LaneKernel::Wide(b) => (b.n, b.input_dim),
-            LaneKernel::Narrow(b) => (b.n, b.input_dim),
-            LaneKernel::Narrow16(b) => (b.n, b.input_dim),
+            LaneKernel::Wide(b) => (b.n, b.input_dim, b.out_dim),
+            LaneKernel::Narrow(b) => (b.n, b.input_dim, b.out_dim),
+            LaneKernel::Narrow16(b) => (b.n, b.input_dim, b.out_dim),
         }
+    }
+}
+
+/// Lane-batched readout accumulation over a lane-major `n × L` feature
+/// buffer (`s_next` for per-step regression, `pooled` for classification):
+/// for every output row `c`, a broadcast-weight strip MAC accumulates
+/// `acc[c·L + l] += w[c·n + j] · feat[j·L + l]` — contiguous vector loads
+/// only, zero per-lane column gathers, zero allocation. With `w_e` the sums
+/// run in the lane element (bound-approved); without it each feature strip
+/// widens once into `row_wide` and the sums run in i64 against the model's
+/// `w_out`. Either way features are visited in ascending `j` — the scalar
+/// oracle's order — and every (c, l) accumulator is an independent integer
+/// sum, so the bits match [`QuantEsn::readout_scores`] /
+/// [`QuantEsn::readout_from_state`] exactly. Lanes beyond the chunk are
+/// zero and retired lanes hold values frozen from this same rollout — all
+/// inside the proven readout bound, so the debug overflow guards cannot
+/// fire on them. Returns true when the result is in `racc` (lane element),
+/// false for `racc_wide`.
+#[allow(clippy::too_many_arguments)]
+fn readout_accumulate<E: LaneElem, const L: usize>(
+    n: usize,
+    out_dim: usize,
+    feat: &[E],
+    w_e: Option<&[E]>,
+    w_wide: &[i64],
+    racc: &mut [E],
+    racc_wide: &mut [i64],
+    row_wide: &mut [i64],
+    isa: Isa,
+) -> bool {
+    debug_assert_eq!(feat.len(), n * L);
+    debug_assert!(racc.len() == out_dim * L && racc_wide.len() == out_dim * L);
+    debug_assert_eq!(row_wide.len(), L);
+    if let Some(w) = w_e {
+        racc.fill(E::default());
+        for c in 0..out_dim {
+            let acc = &mut racc[c * L..(c + 1) * L];
+            let wrow = &w[c * n..(c + 1) * n];
+            for (j, &wj) in wrow.iter().enumerate() {
+                E::madd_strip(acc, wj, &feat[j * L..(j + 1) * L], isa);
+            }
+        }
+        true
+    } else {
+        racc_wide.fill(0);
+        for j in 0..n {
+            for (wd, sv) in row_wide.iter_mut().zip(&feat[j * L..(j + 1) * L]) {
+                *wd = sv.to_i64();
+            }
+            for c in 0..out_dim {
+                let acc = &mut racc_wide[c * L..(c + 1) * L];
+                i64::madd_strip(acc, w_wide[c * n + j], row_wide, isa);
+            }
+        }
+        false
+    }
+}
+
+/// Readout mode for a prepared narrow-kernel chunk over **state-valued**
+/// features (per-step regression emits, `LastState` pooled columns):
+/// lane-element strips when the static readout bound narrowed the weights,
+/// else the i64-widened strips. Never a gather.
+fn prepared_ro<E: LaneElem>(w_e: Option<&[E]>) -> ReadoutMode<'_, E> {
+    match w_e {
+        Some(w) => ReadoutMode::Lanes(w),
+        None => ReadoutMode::Widened,
+    }
+}
+
+/// Readout mode for a prepared narrow-kernel **classification** chunk:
+/// like [`prepared_ro`], but a `MeanState` chunk whose pooled magnitudes
+/// (`≤ t_max·s_max`) outgrow the lane-element readout horizon also widens.
+fn prepared_cls_ro<E: LaneElem>(
+    w_e: Option<&[E]>,
+    features: Features,
+    t_max: usize,
+    horizon: usize,
+) -> ReadoutMode<'_, E> {
+    match w_e {
+        Some(w) if features == Features::LastState || t_max <= horizon => ReadoutMode::Lanes(w),
+        _ => ReadoutMode::Widened,
     }
 }
 
@@ -359,12 +525,16 @@ impl QuantEsn {
         }
     }
 
-    /// Run one chunk of ≤ `L` samples. When `emit` is present it is called
-    /// per (step, lane) with that lane's freshly written state column
-    /// gathered into `buf.col` — after the per-feature pooled accumulation
-    /// has run. `pool` controls whether the pooled accumulator is maintained
-    /// at all: classification needs it, per-step regression does not (and
-    /// skipping it also removes the only narrow quantity that grows with T).
+    /// Run one chunk of ≤ `L` samples. `emit` selects the per-step consumer
+    /// of freshly written states (after the per-feature pooled accumulation
+    /// has run): [`StepEmit::Strips`] runs the lane-batched readout MAC over
+    /// `s_next` and dequantizes post-washout steps straight into each lane's
+    /// output list — zero gathers, zero allocation beyond the output rows
+    /// themselves; [`StepEmit::Gather`] keeps the CSR-oracle column-gather
+    /// callback protocol. `pool` controls whether the pooled accumulator is
+    /// maintained at all: classification needs it, per-step regression does
+    /// not (and skipping it also removes the only narrow quantity that grows
+    /// with T).
     ///
     /// `pre` carries each lane's input sequence already quantized (one
     /// `T × input_dim` row-major strip per sample, aligned with `chunk`) —
@@ -374,15 +544,19 @@ impl QuantEsn {
     fn rollout_lanes_g<E: LaneElem, const L: usize>(
         &self,
         chunk: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         w: RecWeights<E>,
         buf: &mut LaneBuf<E, L>,
         pool: bool,
         isa: Isa,
-        mut emit: Option<&mut dyn FnMut(usize, usize, &[i64])>,
+        mut emit: StepEmit<'_, E>,
     ) {
         assert!(chunk.len() <= L, "chunk wider than the scratch lane width");
-        assert_eq!((buf.n, buf.input_dim), (self.n, self.input_dim), "scratch geometry mismatch");
+        assert_eq!(
+            (buf.n, buf.input_dim, buf.out_dim),
+            (self.n, self.input_dim, self.out_dim),
+            "scratch geometry mismatch"
+        );
         debug_assert_eq!(pre.len(), chunk.len());
         buf.reset();
         let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
@@ -452,13 +626,49 @@ impl QuantEsn {
                     }
                 }
             }
-            if let Some(emit) = emit.as_mut() {
-                for l in 0..chunk.len() {
-                    if active[l] {
-                        for j in 0..self.n {
-                            buf.col[j] = buf.s_next[j * L + l].to_i64();
+            match &mut emit {
+                StepEmit::None => {}
+                StepEmit::Gather(cb) => {
+                    for l in 0..chunk.len() {
+                        if active[l] {
+                            for j in 0..self.n {
+                                buf.col[j] = buf.s_next[j * L + l].to_i64();
+                            }
+                            cb(t, l, &buf.col);
                         }
-                        emit(t, l, &buf.col);
+                    }
+                }
+                StepEmit::Strips { w_e, out } => {
+                    if t >= self.washout {
+                        let LaneBuf { s_next, racc, racc_wide, row_wide, .. } = &mut *buf;
+                        let narrow = readout_accumulate::<E, L>(
+                            self.n,
+                            self.out_dim,
+                            s_next,
+                            *w_e,
+                            &self.w_out,
+                            racc,
+                            racc_wide,
+                            row_wide,
+                            isa,
+                        );
+                        for l in 0..chunk.len() {
+                            if active[l] {
+                                let mut y = Vec::with_capacity(self.out_dim);
+                                for c in 0..self.out_dim {
+                                    let acc = if narrow {
+                                        racc[c * L + l].to_i64()
+                                    } else {
+                                        racc_wide[c * L + l]
+                                    };
+                                    y.push(
+                                        acc as f64 / (self.qz_wo[c].scale * self.qz_s.scale)
+                                            + self.bias_f[c],
+                                    );
+                                }
+                                out[l].push(y);
+                            }
+                        }
                     }
                 }
             }
@@ -466,27 +676,113 @@ impl QuantEsn {
         }
     }
 
-    /// Width-generic classification over one already-chunked slice.
+    /// Width-generic classification over one already-chunked slice. The
+    /// prepared readout modes score straight off the lane-major pooled
+    /// buffer with a streaming per-lane argmax — same feature order, same
+    /// widening points and same strict-`>`/lowest-index tie semantics as
+    /// [`QuantEsn::classify_from_pooled`], so every class index is
+    /// identical; [`ReadoutMode::Gather`] keeps the oracle's per-lane
+    /// column gather.
     #[allow(clippy::too_many_arguments)]
     fn classify_chunk_g<E: LaneElem, const L: usize>(
         &self,
         chunk: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         w: RecWeights<E>,
+        ro: ReadoutMode<'_, E>,
         buf: &mut LaneBuf<E, L>,
         isa: Isa,
         out: &mut Vec<usize>,
     ) {
-        self.rollout_lanes_g::<E, L>(chunk, pre, w, buf, true, isa, None);
-        for (l, s) in chunk.iter().enumerate() {
-            for j in 0..self.n {
-                buf.col[j] = buf.pooled[j * L + l].to_i64();
+        self.rollout_lanes_g::<E, L>(chunk, pre, w, buf, true, isa, StepEmit::None);
+        let t_factor = |s: &TimeSeries| match self.features {
+            Features::MeanState => s.inputs.rows() as f64,
+            Features::LastState => 1.0,
+        };
+        let w_e = match ro {
+            ReadoutMode::Gather => {
+                for (l, s) in chunk.iter().enumerate() {
+                    for j in 0..self.n {
+                        buf.col[j] = buf.pooled[j * L + l].to_i64();
+                    }
+                    out.push(self.classify_from_pooled(&buf.col, t_factor(s)));
+                }
+                return;
             }
-            let t_factor = match self.features {
-                Features::MeanState => s.inputs.rows() as f64,
-                Features::LastState => 1.0,
-            };
-            out.push(self.classify_from_pooled(&buf.col, t_factor));
+            ReadoutMode::Lanes(w) => Some(w),
+            ReadoutMode::Widened => None,
+        };
+        let LaneBuf { pooled, racc, racc_wide, row_wide, .. } = &mut *buf;
+        let narrow = readout_accumulate::<E, L>(
+            self.n,
+            self.out_dim,
+            pooled,
+            w_e,
+            &self.w_out,
+            racc,
+            racc_wide,
+            row_wide,
+            isa,
+        );
+        for (l, s) in chunk.iter().enumerate() {
+            let tf = t_factor(s);
+            let mut best = 0usize;
+            let mut best_s = i64::MIN;
+            for c in 0..self.out_dim {
+                let acc = if narrow { racc[c * L + l].to_i64() } else { racc_wide[c * L + l] };
+                let score = self.m_out[c] * acc + (self.bias_fold[c] * tf).round() as i64;
+                if score > best_s {
+                    best_s = score;
+                    best = c;
+                }
+            }
+            out.push(best);
+        }
+    }
+
+    /// Width-generic per-step regression over one already-chunked slice:
+    /// the prepared readout modes route through [`StepEmit::Strips`] (MAC
+    /// over `s_next`, zero gathers), [`ReadoutMode::Gather`] through the
+    /// oracle's column-gather callback.
+    #[allow(clippy::too_many_arguments)]
+    fn predict_chunk_g<E: LaneElem, const L: usize>(
+        &self,
+        chunk: &[&TimeSeries],
+        pre: &[Arc<Vec<i64>>],
+        w: RecWeights<E>,
+        ro: ReadoutMode<'_, E>,
+        buf: &mut LaneBuf<E, L>,
+        isa: Isa,
+        chunk_out: &mut [Vec<Vec<f64>>],
+    ) {
+        match ro {
+            ReadoutMode::Gather => {
+                let washout = self.washout;
+                let mut emit = |t: usize, l: usize, col: &[i64]| {
+                    if t >= washout {
+                        chunk_out[l].push(self.readout_from_state(col));
+                    }
+                };
+                self.rollout_lanes_g(chunk, pre, w, buf, false, isa, StepEmit::Gather(&mut emit));
+            }
+            ReadoutMode::Lanes(w_e) => self.rollout_lanes_g(
+                chunk,
+                pre,
+                w,
+                buf,
+                false,
+                isa,
+                StepEmit::Strips { w_e: Some(w_e), out: chunk_out },
+            ),
+            ReadoutMode::Widened => self.rollout_lanes_g(
+                chunk,
+                pre,
+                w,
+                buf,
+                false,
+                isa,
+                StepEmit::Strips { w_e: None, out: chunk_out },
+            ),
         }
     }
 
@@ -526,7 +822,7 @@ impl QuantEsn {
     pub(crate) fn classify_batch_pre(
         &self,
         samples: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         sc: &mut LaneScratch,
     ) -> Vec<usize> {
         self.classify_batch_impl(samples, pre, sc, true)
@@ -535,18 +831,22 @@ impl QuantEsn {
     fn classify_batch_impl(
         &self,
         samples: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         sc: &mut LaneScratch,
         use_prepared: bool,
     ) -> Vec<usize> {
-        assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        assert_eq!(
+            sc.geometry(),
+            (self.n, self.input_dim, self.out_dim),
+            "scratch geometry mismatch"
+        );
         assert_eq!(pre.len(), samples.len(), "pre-quantized rows not aligned with samples");
         if use_prepared {
             sc.ensure_prepared(self);
         }
         let lanes = sc.lanes();
-        let LaneScratch { imp, max_steps, isa, prepared } = sc;
-        let (max_steps, isa) = (*max_steps, *isa);
+        let LaneScratch { imp, max_steps, readout_max_steps, isa, prepared } = sc;
+        let (max_steps, ro_horizon, isa) = (*max_steps, *readout_max_steps, *isa);
         let plan = prepared.as_ref();
         let mut out = Vec::with_capacity(samples.len());
         for (ci, chunk) in samples.chunks(lanes).enumerate() {
@@ -561,12 +861,17 @@ impl QuantEsn {
             let t_max = chunk.iter().map(|s| s.inputs.rows()).max().unwrap_or(0);
             match imp {
                 LaneKernel::Wide(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_wide())
+                    let (w, ro) = if use_prepared {
+                        // E = i64: the model's own readout row is already
+                        // the lane element — strip MACs, no narrowing.
+                        (
+                            RecWeights::Ell(plan.unwrap().as_wide()),
+                            ReadoutMode::Lanes(self.w_out.as_slice()),
+                        )
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                    self.classify_chunk_g(chunk, pre_chunk, w, ro, buf, isa, &mut out)
                 }
                 // MeanState pooled sums grow with T; past the selected
                 // width's proven horizon the scalar path is the bit-identical
@@ -577,20 +882,33 @@ impl QuantEsn {
                     out.extend(chunk.iter().map(|s| self.classify(s)));
                 }
                 LaneKernel::Narrow(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_narrow())
+                    let (w, ro) = if use_prepared {
+                        let p = plan.unwrap();
+                        (
+                            RecWeights::Ell(p.as_narrow()),
+                            prepared_cls_ro(p.readout().narrow(), self.features, t_max, ro_horizon),
+                        )
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                    self.classify_chunk_g(chunk, pre_chunk, w, ro, buf, isa, &mut out)
                 }
                 LaneKernel::Narrow16(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_narrow16())
+                    let (w, ro) = if use_prepared {
+                        let p = plan.unwrap();
+                        (
+                            RecWeights::Ell(p.as_narrow16()),
+                            prepared_cls_ro(
+                                p.readout().narrow16(),
+                                self.features,
+                                t_max,
+                                ro_horizon,
+                            ),
+                        )
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.classify_chunk_g(chunk, pre_chunk, w, buf, isa, &mut out)
+                    self.classify_chunk_g(chunk, pre_chunk, w, ro, buf, isa, &mut out)
                 }
             }
         }
@@ -635,7 +953,7 @@ impl QuantEsn {
     pub(crate) fn predict_batch_pre(
         &self,
         samples: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         sc: &mut LaneScratch,
     ) -> Vec<Vec<Vec<f64>>> {
         self.predict_batch_impl(samples, pre, sc, true)
@@ -644,11 +962,15 @@ impl QuantEsn {
     fn predict_batch_impl(
         &self,
         samples: &[&TimeSeries],
-        pre: &[Vec<i64>],
+        pre: &[Arc<Vec<i64>>],
         sc: &mut LaneScratch,
         use_prepared: bool,
     ) -> Vec<Vec<Vec<f64>>> {
-        assert_eq!(sc.geometry(), (self.n, self.input_dim), "scratch geometry mismatch");
+        assert_eq!(
+            sc.geometry(),
+            (self.n, self.input_dim, self.out_dim),
+            "scratch geometry mismatch"
+        );
         assert_eq!(pre.len(), samples.len(), "pre-quantized rows not aligned with samples");
         if use_prepared {
             sc.ensure_prepared(self);
@@ -664,43 +986,46 @@ impl QuantEsn {
                 continue;
             }
             let pre_chunk = &pre[ci * lanes..ci * lanes + chunk.len()];
+            // The per-sample output rows are the chunk's only allocations —
+            // they ARE the returned predictions; the readout accumulation
+            // itself reuses the scratch's strip buffers.
             let base = out.len();
             for s in chunk {
                 out.push(Vec::with_capacity(s.inputs.rows().saturating_sub(self.washout)));
             }
-            let washout = self.washout;
-            // `emit` borrows `self` immutably alongside the rollout — fine.
-            let mut emit = |t: usize, l: usize, col: &[i64]| {
-                if t >= washout {
-                    out[base + l].push(self.readout_from_state(col));
-                }
-            };
-            // `pool: false` — per-step regression never reads the pooled
-            // feature, and with it disabled no narrow value grows with T.
+            let (_, chunk_out) = out.split_at_mut(base);
+            // `pool: false` underneath — per-step regression never reads the
+            // pooled feature, and with it disabled the per-step readout runs
+            // on clamped states, so no narrow value grows with T.
             match imp {
                 LaneKernel::Wide(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_wide())
+                    let (w, ro) = if use_prepared {
+                        (
+                            RecWeights::Ell(plan.unwrap().as_wide()),
+                            ReadoutMode::Lanes(self.w_out.as_slice()),
+                        )
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
+                    self.predict_chunk_g(chunk, pre_chunk, w, ro, buf, isa, chunk_out)
                 }
                 LaneKernel::Narrow(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_narrow())
+                    let (w, ro) = if use_prepared {
+                        let p = plan.unwrap();
+                        (RecWeights::Ell(p.as_narrow()), prepared_ro(p.readout().narrow()))
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
+                    self.predict_chunk_g(chunk, pre_chunk, w, ro, buf, isa, chunk_out)
                 }
                 LaneKernel::Narrow16(buf) => {
-                    let w = if use_prepared {
-                        RecWeights::Ell(plan.unwrap().as_narrow16())
+                    let (w, ro) = if use_prepared {
+                        let p = plan.unwrap();
+                        (RecWeights::Ell(p.as_narrow16()), prepared_ro(p.readout().narrow16()))
                     } else {
-                        RecWeights::Csr
+                        (RecWeights::Csr, ReadoutMode::Gather)
                     };
-                    self.rollout_lanes_g(chunk, pre_chunk, w, buf, false, isa, Some(&mut emit))
+                    self.predict_chunk_g(chunk, pre_chunk, w, ro, buf, isa, chunk_out)
                 }
             }
         }

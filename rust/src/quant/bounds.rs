@@ -29,8 +29,12 @@
 //! side additionally checks `s_max` explicitly for the degenerate all-pruned
 //! case). The readout/pooled accumulators are covered too: the pooled
 //! deviation (scoring) and `MeanState` pooled sum (inference, via
-//! [`KernelBounds::max_steps_for`]) enter the selection, while readout score
-//! patches always widen to `i64` before accumulating.
+//! [`KernelBounds::max_steps_for`]) enter the selection; scoring's readout
+//! score *patches* still widen to `i64`, while the inference-side
+//! lane-batched readout accumulates in the lane element exactly when
+//! [`KernelBounds::readout_fits`] (and, for `MeanState` pooled features,
+//! [`KernelBounds::readout_max_steps_for`]) proves it safe — otherwise it
+//! widens the state strips to `i64` and accumulates there.
 //!
 //! # Bound derivation
 //!
@@ -59,12 +63,20 @@
 //!   `|Σ_k w_in[i,k]·u_k| ≤ in_acc_max = V·U`;
 //! - the `MeanState` pooled accumulator grows with the sequence:
 //!   `|Σ_t s| ≤ T·m`, so the narrow kernel supports sequences up to
-//!   [`KernelBounds::max_steps`] and falls back beyond it.
+//!   [`KernelBounds::max_steps`] and falls back beyond it;
+//! - a lane-batched readout accumulator obeys
+//!   `|Σ_j w_out[c,j]·s_j| ≤ readout_acc_max = Wout·m` over state-valued
+//!   features (per-step regression emits, `LastState` pooled columns), where
+//!   `Wout = max_c Σ_j |w_out[c,j]|`; over `MeanState` pooled features it
+//!   grows with the horizon (`|acc| ≤ Wout·T·m`), so the lane-element
+//!   readout supports sequences up to
+//!   [`KernelBounds::readout_max_steps_for`] and widens to `i64` beyond it.
 //!
-//! The widening points (`m_in` multiply, `<< F` shift, ladder input, readout
-//! patches) always compute in `i64`, so a narrow kernel whose bounds hold is
-//! **bit-identical** to the wide one — the narrow lanes never hold a value
-//! the wide lanes would not.
+//! The widening points (`m_in` multiply, `<< F` shift, ladder input, the
+//! scoring readout patches, and the readout score/emit finalization — the
+//! `m_out` multiply and the dequantizing divide) always compute in `i64` or
+//! `f64`, so a narrow kernel whose bounds hold is **bit-identical** to the
+//! wide one — the narrow lanes never hold a value the wide lanes would not.
 
 use super::simd::Isa;
 use super::{qmax, QuantEsn};
@@ -214,6 +226,14 @@ pub struct KernelBounds {
     pub rec_acc_max: i64,
     /// Worst-case inference input-projection accumulator (pre `m_in`).
     pub in_acc_max: i64,
+    /// Largest readout row L1 norm `max_c Σ_j |w_out[c,j]|`.
+    pub max_out_l1: i64,
+    /// Largest single readout weight magnitude.
+    pub max_wout_abs: i64,
+    /// Worst-case lane-batched readout accumulator over state-valued
+    /// features (`max_out_l1 · s_max`) — per-step regression emits and
+    /// `LastState` pooled columns.
+    pub readout_acc_max: i64,
     /// Sequence-length horizon the scoring bounds were computed for (longest
     /// calibration sequence).
     pub t_max: usize,
@@ -266,6 +286,18 @@ impl KernelBounds {
         let pooled_max = (t_max as i64).saturating_mul(dev_max);
         let rec_acc_max = max_row_l1.saturating_mul(s_max);
         let in_acc_max = max_in_l1.saturating_mul(u_max);
+        let mut max_out_l1: i64 = 0;
+        let mut max_wout_abs: i64 = 0;
+        for c in 0..model.out_dim {
+            let mut l1: i64 = 0;
+            for j in 0..model.n {
+                let a = model.w_out[c * model.n + j].saturating_abs();
+                l1 = l1.saturating_add(a);
+                max_wout_abs = max_wout_abs.max(a);
+            }
+            max_out_l1 = max_out_l1.max(l1);
+        }
+        let readout_acc_max = max_out_l1.saturating_mul(s_max);
         let scoring_narrow = scatter_max <= I32_LIMIT && pooled_max <= I32_LIMIT;
         let scoring_narrow16 = scatter_max <= I16_LIMIT && pooled_max <= I16_LIMIT;
         let inference_narrow =
@@ -290,6 +322,9 @@ impl KernelBounds {
             pooled_max,
             rec_acc_max,
             in_acc_max,
+            max_out_l1,
+            max_wout_abs,
+            readout_acc_max,
             t_max,
             max_steps,
             max_steps16,
@@ -330,6 +365,26 @@ impl KernelBounds {
             Kernel::Narrow16 => self.max_steps16,
             Kernel::Narrow => self.max_steps,
             Kernel::Wide => usize::MAX,
+        }
+    }
+
+    /// True when the lane-batched readout may accumulate in `kernel`'s lane
+    /// element over *state-valued* features — per-step regression emits and
+    /// `LastState` pooled columns, both bounded by `s_max`. When this fails
+    /// the readout widens the state strips to `i64` and accumulates there
+    /// (still gather-free, still bit-identical).
+    pub fn readout_fits(&self, kernel: Kernel) -> bool {
+        self.max_wout_abs <= kernel.lane_limit() && self.readout_acc_max <= kernel.lane_limit()
+    }
+
+    /// Longest `MeanState` pooling horizon whose lane-element readout
+    /// accumulator provably fits `kernel` (`|acc| ≤ max_out_l1 · T · s_max`);
+    /// longer chunks widen the readout accumulation to `i64`.
+    pub fn readout_max_steps_for(&self, kernel: Kernel) -> usize {
+        match kernel {
+            Kernel::Wide => usize::MAX,
+            _ if self.readout_acc_max == 0 => usize::MAX,
+            _ => (kernel.lane_limit() / self.readout_acc_max) as usize,
         }
     }
 }
@@ -448,6 +503,34 @@ mod tests {
         // selects the middle scoring tier.
         let mid = (I16_LIMIT / (2 * qmax(4))) as usize + 1;
         assert_eq!(KernelBounds::analyze(&qm, mid).scoring_kernel(), Kernel::Narrow);
+    }
+
+    /// The readout accumulator bound tracks `w_out` independently of the
+    /// recurrence bounds: inflating a readout row pushes only the
+    /// lane-element readout to the i64 fallback, never the recurrence kernel
+    /// selection (and vice versa — `refold_readout` mutates `w_out` without
+    /// touching the CSR).
+    #[test]
+    fn readout_bound_tracks_w_out_independently() {
+        let qm = paper_model(4);
+        let b = KernelBounds::analyze(&qm, 24);
+        let k = b.inference_kernel();
+        assert!(b.readout_fits(k), "paper q=4 readout must fit its own kernel");
+        assert!(b.readout_fits(Kernel::Wide));
+        assert_eq!(b.readout_max_steps_for(Kernel::Wide), usize::MAX);
+        assert!(b.readout_acc_max > 0 && b.max_out_l1 > 0);
+        assert_eq!(
+            b.readout_max_steps_for(Kernel::Narrow),
+            (I32_LIMIT / b.readout_acc_max) as usize
+        );
+        let mut qm2 = paper_model(4);
+        qm2.w_out[0] = I32_LIMIT; // past every narrow accumulator bound
+        let b2 = KernelBounds::analyze(&qm2, 24);
+        assert_eq!(b2.inference_kernel(), k, "recurrence selection must not move");
+        assert!(!b2.readout_fits(Kernel::Narrow16));
+        assert!(!b2.readout_fits(Kernel::Narrow));
+        assert!(b2.readout_fits(Kernel::Wide));
+        assert_eq!(b2.readout_max_steps_for(Kernel::Narrow16), 0);
     }
 
     /// Saturating arithmetic: absurd hand-edited weights must degrade to

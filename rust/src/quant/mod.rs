@@ -18,15 +18,20 @@
 //!   [`SAMPLE_LANES_NARROW`] (i32) or [`SAMPLE_LANES_NARROW16`] (i16)
 //!   samples per pass through the streamlined step, bit-identical per lane
 //!   to the scalar paths; the kernel behind the serving stack's native
-//!   backend. Production entry points run the prepared layout from
+//!   backend. The readout stage is lane-batched too: strip MACs over the
+//!   lane-major state/pooled buffers, zero per-lane column gathers on the
+//!   prepared path. Production entry points run the prepared layout from
 //!   [`plan`]; the CSR walk is kept as the bit-identical oracle
 //!   (`classify_batch_csr` / `predict_batch_csr`).
 //! - [`plan`]: prepared execution plans — [`PreparedPlan`] (weights
 //!   pre-narrowed to the resolved lane element type, recurrence re-laid
 //!   into a row-length-sliced ELL with fixed-trip-count rows, content-
-//!   fingerprinted for safe reuse across same-geometry serving variants)
-//!   and [`PreparedInputs`] (a request's input sequences quantized once
-//!   per sample instead of once per (step, lane)).
+//!   fingerprinted for safe reuse across same-geometry serving variants,
+//!   readout weights pre-narrowed alongside under their own bound and
+//!   fingerprint: [`plan::PreparedReadout`]), [`PreparedInputs`] (a
+//!   request's input sequences quantized once per sample instead of once
+//!   per (step, lane)) and [`PreparedStrip`] (one sample's strip quantized
+//!   at coordinator admission, shared across re-batches by `Arc`).
 //! - [`bounds`]: the static per-model overflow-bound analysis
 //!   ([`KernelBounds`]) that proves when the narrow (i32/i16) lane kernels
 //!   are safe, and the [`Kernel`]/[`KernelChoice`] selection types.
@@ -45,7 +50,7 @@ pub mod simd;
 mod streamline;
 
 pub use batch::{LaneScratch, SAMPLE_LANES, SAMPLE_LANES_NARROW, SAMPLE_LANES_NARROW16};
-pub use plan::{PreparedInputs, PreparedPlan};
+pub use plan::{PreparedInputs, PreparedPlan, PreparedReadout, PreparedStrip};
 pub use bitflip::flip_bit;
 pub use bounds::{resolve_inference, Kernel, KernelBounds, KernelChoice, I16_LIMIT, I32_LIMIT};
 pub use linear::Quantizer;

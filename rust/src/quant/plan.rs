@@ -22,10 +22,19 @@
 //!   (model, kernel), carrying a content fingerprint so scratch owners that
 //!   are reused across *models* of identical geometry (multi-variant serving)
 //!   rebuild exactly when the weights actually changed.
+//! - [`PreparedReadout`] does the same for the readout stage: `w_out`
+//!   pre-narrowed to the lane element the readout bound
+//!   ([`KernelBounds::readout_fits`]) approved, under its own `w_out`
+//!   content fingerprint (readout refolding rewrites the readout without
+//!   touching the recurrence arrays), so the lane-batched readout MACs run
+//!   strip loads with no per-MAC widening and no per-lane column gathers.
 //! - [`PreparedInputs`] quantizes a request's input sequences **once per
 //!   sample** (the same 8-bit sensor-word quantization as
 //!   [`super::QuantInputCache`]), so `qz_u.quantize` disappears from the
-//!   per-(step, lane) rollout loop.
+//!   per-(step, lane) rollout loop. Strips are `Arc`-shared: the serving
+//!   coordinator quantizes each request once at admission
+//!   ([`PreparedStrip`]) and [`PreparedInputs::assemble`] composes batches
+//!   from the cached strips, so re-batching never re-quantizes.
 //!
 //! # Exactness
 //!
@@ -43,10 +52,12 @@
 //! test can prove an *arbitrary* row permutation of the slicing leaves every
 //! output bit unchanged.
 
+use std::sync::Arc;
+
 use crate::data::TimeSeries;
 
 use super::simd::LaneElem;
-use super::{Kernel, QuantEsn};
+use super::{Kernel, KernelBounds, QuantEsn};
 
 /// One row-length bucket of the sliced-ELL layout: `n_rows` rows, each with
 /// exactly `width` live entries, stored row-major and slice-contiguous.
@@ -129,6 +140,109 @@ enum PreparedImp {
     Narrow16(PreparedWeights<i16>),
 }
 
+/// Which element type the lane-batched readout accumulates in.
+enum ReadoutImp {
+    /// i64 accumulation. The wide state kernel lands here trivially (its
+    /// readout reads `QuantEsn::w_out` directly — already i64); a *narrow*
+    /// state kernel lands here when [`KernelBounds::readout_fits`] failed,
+    /// and its readout widens each state strip once into a contiguous i64
+    /// row before the MACs — still gather-free.
+    Wide,
+    /// Bound-approved i32 accumulation over pre-narrowed readout weights.
+    Narrow(Vec<i32>),
+    /// Bound-approved i16 accumulation over pre-narrowed readout weights.
+    Narrow16(Vec<i16>),
+}
+
+/// Pre-narrowed readout weights for one (model, kernel) pair — the readout
+/// twin of [`PreparedPlan`]'s recurrence layout. Carries its **own** content
+/// fingerprint over `w_out`: readout refolding (`QuantEsn::refold_readout`)
+/// rewrites the readout constants without touching the recurrence arrays the
+/// plan fingerprint covers, so the two stale-checks must be independent. The
+/// dequantization constants (`m_out`, `bias_fold`, `qz_wo`, `bias_f`) are
+/// *not* baked in — the readout consumes them live from the model at score
+/// time, exactly like the scalar oracle.
+pub struct PreparedReadout {
+    imp: ReadoutImp,
+    kernel: Kernel,
+    fp: u64,
+}
+
+impl PreparedReadout {
+    /// Narrow `model.w_out` for `kernel` when the readout bound proves the
+    /// lane-element accumulation safe; otherwise record the i64 fallback.
+    pub fn build(model: &QuantEsn, kernel: Kernel) -> Self {
+        let bounds = KernelBounds::analyze(model, 0);
+        let imp = if kernel == Kernel::Wide || !bounds.readout_fits(kernel) {
+            ReadoutImp::Wide
+        } else {
+            match kernel {
+                Kernel::Wide => unreachable!(),
+                Kernel::Narrow => {
+                    ReadoutImp::Narrow(model.w_out.iter().map(|&v| i32::from_i64(v)).collect())
+                }
+                Kernel::Narrow16 => {
+                    ReadoutImp::Narrow16(model.w_out.iter().map(|&v| i16::from_i64(v)).collect())
+                }
+            }
+        };
+        Self { imp, kernel, fp: readout_fingerprint(model) }
+    }
+
+    /// Lane kernel these weights are typed for.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// True when this readout was prepared from exactly `model`'s current
+    /// readout content (survives recurrence-only edits, invalidated by
+    /// refolding).
+    pub fn matches(&self, model: &QuantEsn) -> bool {
+        self.fp == readout_fingerprint(model)
+    }
+
+    /// True when a narrow state kernel had to fall back to i64 readout
+    /// accumulation because the readout bound failed.
+    pub fn widened(&self) -> bool {
+        matches!(self.imp, ReadoutImp::Wide) && self.kernel != Kernel::Wide
+    }
+
+    pub(crate) fn narrow(&self) -> Option<&[i32]> {
+        match &self.imp {
+            ReadoutImp::Narrow(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn narrow16(&self) -> Option<&[i16]> {
+        match &self.imp {
+            ReadoutImp::Narrow16(w) => Some(w),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a over the readout content the prepared readout depends on: geometry,
+/// the quantized readout matrix, and `q` (the state magnitude `s_max` enters
+/// the narrowing decision through [`KernelBounds::readout_fits`]).
+fn readout_fingerprint(model: &QuantEsn) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    };
+    eat(model.n as u64);
+    eat(model.out_dim as u64);
+    eat(model.q as u64);
+    for &w in &model.w_out {
+        eat(w as u64);
+    }
+    h
+}
+
 /// A prepared inference plan: width-typed sliced-ELL weights for one
 /// (model, kernel) pair, plus the content fingerprint that invalidates it.
 /// Built by [`PreparedPlan::build`] (or installed on a
@@ -136,6 +250,7 @@ enum PreparedImp {
 /// bench pinning).
 pub struct PreparedPlan {
     imp: PreparedImp,
+    readout: PreparedReadout,
     kernel: Kernel,
     fp: u64,
 }
@@ -161,7 +276,7 @@ impl PreparedPlan {
             Kernel::Narrow => PreparedImp::Narrow(build_weights(model, order)),
             Kernel::Narrow16 => PreparedImp::Narrow16(build_weights(model, order)),
         };
-        Self { imp, kernel, fp: fingerprint(model) }
+        Self { imp, readout: PreparedReadout::build(model, kernel), kernel, fp: fingerprint(model) }
     }
 
     /// Lane kernel this plan's weights are typed for.
@@ -170,10 +285,16 @@ impl PreparedPlan {
     }
 
     /// True when this plan was prepared from exactly `model`'s weights —
-    /// geometry AND content. Scratch owners reused across same-geometry
-    /// models (multi-variant serving) must gate on this, not on geometry.
+    /// geometry AND content, recurrence AND readout. Scratch owners reused
+    /// across same-geometry models (multi-variant serving) must gate on
+    /// this, not on geometry.
     pub fn matches(&self, model: &QuantEsn) -> bool {
-        self.fp == fingerprint(model)
+        self.fp == fingerprint(model) && self.readout.matches(model)
+    }
+
+    /// The prepared lane-batched readout weights.
+    pub fn readout(&self) -> &PreparedReadout {
+        &self.readout
     }
 
     /// Number of row-length slices (fixed-trip-count groups).
@@ -264,13 +385,58 @@ fn fingerprint(model: &QuantEsn) -> u64 {
     h
 }
 
+/// One request's input sequence quantized once (`T × input_dim`, row-major)
+/// plus the quantizer identity that produced it. The strip is behind an
+/// `Arc` so the serving coordinator can quantize at **admission** and every
+/// later batch composition ([`PreparedInputs::assemble`]) reuses the same
+/// buffer — re-batching the same request set never re-quantizes.
+#[derive(Clone)]
+pub struct PreparedStrip {
+    row: Arc<Vec<i64>>,
+    scale: f64,
+    bias: f64,
+    q: u8,
+}
+
+impl PreparedStrip {
+    /// Quantize one sample's inputs with `model`'s input quantizer.
+    pub fn build(model: &QuantEsn, series: &TimeSeries) -> Self {
+        Self {
+            row: Arc::new(quantize_series(model, series)),
+            scale: model.qz_u.scale,
+            bias: model.qz_u.bias,
+            q: model.qz_u.q,
+        }
+    }
+
+    /// True when this strip was produced by a quantizer identical to
+    /// `model`'s — reusing it is bit-exact.
+    pub fn matches(&self, model: &QuantEsn) -> bool {
+        self.scale == model.qz_u.scale && self.bias == model.qz_u.bias && self.q == model.qz_u.q
+    }
+}
+
+fn quantize_series(model: &QuantEsn, s: &TimeSeries) -> Vec<i64> {
+    let t = s.inputs.rows();
+    let mut v = Vec::with_capacity(t * model.input_dim);
+    for step in 0..t {
+        let row = s.inputs.row(step);
+        for k in 0..model.input_dim {
+            v.push(model.qz_u.quantize(row[k]));
+        }
+    }
+    v
+}
+
 /// Per-request pre-quantized input strips: each sample's `T × input_dim`
 /// inputs quantized **once**, row-major, instead of once per (step, lane)
 /// inside the rollout loop. The native backend builds one per
-/// `execute_batch` call and hands worker chunks aligned sub-slices; the
-/// public batch entry points build one internally when not given one.
+/// `execute_batch` call (or receives one via `execute_prepared` from the
+/// coordinator, which quantizes per request at admission and assembles
+/// batches from the cached [`PreparedStrip`]s); the public batch entry
+/// points build one internally when not given one.
 pub struct PreparedInputs {
-    rows: Vec<Vec<i64>>,
+    rows: Vec<Arc<Vec<i64>>>,
     scale: f64,
     bias: f64,
     q: u8,
@@ -279,18 +445,28 @@ pub struct PreparedInputs {
 impl PreparedInputs {
     /// Quantize every sample's inputs once with `model`'s input quantizer.
     pub fn build(model: &QuantEsn, samples: &[&TimeSeries]) -> Self {
-        let mut rows = Vec::with_capacity(samples.len());
-        for s in samples {
-            let t = s.inputs.rows();
-            let mut v = Vec::with_capacity(t * model.input_dim);
-            for step in 0..t {
-                let row = s.inputs.row(step);
-                for k in 0..model.input_dim {
-                    v.push(model.qz_u.quantize(row[k]));
-                }
-            }
-            rows.push(v);
-        }
+        let rows = samples.iter().map(|s| Arc::new(quantize_series(model, s))).collect();
+        Self { rows, scale: model.qz_u.scale, bias: model.qz_u.bias, q: model.qz_u.q }
+    }
+
+    /// Assemble a batch's strips from per-request caches: a strip built by a
+    /// matching quantizer is shared (`Arc` clone, no copy, no re-quantize);
+    /// a missing or mismatched one is re-quantized from the sample. The
+    /// result is bit-identical to [`PreparedInputs::build`] by construction.
+    pub fn assemble(
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+        strips: &[Option<PreparedStrip>],
+    ) -> Self {
+        assert_eq!(strips.len(), samples.len(), "strips not aligned with samples");
+        let rows = samples
+            .iter()
+            .zip(strips)
+            .map(|(s, strip)| match strip {
+                Some(st) if st.matches(model) => Arc::clone(&st.row),
+                _ => Arc::new(quantize_series(model, s)),
+            })
+            .collect();
         Self { rows, scale: model.qz_u.scale, bias: model.qz_u.bias, q: model.qz_u.q }
     }
 
@@ -309,7 +485,7 @@ impl PreparedInputs {
     }
 
     /// Per-sample quantized rows, aligned with the samples passed to `build`.
-    pub(crate) fn rows(&self) -> &[Vec<i64>] {
+    pub(crate) fn rows(&self) -> &[Arc<Vec<i64>>] {
         &self.rows
     }
 }
@@ -387,6 +563,79 @@ mod tests {
         assert!(!plan.matches(&other), "same geometry, different weights must not match");
         other.set_weight(0, old);
         assert!(plan.matches(&other));
+    }
+
+    /// The prepared readout narrows exactly when the readout bound approves
+    /// the kernel, and its fingerprint tracks readout content independently
+    /// of the recurrence fingerprint.
+    #[test]
+    fn prepared_readout_narrows_iff_bound_fits_and_tracks_refolds() {
+        use crate::quant::KernelBounds;
+        let (qm, _) = model(4);
+        let bounds = KernelBounds::analyze(&qm, 0);
+        for kernel in [Kernel::Narrow16, Kernel::Narrow, Kernel::Wide] {
+            let ro = PreparedReadout::build(&qm, kernel);
+            assert_eq!(ro.kernel(), kernel);
+            assert!(ro.matches(&qm));
+            match kernel {
+                Kernel::Wide => assert!(!ro.widened() && ro.narrow().is_none()),
+                Kernel::Narrow if bounds.readout_fits(kernel) => {
+                    let w = ro.narrow().expect("bound fits: must narrow");
+                    assert!(w.iter().zip(&qm.w_out).all(|(&a, &b)| a as i64 == b));
+                }
+                Kernel::Narrow16 if bounds.readout_fits(kernel) => {
+                    let w = ro.narrow16().expect("bound fits: must narrow");
+                    assert!(w.iter().zip(&qm.w_out).all(|(&a, &b)| a as i64 == b));
+                }
+                _ => assert!(ro.widened()),
+            }
+        }
+        // A readout-only edit (what refolding does) must invalidate the
+        // readout fingerprint — and through it the whole plan — while the
+        // recurrence fingerprint alone would still match.
+        let plan = PreparedPlan::build(&qm, Kernel::Wide);
+        let mut refolded = qm.clone();
+        refolded.w_out[0] += 1;
+        assert_eq!(fingerprint(&qm), fingerprint(&refolded), "recurrence fp must not see w_out");
+        assert!(!plan.readout().matches(&refolded));
+        assert!(!plan.matches(&refolded), "plan must go stale on a readout edit");
+        assert!(plan.matches(&qm));
+    }
+
+    /// A model whose readout weights blow the narrow bound must fall back to
+    /// i64 readout accumulation even when the state kernel stays narrow.
+    #[test]
+    fn prepared_readout_widens_on_bound_failure() {
+        use crate::quant::{KernelBounds, I32_LIMIT};
+        let (qm, _) = model(4);
+        let mut hot = qm.clone();
+        hot.w_out[0] = I32_LIMIT;
+        let bounds = KernelBounds::analyze(&hot, 0);
+        assert!(!bounds.readout_fits(Kernel::Narrow));
+        let ro = PreparedReadout::build(&hot, Kernel::Narrow);
+        assert!(ro.widened());
+        assert!(ro.narrow().is_none());
+    }
+
+    /// `assemble` shares matching strips (same allocation, no copy) and
+    /// re-quantizes mismatched or missing ones.
+    #[test]
+    fn assemble_shares_matching_strips_and_requantizes_mismatches() {
+        let (qm, data) = model(6);
+        let refs: Vec<&crate::data::TimeSeries> = data.test.iter().take(3).collect();
+        // A strip whose recorded quantizer identity differs (stale cache from
+        // a variant with another input range) must be re-quantized.
+        let mut stale = PreparedStrip::build(&qm, refs[1]);
+        stale.scale *= 2.0;
+        let strips = vec![Some(PreparedStrip::build(&qm, refs[0])), Some(stale), None];
+        let pre = PreparedInputs::assemble(&qm, &refs, &strips);
+        let built = PreparedInputs::build(&qm, &refs);
+        for (a, b) in pre.rows().iter().zip(built.rows()) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        // Index 0 must be the cached allocation itself, not a copy.
+        assert!(Arc::ptr_eq(&pre.rows()[0], &strips[0].as_ref().unwrap().row));
+        assert!(!strips[1].as_ref().unwrap().matches(&qm));
     }
 
     #[test]

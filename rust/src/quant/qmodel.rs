@@ -13,7 +13,7 @@
 //! hardware evaluation all operate on this struct.
 
 use crate::data::{Dataset, Task, TimeSeries};
-use crate::esn::metrics::{accuracy, argmax, rmse};
+use crate::esn::metrics::{accuracy, argmax_i64, rmse};
 use crate::esn::{EsnModel, Features, Perf};
 
 use super::{flip_bit, Quantizer, ThresholdLadder};
@@ -447,9 +447,7 @@ impl QuantEsn {
     /// scale the hardwired bias constants. Exposed so the PJRT runtime path
     /// (which computes pooled sums in XLA) shares the exact same readout.
     pub fn classify_from_pooled(&self, pooled: &[i64], t_factor: f64) -> usize {
-        let scores = self.readout_scores(pooled, t_factor);
-        let scores_f: Vec<f64> = scores.iter().map(|&v| v as f64).collect();
-        argmax(&scores_f)
+        argmax_i64(&self.readout_scores(pooled, t_factor))
     }
 
     /// Per-class integer readout scores for a pooled feature vector — the

@@ -1551,16 +1551,12 @@ fn base_perf_from_samples(task: Task, samples: &[SamplePlan]) -> Perf {
     }
 }
 
-/// Argmax over integer scores with the exact tie semantics of
-/// [`crate::esn::metrics::argmax`] on the `f64`-converted scores.
+/// Argmax over integer scores, compared **as integers** — the same strict-`>`
+/// lowest-index-tie semantics as [`crate::esn::metrics::argmax_i64`] and the
+/// serving paths' `classify_from_pooled`. (This used to compare through
+/// `f64`, which collapses adjacent scores above 2^53.)
 fn argmax_scores(scores: &[i64]) -> usize {
-    let mut best = 0usize;
-    for c in 1..scores.len() {
-        if (scores[c] as f64) > (scores[best] as f64) {
-            best = c;
-        }
-    }
-    best
+    crate::esn::metrics::argmax_i64(scores)
 }
 
 #[cfg(test)]

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::data::TimeSeries;
-use crate::quant::QuantEsn;
+use crate::quant::{PreparedInputs, QuantEsn};
 
 use super::native::{NativeBackend, NativeConfig};
 use super::pjrt::PjrtBackend;
@@ -49,6 +49,21 @@ pub trait ExecBackend {
         model: &QuantEsn,
         samples: &[&TimeSeries],
     ) -> Result<Vec<Prediction>>;
+
+    /// [`ExecBackend::execute_batch`] with the batch's input sequences
+    /// already quantized (the coordinator quantizes each request's strip
+    /// once at admission and re-assembles batches from the cached strips
+    /// across re-batches). Backends without a pre-quantized fast path just
+    /// ignore `pre` and run the plain batch — the results are identical by
+    /// construction, `pre` is purely a work-avoidance carrier.
+    fn execute_prepared(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+        _pre: &PreparedInputs,
+    ) -> Result<Vec<Prediction>> {
+        self.execute_batch(model, samples)
+    }
 
     /// Relative per-step cost of serving `model` on this backend, in
     /// whatever unit the backend actually pays (integer MACs here). The QoS

@@ -17,19 +17,26 @@
 //! The rollouts run the *prepared* layout (`quant::plan`): each worker
 //! scratch carries a fingerprint-gated [`crate::quant::PreparedPlan`]
 //! holding the model's weights pre-narrowed to the
-//! lane element type in a row-length-sliced ELL layout, and every
-//! `execute_batch` call quantizes the request's input sequences **once** into
-//! a [`PreparedInputs`] strip, fanning aligned sub-slices to the worker
-//! chunks — so the per-step hot loop performs no weight widening, no CSR
-//! `indptr` chasing and no input quantization. Plans are invalidated by
-//! weight *content* (not geometry): multi-variant serving reuses these
-//! scratches across same-shaped models, and the fingerprint is what makes
-//! that safe.
+//! lane element type in a row-length-sliced ELL layout (recurrence *and*
+//! readout — the readout stage is lane-batched strip MACs too, zero
+//! per-lane column gathers), and every `execute_batch` call quantizes the
+//! request's input sequences **once** into a [`PreparedInputs`] strip,
+//! fanning aligned sub-slices to the worker chunks — so the per-step hot
+//! loop performs no weight widening, no CSR `indptr` chasing and no input
+//! quantization. The coordinator goes one step further through
+//! `execute_prepared`: it quantizes each request's strip once at
+//! *admission* and re-assembles [`PreparedInputs`] from the cached
+//! `Arc`-shared strips, so a request re-batched across flushes is never
+//! re-quantized. Plans are invalidated by weight *content* (not geometry):
+//! multi-variant serving reuses these scratches across same-shaped models,
+//! and the fingerprint is what makes that safe.
 //!
 //! For *multi-variant* scale-out (one engine per variant group instead of
 //! one engine serializing all variants) see the coordinator's shard mode
 //! (`ServeConfig::shards`): each shard thread builds its own
 //! [`NativeBackend`] from the same config.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
@@ -128,13 +135,24 @@ impl ExecBackend for NativeBackend {
         model: &QuantEsn,
         samples: &[&TimeSeries],
     ) -> Result<Vec<Prediction>> {
-        ensure!(samples.len() <= self.cfg.max_batch, "batch overflows native backend cap");
-        // Worker sizing needs the chunk count, which needs the lane width
-        // (8/16/32 by resolved kernel) — resolve first, then clamp.
-        let lane_w = self.ensure_scratches(model, self.cfg.workers.max(1));
         // Quantize the whole request's input sequences exactly once; worker
         // chunks get aligned sub-slices instead of re-quantizing per step.
         let pre = PreparedInputs::build(model, samples);
+        self.execute_prepared(model, samples, &pre)
+    }
+
+    fn execute_prepared(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+        pre: &PreparedInputs,
+    ) -> Result<Vec<Prediction>> {
+        ensure!(samples.len() <= self.cfg.max_batch, "batch overflows native backend cap");
+        ensure!(pre.matches(model), "prepared inputs built with a different quantizer");
+        ensure!(pre.len() == samples.len(), "prepared inputs not aligned with samples");
+        // Worker sizing needs the chunk count, which needs the lane width
+        // (8/16/32 by resolved kernel) — resolve first, then clamp.
+        let lane_w = self.ensure_scratches(model, self.cfg.workers.max(1));
         let n_chunks = samples.len().div_ceil(lane_w);
         let workers = self.workers_for(n_chunks);
         if workers <= 1 {
@@ -149,7 +167,6 @@ impl ExecBackend for NativeBackend {
             let mut handles = Vec::with_capacity(workers);
             for (w, sc) in self.scratches.iter_mut().enumerate().take(workers) {
                 let chunks = &chunks;
-                let pre = &pre;
                 handles.push(scope.spawn(move || {
                     let mut out: Vec<(usize, Vec<Prediction>)> = Vec::new();
                     for ci in (w..chunks.len()).step_by(workers) {
@@ -175,7 +192,7 @@ impl ExecBackend for NativeBackend {
 fn predict_chunk(
     model: &QuantEsn,
     chunk: &[&TimeSeries],
-    pre: &[Vec<i64>],
+    pre: &[Arc<Vec<i64>>],
     sc: &mut LaneScratch,
 ) -> Vec<Prediction> {
     match model.task {

@@ -15,9 +15,13 @@
 //! checked scalar tier precisely so these guards execute).
 //!
 //! The bottom sections pin the *inference* layouts the same way: CSR
-//! compaction (pruned-zero removal) and the prepared sliced-ELL execution
-//! plans must both be bit-identical to their CSR oracles on the full
-//! benchmark × pooling × bit-width × prune-rate × kernel grid.
+//! compaction (pruned-zero removal), the prepared sliced-ELL execution
+//! plans AND the lane-batched readout stage (broadcast-weight strip MACs
+//! over the lane-major state/pooled buffers, vs the scalar per-lane
+//! readout oracle) must all be bit-identical to their oracles on the full
+//! benchmark × pooling × bit-width × prune-rate × kernel grid — including
+//! a bound-failure model whose readout must visibly fall back to widened
+//! i64 accumulation and still match.
 
 use rcx::data::generators::{henon_sized, melborn_sized, pen_sized};
 use rcx::data::{Dataset, Task, TimeSeries};
@@ -29,7 +33,7 @@ use rcx::pruning::{
 use rcx::quant::{
     flip_bit, BatchScratch, CalibPlan, FlipCandidate, FlipScratch, Kernel, KernelBounds,
     KernelChoice, LaneScratch, PreparedInputs, PreparedPlan, QuantEsn, QuantSpec, BATCH_LANES,
-    BATCH_LANES_NARROW16, SAMPLE_LANES_NARROW16,
+    BATCH_LANES_NARROW16, I32_LIMIT, SAMPLE_LANES_NARROW16,
 };
 use rcx::rng::{Pcg64, Rng};
 
@@ -506,6 +510,165 @@ fn prepared_equivalence_pen_both_poolings() {
 fn prepared_equivalence_henon_regression() {
     let (m, data) = henon();
     prepared_grid(&m, &data, "henon");
+}
+
+// ---------------------------------------------------------------------------
+// Lane-batched readout equivalence: the readout stage now MACs broadcast-
+// weight strips over the lane-major state/pooled buffers (zero per-lane
+// column gathers on the prepared path). Both batch paths — prepared strips
+// and the gather-readout CSR oracle — must be **bit-identical** to the
+// per-sample scalar readout (`classify` / `predict`) on the full benchmark ×
+// pooling × bit-width × prune-rate × admissible-kernel grid, and a model
+// whose readout bound overflows every narrow accumulator must visibly fall
+// back to widened i64 accumulation and still match.
+
+/// Split one long sequence into fixed-length windows so the batch entry
+/// points actually engage the lane path — a lone sample short-circuits to
+/// the scalar loop by design (henon's test split is a single sequence).
+fn windows(long: &TimeSeries, win: usize) -> Vec<TimeSeries> {
+    let dim = long.inputs.cols();
+    (0..long.inputs.rows() / win)
+        .map(|i| {
+            let d = long.inputs.as_slice()[i * win * dim..(i + 1) * win * dim].to_vec();
+            TimeSeries {
+                inputs: rcx::linalg::Mat::from_vec(win, dim, d),
+                label: None,
+                targets: None,
+            }
+        })
+        .collect()
+}
+
+/// One `(model, refs)` cell: on every admissible kernel tier (plus Auto),
+/// both the lane-batched strip readout and the gather-readout oracle must
+/// reproduce the scalar per-sample readout exactly.
+fn assert_readout_equivalent(qm: &QuantEsn, task: Task, refs: &[&TimeSeries], tag: &str) {
+    let mut choices = vec![KernelChoice::Auto, KernelChoice::Narrow, KernelChoice::Wide];
+    if KernelBounds::analyze(qm, 0).inference_kernel() == Kernel::Narrow16 {
+        choices.push(KernelChoice::Narrow16);
+    }
+    match task {
+        Task::Classification => {
+            let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+            for choice in choices {
+                let mut sc_p = LaneScratch::for_model_with(qm, choice);
+                let mut sc_o = LaneScratch::for_model_with(qm, choice);
+                assert_eq!(
+                    qm.classify_batch(refs, &mut sc_p),
+                    scalar,
+                    "{tag} {choice:?}: strip readout != scalar oracle"
+                );
+                assert_eq!(
+                    qm.classify_batch_csr(refs, &mut sc_o),
+                    scalar,
+                    "{tag} {choice:?}: gather readout != scalar oracle"
+                );
+            }
+        }
+        Task::Regression => {
+            let scalar: Vec<Vec<Vec<f64>>> = refs.iter().map(|s| qm.predict(s)).collect();
+            for choice in choices {
+                let mut sc_p = LaneScratch::for_model_with(qm, choice);
+                let mut sc_o = LaneScratch::for_model_with(qm, choice);
+                assert_eq!(
+                    qm.predict_batch(refs, &mut sc_p),
+                    scalar,
+                    "{tag} {choice:?}: strip readout != scalar oracle"
+                );
+                assert_eq!(
+                    qm.predict_batch_csr(refs, &mut sc_o),
+                    scalar,
+                    "{tag} {choice:?}: gather readout != scalar oracle"
+                );
+            }
+        }
+    }
+}
+
+/// Sweep one benchmark through q × p against the scalar readout oracle.
+fn readout_grid(m: &EsnModel, data: &Dataset, refs: &[&TimeSeries], tag: &str) {
+    for q in [4u8, 6, 8] {
+        let qm = QuantEsn::from_model(m, data, QuantSpec::bits(q));
+        assert_readout_equivalent(&qm, data.task, refs, &format!("{tag} q={q} p=0"));
+        let scores = RandomPruner::new(23).scores(&qm, &data.train);
+        for p in [15.0, 60.0, 90.0] {
+            let pruned = prune_to_rate(&qm, &scores, p);
+            assert_readout_equivalent(&pruned, data.task, refs, &format!("{tag} q={q} p={p}"));
+        }
+    }
+}
+
+#[test]
+fn readout_equivalence_melborn_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = melborn(features);
+        let refs: Vec<&TimeSeries> = data.test.iter().collect();
+        readout_grid(&m, &data, &refs, &format!("melborn/{features:?}"));
+    }
+}
+
+#[test]
+fn readout_equivalence_pen_both_poolings() {
+    for features in [Features::MeanState, Features::LastState] {
+        let (m, data) = pen(features);
+        let refs: Vec<&TimeSeries> = data.test.iter().collect();
+        readout_grid(&m, &data, &refs, &format!("pen/{features:?}"));
+    }
+}
+
+#[test]
+fn readout_equivalence_henon_regression() {
+    let (m, data) = henon();
+    let wins = windows(&data.test[0], 20);
+    assert!(wins.len() >= 2, "need >= 2 windows to exercise the lane readout");
+    let refs: Vec<&TimeSeries> = wins.iter().collect();
+    readout_grid(&m, &data, &refs, "henon");
+}
+
+/// The bound-failure model: one readout weight at `I32_LIMIT` blows every
+/// narrow readout-accumulator bound while leaving the recurrence bounds
+/// (which never read `w_out`) untouched. The prepared readout must visibly
+/// take the widened i64 accumulation path — and still match the scalar
+/// oracle exactly, on both task shapes.
+#[test]
+fn readout_bound_failure_falls_back_to_i64_accumulation() {
+    // Classification (pooled integer scores).
+    let (m, data) = melborn(Features::MeanState);
+    let mut qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+    qm.w_out[0] = I32_LIMIT;
+    let b = KernelBounds::analyze(&qm, 0);
+    let k = b.inference_kernel();
+    assert_ne!(k, Kernel::Wide, "recurrence kernel must stay narrow");
+    assert!(!b.readout_fits(k), "the inflated w_out must kill the narrow readout bound");
+    let refs: Vec<&TimeSeries> = data.test.iter().collect();
+    let scalar: Vec<usize> = refs.iter().map(|s| qm.classify(s)).collect();
+    let mut sc = LaneScratch::for_model(&qm);
+    assert_eq!(sc.kernel(), k);
+    assert_eq!(qm.classify_batch(&refs, &mut sc), scalar, "widened readout != scalar oracle");
+    assert!(
+        sc.prepared().expect("plan installed").readout().widened(),
+        "readout must have taken the widened i64 path"
+    );
+
+    // Regression (per-step emits) — windowed so the lane path engages.
+    let (hm, hdata) = henon();
+    let mut qh = QuantEsn::from_model(&hm, &hdata, QuantSpec::bits(4));
+    qh.w_out[0] = I32_LIMIT;
+    let hb = KernelBounds::analyze(&qh, 0);
+    assert!(!hb.readout_fits(hb.inference_kernel()), "regression readout bound must fail too");
+    let wins = windows(&hdata.test[0], 20);
+    let hrefs: Vec<&TimeSeries> = wins.iter().collect();
+    let hscalar: Vec<Vec<Vec<f64>>> = hrefs.iter().map(|s| qh.predict(s)).collect();
+    let mut hsc = LaneScratch::for_model(&qh);
+    assert_eq!(
+        qh.predict_batch(&hrefs, &mut hsc),
+        hscalar,
+        "widened regression readout != scalar oracle"
+    );
+    assert!(
+        hsc.prepared().expect("plan installed").readout().widened(),
+        "regression readout must have taken the widened i64 path"
+    );
 }
 
 /// Property: the row order fed to the slicer is pure layout — ANY

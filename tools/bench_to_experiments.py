@@ -14,17 +14,26 @@ Rust toolchain. This tool closes the loop:
   the closed-loop serve grid, the L3-j overload-QoS sweep — served/shed/
   degraded accounting plus the queue high-water vs cap gate, the L3-i
   compacted-vs-zeroed CSR grid with the sequential-vs-parallel DSE
-  wall-clock, and the L3-k prepared sliced-ELL plan vs CSR-oracle
-  head-to-head with its static indirection/convert cost model).
+  wall-clock, the L3-k prepared sliced-ELL plan vs CSR-oracle head-to-head
+  with its static indirection/convert cost model, and the L3-l lane-batched
+  readout vs per-lane gather oracle with its strided-load/alloc cost
+  model).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
 it just produced, so a bench-section rename or table drift fails the build
-instead of silently orphaning the tables.
+instead of silently orphaning the tables. Validation also enforces the two
+hard perf gates: the prepared readout path must report **0** strided
+readout loads and 0 hot-loop allocations (l3l_readout), and every SIMD
+tier a runner advertises in `tiers_available` must actually be exercised
+(`tiers_run`) — the full grid on L3-h, the best available tier on the
+auto-dispatched L3-k/L3-l sections. `--require-tier avx512` additionally
+fails unless that tier ran (the allowed-to-skip AVX-512 CI leg passes this
+only after probing the CPU).
 
 Usage:
     python tools/bench_to_experiments.py --bench BENCH_ci.json \
-        [--experiments EXPERIMENTS.md] [--dry-run]
+        [--experiments EXPERIMENTS.md] [--dry-run] [--require-tier TIER]
 """
 import argparse
 import json
@@ -40,7 +49,7 @@ SCHEMA = {
     "pack_fill": {"candidates", "batches", "mean_lane_fill"},
     "pack_fill_16": {"candidates", "batches", "mean_lane_fill", "lanes"},
     "l3g_kernel": {"wide_s", "narrow_s", "speedup", "bit_identical"},
-    "l3h_simd": {"rows", "bit_identical"},
+    "l3h_simd": {"rows", "bit_identical", "tiers_available", "tiers_run"},
     "native_kernel": {"samples", "lane_batched_us", "scalar_us", "speedup"},
     "serve_native": {"rows"},
     "l3j_overload": {"queue_cap", "degrade_at", "rows"},
@@ -50,7 +59,12 @@ SCHEMA = {
     },
     "l3k_prepared": {
         "rows", "bit_identical", "samples", "scoring_sequential_s",
-        "scoring_batched_s", "scoring_speedup",
+        "scoring_batched_s", "scoring_speedup", "tiers_available",
+        "tiers_run",
+    },
+    "l3l_readout": {
+        "rows", "bit_identical", "strided_readout_loads_prepared",
+        "tiers_available", "tiers_run",
     },
 }
 L3B_ROW_KEYS = {
@@ -78,6 +92,13 @@ L3K_ROW_KEYS = {
     "indirections_csr", "indirections_prepared", "weight_converts_csr",
     "weight_converts_prepared", "csr_us", "prepared_us", "speedup",
 }
+L3L_ROW_KEYS = {
+    "model", "unit", "kernel", "isa", "widened", "strided_loads_oracle",
+    "strided_loads_prepared", "temp_allocs_oracle", "temp_allocs_prepared",
+    "oracle_us", "prepared_us", "speedup",
+}
+#: SIMD ISA tiers, narrowest dispatch first (Isa::name values).
+TIER_ORDER = ["scalar", "avx2", "avx512"]
 
 
 def fail(msg):
@@ -85,7 +106,42 @@ def fail(msg):
     sys.exit(1)
 
 
-def validate(bench):
+def check_tiers(bench, require=None):
+    """The SIMD tier gate: a tier a runner advertises must be exercised.
+
+    L3-h iterates every available tier explicitly, so every advertised tier
+    must appear in its tiers_run. L3-k/L3-l auto-dispatch (Isa::detect picks
+    the best available tier), so there the gate is that the *best* advertised
+    tier actually ran — a regression to a narrower tier means dispatch
+    silently stopped engaging the hardware.
+    """
+    for sec in ("l3h_simd", "l3k_prepared", "l3l_readout"):
+        s = bench[sec]
+        avail, run = s["tiers_available"], s["tiers_run"]
+        if not run:
+            fail(f"{sec}.tiers_run is empty — no SIMD tier was exercised")
+        unknown = [t for t in list(avail) + list(run) if t not in TIER_ORDER]
+        if unknown:
+            fail(f"{sec} reports unknown SIMD tier(s) {unknown}")
+        if "scalar" not in avail:
+            fail(f"{sec}.tiers_available lacks 'scalar' — the baseline tier "
+                 "cannot be unavailable")
+        if sec == "l3h_simd":
+            skipped = [t for t in avail if t not in run]
+            if skipped:
+                fail(f"l3h_simd silently skipped available SIMD tier(s) "
+                     f"{skipped} — the dispatch grid regressed")
+        else:
+            top = max(avail, key=TIER_ORDER.index)
+            if top not in run:
+                fail(f"{sec} ran {run} but the best available tier is "
+                     f"{top!r} — auto-dispatch regressed to a narrower tier")
+        if require is not None and require not in run:
+            fail(f"--require-tier {require}: {sec} did not exercise it "
+                 f"(available {avail}, ran {run})")
+
+
+def validate(bench, require_tier=None):
     for section, keys in SCHEMA.items():
         if section not in bench:
             fail(f"artifact is missing the {section!r} section")
@@ -149,6 +205,35 @@ def validate(bench):
                 f"l3k_prepared row {row}: prepared layout no longer reduces "
                 "per-step indirections vs CSR"
             )
+    ro = bench["l3l_readout"]
+    if not ro["bit_identical"]:
+        fail("l3l_readout.bit_identical is false — the bench should have aborted")
+    if ro["strided_readout_loads_prepared"] != 0:
+        fail(
+            "l3l_readout.strided_readout_loads_prepared = "
+            f"{ro['strided_readout_loads_prepared']} — the lane-batched "
+            "readout regressed to per-lane column gathers"
+        )
+    for row in ro["rows"]:
+        missing = L3L_ROW_KEYS - set(row)
+        if missing:
+            fail(f"l3l_readout row {row} missing {sorted(missing)}")
+        if row["strided_loads_prepared"] != 0:
+            fail(
+                f"l3l_readout row {row} reports strided readout loads on the "
+                "prepared path — the strip readout regressed"
+            )
+        if row["temp_allocs_prepared"] != 0:
+            fail(
+                f"l3l_readout row {row} reports hot-loop allocations on the "
+                "prepared path — the reusable accumulator buffers regressed"
+            )
+        if row["strided_loads_oracle"] <= 0:
+            fail(
+                f"l3l_readout row {row}: oracle strided-load count must be "
+                "positive (n x lanes) — the cost model drifted"
+            )
+    check_tiers(bench, require_tier)
 
 
 def wname(workers):
@@ -278,6 +363,27 @@ def render_block(bench):
         f"col-ordered batched {secs(pk['scoring_batched_s'])} — "
         f"{pk['scoring_speedup']:.2f}x, bit-identical."
     )
+    rl = bench["l3l_readout"]
+    out.append("")
+    out.append("| L3-l readout | unit | kernel | widened | "
+               "strided loads (oracle -> prepared) | temp allocs | speedup |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in rl["rows"]:
+        out.append(
+            f"| {r['model']} | {r['unit']} | {r['kernel']}/{r['isa']} | "
+            f"{'yes' if r['widened'] else 'no'} | "
+            f"{r['strided_loads_oracle']} -> {r['strided_loads_prepared']} | "
+            f"{r['temp_allocs_oracle']} -> {r['temp_allocs_prepared']} | "
+            f"{r['speedup']:.2f}x |"
+        )
+    out.append("")
+    out.append(
+        "Lane-batched readout: 0 strided loads and 0 hot-loop allocations on "
+        "the prepared path (the gather oracle pays n x lanes strided column "
+        "loads per unit), bit-identical. SIMD tiers available "
+        f"{rl['tiers_available']}; exercised: L3-h {bench['l3h_simd']['tiers_run']}, "
+        f"L3-k {bench['l3k_prepared']['tiers_run']}, L3-l {rl['tiers_run']}."
+    )
     return "\n".join(out)
 
 
@@ -329,6 +435,9 @@ def main():
     ap.add_argument("--experiments", default="EXPERIMENTS.md")
     ap.add_argument("--dry-run", action="store_true",
                     help="validate schema + markers, print the block, write nothing")
+    ap.add_argument("--require-tier", choices=TIER_ORDER, default=None,
+                    help="additionally fail unless this SIMD tier was exercised "
+                         "in every tier-recording section (the AVX-512 CI leg)")
     args = ap.parse_args()
 
     try:
@@ -336,7 +445,7 @@ def main():
             bench = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         fail(f"cannot read {args.bench}: {e}")
-    validate(bench)
+    validate(bench, args.require_tier)
 
     try:
         with open(args.experiments) as f:

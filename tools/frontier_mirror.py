@@ -225,9 +225,13 @@ def int_round(x):
 
 
 def argmax(scores):
+    # Mirror of esn::metrics::argmax_i64: exact integer compare, strict `>`,
+    # lowest index wins ties. (The Rust scoring path used to round-trip the
+    # i64 scores through f64, which collapses scores differing only below
+    # 2^53 — both sides now compare the integers directly.)
     best = 0
     for c in range(1, len(scores)):
-        if float(scores[c]) > float(scores[best]):
+        if scores[c] > scores[best]:
             best = c
     return best
 

@@ -42,13 +42,34 @@ quoted in EXPERIMENTS.md §Perf is measured here, not modeled: CSR walks
 convert; the sliced layout walks 3 descriptors per slice + n row ids + nnz
 column ids with zero converts (weights are pre-typed at build).
 
+The readout suite mirrors batch.rs `readout_accumulate` + `prepared_ro` /
+`prepared_cls_ro`: per output row a broadcast-weight strip MAC accumulates
+`racc[c·L+l] += w_out[c][j] · feat[j·L+l]` directly on the lane-major
+pooled (classification) or s_next (per-step regression) buffer — ascending
+j, the scalar oracle's summation order, so every (c, l) accumulator is the
+identical integer sum — with the readout bound (`quant::bounds`:
+`max_wout_abs` and `Σ_j |w_out[c,j]| · s_max` against the tier's lane
+limit, T-scaled for MeanState pooled features) deciding lane-element vs
+widened-i64 accumulation exactly like `PreparedReadout`. In lane-element
+mode every product and partial sum is asserted to fit the tier width
+(Python ints are exact — the assert *proves* the readout bound on the
+data), and cases deliberately FAIL the bound (inflated w_out; a clamped
+pooled horizon) and must take the widened fallback bit-identically. Both
+readout paths **count their strided loads as they run**: the gather oracle
+pays n per-lane column loads per readout (n·L per chunk for
+classification, n·L per emitted step for regression) plus a scores temp
+alloc per sample; the strip readout performs 0 strided loads and 0 temp
+allocs — the cost model EXPERIMENTS.md §Perf iteration 11 quotes.
+
 Usage:
     python tools/native_batch_mirror.py   # the CI gate; no flags
 """
 import copy
 import random
 
-from frontier_mirror import I16_MAX, I32_MAX, Ladder, Model, argmax, compact, qmax  # noqa: F401
+from frontier_mirror import (  # noqa: F401
+    I16_MAX, I32_MAX, Ladder, Model, argmax, compact, int_round, qmax,
+)
 
 # Lane widths of the kernels
 # (batch.rs SAMPLE_LANES / SAMPLE_LANES_NARROW / SAMPLE_LANES_NARROW16)
@@ -68,7 +89,11 @@ U_MAX = 127
 def inference_bounds(model, u_max=U_MAX):
     """Mirror of quant::bounds::KernelBounds::analyze (inference side):
     narrowest tier whose rec_acc/in_acc/u_max (and, at i16, s_max) bounds
-    all hold, with the per-tier MeanState pooled horizon."""
+    all hold, with the per-tier MeanState pooled horizon — plus the readout
+    bound (`readout_fits` / `readout_max_steps_for`): the lane-batched
+    readout may accumulate in the tier's lane element only when the largest
+    readout weight AND `max_out_l1 · s_max` both fit it, with the MeanState
+    pooled horizon `limit // readout_acc_max`."""
     m = qmax(model.q)
     row_l1 = 0
     for i in range(model.n):
@@ -89,10 +114,29 @@ def inference_bounds(model, u_max=U_MAX):
         "narrow": I32_MAX // m if m > 0 else float("inf"),
         "wide": float("inf"),
     }
+    max_out_l1 = 0
+    max_wout_abs = 0
+    for c in range(model.out_dim):
+        max_out_l1 = max(max_out_l1, sum(abs(w) for w in model.w_out[c]))
+        max_wout_abs = max(max_wout_abs, max((abs(w) for w in model.w_out[c]), default=0))
+    readout_acc_max = max_out_l1 * m  # s_max = qmax(q)
+    readout_fits = {
+        t: TIER_LIMIT[t] is None
+        or (max_wout_abs <= TIER_LIMIT[t] and readout_acc_max <= TIER_LIMIT[t])
+        for t in TIER_LANES
+    }
+    readout_max_steps = {
+        t: float("inf") if TIER_LIMIT[t] is None or readout_acc_max == 0
+        else TIER_LIMIT[t] // readout_acc_max
+        for t in TIER_LANES
+    }
     return {
         "rec_acc_max": rec_acc_max,
         "in_acc_max": in_acc_max,
         "max_steps": max_steps,
+        "readout_acc_max": readout_acc_max,
+        "readout_fits": readout_fits,
+        "readout_max_steps": readout_max_steps,
         "tier": tier,
         "lanes": TIER_LANES[tier],
     }
@@ -153,6 +197,11 @@ class Lanes:
         self.narrow = self.tier != "wide"
         self.lanes = TIER_LANES[self.tier]
         self.max_steps = self.bounds["max_steps"][self.tier]
+        self.ro_fits = self.bounds["readout_fits"][self.tier]
+        self.ro_max_steps = self.bounds["readout_max_steps"][self.tier]
+        # Mirror of PreparedReadout::widened(): a narrow state kernel whose
+        # readout bound failed accumulates the readout in i64 instead.
+        self.widened = self.narrow and not self.ro_fits
 
     def ck(self, v):
         """Narrow overflow guard (mirror of the Rust debug_assert!s): the
@@ -248,12 +297,39 @@ def step_lanes_prepared(m, lk, sl, width, u_lanes, s_prev, s_next, active, stats
 
 
 def new_stats():
-    return {"irregular": 0, "converts": 0, "steps": 0}
+    return {"irregular": 0, "converts": 0, "steps": 0, "ro_strided": 0, "ro_allocs": 0}
 
 
-def rollout_lanes(m, lk, chunk, pool, emit, sl=None, stats=None):
-    """chunk: list of u_int sequences (≤ lk.lanes). emit(t, l, col).
-    `sl` routes the step through the prepared sliced-ELL layout."""
+def readout_strips(m, lk, feat, lanes_mode):
+    """Mirror of batch.rs `readout_accumulate`: for every output row c, a
+    broadcast-weight strip MAC `racc[c·L+l] += w_out[c][j] · feat[j·L+l]`
+    over the lane-major feature buffer (`pooled` for classification,
+    `s_next` for per-step regression emits) — ascending j, the scalar
+    oracle's summation order, so every (c, l) accumulator is the identical
+    integer sum. Contiguous strips only: zero per-lane column gathers, zero
+    temp allocation in the Rust original. `lanes_mode` mirrors
+    `ReadoutImp::Narrow*`: every product and partial sum must fit the
+    tier's lane element, asserted exactly; otherwise the widened
+    `ReadoutImp::Wide` path accumulates in i64 (exact here either way)."""
+    L = lk.lanes
+    racc = [0] * (m.out_dim * L)
+    ck = lk.ck if lanes_mode else (lambda v: v)
+    for c in range(m.out_dim):
+        cbase = c * L
+        for j in range(m.n):
+            w = m.w_out[c][j]
+            fbase = j * L
+            for l in range(L):
+                racc[cbase + l] = ck(racc[cbase + l] + ck(w * feat[fbase + l]))
+    return racc
+
+
+def rollout_lanes(m, lk, chunk, pool, emit, sl=None, stats=None, strip_emit=None):
+    """chunk: list of u_int sequences (≤ lk.lanes). `emit(t, l, col)` is the
+    per-lane column-gather callback (the oracle readout — its strided loads
+    are counted); `strip_emit(t, s_next, active)` hands the whole lane-major
+    state to the strip readout instead (no gather). `sl` routes the step
+    through the prepared sliced-ELL layout."""
     L = lk.lanes
     assert len(chunk) <= L
     s_prev = [0] * (m.n * L)
@@ -282,14 +358,19 @@ def rollout_lanes(m, lk, chunk, pool, emit, sl=None, stats=None):
                     if t + 1 == len(u):
                         for j in range(m.n):
                             pooled[j * L + l] = s_next[j * L + l]
-        for l in range(len(chunk)):
-            if active[l]:
-                emit(t, l, [s_next[j * L + l] for j in range(m.n)])
+        if strip_emit is not None:
+            strip_emit(t, s_next, active)
+        if emit is not None:
+            for l in range(len(chunk)):
+                if active[l]:
+                    if stats is not None:
+                        stats["ro_strided"] += m.n  # per-lane column gather
+                    emit(t, l, [s_next[j * L + l] for j in range(m.n)])
         s_prev, s_next = s_next, s_prev
     return pooled
 
 
-def classify_batch(m, lk, samples, sl=None, stats=None):
+def classify_batch(m, lk, samples, sl=None, stats=None, readout="gather"):
     L = lk.lanes
     out = []
     for k in range(0, len(samples), L):
@@ -301,32 +382,78 @@ def classify_batch(m, lk, samples, sl=None, stats=None):
             # scalar fallback: lone sample, or narrow pooled horizon exceeded
             out.extend(scalar_classify(m, u) for u in chunk)
             continue
-        pooled = rollout_lanes(m, lk, chunk, True, lambda t, l, col: None,
-                               sl=sl, stats=stats)
-        for l, u in enumerate(chunk):
-            col = [pooled[j * L + l] for j in range(m.n)]
-            t_factor = float(len(u)) if m.features == "mean" else 1.0
-            out.append(argmax(m.readout_scores(col, t_factor)))
+        pooled = rollout_lanes(m, lk, chunk, True, None, sl=sl, stats=stats)
+        if readout == "gather":
+            # Oracle readout (ReadoutMode::Gather): n strided pooled-column
+            # loads per lane + a scores temp vec per sample.
+            for l, u in enumerate(chunk):
+                if stats is not None:
+                    stats["ro_strided"] += m.n
+                    stats["ro_allocs"] += 1
+                col = [pooled[j * L + l] for j in range(m.n)]
+                t_factor = float(len(u)) if m.features == "mean" else 1.0
+                out.append(argmax(m.readout_scores(col, t_factor)))
+        else:
+            # Strip readout off the lane-major pooled buffer (mirror of
+            # classify_chunk_g's prepared modes + prepared_cls_ro):
+            # lane-element sums when the static readout bound AND the
+            # MeanState pooled horizon approve, else widened i64. The
+            # streaming per-lane argmax allocates nothing.
+            lanes_mode = lk.narrow and lk.ro_fits and (
+                m.features == "last" or t_max <= lk.ro_max_steps
+            )
+            racc = readout_strips(m, lk, pooled, lanes_mode)
+            for l, u in enumerate(chunk):
+                tf = float(len(u)) if m.features == "mean" else 1.0
+                best, best_s = 0, None
+                for c in range(m.out_dim):
+                    score = m.m_out[c] * racc[c * L + l] + int_round(m.bias_fold[c] * tf)
+                    if best_s is None or score > best_s:
+                        best, best_s = c, score
+                out.append(best)
     return out
 
 
-def predict_batch(m, lk, samples, sl=None, stats=None):
+def predict_batch(m, lk, samples, sl=None, stats=None, readout="gather"):
     out = []
-    for k in range(0, len(samples), lk.lanes):
-        chunk = samples[k:k + lk.lanes]
+    L = lk.lanes
+    for k in range(0, len(samples), L):
+        chunk = samples[k:k + L]
         if len(chunk) == 1:
             out.append(scalar_predict(m, chunk[0]))
             continue
         base = len(out)
         for _ in chunk:
             out.append([])
+        if readout == "gather":
+            # Oracle readout (StepEmit::Gather): n strided state-column
+            # loads per active lane per step, counted in rollout_lanes.
+            def emit(t, l, col, base=base):
+                if t >= m.washout:
+                    out[base + l].append(readout_from_state(m, col))
 
-        def emit(t, l, col, base=base):
-            if t >= m.washout:
-                out[base + l].append(readout_from_state(m, col))
+            # pool=False: per-step regression never reads the pooled feature
+            rollout_lanes(m, lk, chunk, False, emit, sl=sl, stats=stats)
+        else:
+            # Strip readout off lane-major s_next (StepEmit::Strips +
+            # prepared_ro): state-valued features, so the static bound alone
+            # decides lane-element vs widened — no pooled horizon.
+            lanes_mode = lk.narrow and lk.ro_fits
 
-        # pool=False: per-step regression never reads the pooled feature
-        rollout_lanes(m, lk, chunk, False, emit, sl=sl, stats=stats)
+            def strip_emit(t, s_next, active, base=base, lanes_mode=lanes_mode,
+                           width=len(chunk)):
+                if t < m.washout:
+                    return
+                racc = readout_strips(m, lk, s_next, lanes_mode)
+                for l in range(width):
+                    if active[l]:
+                        out[base + l].append([
+                            racc[c * L + l] / m.denom[c] + m.bias_f[c]
+                            for c in range(m.out_dim)
+                        ])
+
+            rollout_lanes(m, lk, chunk, False, None, sl=sl, stats=stats,
+                          strip_emit=strip_emit)
     return out
 
 
@@ -340,34 +467,54 @@ def ragged_inputs(rng, n_samples, t_lo, t_hi):
 
 
 def run_case(seed, task, features, n, q, washout, out_dim, nnz, n_samples, t_lo, t_hi,
-             kernel="auto", expect_lanes=None, inflate=None, clamp_steps=None):
+             kernel="auto", expect_lanes=None, inflate=None, clamp_steps=None,
+             inflate_wout=None, expect_ro_widened=None, clamp_ro_steps=None):
+    """Every case now checks BOTH readouts against the scalar reference: the
+    per-lane column-gather oracle and the lane-batched strip readout (with
+    its bound-selected lane-element vs widened-i64 accumulation).
+    `inflate_wout` breaks the readout bound without touching the reservoir
+    bounds (the state kernel keeps its tier; the readout must widen);
+    `expect_ro_widened` pins that decision; `clamp_ro_steps` shrinks the
+    MeanState readout horizon so long chunks widen the pooled readout."""
     rng = random.Random(seed)
     # Model's own samples are unused — we feed ragged ones directly.
     m = Model(rng, n, q, task, features, washout, out_dim, nnz, t_hi, 1)
     if inflate:
         m.values = [v * inflate for v in m.values]
+    if inflate_wout:
+        m.w_out = [[w * inflate_wout for w in row] for row in m.w_out]
     lk = Lanes(m, kernel=kernel)
     if expect_lanes is not None:
         assert lk.lanes == expect_lanes, \
             f"kernel selection: expected {expect_lanes} lanes, got {lk.lanes}"
+    if expect_ro_widened is not None:
+        assert lk.widened == expect_ro_widened, \
+            f"readout widening: expected {expect_ro_widened}, got {lk.widened}"
     if clamp_steps is not None:
         lk.max_steps = clamp_steps  # force the long-sequence scalar fallback
+    if clamp_ro_steps is not None:
+        lk.ro_max_steps = clamp_ro_steps  # force the widened pooled readout
     samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
     mismatches = 0
     if task == "cls":
         got = classify_batch(m, lk, samples)
+        got_s = classify_batch(m, lk, samples, readout="strips")
         want = [scalar_classify(m, u) for u in samples]
     else:
         got = predict_batch(m, lk, samples)
+        got_s = predict_batch(m, lk, samples, readout="strips")
         want = [scalar_predict(m, u) for u in samples]
-    for i, (g, w) in enumerate(zip(got, want)):
-        if g != w:
+    for i, (g, gs, w) in enumerate(zip(got, got_s, want)):
+        if g != w or gs != w:
             mismatches += 1
             if mismatches <= 3:
-                print(f"  MISMATCH seed={seed} sample={i}: lane={g} scalar={w}")
+                print(f"  MISMATCH seed={seed} sample={i}: gather={g} strips={gs} "
+                      f"scalar={w}")
+    ro = "widened" if lk.widened else "lanes"
     print(
         f"native-batch(task={task}, feat={features}, n={n}, q={q}, wo={washout}, "
-        f"ns={n_samples}, T=[{t_lo},{t_hi}], lanes={lk.lanes}): {mismatches} mismatches"
+        f"ns={n_samples}, T=[{t_lo},{t_hi}], lanes={lk.lanes}, ro={ro}): "
+        f"{mismatches} mismatches"
     )
     return mismatches
 
@@ -483,12 +630,15 @@ def run_prepared_case(seed, task, features, n, q, washout, out_dim, nnz,
         f"expected >= {min_slices} slice widths, got {len(sl.slices)}"
     samples = ragged_inputs(rng, n_samples, t_lo, t_hi)
     st_csr, st_ell = new_stats(), new_stats()
+    # The prepared path routes the readout through the strip MACs (mirror of
+    # the Rust production path: PreparedPlan => never a gather); the CSR walk
+    # keeps the per-lane column-gather oracle.
     if task == "cls":
-        got = classify_batch(m, lk, samples, sl=sl, stats=st_ell)
+        got = classify_batch(m, lk, samples, sl=sl, stats=st_ell, readout="strips")
         csr = classify_batch(m, lk, samples, stats=st_csr)
         want = [scalar_classify(m, u) for u in samples]
     else:
-        got = predict_batch(m, lk, samples, sl=sl, stats=st_ell)
+        got = predict_batch(m, lk, samples, sl=sl, stats=st_ell, readout="strips")
         csr = predict_batch(m, lk, samples, stats=st_csr)
         want = [scalar_predict(m, u) for u in samples]
     mismatches = 0
@@ -499,21 +649,31 @@ def run_prepared_case(seed, task, features, n, q, washout, out_dim, nnz,
                 print(f"  PREPARED MISMATCH seed={seed} sample={i}: "
                       f"sliced={g} csr={c} scalar={w}")
     assert st_ell["steps"] == st_csr["steps"], "layouts executed different step counts"
+    # The acceptance claim: the prepared path performs ZERO strided readout
+    # loads and zero readout temp allocs, measured, while the gather oracle
+    # pays n per lane per readout.
+    assert st_ell["ro_strided"] == 0 and st_ell["ro_allocs"] == 0, \
+        "prepared readout must perform zero strided loads / temp allocs"
+    assert st_csr["ro_strided"] > 0, "gather oracle must have counted its loads"
     steps = max(st_ell["steps"], 1)
     ind_c, ind_e = st_csr["irregular"] / steps, st_ell["irregular"] / steps
+    ro_c = st_csr["ro_strided"] / steps
     print(
         f"prepared(task={task}, feat={features}, n={m.n}, q={q}, "
         f"nnz={len(m.values)}, tier={lk.tier}, slices={len(sl.slices)}"
         f"{', permuted' if permute else ''}): {mismatches} mismatches; "
         f"measured/step: irregular {ind_c:.0f} -> {ind_e:.0f}, "
-        f"converts {st_csr['converts'] // steps} -> {st_ell['converts']}"
+        f"converts {st_csr['converts'] // steps} -> {st_ell['converts']}, "
+        f"readout strided {ro_c:.0f} -> 0"
     )
     if perf_tag:
         print(
             f"PERF {perf_tag}: n={m.n} live_nnz={len(m.values)} "
             f"slices={len(sl.slices)} indirections/step csr={ind_c:.0f} "
             f"sliced={ind_e:.0f} ({ind_c / ind_e:.2f}x fewer) "
-            f"converts/step {st_csr['converts'] // steps} -> 0"
+            f"converts/step {st_csr['converts'] // steps} -> 0 "
+            f"readout strided loads/step gather={ro_c:.0f} -> prepared=0 "
+            f"readout temp allocs {st_csr['ro_allocs']} -> 0"
         )
     return mismatches
 
@@ -582,6 +742,26 @@ def run_checks():
     bad += run_case(9, "cls", "mean", n=12, q=6, washout=0, out_dim=3, nnz=4,
                     n_samples=17, t_lo=6, t_hi=18, clamp_steps=4,
                     expect_lanes=SAMPLE_LANES_NARROW16)
+    # READOUT bound failure: inflated w_out breaks the readout bound while
+    # every reservoir bound still holds — the state kernel keeps its
+    # narrow16 tier but the strip readout must take the widened i64
+    # accumulation (PreparedReadout::widened) and still match bit-exactly.
+    bad += run_case(61, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=4, t_hi=12, inflate_wout=10**4,
+                    expect_lanes=SAMPLE_LANES_NARROW16, expect_ro_widened=True)
+    bad += run_case(62, "reg", "mean", n=12, q=4, washout=3, out_dim=2, nnz=4,
+                    n_samples=17, t_lo=3, t_hi=14, inflate_wout=10**4,
+                    expect_lanes=SAMPLE_LANES_NARROW16, expect_ro_widened=True)
+    # ... and last-state classification through the same widened readout.
+    bad += run_case(64, "cls", "last", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=3, t_hi=15, inflate_wout=10**4,
+                    expect_ro_widened=True)
+    # Pooled readout horizon: a clamped readout_max_steps forces MeanState
+    # chunks past it onto the widened readout accumulation (NOT the scalar
+    # fallback — the state kernel itself is still in-bound), bit-identically.
+    bad += run_case(63, "cls", "mean", n=12, q=4, washout=0, out_dim=3, nnz=4,
+                    n_samples=17, t_lo=6, t_hi=18, clamp_ro_steps=4,
+                    expect_lanes=SAMPLE_LANES_NARROW16, expect_ro_widened=False)
     # Pruned-CSR compaction + pruned-bound re-resolution. The q=8 model's
     # unpruned row L1 breaks the i16 bound (auto = 16-lane i32); pruning to
     # one live slot per row shrinks it under 32767/127, so the SAME model
@@ -639,10 +819,17 @@ def run_checks():
     bad += run_prepared_case(56, "cls", "mean", n=50, q=6, washout=0, out_dim=10,
                              nnz=5, n_samples=32, t_lo=24, t_hi=24, frac=90,
                              min_slices=2, perf_tag="melborn_p90")
+    # The henon-shaped regression measurement EXPERIMENTS.md §Perf iteration
+    # 11 quotes: per-step emits make the gather oracle pay n strided loads
+    # per lane EVERY step; the prepared strip readout pays zero.
+    bad += run_prepared_case(57, "reg", "mean", n=50, q=6, washout=4, out_dim=1,
+                             nnz=5, n_samples=16, t_lo=24, t_hi=24, frac=90,
+                             min_slices=2, perf_tag="henon_reg_p90")
     print("TOTAL MISMATCHES:", bad)
     assert bad == 0, "lane-batched kernel diverges from the scalar reference"
     print("OK: lane-batched == scalar on all cases "
-          "(narrow16 + narrow + wide kernels, CSR + prepared sliced-ELL layouts)")
+          "(narrow16 + narrow + wide kernels, CSR + prepared sliced-ELL layouts, "
+          "gather + strip readouts incl. the widened-i64 fallback)")
 
 
 if __name__ == "__main__":
