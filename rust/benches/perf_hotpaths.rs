@@ -30,6 +30,9 @@
 //!         classification scoring and per-step regression emission, strip
 //!         MACs over the lane-major buffers vs n·L strided column loads —
 //!         bit-identity asserted, 0 strided readout loads gated in JSON
+//!   L3-m  fault-tolerant serving: a scripted chaos panic (`FaultPlan`)
+//!         against the supervised executor — typed rejects, exactly one
+//!         restart, bit-identical continued service, recovery latency
 //!   L1/L2 PJRT rollout artifact execution (XLA/Pallas, AOT)
 //!
 //! The L3-h/k/l JSON sections also record which SIMD ISA tiers were
@@ -60,7 +63,7 @@ use rcx::quant::{
     flip_bit, CalibPlan, FlipCandidate, Isa, Kernel, KernelChoice, LaneScratch, PreparedPlan,
     QuantEsn, QuantSpec, BATCH_LANES_NARROW,
 };
-use rcx::runtime::{pooled_states, NativeConfig, Runtime};
+use rcx::runtime::{pooled_states, FaultPlan, NativeConfig, Runtime};
 
 fn main() {
     let smoke = smoke_mode();
@@ -528,7 +531,10 @@ fn main() {
                             let s = &data.test[(c * per_client + i) % data.test.len()];
                             match client.submit(&h, s.clone()) {
                                 Ok(rx) => {
-                                    let resp = rx.recv().expect("admitted request lost");
+                                    let resp = rx
+                                        .recv()
+                                        .expect("admitted request lost")
+                                        .expect("admitted request must serve");
                                     served.fetch_add(1, Ordering::Relaxed);
                                     if resp.served_by.as_ref() == "cheap" {
                                         degraded.fetch_add(1, Ordering::Relaxed);
@@ -925,6 +931,89 @@ fn main() {
                 tier_json(&available_tier_names()),
                 tier_json(&tiers_run),
                 rows
+            ),
+        );
+    }
+
+    section("L3-m chaos recovery (scripted panic -> supervised restart, bit-identity gated)");
+    {
+        let plan = FaultPlan::parse("panic@1").expect("chaos spec");
+        let scfg = ServeConfig::builder()
+            .backend(
+                BackendConfig::Native(NativeConfig {
+                    max_batch: 8,
+                    workers: 1,
+                    ..Default::default()
+                })
+                .with_chaos(plan.clone()),
+            )
+            .batcher(
+                BatcherConfig::builder()
+                    .max_batch(8)
+                    .max_wait(std::time::Duration::from_secs(30))
+                    .build(),
+            )
+            .restart_backoff(std::time::Duration::from_millis(5))
+            .build();
+        let server = Server::start(scfg, vec![VariantSpec::new("q6", qm.clone())])
+            .expect("chaos server start");
+        let client = server.client();
+        let h = server.handle("q6").expect("resolve q6");
+        // Wave 1 (exactly max_batch submits) flushes straight into the
+        // scripted panic: every request resolves with the typed rejection.
+        let wave1: Vec<_> = (0..8)
+            .map(|i| client.submit(&h, data.test[i % data.test.len()].clone()).expect("admit"))
+            .collect();
+        for rx in wave1 {
+            let got = rx.recv().expect("chaos receiver must resolve");
+            assert!(matches!(got, Err(Rejected::Internal)), "expected Internal, got {got:?}");
+        }
+        // Wave 2 rides the rebuilt engine; recovery clocks submit → first
+        // served answer across the supervised restart (backoff included).
+        let t0 = Instant::now();
+        let wave2: Vec<_> = (0..8)
+            .map(|i| {
+                let s = data.test[i % data.test.len()].clone();
+                (i, client.submit(&h, s).expect("admit"))
+            })
+            .collect();
+        let mut recovery_us = 0u128;
+        for (i, rx) in wave2 {
+            let resp = rx.recv().expect("post-restart receiver").expect("must serve");
+            if recovery_us == 0 {
+                recovery_us = t0.elapsed().as_micros();
+            }
+            let s = &data.test[i % data.test.len()];
+            assert_eq!(
+                resp.prediction,
+                Prediction::Class(qm.classify(s)),
+                "post-restart bits diverged from the golden model"
+            );
+        }
+        let sr = server.shutdown().expect("chaos shutdown");
+        // Hard gates — the bench aborts rather than report a bad recovery.
+        assert_eq!(sr.metrics.restarts, 1, "exactly one supervised restart");
+        assert_eq!(sr.metrics.rejected_internal, 8, "exactly the panicked batch rejects");
+        assert_eq!(sr.metrics.quarantined, 0, "one panic must not trip the breaker");
+        assert_eq!(sr.metrics.requests, 8, "only the served wave is billed");
+        println!(
+            "panic@1: 8 typed rejects, 1 restart, {recovery_us} us to the first served answer"
+        );
+        report.add(
+            "l3m_faults",
+            format!(
+                concat!(
+                    "{{\"requests\": 16, \"answered\": {}, \"internal_rejected\": {}, ",
+                    "\"restarts\": {}, \"quarantined\": {}, \"plan_panics\": {}, ",
+                    "\"plan_fails\": {}, \"bit_identical\": true, \"recovery_us\": {}}}"
+                ),
+                sr.metrics.requests,
+                sr.metrics.rejected_internal,
+                sr.metrics.restarts,
+                sr.metrics.quarantined,
+                plan.panics_fired(),
+                plan.fails_fired(),
+                recovery_us
             ),
         );
     }

@@ -148,6 +148,16 @@ impl Batcher {
         self.deadlines.drain(..n);
         self.oldest = if self.queued > 0 { Some(now) } else { None };
     }
+
+    /// Forget everything queued, keeping the config. Used by the executor
+    /// supervisor after a dead incarnation's resident queue is drained with
+    /// typed rejections: the bookkeeping must match the (now empty) queue or
+    /// the next incarnation would flush ghosts.
+    pub fn reset(&mut self) {
+        self.queued = 0;
+        self.oldest = None;
+        self.deadlines.clear();
+    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,11 @@
 //! Serving metrics: counters + latency quantiles, lock-light. PR 7 adds the
 //! QoS counters — typed submit rejections (queue-full / deadline / shutdown /
-//! unknown variant), flush-time expiries and Pareto-ladder degradations — all
-//! surfaced through [`MetricsSnapshot`] and the server's shutdown report.
+//! unknown variant), flush-time expiries and Pareto-ladder degradations —
+//! and PR 10 the fault-tolerance counters — internal rejections (batches
+//! failed by a backend panic/error or drained off a dead executor),
+//! supervised restarts, crash-loop quarantines and executor failures that
+//! survived to join time — all surfaced through [`MetricsSnapshot`] and the
+//! server's shutdown report so recovery is provable post-hoc.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -19,6 +23,10 @@ pub struct Metrics {
     rejected_unknown_variant: AtomicU64,
     expired: AtomicU64,
     degraded: AtomicU64,
+    rejected_internal: AtomicU64,
+    restarts: AtomicU64,
+    quarantined: AtomicU64,
+    executor_failures: AtomicU64,
     /// Latency samples in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     /// Per-variant integer-MAC counter, keyed by routing key. A `Vec` (not a
@@ -51,6 +59,21 @@ pub struct MetricsSnapshot {
     /// Admitted requests spilled to a fallback variant by the Pareto-ladder
     /// degrade walk (served bit-exactly by the *fallback*'s model).
     pub degraded: u64,
+    /// Admitted requests answered `Rejected::Internal`: their batch's
+    /// backend pass panicked or errored, or they were drained off a dead
+    /// (or quarantined) executor's resident queue.
+    pub rejected_internal: u64,
+    /// Supervised executor restarts: engine deaths that were followed by a
+    /// fresh engine rebuild (a death that trips the breaker quarantines
+    /// instead and is not counted here).
+    pub restarts: u64,
+    /// Shards quarantined by the crash-loop breaker.
+    pub quarantined: u64,
+    /// Executor threads that were dead at join time (shutdown or drop)
+    /// despite supervision — a supervisor-level bug, kept on the books so
+    /// post-hoc accounting still balances instead of vanishing into a log
+    /// line.
+    pub executor_failures: u64,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -102,6 +125,23 @@ impl Metrics {
         self.degraded.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `n` admitted requests answered with the typed internal rejection.
+    pub fn record_internal(&self, n: u64) {
+        self.rejected_internal.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantine(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_executor_failure(&self) {
+        self.executor_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_request(&self, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
@@ -141,6 +181,10 @@ impl Metrics {
             rejected_unknown_variant: self.rejected_unknown_variant.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
+            rejected_internal: self.rejected_internal.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            executor_failures: self.executor_failures.load(Ordering::Relaxed),
         }
     }
 }
@@ -195,6 +239,22 @@ mod tests {
         assert_eq!(s.rejected_unknown_variant, 1);
         assert_eq!(s.expired, 3);
         assert_eq!(s.degraded, 1);
+    }
+
+    #[test]
+    fn fault_counters_land_in_snapshot() {
+        let m = Metrics::default();
+        m.record_internal(4);
+        m.record_internal(1);
+        m.record_restart();
+        m.record_restart();
+        m.record_quarantine();
+        m.record_executor_failure();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_internal, 5);
+        assert_eq!(s.restarts, 2);
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.executor_failures, 1);
     }
 
     #[test]

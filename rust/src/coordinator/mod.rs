@@ -1,29 +1,35 @@
-//! L3 serving coordinator: request router + dynamic batcher over a pluggable
-//! execution backend, with a QoS envelope for overload.
+//! L3 serving coordinator: an admission → router → supervised-executor
+//! pipeline over a pluggable execution backend, with a QoS envelope for
+//! overload and fault isolation for crashes.
 //!
-//! Architecture (std threads; a dedicated executor thread owns the
+//! Architecture (std threads; each shard's **supervisor** thread owns its
 //! [`crate::runtime::ExecBackend`] — built in-thread because the PJRT
-//! backend's handles are `!Send`):
+//! backend's handles are `!Send` — and keeps the shard alive across engine
+//! deaths):
 //!
 //! ```text
-//! clients ── admission ──ShardRouter──▶ executor shard 0..S
+//! clients ── admission ──ShardRouter──▶ supervised executor shard 0..S
 //!              │  shutdown gate             (S = ServeConfig::shards)
-//!              │  deadline check              ├─ router: its variant group,
-//!              │  degrade walk (Pareto        │          local bounded queues
-//!              │    ladder: spill to a        ├─ batcher: flush on max_batch,
-//!              │    cheaper variant under     │    max_wait, or deadline-slack
-//!              │    pressure)                 ├─ expiry: drop dead requests
-//!              │  bounded-queue CAS           │    before the backend pass
-//!              ▼                              ├─ backend.execute_batch
-//!        typed Rejected                       │    ├─ native: lane-batched
-//!        {QueueFull, Deadline,                │    │   bit-exact QuantEsn
-//!         ShuttingDown}                       │    │   rollouts (i16/i32/i64
-//!                                             │    │   lanes, SIMD strips)
-//!                                             │    └─ pjrt: AOT XLA/Pallas
+//!              │  deadline check              ├─ supervisor: owns queues +
+//!              │  degrade walk (Pareto        │    request channel; rebuilds
+//!              │    ladder: spill to a        │    a dead engine (bounded
+//!              │    cheaper, *healthy*        │    exponential backoff),
+//!              │    variant under pressure    │    quarantines a crash loop
+//!              │    or quarantine)            ├─ batcher: flush on max_batch,
+//!              │  bounded-queue CAS           │    max_wait, or deadline-slack
+//!              ▼                              ├─ expiry: answer dead requests
+//!        typed Rejected                       │    before the backend pass
+//!        {QueueFull, Deadline,                ├─ catch_unwind around
+//!         ShuttingDown}                       │    backend.execute_prepared
+//!                                             │    ├─ native: lane-batched
+//!   every submitted receiver resolves:        │    │   bit-exact QuantEsn
+//!   Ok(Response) or a typed Rejected          │    │   rollouts (SIMD strips)
+//!   (incl. Internal for in-server             │    ├─ pjrt: AOT XLA/Pallas
+//!   failures — no dangling channels)          │    └─ chaos: FaultPlan wrapper
 //!                                             └─ respond via channel
 //! ```
 //!
-//! The QoS pipeline ([`Rejected`], [`ServeConfig::queue_cap`] and friends):
+//! **Admission** ([`Rejected`], [`ServeConfig::queue_cap`] and friends):
 //! submits are admitted or refused with a **typed error** on the client
 //! thread — shutdown gate, deadline admission (already-expired work is never
 //! queued), then a CAS against the chosen variant's bounded queue depth.
@@ -32,10 +38,31 @@
 //! the same DSE front — trading accuracy for headroom exactly the way the
 //! paper's sensitivity grid intends; [`Response::served_by`] reports who
 //! answered, and degradation changes routing only, never arithmetic. At
-//! flush time the executor drops requests whose deadline already passed
-//! before paying for a backend pass. Everything is accounted: typed
-//! rejection counters, expiries, degradations and per-variant queue
-//! high-water marks land in [`MetricsSnapshot`] and the [`ShutdownReport`].
+//! flush time the executor answers requests whose deadline already passed
+//! before paying for a backend pass.
+//!
+//! **Supervised executors** (PR 10): each shard thread runs its serving loop
+//! inside a panic boundary. A backend pass that panics or errors answers
+//! exactly that batch's requests with [`Rejected::Internal`]; an engine
+//! death drains the shard's resident queues typed, then rebuilds the engine
+//! fresh after a bounded exponential backoff ([`ServeConfig::restart_backoff`],
+//! doubling per recent death). More than [`ServeConfig::max_restarts`] deaths
+//! within [`ServeConfig::restart_window`] trips the **crash-loop breaker**:
+//! the shard's variants are quarantined — refused at admission, skipped by
+//! the degrade walk (which spills their traffic to healthy ladder points
+//! when degradation is on). Corrupted models are refused earlier still:
+//! registration runs `QuantEsn::validate` ([`VariantRegistry::validate`]).
+//! Recovery never changes arithmetic — a rebuilt engine serves the same
+//! bit-exact answers. The deterministic fault-injection harness behind the
+//! hidden `rcx serve --chaos <spec>` flag (`panic@K` / `fail@K` /
+//! `slow@K:MS` / `flaky=P`, see [`crate::runtime::FaultPlan`]) makes all of
+//! this reproducible in tests and CI.
+//!
+//! Everything is accounted: typed rejection counters, expiries,
+//! degradations, internal rejections, restarts, quarantines and per-variant
+//! queue high-water marks land in [`MetricsSnapshot`] and the
+//! [`ShutdownReport`] — `answered + shed + expired + failed` always equals
+//! the offered load.
 //!
 //! Variants are shared handles ([`VariantSpec`]/[`VariantRegistry`]): a DSE
 //! run's whole Pareto front hot-loads as routable variants without cloning
@@ -60,8 +87,8 @@ pub use batcher::{BatchDecision, Batcher, BatcherConfig, BatcherConfigBuilder};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ShardRouter, VariantRegistry};
 pub use server::{
-    Client, Rejected, Request, Response, ServeConfig, ServeConfigBuilder, Server, ShutdownReport,
-    VariantHandle, VariantSpec,
+    Client, Rejected, Request, Response, ServeConfig, ServeConfigBuilder, ServeResult, Server,
+    ShutdownReport, VariantHandle, VariantSpec,
 };
 
 // Re-exported so serving call-sites need only this module.

@@ -99,6 +99,21 @@ impl VariantRegistry {
         self.entries.iter().map(|e| e.key.as_str())
     }
 
+    /// Run [`QuantEsn::validate`] on every registered model, keyed by
+    /// variant. `Server::start` performs the same check on its specs;
+    /// `rcx serve` calls this earlier still — before spending any startup
+    /// work — so a corrupted variant (truncated arrays, out-of-range
+    /// weights, a broken CSR) is refused with a typed diagnosis instead of
+    /// panicking an executor mid-batch.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for e in &self.entries {
+            e.model.validate().map_err(|err| {
+                anyhow::anyhow!("variant {:?}: corrupted model refused: {err}", e.key)
+            })?;
+        }
+        Ok(())
+    }
+
     /// Specs for [`super::Server::start`] (cheap: clones handles, not models).
     pub fn specs(&self) -> Vec<VariantSpec> {
         self.entries.clone()
@@ -162,6 +177,24 @@ mod tests {
         // Replacing the model keeps the declared ladder edge.
         reg.insert("q8", Arc::clone(&q4));
         assert_eq!(reg.specs()[0].fallback.as_deref(), Some("q4"));
+    }
+
+    #[test]
+    fn registry_validate_names_the_corrupted_variant() {
+        let data = melborn_sized(1, 20, 10);
+        let res = Reservoir::init(ReservoirSpec::paper(10, 1, 30, 0.9, 1.0, 1));
+        let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+        let good = Arc::new(QuantEsn::from_model(&m, &data, QuantSpec::bits(6)));
+        let mut broken = (*good).clone();
+        broken.w_r_values[0] = crate::quant::qmax(6) + 3;
+
+        let mut reg = VariantRegistry::new();
+        reg.insert("good", Arc::clone(&good));
+        assert!(reg.validate().is_ok());
+        reg.insert("evil", Arc::new(broken));
+        let err = reg.validate().expect_err("corrupted variant must refuse");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("evil") && msg.contains("corrupted"), "{msg}");
     }
 
     #[test]

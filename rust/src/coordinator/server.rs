@@ -1,7 +1,8 @@
 //! The serving loop: router over model variants, dynamic batching, execution
 //! through the pluggable [`ExecBackend`], response delivery — with QoS under
-//! overload: bounded per-variant queues, deadline admission/expiry, and
-//! Pareto-ladder graceful degradation.
+//! overload (bounded queues, deadlines, Pareto-ladder degradation) and fault
+//! tolerance under crashes (panic-isolated batches, supervised executors, a
+//! crash-loop breaker).
 //!
 //! # QoS pipeline (PR 7)
 //!
@@ -25,10 +26,11 @@
 //!    recorded per-variant high-water mark provably never exceeds
 //!    `ServeConfig::queue_cap`.
 //!
-//! At flush time the executor drops requests whose deadline has already
-//! passed (`Metrics::record_expired`) before paying for a backend pass; the
-//! batcher schedules flushes at `deadline - deadline_slack` so admitted
-//! requests normally make it (see [`super::BatcherConfig`]).
+//! At flush time the executor answers requests whose deadline has already
+//! passed with [`Rejected::Deadline`] (`Metrics::record_expired`) before
+//! paying for a backend pass; the batcher schedules flushes at `deadline -
+//! deadline_slack` so admitted requests normally make it (see
+//! [`super::BatcherConfig`]).
 //!
 //! Executor ingest also quantizes each admitted request's input strip
 //! exactly once ([`PreparedStrip`]); every batch assembled at flush time
@@ -36,19 +38,50 @@
 //! through [`ExecBackend::execute_prepared`], so a request re-batched across
 //! flush decisions is never re-quantized.
 //!
+//! # Fault tolerance (PR 10)
+//!
+//! Every submitted receiver resolves — `Ok(Response)` or a typed
+//! [`Rejected`] — no matter what the backend does:
+//!
+//! - **Panic-isolated batches.** Each backend pass runs inside
+//!   `catch_unwind`; a panicking (or error-returning) pass answers exactly
+//!   that batch's requests with [`Rejected::Internal`]
+//!   (`Metrics::rejected_internal`) instead of killing the shard. A clean
+//!   error keeps the engine; a panic marks it poisoned.
+//! - **Supervised executors.** Each shard thread is a supervisor that owns
+//!   the request channel and the resident queues *outside* the unwind
+//!   boundary. When an incarnation dies (backend panic, executor bug), the
+//!   supervisor drains the resident queue with [`Rejected::Internal`],
+//!   releases the admission slots, and rebuilds the backend engine fresh
+//!   after a bounded exponential backoff (`ServeConfig::restart_backoff`,
+//!   doubling per recent death) — detected at runtime, not at shutdown join.
+//! - **Crash-loop breaker.** More than `ServeConfig::max_restarts` deaths
+//!   inside `ServeConfig::restart_window` quarantines the shard: its
+//!   variants refuse admission (and, with `--degrade` on, the walk spills
+//!   their traffic down the Pareto ladder to healthy points), the thread
+//!   parks and answers raced requests typed until shutdown.
+//!   [`ShutdownReport::quarantined_variants`] and the restart/quarantine/
+//!   internal-reject counters in [`MetricsSnapshot`] make recovery provable
+//!   post-hoc.
+//!
+//! Recovery never changes arithmetic: a rebuilt engine serves the same
+//! bit-exact answers, so every *answered* response is bit-identical to the
+//! fault-free run (asserted by the chaos suite in
+//! `coordinator_integration.rs`, driven by `runtime::FaultPlan`).
+//!
 //! # Sharded (multi-executor) mode
 //!
-//! With `ServeConfig::shards > 1` the server runs one executor thread per
-//! **variant group** instead of a single thread serializing every variant:
-//! the [`super::ShardRouter`] pins each variant to a shard (round-robin by
-//! global index), each shard thread builds its **own** backend engine from
-//! the shared [`BackendConfig`] and runs the full ingest → per-variant queue
-//! → deadline-aware batcher → execute loop over just its group. Clients
-//! route at submit time (pure arithmetic, no cross-shard locks; a degrade
-//! spill is just a different route); metrics aggregate into one shared sink.
-//! Because lane kernels never mix samples across batches, shard count — like
-//! worker count and kernel width — cannot change a single served bit; it
-//! only changes which core computes it (asserted by
+//! With `ServeConfig::shards > 1` the server runs one supervised executor
+//! thread per **variant group** instead of a single thread serializing every
+//! variant: the [`super::ShardRouter`] pins each variant to a shard
+//! (round-robin by global index), each shard thread builds its **own**
+//! backend engine from the shared [`BackendConfig`] and runs the full ingest
+//! → per-variant queue → deadline-aware batcher → execute loop over just its
+//! group. Clients route at submit time (pure arithmetic, no cross-shard
+//! locks; a degrade spill is just a different route); metrics aggregate into
+//! one shared sink. Because lane kernels never mix samples across batches,
+//! shard count — like worker count and kernel width — cannot change a single
+//! served bit; it only changes which core computes it (asserted by
 //! `sharded_serving_is_bit_identical_to_single_executor`).
 //!
 //! # Client API
@@ -60,6 +93,7 @@
 
 use std::collections::VecDeque;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -114,7 +148,7 @@ impl VariantSpec {
 /// QoS envelope. `#[non_exhaustive]`: construct via [`ServeConfig::builder`]
 /// (or `Default`) so future knobs stop being breaking edits.
 #[non_exhaustive]
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub backend: BackendConfig,
     pub batcher: BatcherConfig,
@@ -137,6 +171,33 @@ pub struct ServeConfig {
     /// fallback. 0 = auto: half the queue cap when bounded, else twice the
     /// batcher's max_batch.
     pub degrade_at: usize,
+    /// Crash-loop breaker: supervised restarts a shard may consume within
+    /// `restart_window` before the breaker quarantines it. `0` quarantines
+    /// on the first death.
+    pub max_restarts: u32,
+    /// Sliding window the breaker counts deaths over.
+    pub restart_window: Duration,
+    /// Base delay before a dead shard's engine is rebuilt; doubles per
+    /// recent death (capped at 32× the base) so a flapping engine cannot
+    /// hog a core.
+    pub restart_backoff: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            backend: BackendConfig::default(),
+            batcher: BatcherConfig::default(),
+            shards: 0,
+            queue_cap: 0,
+            default_deadline: None,
+            degrade: false,
+            degrade_at: 0,
+            max_restarts: 3,
+            restart_window: Duration::from_secs(10),
+            restart_backoff: Duration::from_millis(20),
+        }
+    }
 }
 
 impl ServeConfig {
@@ -203,35 +264,67 @@ impl ServeConfigBuilder {
         self
     }
 
+    pub fn max_restarts(mut self, n: u32) -> Self {
+        self.cfg.max_restarts = n;
+        self
+    }
+
+    pub fn restart_window(mut self, window: Duration) -> Self {
+        self.cfg.restart_window = window;
+        self
+    }
+
+    pub fn restart_backoff(mut self, base: Duration) -> Self {
+        self.cfg.restart_backoff = base;
+        self
+    }
+
     pub fn build(self) -> ServeConfig {
         self.cfg
     }
 }
 
-/// Why a submit was refused. Typed so callers can shed load (`QueueFull`),
-/// drop stale work (`Deadline`) or stop retrying (`ShuttingDown`) instead of
-/// parsing error strings; converts into `anyhow::Error` via `?`.
+/// Why the server refused (or failed) a request. Typed so callers can shed
+/// load (`QueueFull`), drop stale work (`Deadline`), retry elsewhere
+/// (`Internal`) or stop retrying (`ShuttingDown`) instead of parsing error
+/// strings; converts into `anyhow::Error` via `?`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Rejected {
-    /// The chosen variant's bounded queue is at `ServeConfig::queue_cap`.
+    /// The chosen variant's bounded queue is at `ServeConfig::queue_cap`
+    /// (or its shard is quarantined and the degrade ladder had no healthy
+    /// point with room).
     QueueFull,
-    /// The request's deadline had already passed at submit time.
+    /// The request's deadline passed — at submit time, or while it waited
+    /// in queue (expiry is answered before the backend pass is paid for).
     Deadline,
     /// The server is shutting down (or already gone).
     ShuttingDown,
+    /// The request was admitted but failed inside the server: its batch's
+    /// backend pass panicked or returned an error, or its executor died
+    /// with the request still resident in queue. The work was *not* served;
+    /// the shard restarts with a fresh engine behind it.
+    Internal,
 }
 
 impl fmt::Display for Rejected {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Rejected::QueueFull => write!(f, "rejected: variant queue at capacity"),
-            Rejected::Deadline => write!(f, "rejected: deadline already expired at submit"),
+            Rejected::Deadline => write!(f, "rejected: deadline expired"),
             Rejected::ShuttingDown => write!(f, "rejected: server is shutting down"),
+            Rejected::Internal => write!(f, "rejected: internal failure in the serving shard"),
         }
     }
 }
 
 impl std::error::Error for Rejected {}
+
+/// What a submitted receiver resolves to: the response, or the typed reason
+/// the server could not produce one. The fault-tolerance contract is that
+/// **every** admitted request's receiver resolves — queue expiry, backend
+/// panic, executor death, quarantine and shutdown races all answer a typed
+/// [`Rejected`] instead of dropping the channel.
+pub type ServeResult = Result<Response, Rejected>;
 
 /// A routing key resolved once against the server's registry
 /// ([`Server::handle`]). Cheap to clone and share across client threads;
@@ -257,7 +350,7 @@ pub struct Request {
     series: TimeSeries,
     submitted: Instant,
     deadline: Option<Instant>,
-    respond: Sender<Response>,
+    respond: Sender<ServeResult>,
     /// The series quantized against the serving variant's input quantizer,
     /// built **once** at executor ingest. Re-batching never re-quantizes: a
     /// request deferred across several flush decisions contributes the same
@@ -285,9 +378,10 @@ enum Control {
 }
 
 /// QoS state shared by the server, every client and every executor: the
-/// admission counters the bounded queues are enforced on, and the resolved
-/// fallback chain. Depths are incremented at submit admission and
-/// decremented when the executor drains the request at flush time, so
+/// admission counters the bounded queues are enforced on, the resolved
+/// fallback chain, and the breaker's quarantine flags. Depths are
+/// incremented at submit admission and decremented when the executor drains
+/// the request at flush time (or its supervisor drains it typed), so
 /// `depth <= cap` holds at every instant and the high-water marks are exact.
 struct Qos {
     cap: usize,
@@ -298,12 +392,18 @@ struct Qos {
     fallbacks: Vec<Option<usize>>,
     depths: Vec<AtomicUsize>,
     highwater: Vec<AtomicU64>,
+    /// Per-variant breaker flag: set (never cleared) by a shard's supervisor
+    /// when the crash-loop breaker trips. Admission refuses quarantined
+    /// variants; the degrade walk treats them as having no room.
+    quarantined: Vec<AtomicBool>,
     shutting_down: AtomicBool,
 }
 
 /// Everything [`Server::shutdown`] learned while draining: the final metrics
-/// snapshot (including the QoS rejection/expiry/degradation counters), the
-/// per-variant MAC bill, and the per-variant queue-depth high-water marks.
+/// snapshot (including the QoS rejection/expiry/degradation counters and the
+/// fault-tolerance restart/quarantine/internal-reject counters), the
+/// per-variant MAC bill, the per-variant queue-depth high-water marks, and
+/// which variants the crash-loop breaker quarantined.
 #[derive(Clone, Debug)]
 pub struct ShutdownReport {
     pub metrics: MetricsSnapshot,
@@ -312,6 +412,8 @@ pub struct ShutdownReport {
     /// Per-variant peak queue depth over the server's lifetime, in variant
     /// order. Never exceeds `ServeConfig::queue_cap` when one is set.
     pub queue_highwater: Vec<(String, u64)>,
+    /// Routing keys the crash-loop breaker quarantined, in variant order.
+    pub quarantined_variants: Vec<String>,
 }
 
 /// One executor shard's slice of the variant table: its specs in local-index
@@ -321,9 +423,9 @@ struct ShardCtx {
     globals: Vec<usize>,
 }
 
-/// Running server: one executor thread per shard, each owning its own
-/// execution backend (one shard total unless `ServeConfig::shards` asks for
-/// more).
+/// Running server: one supervised executor thread per shard, each owning its
+/// own execution backend (one shard total unless `ServeConfig::shards` asks
+/// for more).
 pub struct Server {
     txs: Vec<Sender<Control>>,
     router: ShardRouter,
@@ -338,9 +440,17 @@ impl Server {
     /// threads (PJRT handles are `!Send`); startup failures (missing
     /// artifacts, compile errors) from any shard propagate out of this call,
     /// as does an invalid fallback chain (unknown key, self-reference,
-    /// cycle, or a "fallback" the backend would serve at *higher* cost).
+    /// cycle, or a "fallback" the backend would serve at *higher* cost) or a
+    /// corrupted model ([`QuantEsn::validate`] — serving garbage weights
+    /// would panic mid-batch or silently mispredict, so registration refuses
+    /// them up front).
     pub fn start(cfg: ServeConfig, variants: Vec<VariantSpec>) -> Result<Server> {
         anyhow::ensure!(!variants.is_empty(), "no variants to serve");
+        for v in &variants {
+            v.model.validate().map_err(|e| {
+                anyhow::anyhow!("variant {:?}: corrupted model refused at registration: {e}", v.key)
+            })?;
+        }
         let keys: Vec<String> = variants.iter().map(|v| v.key.clone()).collect();
         let fallbacks = resolve_fallbacks(&cfg.backend, &variants, &keys)?;
         let (cap, degrade_at) = cfg.qos_limits();
@@ -352,6 +462,7 @@ impl Server {
             fallbacks,
             depths: (0..variants.len()).map(|_| AtomicUsize::new(0)).collect(),
             highwater: (0..variants.len()).map(|_| AtomicU64::new(0)).collect(),
+            quarantined: (0..variants.len()).map(|_| AtomicBool::new(false)).collect(),
             shutting_down: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::default());
@@ -374,7 +485,7 @@ impl Server {
             let cfg2 = cfg.clone();
             let join = std::thread::Builder::new()
                 .name(format!("rcx-executor-{shard}"))
-                .spawn(move || executor(cfg2, ctx, rx, m2, q2, ready_tx))
+                .spawn(move || supervisor(shard, cfg2, ctx, rx, m2, q2, ready_tx))
                 .context("spawn executor")?;
             txs.push(tx);
             joins.push(join);
@@ -436,10 +547,23 @@ impl Server {
             .collect()
     }
 
+    /// Routing keys the crash-loop breaker has quarantined so far, in
+    /// variant order (empty on a healthy server).
+    pub fn quarantined_variants(&self) -> Vec<String> {
+        self.variants
+            .iter()
+            .zip(self.qos.quarantined.iter())
+            .filter(|(_, q)| q.load(Ordering::Acquire))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
     /// Graceful shutdown: gates new submits, drains every shard's queue
     /// (admitted work is still served — age/deadline waits no longer apply),
     /// joins all executors, and aggregates **every** shard failure into one
-    /// error instead of keeping only the last.
+    /// error instead of keeping only the last. Shard failures also land on
+    /// the `executor_failures` meter so accounting balances post-hoc even
+    /// when the report is consumed by a caller that ignores the error.
     pub fn shutdown(mut self) -> Result<ShutdownReport> {
         self.qos.shutting_down.store(true, Ordering::Release);
         for tx in &self.txs {
@@ -450,8 +574,14 @@ impl Server {
         for (shard, j) in self.joins.drain(..).enumerate() {
             match j.join() {
                 Ok(Ok(())) => {}
-                Ok(Err(e)) => failures.push(format!("shard {shard}: {e:#}")),
-                Err(_) => failures.push(format!("shard {shard}: executor panicked")),
+                Ok(Err(e)) => {
+                    self.metrics.record_executor_failure();
+                    failures.push(format!("shard {shard}: {e:#}"));
+                }
+                Err(_) => {
+                    self.metrics.record_executor_failure();
+                    failures.push(format!("shard {shard}: executor panicked"));
+                }
             }
         }
         anyhow::ensure!(
@@ -464,6 +594,7 @@ impl Server {
             metrics: self.metrics.snapshot(),
             macs_by_variant: self.metrics.macs_by_variant(),
             queue_highwater: self.queue_highwater(),
+            quarantined_variants: self.quarantined_variants(),
         })
     }
 }
@@ -476,11 +607,19 @@ impl Drop for Server {
         }
         for (shard, j) in self.joins.drain(..).enumerate() {
             // A `Drop` can't return errors, but it must not swallow them
-            // either: log shard failures and executor panics.
+            // either: record shard failures on the metrics sink (so post-hoc
+            // accounting over a kept `MetricsSnapshot`/`ShutdownReport`
+            // still balances) *and* log them.
             match j.join() {
                 Ok(Ok(())) => {}
-                Ok(Err(e)) => eprintln!("rcx executor shard {shard} failed during drop: {e:#}"),
-                Err(_) => eprintln!("rcx executor shard {shard} panicked (joined during drop)"),
+                Ok(Err(e)) => {
+                    self.metrics.record_executor_failure();
+                    eprintln!("rcx executor shard {shard} failed during drop: {e:#}");
+                }
+                Err(_) => {
+                    self.metrics.record_executor_failure();
+                    eprintln!("rcx executor shard {shard} panicked (joined during drop)");
+                }
             }
         }
     }
@@ -547,12 +686,13 @@ pub struct Client {
 impl Client {
     /// Submit asynchronously; returns the response channel, or a typed
     /// [`Rejected`] when admission refuses the request. The server's
-    /// `default_deadline` (if any) applies.
+    /// `default_deadline` (if any) applies. The returned receiver always
+    /// resolves — to `Ok(Response)` or a typed `Err` (see [`ServeResult`]).
     pub fn submit(
         &self,
         variant: &VariantHandle,
         series: TimeSeries,
-    ) -> Result<Receiver<Response>, Rejected> {
+    ) -> Result<Receiver<ServeResult>, Rejected> {
         let deadline = self.qos.default_deadline.map(|d| Instant::now() + d);
         self.submit_inner(variant.index, series, deadline)
     }
@@ -564,23 +704,30 @@ impl Client {
         variant: &VariantHandle,
         series: TimeSeries,
         budget: Duration,
-    ) -> Result<Receiver<Response>, Rejected> {
+    ) -> Result<Receiver<ServeResult>, Rejected> {
         self.submit_inner(variant.index, series, Some(Instant::now() + budget))
     }
 
     /// Submit and block for the response (classification or regression).
+    /// A typed in-server rejection (expiry, internal failure) surfaces as an
+    /// error carrying the [`Rejected`] cause.
     pub fn infer(&self, variant: &VariantHandle, series: TimeSeries) -> Result<Response> {
         let rx = self.submit(variant, series)?;
-        rx.recv().context("server dropped the request")
+        let result = rx.recv().context("server dropped the request")?;
+        result.map_err(Into::into)
     }
 
     /// Deprecated index-based submit, kept one PR so call sites migrate to
     /// [`Server::handle`] + [`Client::submit`]. In-range indices go through
     /// the full QoS admission path; an out-of-range index keeps the legacy
-    /// semantics — the receiving shard's ingest rejects (and now counts) it,
-    /// failing that caller's recv.
+    /// semantics — the receiving shard's ingest rejects (and counts) it,
+    /// answering that caller with [`Rejected::Internal`].
     #[deprecated(note = "resolve a VariantHandle via Server::handle and use Client::submit")]
-    pub fn submit_index(&self, variant: usize, series: TimeSeries) -> Result<Receiver<Response>> {
+    pub fn submit_index(
+        &self,
+        variant: usize,
+        series: TimeSeries,
+    ) -> Result<Receiver<ServeResult>> {
         if variant < self.qos.depths.len() {
             let deadline = self.qos.default_deadline.map(|d| Instant::now() + d);
             return self.submit_inner(variant, series, deadline).map_err(anyhow::Error::new);
@@ -604,7 +751,7 @@ impl Client {
         primary: usize,
         series: TimeSeries,
         deadline: Option<Instant>,
-    ) -> Result<Receiver<Response>, Rejected> {
+    ) -> Result<Receiver<ServeResult>, Rejected> {
         if self.qos.shutting_down.load(Ordering::Acquire) {
             self.metrics.record_rejected_shutdown();
             return Err(Rejected::ShuttingDown);
@@ -640,10 +787,17 @@ impl Client {
     /// Pick the serving variant (Pareto-ladder degrade walk) and reserve a
     /// queue slot on it, or reject. The reservation CAS only increments a
     /// depth that is strictly below the cap, which is what makes the
-    /// high-water bound exact rather than best-effort.
+    /// high-water bound exact rather than best-effort. A quarantined choice
+    /// is refused outright — the walk already spilled past quarantined
+    /// points when degradation is on, so landing on one means the ladder had
+    /// no healthy point with room.
     fn admit(&self, primary: usize) -> Result<usize, Rejected> {
         let chosen = self.choose_variant(primary);
         let qos = &*self.qos;
+        if qos.quarantined[chosen].load(Ordering::Acquire) {
+            self.metrics.record_rejected_full();
+            return Err(Rejected::QueueFull);
+        }
         let admitted = qos.depths[chosen].fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
             (d < qos.cap).then_some(d + 1)
         });
@@ -659,18 +813,20 @@ impl Client {
         }
     }
 
-    /// The degrade walk: the first chain point under the pressure threshold
-    /// (primary preferred), else the first with any room under the cap, else
-    /// the primary (whose admission CAS will reject). Depth reads here are
-    /// advisory — only the CAS in [`Client::admit`] is authoritative.
+    /// The degrade walk: the first *healthy* (non-quarantined) chain point
+    /// under the pressure threshold (primary preferred), else the first
+    /// healthy one with any room under the cap, else the primary (whose
+    /// admission check will reject). Depth reads here are advisory — only
+    /// the CAS in [`Client::admit`] is authoritative.
     fn choose_variant(&self, primary: usize) -> usize {
         let qos = &*self.qos;
         if !qos.degrade {
             return primary;
         }
+        let healthy = |v: usize| !qos.quarantined[v].load(Ordering::Acquire);
         let mut cur = primary;
         for _ in 0..=qos.fallbacks.len() {
-            if qos.depths[cur].load(Ordering::Acquire) < qos.degrade_at {
+            if healthy(cur) && qos.depths[cur].load(Ordering::Acquire) < qos.degrade_at {
                 return cur;
             }
             match qos.fallbacks[cur] {
@@ -680,7 +836,7 @@ impl Client {
         }
         let mut cur = primary;
         for _ in 0..=qos.fallbacks.len() {
-            if qos.depths[cur].load(Ordering::Acquire) < qos.cap {
+            if healthy(cur) && qos.depths[cur].load(Ordering::Acquire) < qos.cap {
                 return cur;
             }
             match qos.fallbacks[cur] {
@@ -692,11 +848,41 @@ impl Client {
     }
 }
 
-/// Executor: one shard's serving loop. Owns its own backend engine; routes
-/// over its variant group (local indices), batches per variant with
-/// deadline-aware flush, drops expired work, executes, responds. With one
-/// shard this is the whole server.
-fn executor(
+/// One shard's serving state. Owned by the **supervisor**, outside the
+/// executor incarnation's unwind boundary: queued requests and batcher
+/// bookkeeping survive an engine death, so the supervisor can answer them
+/// typed instead of letting their response senders vanish with the stack.
+struct ShardState {
+    specs: Vec<VariantSpec>,
+    globals: Vec<usize>,
+    /// Shared `Arc<str>` keys so every response labels its serving variant
+    /// without a per-request allocation.
+    keys: Vec<Arc<str>>,
+    queues: Vec<VecDeque<Request>>,
+    batchers: Vec<Batcher>,
+    max_batch: usize,
+}
+
+/// How one executor incarnation ended.
+enum Incarnation {
+    /// Clean shutdown drain: the supervisor exits.
+    Shutdown,
+    /// The backend panicked mid-batch (that batch was already answered with
+    /// [`Rejected::Internal`]); the engine is suspect and must be rebuilt.
+    Died(String),
+}
+
+/// Executor supervisor: one shard's thread. Runs the serving loop through a
+/// panic boundary and keeps the shard alive across engine deaths. On a
+/// death it drains the resident queues typed ([`Rejected::Internal`]),
+/// rebuilds the backend engine fresh after a bounded exponential backoff,
+/// and resumes ingest on the *same* request channel — detection happens at
+/// runtime, not at shutdown join. A crash loop (more than
+/// `ServeConfig::max_restarts` deaths within `ServeConfig::restart_window`)
+/// trips the breaker: the shard's variants are quarantined and the thread
+/// parks, answering raced requests typed until shutdown.
+fn supervisor(
+    shard: usize,
     cfg: ServeConfig,
     ctx: ShardCtx,
     rx: Receiver<Control>,
@@ -704,7 +890,11 @@ fn executor(
     qos: Arc<Qos>,
     ready: Sender<Result<()>>,
 ) -> Result<()> {
-    let mut backend = match cfg.backend.build() {
+    let ShardCtx { specs, globals } = ctx;
+    let nvar = specs.len();
+    // The first engine build gates startup: a missing artifact or compile
+    // error fails `Server::start` instead of spinning the restart breaker.
+    let first = match cfg.backend.build() {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -714,23 +904,92 @@ fn executor(
             return Ok(());
         }
     };
-    let max_batch = cfg.batcher.max_batch.min(backend.max_batch());
-    let bcfg = BatcherConfig { max_batch, ..cfg.batcher };
+    let bcfg = BatcherConfig {
+        max_batch: cfg.batcher.max_batch.min(first.max_batch()),
+        ..cfg.batcher
+    };
+    let mut state = ShardState {
+        keys: specs.iter().map(|s| Arc::from(s.key.as_str())).collect(),
+        queues: (0..nvar).map(|_| VecDeque::new()).collect(),
+        batchers: (0..nvar).map(|_| Batcher::new(bcfg)).collect(),
+        max_batch: bcfg.max_batch,
+        specs,
+        globals,
+    };
+    let mut engine = Some(first);
+    // Death timestamps still inside the breaker window (aged out lazily).
+    let mut recent: VecDeque<Instant> = VecDeque::new();
+    loop {
+        let reason = if let Some(backend) = engine.take() {
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                serve_loop(&mut state, backend, &rx, &metrics, &qos)
+            }));
+            match run {
+                Ok(Incarnation::Shutdown) => {
+                    shutdown_drain(&rx, &state, &qos, &metrics);
+                    return Ok(());
+                }
+                Ok(Incarnation::Died(reason)) => reason,
+                Err(payload) => {
+                    format!("executor panicked: {}", panic_message(payload.as_ref()))
+                }
+            }
+        } else {
+            match cfg.backend.build() {
+                Ok(b) => {
+                    engine = Some(b);
+                    continue;
+                }
+                Err(e) => format!("engine rebuild failed: {e:#}"),
+            }
+        };
+        // The incarnation died. No receiver may dangle: answer everything
+        // still resident with the typed internal rejection, free the
+        // admission slots, reset the batcher bookkeeping.
+        drain_dead(&mut state, &qos, &metrics);
+        let now = Instant::now();
+        while recent.front().is_some_and(|&t| now.duration_since(t) > cfg.restart_window) {
+            recent.pop_front();
+        }
+        if recent.len() >= cfg.max_restarts as usize {
+            for &g in &state.globals {
+                qos.quarantined[g].store(true, Ordering::Release);
+            }
+            metrics.record_quarantine();
+            eprintln!(
+                "rcx executor shard {shard}: quarantined after {} restart(s) within {:?} \
+                 (last death: {reason})",
+                recent.len(),
+                cfg.restart_window
+            );
+            return quarantine_loop(&rx, &state, &qos, &metrics);
+        }
+        let backoff = cfg.restart_backoff.saturating_mul(1u32 << recent.len().min(5));
+        recent.push_back(now);
+        metrics.record_restart();
+        eprintln!("rcx executor shard {shard}: {reason}; restarting in {backoff:?}");
+        std::thread::sleep(backoff);
+    }
+}
 
-    let ShardCtx { specs, globals } = ctx;
-    let nvar = specs.len();
-    // Shared `Arc<str>` keys so every response labels its serving variant
-    // without a per-request allocation.
-    let keys: Vec<Arc<str>> = specs.iter().map(|s| Arc::from(s.key.as_str())).collect();
-    let mut queues: Vec<VecDeque<Request>> = (0..nvar).map(|_| VecDeque::new()).collect();
-    let mut batchers: Vec<Batcher> = (0..nvar).map(|_| Batcher::new(bcfg)).collect();
+/// One executor incarnation: ingest → per-variant queue → deadline-aware
+/// batcher → panic-isolated execute → respond, over this shard's variant
+/// group, until shutdown or an engine death. State lives in the supervisor;
+/// the engine is consumed (a dead engine is never reused).
+fn serve_loop(
+    state: &mut ShardState,
+    mut backend: Box<dyn ExecBackend>,
+    rx: &Receiver<Control>,
+    metrics: &Metrics,
+    qos: &Qos,
+) -> Incarnation {
+    let nvar = state.specs.len();
     let mut running = true;
-
-    while running || queues.iter().any(|q| !q.is_empty()) {
+    while running || state.queues.iter().any(|q| !q.is_empty()) {
         // 1. Ingest: wait only as long as the most urgent deadline allows.
         let now = Instant::now();
         let mut min_wait: Option<Duration> = None;
-        for b in &batchers {
+        for b in &state.batchers {
             if let BatchDecision::Wait(w) = b.decide(now) {
                 min_wait = Some(min_wait.map_or(w, |m: Duration| m.min(w)));
             }
@@ -742,11 +1001,11 @@ fn executor(
         };
         match rx.recv_timeout(timeout) {
             Ok(Control::Req(req)) => {
-                ingest(req, &specs, &mut queues, &mut batchers, &metrics);
+                ingest(state, req, metrics);
                 // Drain whatever else is already queued without blocking.
                 while let Ok(c) = rx.try_recv() {
                     match c {
-                        Control::Req(r) => ingest(r, &specs, &mut queues, &mut batchers, &metrics),
+                        Control::Req(r) => ingest(state, r, metrics),
                         Control::Shutdown => running = false,
                     }
                 }
@@ -762,23 +1021,25 @@ fn executor(
         let now = Instant::now();
         for v in 0..nvar {
             loop {
-                let n = match batchers[v].decide(now) {
+                let n = match state.batchers[v].decide(now) {
                     BatchDecision::Flush(n) => n,
-                    _ if !running && !queues[v].is_empty() => queues[v].len().min(max_batch),
+                    _ if !running && !state.queues[v].is_empty() => {
+                        state.queues[v].len().min(state.max_batch)
+                    }
                     _ => break,
                 };
-                let drained: Vec<Request> = queues[v].drain(..n).collect();
-                batchers[v].flushed(n, now);
+                let drained: Vec<Request> = state.queues[v].drain(..n).collect();
+                state.batchers[v].flushed(n, now);
                 // Release the admission slots this drain frees.
-                qos.depths[globals[v]].fetch_sub(n, Ordering::AcqRel);
-                // Deadline expiry: drop dead requests *before* paying for a
-                // backend pass (their respond senders drop, failing the
-                // callers' recv).
+                qos.depths[state.globals[v]].fetch_sub(n, Ordering::AcqRel);
+                // Deadline expiry: answer dead requests typed *before*
+                // paying for a backend pass.
                 let mut live = Vec::with_capacity(drained.len());
                 let mut expired = 0u64;
                 for req in drained {
                     if req.deadline.is_some_and(|d| d <= now) {
                         expired += 1;
+                        let _ = req.respond.send(Err(Rejected::Deadline));
                     } else {
                         live.push(req);
                     }
@@ -787,73 +1048,145 @@ fn executor(
                     metrics.record_expired(expired);
                 }
                 if !live.is_empty() {
-                    run_batch(backend.as_mut(), &specs[v], &keys[v], live, &metrics)?;
+                    let spec = &state.specs[v];
+                    match run_batch(backend.as_mut(), spec, &state.keys[v], live, metrics) {
+                        BatchOutcome::Continue => {}
+                        BatchOutcome::EnginePoisoned(reason) => return Incarnation::Died(reason),
+                    }
                 }
             }
         }
     }
-    // Requests that raced past the shutting-down gate land here after the
-    // queues drained: release their admission slots (their respond senders
-    // drop, failing the callers' recv).
+    Incarnation::Shutdown
+}
+
+/// Clean-shutdown tail: requests that raced past the shutting-down gate land
+/// in the channel after the queues drained — answer them typed and release
+/// the admission slots they reserved.
+fn shutdown_drain(rx: &Receiver<Control>, state: &ShardState, qos: &Qos, metrics: &Metrics) {
     while let Ok(c) = rx.try_recv() {
         if let Control::Req(req) = c {
-            if req.variant < nvar {
-                qos.depths[globals[req.variant]].fetch_sub(1, Ordering::AcqRel);
-            } else {
-                metrics.record_unknown_variant();
-            }
+            answer_raced(req, state, qos, metrics, Rejected::ShuttingDown);
+        }
+    }
+}
+
+/// Breaker-tripped parking loop: admission refuses quarantined variants (and
+/// the degrade walk routes around them), so only requests already in flight
+/// when the breaker tripped land here — answer each typed until shutdown.
+fn quarantine_loop(
+    rx: &Receiver<Control>,
+    state: &ShardState,
+    qos: &Qos,
+    metrics: &Metrics,
+) -> Result<()> {
+    loop {
+        match rx.recv() {
+            Ok(Control::Req(req)) => answer_raced(req, state, qos, metrics, Rejected::Internal),
+            Ok(Control::Shutdown) | Err(_) => break,
+        }
+    }
+    while let Ok(c) = rx.try_recv() {
+        if let Control::Req(req) = c {
+            answer_raced(req, state, qos, metrics, Rejected::Internal);
         }
     }
     Ok(())
 }
 
-/// Enqueue one request. A request routed at a nonexistent variant is
-/// rejected alone — recorded in the unknown-variant rejection counter (it
-/// used to be a silent drop), and dropping its response sender fails that
-/// caller's recv with "server dropped the request" — rather than killing the
-/// executor and with it every other client's in-flight work.
-///
-/// Admission is where the request's input strip is quantized, exactly once:
-/// every later flush that re-batches this request hands `run_batch` the
-/// cached `Arc`-shared strip instead of re-quantizing the series per
-/// backend pass.
-fn ingest(
-    mut req: Request,
-    specs: &[VariantSpec],
-    queues: &mut [VecDeque<Request>],
-    batchers: &mut [Batcher],
-    metrics: &Metrics,
-) {
-    let v = req.variant;
-    if v < queues.len() {
-        req.strip = Some(PreparedStrip::build(&specs[v].model, &req.series));
-        batchers[v].push_deadline(Instant::now(), req.deadline);
-        queues[v].push_back(req);
+/// Answer one request that bypassed the normal flush path (shutdown race or
+/// quarantine): release its admission slot and resolve its receiver typed.
+/// Out-of-range variants (the deprecated index shim's legacy semantics)
+/// reserved no slot and count on the unknown-variant meter instead.
+fn answer_raced(req: Request, state: &ShardState, qos: &Qos, metrics: &Metrics, why: Rejected) {
+    if req.variant < state.specs.len() {
+        qos.depths[state.globals[req.variant]].fetch_sub(1, Ordering::AcqRel);
+        if why == Rejected::Internal {
+            metrics.record_internal(1);
+        }
+        let _ = req.respond.send(Err(why));
     } else {
         metrics.record_unknown_variant();
+        let _ = req.respond.send(Err(Rejected::Internal));
     }
 }
 
-/// Execute one batch through the backend and deliver responses. The executed
-/// work is credited to the variant's MAC counter before dispatch: steps ×
-/// `macs_per_step()` is exact for the CSR representation actually served, so
-/// a compacted variant is billed only for its live weights — and a degraded
-/// request is billed to the fallback that actually served it.
+/// Answer a dead incarnation's whole resident queue with the typed internal
+/// rejection, release the admission slots, and reset the batchers (their
+/// deadline bookkeeping tracked the drained requests).
+fn drain_dead(state: &mut ShardState, qos: &Qos, metrics: &Metrics) {
+    for v in 0..state.specs.len() {
+        let n = state.queues[v].len();
+        if n > 0 {
+            qos.depths[state.globals[v]].fetch_sub(n, Ordering::AcqRel);
+            metrics.record_internal(n as u64);
+            for req in state.queues[v].drain(..) {
+                let _ = req.respond.send(Err(Rejected::Internal));
+            }
+        }
+        state.batchers[v].reset();
+    }
+}
+
+/// Best-effort human-readable panic payload (panics carry `&str` or `String`
+/// in practice; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Enqueue one request. A request routed at a nonexistent variant is
+/// rejected alone — recorded in the unknown-variant rejection counter and
+/// answered with [`Rejected::Internal`] — rather than killing the executor
+/// and with it every other client's in-flight work.
+///
+/// Ingest is where the request's input strip is quantized, exactly once:
+/// every later flush that re-batches this request hands `run_batch` the
+/// cached `Arc`-shared strip instead of re-quantizing the series per
+/// backend pass.
+fn ingest(state: &mut ShardState, mut req: Request, metrics: &Metrics) {
+    let v = req.variant;
+    if v < state.queues.len() {
+        req.strip = Some(PreparedStrip::build(&state.specs[v].model, &req.series));
+        state.batchers[v].push_deadline(Instant::now(), req.deadline);
+        state.queues[v].push_back(req);
+    } else {
+        metrics.record_unknown_variant();
+        let _ = req.respond.send(Err(Rejected::Internal));
+    }
+}
+
+/// What a panic-isolated backend pass did to the engine.
+enum BatchOutcome {
+    /// The batch was answered (served, or typed-failed on a clean backend
+    /// error) — keep serving on the same engine.
+    Continue,
+    /// The backend panicked mid-batch. The batch's requests were answered
+    /// with [`Rejected::Internal`], but the engine unwound from an unknown
+    /// internal state: the supervisor must rebuild it before the next pass.
+    EnginePoisoned(String),
+}
+
+/// Execute one batch through the backend inside a panic boundary and deliver
+/// responses. Work is billed (batch + MAC meters) only when it produced
+/// answers: steps × `macs_per_step()` is exact for the CSR representation
+/// actually served, so a compacted variant is billed only for its live
+/// weights, a degraded request is billed to the fallback that served it, and
+/// a failed or panicked pass bills nothing.
 fn run_batch(
     backend: &mut dyn ExecBackend,
     spec: &VariantSpec,
     served_by: &Arc<str>,
     batch: Vec<Request>,
     metrics: &Metrics,
-) -> Result<()> {
+) -> BatchOutcome {
     let model: &QuantEsn = &spec.model;
     let n = batch.len();
-    metrics.record_batch(n);
-    let macs: u64 = batch
-        .iter()
-        .map(|r| r.series.inputs.rows() as u64 * model.macs_per_step() as u64)
-        .sum();
-    metrics.record_macs(&spec.key, macs);
     let refs: Vec<&TimeSeries> = batch.iter().map(|r| &r.series).collect();
     // Compose the batch's prepared inputs from the strips quantized at
     // admission (Arc clones; `assemble` re-verifies every strip against
@@ -861,18 +1194,62 @@ fn run_batch(
     // on the cache).
     let strips: Vec<Option<PreparedStrip>> = batch.iter().map(|r| r.strip.clone()).collect();
     let pre = PreparedInputs::assemble(model, &refs, &strips);
-    let preds = backend.execute_prepared(model, &refs, &pre)?;
-    anyhow::ensure!(preds.len() == n, "backend returned {} predictions for {n}", preds.len());
-    let done = Instant::now();
-    for (req, prediction) in batch.into_iter().zip(preds) {
-        let latency = done.duration_since(req.submitted);
-        metrics.record_request(latency);
-        let _ = req.respond.send(Response {
-            prediction,
-            served_by: Arc::clone(served_by),
-            latency,
-            batch_size: n,
-        });
+    // Panic isolation: a pass that unwinds poisons this batch, not the
+    // shard — backend engines hold no cross-batch state the next
+    // incarnation needs (they are rebuilt fresh on restart).
+    let result = catch_unwind(AssertUnwindSafe(|| backend.execute_prepared(model, &refs, &pre)));
+    match result {
+        Ok(Ok(preds)) if preds.len() == n => {
+            metrics.record_batch(n);
+            let macs: u64 = batch
+                .iter()
+                .map(|r| r.series.inputs.rows() as u64 * model.macs_per_step() as u64)
+                .sum();
+            metrics.record_macs(&spec.key, macs);
+            let done = Instant::now();
+            for (req, prediction) in batch.into_iter().zip(preds) {
+                let latency = done.duration_since(req.submitted);
+                metrics.record_request(latency);
+                let _ = req.respond.send(Ok(Response {
+                    prediction,
+                    served_by: Arc::clone(served_by),
+                    latency,
+                    batch_size: n,
+                }));
+            }
+            BatchOutcome::Continue
+        }
+        Ok(Ok(preds)) => {
+            let got = preds.len();
+            fail_batch(batch, metrics);
+            eprintln!(
+                "rcx executor: backend returned {got} predictions for a batch of {n} on \
+                 {served_by}; batch failed"
+            );
+            BatchOutcome::Continue
+        }
+        Ok(Err(e)) => {
+            // A clean error return: the engine upheld its contract, so only
+            // the batch fails — no rebuild.
+            fail_batch(batch, metrics);
+            eprintln!("rcx executor: batch of {n} on {served_by} failed: {e:#}");
+            BatchOutcome::Continue
+        }
+        Err(payload) => {
+            fail_batch(batch, metrics);
+            BatchOutcome::EnginePoisoned(format!(
+                "backend panicked mid-batch on {served_by}: {}",
+                panic_message(payload.as_ref())
+            ))
+        }
     }
-    Ok(())
+}
+
+/// Answer every request of a failed batch with the typed internal rejection:
+/// the contract is that no submitted receiver ever dangles.
+fn fail_batch(batch: Vec<Request>, metrics: &Metrics) {
+    metrics.record_internal(batch.len() as u64);
+    for req in batch {
+        let _ = req.respond.send(Err(Rejected::Internal));
+    }
 }

@@ -22,7 +22,7 @@ use rcx::coordinator::{
 };
 use rcx::data::{save_csv, Benchmark, Task};
 use rcx::dse::{explore, pareto_variants, realize_hw, DseRequest};
-use rcx::runtime::NativeConfig;
+use rcx::runtime::{FaultPlan, NativeConfig};
 use rcx::esn::ReservoirSpec;
 use rcx::hyper::{random_search, SearchSpace};
 use rcx::hw::synthesize;
@@ -386,6 +386,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             reg
         }
     };
+    // Refuse corrupted variants before spending any startup work (the
+    // server re-checks its specs at start; this fails earlier and cheaper).
+    registry.validate()?;
 
     // One --max-batch knob feeds both the backend cap and the batcher cap
     // (the executor serves at the min of the two).
@@ -433,16 +436,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    // Hidden fault-injection hook (`--chaos panic@2,slow@5:80`): wrap the
+    // chosen engine in the deterministic ChaosBackend *after* the startup
+    // report, so the report still describes the real engine underneath.
+    let chaos_plan = match args.flag("chaos") {
+        Some(spec) => Some(FaultPlan::parse(spec).context("--chaos")?),
+        None => None,
+    };
+    let backend = match &chaos_plan {
+        Some(plan) => {
+            println!(
+                "chaos armed: {} scripted fault(s), {} of them panics",
+                plan.scripted_faults(),
+                plan.scripted_panics()
+            );
+            backend.with_chaos(plan.clone())
+        }
+        None => backend,
+    };
+
     let shards: usize = args.flag_or("shards", 1)?;
     let queue_cap: usize = args.flag_or("queue-cap", 0)?;
     let deadline_ms: u64 = args.flag_or("default-deadline-ms", 0)?;
     let degrade = args.flag("degrade").is_some();
+    // Supervision knobs (hidden; defaults match ServeConfig except for a
+    // snappier CLI backoff — a scripted chaos panic should recover in
+    // milliseconds, not stall the smoke run).
+    let max_restarts: u32 = args.flag_or("max-restarts", 3)?;
+    let backoff_ms: u64 = args.flag_or("restart-backoff-ms", 10)?;
     let mut scfg = ServeConfig::builder()
         .backend(backend)
         .batcher(BatcherConfig::builder().max_batch(max_batch).build())
         .shards(shards)
         .queue_cap(queue_cap)
-        .degrade(degrade);
+        .degrade(degrade)
+        .max_restarts(max_restarts)
+        .restart_backoff(std::time::Duration::from_millis(backoff_ms));
     if deadline_ms > 0 {
         scfg = scfg.default_deadline(std::time::Duration::from_millis(deadline_ms));
     }
@@ -469,24 +498,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(rx) => pending.push((i, rx)),
             Err(rcx::coordinator::Rejected::QueueFull) => shed_full += 1,
             Err(rcx::coordinator::Rejected::Deadline) => shed_deadline += 1,
-            Err(e @ rcx::coordinator::Rejected::ShuttingDown) => bail!(e),
+            Err(e) => bail!(e),
         }
     }
     // Score classification by accuracy, regression by RMSE — over the
     // answered requests only (shed/expired work never produced bits).
     let mut answered = 0u64;
     let mut dropped = 0u64;
+    let mut failed = 0u64;
     let mut degraded_seen = 0u64;
     let mut correct = 0usize;
     let (mut se, mut count) = (0.0f64, 0usize);
     for (i, rx) in pending {
         let sample = &data.test[i % data.test.len()];
         let resp = match rx.recv() {
-            Ok(r) => r,
+            Ok(Ok(r)) => r,
             // An admitted request whose deadline passed in the queue: the
-            // executor dropped it before the backend pass.
-            Err(_) => {
+            // executor answered it typed before paying for a backend pass.
+            Ok(Err(rcx::coordinator::Rejected::Deadline)) => {
                 dropped += 1;
+                continue;
+            }
+            // Typed in-server failure: the batch's backend pass panicked or
+            // errored (chaos scripts this), or the executor died with the
+            // request resident. A dropped channel (`Err`) would be a
+            // supervision bug — billed the same so the identity check trips.
+            Ok(Err(_)) | Err(_) => {
+                failed += 1;
                 continue;
             }
         };
@@ -520,7 +558,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // sane latency percentiles, and no queue ever exceeded its cap.
     anyhow::ensure!(m.requests == answered, "lost responses: {} != {answered}", m.requests);
     anyhow::ensure!(
-        answered + shed_full + shed_deadline + dropped == n_requests as u64,
+        answered + shed_full + shed_deadline + dropped + failed == n_requests as u64,
         "request accounting leak"
     );
     if answered > 0 {
@@ -555,6 +593,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for (key, hw) in &report.queue_highwater {
         println!("  variant {key}: queue high-water {hw}");
+    }
+    if let Some(plan) = &chaos_plan {
+        // Chaos gates (the CI chaos-smoke step relies on a nonzero exit):
+        // every scripted panic must have produced exactly one supervised
+        // restart (unless the breaker quarantined the shard first), and
+        // every client-observed failure must be a typed internal rejection.
+        let rm = &report.metrics;
+        if rm.quarantined == 0 {
+            anyhow::ensure!(
+                rm.restarts == plan.panics_fired(),
+                "chaos: {} restart(s) recorded, expected one per fired panic ({})",
+                rm.restarts,
+                plan.panics_fired()
+            );
+        } else {
+            anyhow::ensure!(
+                rm.restarts <= plan.panics_fired(),
+                "chaos: more restarts ({}) than fired panics ({})",
+                rm.restarts,
+                plan.panics_fired()
+            );
+        }
+        anyhow::ensure!(
+            failed == rm.rejected_internal,
+            "chaos: client saw {failed} failures but the server billed {}",
+            rm.rejected_internal
+        );
+        println!(
+            "  chaos: {} batch(es) started, fired {} panic(s) / {} fail(s) / {} slow(s); \
+             restarts {}, quarantined {}, internal rejections {}",
+            plan.batches_started(),
+            plan.panics_fired(),
+            plan.fails_fired(),
+            plan.slows_fired(),
+            rm.restarts,
+            rm.quarantined,
+            rm.rejected_internal
+        );
+        if !report.quarantined_variants.is_empty() {
+            println!("  chaos: quarantined variants: {}", report.quarantined_variants.join(","));
+        }
     }
     Ok(())
 }

@@ -6,7 +6,10 @@
 //!   successive multi-threshold integer steps (comparator ladder).
 //! - [`qmodel`]: [`QuantEsn`], the all-integer golden model of the direct-logic
 //!   accelerator; sensitivity analysis, pruning and the RTL generator all
-//!   operate on it.
+//!   operate on it. [`QuantEsn::validate`] checks its structural invariants
+//!   (CSR shape, weight ranges, readout dimensions) with typed
+//!   [`ModelIntegrityError`]s — the serving stack runs it at registration so
+//!   corrupted variants are refused before an executor ever touches them.
 //! - [`bitflip`]: two's-complement bit-flip fault injection (Eq. 4 probes).
 //! - [`rollout`]: the incremental sensitivity engine — cached calibration
 //!   plans ([`CalibPlan`]) plus sparse delta-propagation flip evaluation
@@ -54,7 +57,7 @@ pub use plan::{PreparedInputs, PreparedPlan, PreparedReadout, PreparedStrip};
 pub use bitflip::flip_bit;
 pub use bounds::{resolve_inference, Kernel, KernelBounds, KernelChoice, I16_LIMIT, I32_LIMIT};
 pub use linear::Quantizer;
-pub use qmodel::{QuantEsn, QuantSpec};
+pub use qmodel::{ModelIntegrityError, QuantEsn, QuantSpec};
 pub use rollout::{
     BatchScratch, CalibPlan, FlipCandidate, FlipScratch, QuantInputCache, BATCH_LANES,
     BATCH_LANES_NARROW, BATCH_LANES_NARROW16,

@@ -33,6 +33,65 @@ impl QuantSpec {
     }
 }
 
+/// A structural-integrity violation found by [`QuantEsn::validate`].
+///
+/// Every variant names the first offending array slot so a refused model can
+/// be diagnosed from the error alone (the serving registry folds these into
+/// its startup error, keyed by variant).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelIntegrityError {
+    /// Bit width outside the supported `2..=16` range.
+    BitWidth(u8),
+    /// `w_r_indptr` must hold exactly `n + 1` entries.
+    IndptrLength { expected: usize, got: usize },
+    /// `w_r_indptr[0]` must be zero.
+    IndptrStart(usize),
+    /// `w_r_indptr` must be non-decreasing; `row` is the first offender.
+    IndptrNotMonotone { row: usize },
+    /// `w_r_indptr[n]` must equal the CSR value count.
+    IndptrTail { expected: usize, got: usize },
+    /// A CSR column index reaches outside the reservoir.
+    ColumnOutOfBounds { row: usize, col: usize, n: usize },
+    /// Within-row CSR columns must be strictly increasing (sorted, no
+    /// duplicates) — every constructor and [`QuantEsn::compact`] guarantee
+    /// this, and the lane kernels rely on it.
+    ColumnsNotSorted { row: usize },
+    /// A quantized weight exceeds the symmetric q-bit range ±[`super::qmax`].
+    WeightOverflow { which: &'static str, slot: usize, value: i64, limit: i64 },
+    /// A dense array's length disagrees with the model dimensions.
+    DimMismatch { field: &'static str, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for ModelIntegrityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::BitWidth(q) => write!(f, "bit width q={q} outside the supported 2..=16"),
+            Self::IndptrLength { expected, got } => {
+                write!(f, "w_r_indptr holds {got} entries, expected n+1 = {expected}")
+            }
+            Self::IndptrStart(v) => write!(f, "w_r_indptr[0] = {v}, expected 0"),
+            Self::IndptrNotMonotone { row } => write!(f, "w_r_indptr decreases at row {row}"),
+            Self::IndptrTail { expected, got } => {
+                write!(f, "w_r_indptr ends at {got}, expected the CSR value count {expected}")
+            }
+            Self::ColumnOutOfBounds { row, col, n } => {
+                write!(f, "CSR column {col} in row {row} out of bounds for n = {n}")
+            }
+            Self::ColumnsNotSorted { row } => {
+                write!(f, "CSR columns in row {row} not strictly increasing")
+            }
+            Self::WeightOverflow { which, slot, value, limit } => {
+                write!(f, "{which}[{slot}] = {value} outside the quantized range ±{limit}")
+            }
+            Self::DimMismatch { field, expected, got } => {
+                write!(f, "{field} holds {got} entries, expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelIntegrityError {}
+
 /// The quantized, streamlined integer ESN.
 #[derive(Clone, Debug)]
 pub struct QuantEsn {
@@ -207,6 +266,63 @@ impl QuantEsn {
             f_bits: spec.f_bits,
             ladder,
         }
+    }
+
+    /// Check every structural invariant a healthy `QuantEsn` satisfies:
+    /// well-formed CSR (n+1 monotone `indptr` starting at 0 and ending at the
+    /// value count, strictly increasing in-bounds columns per row), all
+    /// quantized weight arrays within the symmetric q-bit range, and readout
+    /// array lengths consistent with `n`/`input_dim`/`out_dim`.
+    ///
+    /// None of these checks can refuse a real model: [`Self::from_model`]
+    /// copies a `Csr` whose rows are built column-sorted from distinct
+    /// positions, [`Quantizer::quantize`] clamps to ±qmax, and
+    /// [`Self::prune`]/[`Self::compact`]/[`Self::refold_readout`] preserve
+    /// all of the above. The serving registry runs this at registration so a
+    /// corrupted (deserialized, mutated, miswired) variant is refused at
+    /// startup instead of panicking an executor mid-batch.
+    pub fn validate(&self) -> Result<(), ModelIntegrityError> {
+        use ModelIntegrityError as E;
+        if !(2..=16).contains(&self.q) {
+            return Err(E::BitWidth(self.q));
+        }
+        let limit = super::qmax(self.q);
+        if self.w_r_indptr.len() != self.n + 1 {
+            return Err(E::IndptrLength { expected: self.n + 1, got: self.w_r_indptr.len() });
+        }
+        if self.w_r_indptr[0] != 0 {
+            return Err(E::IndptrStart(self.w_r_indptr[0]));
+        }
+        for i in 0..self.n {
+            if self.w_r_indptr[i + 1] < self.w_r_indptr[i] {
+                return Err(E::IndptrNotMonotone { row: i });
+            }
+        }
+        if self.w_r_indptr[self.n] != self.w_r_values.len() {
+            let (expected, got) = (self.w_r_values.len(), self.w_r_indptr[self.n]);
+            return Err(E::IndptrTail { expected, got });
+        }
+        len_check("w_r_indices", self.w_r_indices.len(), self.w_r_values.len())?;
+        for i in 0..self.n {
+            let row = &self.w_r_indices[self.w_r_indptr[i]..self.w_r_indptr[i + 1]];
+            for (k, &col) in row.iter().enumerate() {
+                if col >= self.n {
+                    return Err(E::ColumnOutOfBounds { row: i, col, n: self.n });
+                }
+                if k > 0 && row[k - 1] >= col {
+                    return Err(E::ColumnsNotSorted { row: i });
+                }
+            }
+        }
+        check_weights("w_r_values", &self.w_r_values, self.w_r_values.len(), limit)?;
+        check_weights("w_in", &self.w_in, self.n * self.input_dim, limit)?;
+        check_weights("w_out", &self.w_out, self.out_dim * self.n, limit)?;
+        len_check("w_out_f", self.w_out_f.len(), self.out_dim * self.n)?;
+        len_check("bias_f", self.bias_f.len(), self.out_dim)?;
+        len_check("qz_wo", self.qz_wo.len(), self.out_dim)?;
+        len_check("m_out", self.m_out.len(), self.out_dim)?;
+        len_check("bias_fold", self.bias_fold.len(), self.out_dim)?;
+        Ok(())
     }
 
     /// Number of *physical* reservoir weight slots in the CSR arrays — the
@@ -619,6 +735,29 @@ fn fold_bias(bias_f: &[f64], f_bits: u32, s_min: f64, s_s_scale: f64) -> Vec<f64
         .collect()
 }
 
+fn len_check(field: &'static str, got: usize, expected: usize) -> Result<(), ModelIntegrityError> {
+    if got != expected {
+        return Err(ModelIntegrityError::DimMismatch { field, expected, got });
+    }
+    Ok(())
+}
+
+fn check_weights(
+    which: &'static str,
+    vals: &[i64],
+    expected_len: usize,
+    limit: i64,
+) -> Result<(), ModelIntegrityError> {
+    use ModelIntegrityError as E;
+    len_check(which, vals.len(), expected_len)?;
+    for (slot, &value) in vals.iter().enumerate() {
+        if value.abs() > limit {
+            return Err(E::WeightOverflow { which, slot, value, limit });
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -816,6 +955,76 @@ mod tests {
         let gamma = vec![0.9; qm.n];
         qm.refold_readout(&gamma);
         check(&qm);
+    }
+
+    #[test]
+    fn validate_accepts_healthy_models() {
+        let (m, data) = trained_melborn();
+        for q in [4u8, 6, 8] {
+            let mut qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(q));
+            qm.validate().expect("fresh model must validate");
+            qm.prune(&(0..qm.n_weights()).step_by(3).collect::<Vec<_>>());
+            qm.validate().expect("pruned (zeroed) model must validate");
+            qm.compact();
+            qm.validate().expect("compacted model must validate");
+            let gamma = vec![0.9; qm.n];
+            qm.refold_readout(&gamma);
+            qm.validate().expect("refolded model must validate");
+        }
+    }
+
+    #[test]
+    fn validate_refuses_corruption() {
+        use ModelIntegrityError as E;
+        let (m, data) = trained_melborn();
+        let base = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+
+        let mut bad = base.clone();
+        bad.w_r_values[0] = qmax(6) + 5;
+        assert!(matches!(
+            bad.validate(),
+            Err(E::WeightOverflow { which: "w_r_values", slot: 0, .. })
+        ));
+
+        let mut bad = base.clone();
+        bad.w_r_indptr.pop();
+        assert!(matches!(bad.validate(), Err(E::IndptrLength { .. })));
+
+        let mut bad = base.clone();
+        bad.w_r_indptr[0] = 1;
+        assert!(matches!(bad.validate(), Err(E::IndptrStart(1))));
+
+        let mut bad = base.clone();
+        bad.w_r_indptr[1] = bad.w_r_indptr[2] + 1;
+        assert!(matches!(bad.validate(), Err(E::IndptrNotMonotone { row: 1 })));
+
+        let mut bad = base.clone();
+        bad.w_r_values.push(1);
+        assert!(matches!(bad.validate(), Err(E::IndptrTail { .. })));
+
+        let mut bad = base.clone();
+        bad.w_r_indices[0] = bad.n;
+        assert!(matches!(bad.validate(), Err(E::ColumnOutOfBounds { .. })));
+
+        // Swap two in-row columns: order breaks while bounds stay legal.
+        let mut bad = base.clone();
+        let wide = (0..bad.n)
+            .find(|&i| bad.w_r_indptr[i + 1] - bad.w_r_indptr[i] >= 2)
+            .expect("melborn reservoir has a row with two entries");
+        bad.w_r_indices.swap(bad.w_r_indptr[wide], bad.w_r_indptr[wide] + 1);
+        assert_eq!(bad.validate(), Err(E::ColumnsNotSorted { row: wide }));
+
+        let mut bad = base.clone();
+        bad.w_in.truncate(3);
+        assert!(matches!(bad.validate(), Err(E::DimMismatch { field: "w_in", .. })));
+
+        let mut bad = base.clone();
+        bad.bias_fold.pop();
+        assert!(matches!(bad.validate(), Err(E::DimMismatch { field: "bias_fold", .. })));
+
+        let mut bad = base.clone();
+        bad.q = 40;
+        assert_eq!(bad.validate(), Err(E::BitWidth(40)));
     }
 
     #[test]

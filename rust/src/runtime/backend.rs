@@ -12,6 +12,11 @@
 //!   regression, the default.
 //! - [`PjrtBackend`](super::PjrtBackend): AOT HLO artifacts executed on the
 //!   PJRT client (classification geometries), kept behind the same trait.
+//!
+//! Plus one decorator: [`ChaosBackend`](super::ChaosBackend) wraps either
+//! engine with a scripted, deterministic [`FaultPlan`](super::FaultPlan)
+//! (panics / fail-returns / slow batches) so the coordinator's fault
+//! tolerance is testable and reproducible — see `runtime::faults`.
 
 use std::path::PathBuf;
 
@@ -20,6 +25,7 @@ use anyhow::Result;
 use crate::data::TimeSeries;
 use crate::quant::{PreparedInputs, QuantEsn};
 
+use super::faults::{ChaosBackend, FaultPlan};
 use super::native::{NativeBackend, NativeConfig};
 use super::pjrt::PjrtBackend;
 
@@ -87,6 +93,15 @@ pub enum BackendConfig {
         /// Artifact name (e.g. `"melborn_pooled"`).
         artifact: String,
     },
+    /// Fault-injection decorator: the inner engine behind a scripted
+    /// [`FaultPlan`] (see `runtime::faults`; exposed as the hidden
+    /// `rcx serve --chaos <spec>` flag). Because the plan's trigger state is
+    /// shared across clones, every engine incarnation a supervised restart
+    /// builds from this config continues the same global batch numbering.
+    Chaos {
+        inner: Box<BackendConfig>,
+        plan: FaultPlan,
+    },
 }
 
 impl Default for BackendConfig {
@@ -101,6 +116,11 @@ impl BackendConfig {
         Self::default()
     }
 
+    /// Wrap this config in the fault-injection decorator.
+    pub fn with_chaos(self, plan: FaultPlan) -> Self {
+        BackendConfig::Chaos { inner: Box::new(self), plan }
+    }
+
     /// Instantiate the backend (compiles artifacts for PJRT). Call from the
     /// thread that will own it — PJRT handles are `!Send`.
     pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
@@ -109,6 +129,9 @@ impl BackendConfig {
             BackendConfig::Pjrt { artifact_dir, artifact } => {
                 Ok(Box::new(PjrtBackend::start(artifact_dir, artifact)?))
             }
+            BackendConfig::Chaos { inner, plan } => {
+                Ok(Box::new(ChaosBackend::new(inner.build()?, plan.clone())))
+            }
         }
     }
 
@@ -116,6 +139,7 @@ impl BackendConfig {
         match self {
             BackendConfig::Native(_) => "native",
             BackendConfig::Pjrt { .. } => "pjrt",
+            BackendConfig::Chaos { .. } => "chaos",
         }
     }
 
@@ -128,6 +152,7 @@ impl BackendConfig {
         match self {
             BackendConfig::Native(_) => model.macs_per_step() as u64,
             BackendConfig::Pjrt { .. } => model.structural_weights() as u64,
+            BackendConfig::Chaos { inner, .. } => inner.cost_hint(model),
         }
     }
 }

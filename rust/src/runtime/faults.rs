@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`ChaosBackend`] wraps any [`ExecBackend`] and consults a [`FaultPlan`]
+//! before every batch: the plan can panic (exercising the coordinator's
+//! `catch_unwind` isolation and supervised restart), return a clean error
+//! (typed batch failure, no restart), or sleep the batch past queued
+//! deadlines. Faults are **scripted against a global batch ordinal** shared
+//! by every engine incarnation built from the same plan — clones share the
+//! trigger state through an `Arc`, so batch numbering survives a supervised
+//! engine rebuild, a scripted entry fires exactly once, and the fired
+//! counters are still readable after the server shuts down (tests and the
+//! `rcx serve --chaos` accounting gates assert against them).
+//!
+//! The spec grammar (`FaultPlan::parse`) is what the hidden `rcx serve
+//! --chaos <spec>` flag takes: comma-separated entries out of
+//!
+//! - `panic@K` — panic inside backend pass number `K` (1-indexed);
+//! - `fail@K` — return an error from pass `K`;
+//! - `slow@K:MS` — sleep `MS` milliseconds before executing pass `K`
+//!   (`:MS` optional, default 100);
+//! - `flaky=P` — additionally panic a seeded-pseudorandom `P`% of *all*
+//!   passes (deterministic per `(seed, ordinal)`);
+//! - `seed=N` — the seed the flaky mode draws from (default 0).
+//!
+//! e.g. `--chaos panic@2,slow@5:80` or `--chaos flaky=3,seed=11`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::TimeSeries;
+use crate::quant::{PreparedInputs, QuantEsn};
+
+use super::backend::{ExecBackend, Prediction};
+
+/// One scripted fault kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the backend pass — the coordinator must isolate the
+    /// batch and restart the engine.
+    Panic,
+    /// Clean `Err` return — the batch fails typed, the engine survives.
+    Fail,
+    /// Sleep before executing, pushing queued work past its deadlines.
+    Slow(Duration),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct FaultEntry {
+    /// 1-indexed global backend-pass ordinal this entry fires on.
+    at_batch: u64,
+    kind: FaultKind,
+}
+
+/// Trigger state shared across every clone of one plan (and thus every
+/// engine incarnation and shard built from one `BackendConfig`).
+#[derive(Debug)]
+struct FaultState {
+    /// Backend passes started so far, across all incarnations.
+    batches: AtomicU64,
+    panics: AtomicU64,
+    fails: AtomicU64,
+    slows: AtomicU64,
+    /// One fire-once latch per scripted entry.
+    fired: Vec<AtomicBool>,
+}
+
+/// A deterministic, scripted fault schedule (see the module docs for the
+/// spec grammar). `Clone` is shallow: clones share trigger state, which is
+/// what makes chaos runs reproducible across supervised engine rebuilds.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Percent of all passes the seeded flaky mode panics (0 = off).
+    flaky_pct: u8,
+    entries: Arc<Vec<FaultEntry>>,
+    state: Arc<FaultState>,
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos` spec string. See the module docs for the grammar.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries: Vec<FaultEntry> = Vec::new();
+        let mut seed = 0u64;
+        let mut flaky_pct = 0u8;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(v) = part.strip_prefix("seed=") {
+                seed = v.parse().with_context(|| format!("chaos spec: bad seed in {part:?}"))?;
+            } else if let Some(v) = part.strip_prefix("flaky=") {
+                flaky_pct =
+                    v.parse().with_context(|| format!("chaos spec: bad percent in {part:?}"))?;
+                anyhow::ensure!(flaky_pct <= 100, "chaos spec: flaky={flaky_pct} > 100%");
+            } else if let Some((kind, at)) = part.split_once('@') {
+                let fault = match kind {
+                    "panic" => FaultKind::Panic,
+                    "fail" => FaultKind::Fail,
+                    "slow" => {
+                        let (at_str, ms) = match at.split_once(':') {
+                            Some((a, ms)) => (
+                                a,
+                                ms.parse::<u64>().with_context(|| {
+                                    format!("chaos spec: bad milliseconds in {part:?}")
+                                })?,
+                            ),
+                            None => (at, 100),
+                        };
+                        let at_batch: u64 = at_str
+                            .parse()
+                            .with_context(|| format!("chaos spec: bad batch number in {part:?}"))?;
+                        anyhow::ensure!(at_batch >= 1, "chaos spec: batch numbers are 1-indexed");
+                        entries.push(FaultEntry {
+                            at_batch,
+                            kind: FaultKind::Slow(Duration::from_millis(ms)),
+                        });
+                        continue;
+                    }
+                    other => bail!("chaos spec: unknown fault kind {other:?} in {part:?}"),
+                };
+                let at_batch: u64 = at
+                    .parse()
+                    .with_context(|| format!("chaos spec: bad batch number in {part:?}"))?;
+                anyhow::ensure!(at_batch >= 1, "chaos spec: batch numbers are 1-indexed");
+                entries.push(FaultEntry { at_batch, kind: fault });
+            } else {
+                bail!("chaos spec: cannot parse {part:?} (want kind@batch, flaky=P or seed=N)");
+            }
+        }
+        anyhow::ensure!(
+            !entries.is_empty() || flaky_pct > 0,
+            "chaos spec {spec:?} schedules no faults"
+        );
+        let fired = (0..entries.len()).map(|_| AtomicBool::new(false)).collect();
+        Ok(FaultPlan {
+            seed,
+            flaky_pct,
+            entries: Arc::new(entries),
+            state: Arc::new(FaultState {
+                batches: AtomicU64::new(0),
+                panics: AtomicU64::new(0),
+                fails: AtomicU64::new(0),
+                slows: AtomicU64::new(0),
+                fired,
+            }),
+        })
+    }
+
+    /// Backend passes started so far (across every incarnation and shard).
+    pub fn batches_started(&self) -> u64 {
+        self.state.batches.load(Ordering::SeqCst)
+    }
+
+    /// Scripted + flaky panics fired so far.
+    pub fn panics_fired(&self) -> u64 {
+        self.state.panics.load(Ordering::SeqCst)
+    }
+
+    /// Scripted fail-returns fired so far.
+    pub fn fails_fired(&self) -> u64 {
+        self.state.fails.load(Ordering::SeqCst)
+    }
+
+    /// Scripted slow-batches fired so far.
+    pub fn slows_fired(&self) -> u64 {
+        self.state.slows.load(Ordering::SeqCst)
+    }
+
+    /// Total faults this plan scripts (excluding the flaky percentage mode).
+    pub fn scripted_faults(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Scripted panic entries in the plan (what a chaos run's supervised
+    /// restart count is gated against when no breaker trips).
+    pub fn scripted_panics(&self) -> u64 {
+        self.entries.iter().filter(|e| e.kind == FaultKind::Panic).count() as u64
+    }
+
+    /// Consult the plan at the start of one backend pass: sleeps, returns an
+    /// error, or panics per the schedule. Called by [`ChaosBackend`] only —
+    /// panics on purpose, by design, from inside the coordinator's unwind
+    /// boundary.
+    fn before_batch(&self) -> Result<()> {
+        let ordinal = self.state.batches.fetch_add(1, Ordering::SeqCst) + 1;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.at_batch == ordinal && !self.state.fired[i].swap(true, Ordering::SeqCst) {
+                match e.kind {
+                    FaultKind::Slow(d) => {
+                        self.state.slows.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(d);
+                    }
+                    FaultKind::Fail => {
+                        self.state.fails.fetch_add(1, Ordering::SeqCst);
+                        bail!("chaos: scripted fail-return at batch {ordinal}");
+                    }
+                    FaultKind::Panic => {
+                        self.state.panics.fetch_add(1, Ordering::SeqCst);
+                        panic!("chaos: scripted panic at batch {ordinal}");
+                    }
+                }
+            }
+        }
+        let flaky = self.flaky_pct > 0
+            && splitmix64(self.seed ^ ordinal) % 100 < u64::from(self.flaky_pct);
+        if flaky {
+            self.state.panics.fetch_add(1, Ordering::SeqCst);
+            panic!("chaos: seeded flaky panic at batch {ordinal}");
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 — the standard 64-bit finalizer; deterministic, seedable, and
+/// good enough to decorrelate `(seed, ordinal)` for the flaky mode.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// An [`ExecBackend`] decorator that fires a [`FaultPlan`] before delegating
+/// to the wrapped engine. Results for batches the plan leaves alone are
+/// bit-identical to the bare inner backend — chaos changes *when* work fails,
+/// never what a served answer contains.
+pub struct ChaosBackend {
+    inner: Box<dyn ExecBackend>,
+    plan: FaultPlan,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn ExecBackend>, plan: FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl ExecBackend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn execute_batch(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+    ) -> Result<Vec<Prediction>> {
+        self.plan.before_batch()?;
+        self.inner.execute_batch(model, samples)
+    }
+
+    fn execute_prepared(
+        &mut self,
+        model: &QuantEsn,
+        samples: &[&TimeSeries],
+        pre: &PreparedInputs,
+    ) -> Result<Vec<Prediction>> {
+        self.plan.before_batch()?;
+        self.inner.execute_prepared(model, samples, pre)
+    }
+
+    fn cost_hint(&self, model: &QuantEsn) -> u64 {
+        self.inner.cost_hint(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scripted_entries() {
+        let plan = FaultPlan::parse("panic@2, fail@5,slow@7:80,seed=42").unwrap();
+        assert_eq!(plan.scripted_faults(), 3);
+        assert_eq!(plan.scripted_panics(), 1);
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.entries[2].kind, FaultKind::Slow(Duration::from_millis(80)));
+        assert_eq!(plan.entries[2].at_batch, 7);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("panic@0").is_err());
+        assert!(FaultPlan::parse("explode@3").is_err());
+        assert!(FaultPlan::parse("panic-at-3").is_err());
+        assert!(FaultPlan::parse("flaky=101").is_err());
+        assert!(FaultPlan::parse("slow@2:xx").is_err());
+    }
+
+    #[test]
+    fn entries_fire_once_on_the_global_ordinal() {
+        let plan = FaultPlan::parse("fail@2").unwrap();
+        // A clone (what a rebuilt engine incarnation gets) shares the state.
+        let twin = plan.clone();
+        assert!(plan.before_batch().is_ok()); // batch 1
+        assert!(twin.before_batch().is_err()); // batch 2: scripted fail
+        assert!(plan.before_batch().is_ok()); // batch 3
+        assert_eq!(plan.batches_started(), 3);
+        assert_eq!(plan.fails_fired(), 1);
+        assert_eq!(twin.fails_fired(), 1);
+        assert_eq!(plan.panics_fired(), 0);
+    }
+
+    #[test]
+    fn scripted_panic_fires_and_is_catchable() {
+        let plan = FaultPlan::parse("panic@1").unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan.before_batch()));
+        assert!(err.is_err(), "batch 1 must panic");
+        assert_eq!(plan.panics_fired(), 1);
+        // The entry is spent: the next pass (e.g. after an engine rebuild)
+        // sails through.
+        assert!(plan.before_batch().is_ok());
+        assert_eq!(plan.panics_fired(), 1);
+    }
+
+    #[test]
+    fn flaky_mode_is_deterministic_in_the_seed() {
+        let a = FaultPlan::parse("flaky=20,seed=7").unwrap();
+        let b = FaultPlan::parse("flaky=20,seed=7").unwrap();
+        let fire = |p: &FaultPlan| -> Vec<bool> {
+            (0..50)
+                .map(|_| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.before_batch()))
+                        .is_err()
+                })
+                .collect()
+        };
+        let fa = fire(&a);
+        assert_eq!(fa, fire(&b), "same seed, same schedule");
+        let hits = fa.iter().filter(|&&x| x).count();
+        assert!(hits > 0 && hits < 50, "flaky=20 over 50 batches fired {hits} times");
+        assert_eq!(a.panics_fired(), hits as u64);
+    }
+}

@@ -25,12 +25,19 @@
 //! Both backends share the rust-side integer readout, so their predictions
 //! are directly comparable (and the native path is the golden reference).
 //!
+//! A third, decorating backend exists for testing the serving stack itself:
+//! [`ChaosBackend`] wraps either engine and fires a scripted, deterministic
+//! [`FaultPlan`] (panic / fail-return / slow batch at a fixed global batch
+//! ordinal) so the coordinator's panic isolation, supervised restarts and
+//! crash-loop breaker are reproducible in tests and CI (`rcx serve --chaos`).
+//!
 //! [`QuantEsn`]: crate::quant::QuantEsn
 
 mod artifacts;
 mod backend;
 mod client;
 mod exec;
+mod faults;
 mod native;
 mod pjrt;
 
@@ -38,6 +45,7 @@ pub use artifacts::{Artifact, Manifest};
 pub use backend::{BackendConfig, ExecBackend, Prediction};
 pub use client::Runtime;
 pub use exec::{pooled_states, rollout_states, RolloutInputs};
+pub use faults::{ChaosBackend, FaultKind, FaultPlan};
 pub use native::{NativeBackend, NativeConfig};
 pub use pjrt::PjrtBackend;
 

@@ -178,8 +178,16 @@ impl ExecBackend for NativeBackend {
                 }));
             }
             for h in handles {
-                for (ci, preds) in h.join().expect("native backend worker panicked") {
-                    merged[ci] = preds;
+                // Re-raise a worker panic with its original payload (not a
+                // generic expect message): the serving executor's panic
+                // boundary reports it, and fault-injection tests match on it.
+                match h.join() {
+                    Ok(preds) => {
+                        for (ci, p) in preds {
+                            merged[ci] = p;
+                        }
+                    }
+                    Err(payload) => std::panic::resume_unwind(payload),
                 }
             }
         });

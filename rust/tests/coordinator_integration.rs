@@ -3,22 +3,28 @@
 //! the bottom still skip without `make artifacts`). Covers request → batched
 //! execute → response end-to-end, mixed-variant routing, the forced-flush
 //! deadline, regression serving, graceful shutdown, bit-identity of the
-//! served predictions against the golden `QuantEsn` evaluation, and the QoS
-//! envelope: bounded-queue backpressure, deadline admission/expiry, and
-//! Pareto-ladder degradation (routing-only — the fallback's own bits).
+//! served predictions against the golden `QuantEsn` evaluation, the QoS
+//! envelope (bounded-queue backpressure, deadline admission/expiry,
+//! Pareto-ladder degradation — routing-only, the fallback's own bits), and
+//! the fault-tolerance contract under the deterministic chaos harness
+//! (`FaultPlan`): panic-isolated batches, supervised restarts that keep
+//! serving bit-identically, the crash-loop breaker's quarantine + ladder
+//! spill, and typed resolution of every submitted receiver.
 
 use std::path::Path;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use rcx::coordinator::{
-    BackendConfig, BatcherConfig, Prediction, Rejected, ServeConfig, Server, VariantSpec,
+    BackendConfig, BatcherConfig, Prediction, Rejected, Response, ServeConfig, ServeResult,
+    Server, VariantSpec,
 };
 use rcx::data::generators::{henon_sized, melborn_sized};
 use rcx::data::Dataset;
 use rcx::esn::{EsnModel, Features, ReadoutSpec, Reservoir, ReservoirSpec};
 use rcx::quant::{QuantEsn, QuantSpec};
-use rcx::runtime::NativeConfig;
+use rcx::runtime::{FaultPlan, NativeConfig};
 
 fn native_cfg(max_batch: usize, workers: usize) -> ServeConfig {
     native_cfg_sharded(max_batch, workers, 1)
@@ -35,6 +41,15 @@ fn native_cfg_sharded(max_batch: usize, workers: usize, shards: usize) -> ServeC
         )
         .shards(shards)
         .build()
+}
+
+/// Unwrap a **served** response: the fault-tolerance contract says every
+/// submitted receiver resolves, and the call site expects a served `Ok` —
+/// not a typed rejection.
+fn recv_ok(rx: Receiver<ServeResult>, what: &str) -> Response {
+    rx.recv_timeout(Duration::from_secs(30))
+        .unwrap_or_else(|e| panic!("{what}: receiver never resolved: {e}"))
+        .unwrap_or_else(|r| panic!("{what}: {r}"))
 }
 
 fn classification_setup(workers: usize) -> (Server, Dataset, Vec<Arc<QuantEsn>>) {
@@ -67,7 +82,7 @@ fn serves_correct_predictions_for_all_requests() {
         pending.push((i, v, client.submit(&handles[v], s.clone()).unwrap()));
     }
     for (i, v, rx) in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        let resp = recv_ok(rx, "response lost");
         let expect = models[v].classify(&data.test[i]);
         assert_eq!(resp.prediction, Prediction::Class(expect), "sample {i} variant {v}");
         assert_eq!(resp.served_by.as_ref(), handles[v].key(), "served_by must name the variant");
@@ -91,7 +106,7 @@ fn native_serving_is_bit_identical_to_golden_evaluate() {
         data.test.iter().map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     let mut correct = 0usize;
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        let resp = recv_ok(rx, "response lost");
         if resp.prediction == Prediction::Class(data.test[i].label.unwrap()) {
             correct += 1;
         }
@@ -110,7 +125,7 @@ fn forced_flush_deadline_answers_partial_batches() {
     let pending: Vec<_> =
         data.test.iter().take(3).map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
+        let resp = recv_ok(rx, "deadline flush missing");
         assert!(resp.batch_size <= 3, "impossible batch size {}", resp.batch_size);
     }
     let snap = server.metrics();
@@ -143,7 +158,7 @@ fn regression_serving_end_to_end() {
         (0..reps).map(|_| client.submit(&h, sample.clone()).unwrap()).collect();
     let want = qm.predict(&sample);
     for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        let resp = recv_ok(rx, "regression response lost");
         let Prediction::Values(rows) = resp.prediction else {
             panic!("regression served a class prediction")
         };
@@ -168,19 +183,24 @@ fn regression_serving_end_to_end() {
 }
 
 /// The deprecated index-based shim: in-range indices still serve through the
-/// QoS path; an out-of-range index keeps the legacy semantics — the shard's
-/// ingest rejects it alone (now *counted*, no longer a silent drop) without
-/// killing the server.
+/// QoS path; an out-of-range index is rejected alone by the shard's ingest —
+/// counted, and (since the fault-tolerance contract) answered with a *typed*
+/// `Rejected::Internal` instead of a dropped channel — without killing the
+/// server.
 #[test]
 #[allow(deprecated)]
 fn deprecated_index_shim_serves_and_counts_unknown_variants() {
     let (server, data, models) = classification_setup(1);
     let client = server.client();
     let bad = client.submit_index(99, data.test[0].clone()).unwrap();
-    assert!(bad.recv_timeout(Duration::from_secs(5)).is_err(), "bad variant must be rejected");
+    let got = bad.recv_timeout(Duration::from_secs(10)).expect("bad-variant receiver must resolve");
+    assert!(
+        matches!(got, Err(Rejected::Internal)),
+        "bad variant must be answered with a typed rejection, got {got:?}"
+    );
     // ...while the server keeps serving well-behaved clients.
     let ok = client.submit_index(0, data.test[0].clone()).unwrap();
-    let resp = ok.recv_timeout(Duration::from_secs(10)).expect("response lost");
+    let resp = recv_ok(ok, "response lost");
     assert_eq!(resp.prediction, Prediction::Class(models[0].classify(&data.test[0])));
     let report = server.shutdown().unwrap();
     assert_eq!(report.metrics.rejected_unknown_variant, 1, "unknown variant must be counted");
@@ -248,9 +268,7 @@ fn sharded_serving_is_bit_identical_to_single_executor() {
             .collect();
         let out: Vec<Prediction> = pending
             .into_iter()
-            .map(|rx| {
-                rx.recv_timeout(Duration::from_secs(30)).expect("response lost").prediction
-            })
+            .map(|rx| recv_ok(rx, "response lost").prediction)
             .collect();
         let snap = server.metrics();
         assert_eq!(snap.requests, data.test.len() as u64, "shards={shards}");
@@ -300,7 +318,7 @@ fn sharded_deadline_flush_answers_partial_batches() {
         pending.push((i % 2, i, client.submit(&handles[i % 2], s.clone()).unwrap()));
     }
     for (v, i, rx) in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("deadline flush missing");
+        let resp = recv_ok(rx, "deadline flush missing");
         assert!(resp.batch_size <= 3, "impossible batch size {}", resp.batch_size);
         let expect = models[v].classify(&data.test[i]);
         assert_eq!(resp.prediction, Prediction::Class(expect), "sample {i} variant {v}");
@@ -344,8 +362,8 @@ fn compacted_variant_serves_bit_identical_responses_with_fewer_macs() {
         .map(|s| (client.submit(&hz, s.clone()).unwrap(), client.submit(&hc, s.clone()).unwrap()))
         .collect();
     for (i, (rz, rc)) in pending.into_iter().enumerate() {
-        let pz = rz.recv_timeout(Duration::from_secs(30)).expect("zeroed response lost");
-        let pc = rc.recv_timeout(Duration::from_secs(30)).expect("compacted response lost");
+        let pz = recv_ok(rz, "zeroed response lost");
+        let pc = recv_ok(rc, "compacted response lost");
         assert_eq!(pz.prediction, pc.prediction, "sample {i}: compacted serving diverged");
     }
 
@@ -396,8 +414,8 @@ fn prepared_plan_serving_matches_scalar_golden_model() {
         .map(|s| (client.submit(&hf, s.clone()).unwrap(), client.submit(&hp, s.clone()).unwrap()))
         .collect();
     for (i, (rf, rp)) in pending.into_iter().enumerate() {
-        let pf = rf.recv_timeout(Duration::from_secs(30)).expect("full response lost");
-        let pp = rp.recv_timeout(Duration::from_secs(30)).expect("pruned response lost");
+        let pf = recv_ok(rf, "full response lost");
+        let pp = recv_ok(rp, "pruned response lost");
         assert_eq!(
             pf.prediction,
             Prediction::Class(qm.classify(&data.test[i])),
@@ -447,7 +465,7 @@ fn overload_rejects_at_queue_cap_with_typed_errors() {
     assert_eq!(rejected, 5);
     let report = server.shutdown().unwrap();
     for rx in admitted {
-        rx.recv_timeout(Duration::from_secs(10)).expect("admitted request must still be served");
+        recv_ok(rx, "admitted request must still be served");
     }
     assert_eq!(report.metrics.requests, 8);
     assert_eq!(report.metrics.rejected_full, 5);
@@ -460,7 +478,8 @@ fn overload_rejects_at_queue_cap_with_typed_errors() {
 /// Deadline QoS, both edges: an already-expired deadline is refused at
 /// submit (no queue space wasted), and an admitted request whose deadline
 /// passes while queued is dropped at flush time *before* the backend pass —
-/// counted as expired, its sender closed — while live requests are served.
+/// counted as expired and answered with a typed `Rejected::Deadline` —
+/// while live requests are served.
 #[test]
 fn expired_requests_drop_before_the_backend_pass() {
     let data = melborn_sized(7, 40, 20);
@@ -495,12 +514,13 @@ fn expired_requests_drop_before_the_backend_pass() {
     let rx_live = client.submit(&h, sample.clone()).unwrap();
     let rx_dead = client.submit_within(&h, sample.clone(), Duration::from_millis(25)).unwrap();
     let rx_slack = client.submit_within(&h, sample.clone(), Duration::from_secs(10)).unwrap();
+    let dead = rx_dead.recv_timeout(Duration::from_secs(10)).expect("expired must resolve typed");
     assert!(
-        rx_dead.recv_timeout(Duration::from_secs(10)).is_err(),
-        "expired request must be dropped, not served late"
+        matches!(dead, Err(Rejected::Deadline)),
+        "expired request must be answered Deadline, not served late: {dead:?}"
     );
-    rx_live.recv_timeout(Duration::from_secs(10)).expect("deadline-free request must be served");
-    rx_slack.recv_timeout(Duration::from_secs(10)).expect("far-deadline request must be served");
+    recv_ok(rx_live, "deadline-free request must be served");
+    recv_ok(rx_slack, "far-deadline request must be served");
     let report = server.shutdown().unwrap();
     assert_eq!(report.metrics.expired, 1);
     assert_eq!(report.metrics.rejected_deadline, 1);
@@ -553,9 +573,9 @@ fn degraded_requests_spill_to_fallback_bit_identically() {
     let r3 = client.submit(&hf, sample.clone()).unwrap(); // direct-to-fallback control
     let report = server.shutdown().unwrap();
 
-    let p1 = r1.recv_timeout(Duration::from_secs(10)).expect("primary response lost");
-    let p2 = r2.recv_timeout(Duration::from_secs(10)).expect("degraded response lost");
-    let p3 = r3.recv_timeout(Duration::from_secs(10)).expect("direct fallback response lost");
+    let p1 = recv_ok(r1, "primary response lost");
+    let p2 = recv_ok(r2, "degraded response lost");
+    let p3 = recv_ok(r3, "direct fallback response lost");
     // Labels: the response reports who actually served it.
     assert_eq!(p1.served_by.as_ref(), "q6_p0");
     assert_eq!(p2.served_by.as_ref(), "q6_p75", "spilled request must be labeled degraded");
@@ -618,8 +638,272 @@ fn graceful_shutdown_drains_queue() {
     server.shutdown().unwrap();
     // Every already-submitted request must still be answered.
     for rx in pending {
-        rx.recv_timeout(Duration::from_secs(5)).expect("request dropped at shutdown");
+        recv_ok(rx, "request dropped at shutdown");
     }
+}
+
+/// Tentpole anchor: a scripted mid-run panic kills exactly one batch — every
+/// request in it resolves with a typed `Rejected::Internal` — the supervisor
+/// rebuilds the engine, and continued service is **bit-identical** to the
+/// golden model, with exact restart/reject accounting.
+#[test]
+fn chaos_panic_restarts_executor_and_serves_bit_identically() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let plan = FaultPlan::parse("panic@1").unwrap();
+    // max_batch 4 on both the backend and the batcher, max_wait 30s: only a
+    // full wave of 4 submits can flush, so the panicked batch membership —
+    // and with it every counter below — is deterministic.
+    let cfg = ServeConfig::builder()
+        .backend(
+            BackendConfig::Native(NativeConfig { max_batch: 4, workers: 1, ..Default::default() })
+                .with_chaos(plan.clone()),
+        )
+        .batcher(BatcherConfig::builder().max_batch(4).max_wait(Duration::from_secs(30)).build())
+        .restart_backoff(Duration::from_millis(1))
+        .build();
+    let server = Server::start(cfg, vec![VariantSpec::new("q6", qm.clone())]).unwrap();
+    let client = server.client();
+    let h = server.handle("q6").unwrap();
+
+    // Wave 1 flushes into the scripted panic: all four must resolve typed.
+    let wave1: Vec<_> =
+        (0..4).map(|_| client.submit(&h, data.test[0].clone()).unwrap()).collect();
+    for rx in wave1 {
+        let got = rx.recv_timeout(Duration::from_secs(10)).expect("panicked batch must resolve");
+        assert!(matches!(got, Err(Rejected::Internal)), "expected typed Internal, got {got:?}");
+    }
+    assert_eq!(plan.panics_fired(), 1);
+
+    // Wave 2 rides the rebuilt engine: served, and the fallen tree makes the
+    // same sound — bit-identical to the scalar golden model.
+    let wave2: Vec<_> =
+        (0..4).map(|i| (i, client.submit(&h, data.test[i].clone()).unwrap())).collect();
+    for (i, rx) in wave2 {
+        let resp = recv_ok(rx, "post-restart response lost");
+        assert_eq!(
+            resp.prediction,
+            Prediction::Class(qm.classify(&data.test[i])),
+            "sample {i} diverged after the supervised restart"
+        );
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.restarts, 1, "exactly one supervised restart");
+    assert_eq!(report.metrics.rejected_internal, 4, "exactly the panicked batch rejects");
+    assert_eq!(report.metrics.quarantined, 0);
+    assert_eq!(report.metrics.requests, 4, "only the served wave is billed");
+    assert!(report.quarantined_variants.is_empty());
+    assert_eq!(plan.batches_started(), 2, "one panicked pass + one served pass");
+}
+
+/// Crash-loop breaker: a variant whose engine dies on every pass burns its
+/// restart budget, gets quarantined, and — with degradation on — its traffic
+/// spills down the Pareto ladder to the healthy fallback, served with the
+/// fallback's own bits.
+#[test]
+fn chaos_crash_loop_quarantines_and_spills_down_the_ladder() {
+    use rcx::pruning::{prune_to_rate, Pruner, RandomPruner};
+
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let cheap = prune_to_rate(&qm, &RandomPruner::new(9).scores(&qm, &data.train), 75.0);
+    let sample = data.test[0].clone();
+
+    // Two shards: "prim" (shard 0) eats the first three passes — all
+    // scripted panics — while "cheap" (shard 1) stays idle and healthy.
+    // max_restarts 2: the third death inside the window trips the breaker.
+    let plan = FaultPlan::parse("panic@1,panic@2,panic@3").unwrap();
+    let cfg = ServeConfig::builder()
+        .backend(
+            BackendConfig::Native(NativeConfig { max_batch: 1, workers: 1, ..Default::default() })
+                .with_chaos(plan.clone()),
+        )
+        .batcher(BatcherConfig::builder().max_batch(1).max_wait(Duration::from_secs(30)).build())
+        .shards(2)
+        .queue_cap(8)
+        .degrade(true)
+        .degrade_at(4)
+        .max_restarts(2)
+        .restart_backoff(Duration::from_millis(1))
+        .build();
+    let server = Server::start(
+        cfg,
+        vec![
+            VariantSpec::new("prim", qm.clone()).with_fallback("cheap"),
+            VariantSpec::new("cheap", cheap.clone()),
+        ],
+    )
+    .unwrap();
+    let client = server.client();
+    let hp = server.handle("prim").unwrap();
+
+    // Three sequential submits, three engine deaths, three typed rejections.
+    for death in 1..=3u32 {
+        let rx = client.submit(&hp, sample.clone()).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(10)).expect("crashed batch must resolve");
+        assert!(matches!(got, Err(Rejected::Internal)), "death {death}: got {got:?}");
+    }
+    // The breaker trips on the supervisor thread moments after the third
+    // rejection is answered — poll the observable flag, bounded.
+    let t0 = Instant::now();
+    while server.quarantined_variants().is_empty() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "crash-loop breaker never tripped");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(server.quarantined_variants(), vec!["prim".to_string()]);
+
+    // Traffic for the quarantined primary now spills to the healthy ladder
+    // point and is served with the fallback's own bits.
+    let resp = recv_ok(client.submit(&hp, sample.clone()).unwrap(), "spilled response lost");
+    assert_eq!(resp.served_by.as_ref(), "cheap", "quarantined variant must spill");
+    assert_eq!(resp.prediction, Prediction::Class(cheap.classify(&sample)));
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.restarts, 2, "the restart budget, exactly");
+    assert_eq!(report.metrics.quarantined, 1);
+    assert_eq!(report.metrics.rejected_internal, 3);
+    assert_eq!(report.metrics.degraded, 1);
+    assert_eq!(report.metrics.requests, 1, "only the spilled request was served");
+    assert_eq!(report.quarantined_variants, vec!["prim".to_string()]);
+    assert_eq!(plan.panics_fired(), 3);
+}
+
+/// A scripted slow batch stalls the executor past a queued request's
+/// deadline: the victim is answered `Rejected::Deadline` at flush time,
+/// *before* any backend pass is paid for — its MACs never hit the meter.
+#[test]
+fn chaos_slow_batch_expires_queued_deadline_and_bills_zero_macs() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let sample = data.test[0].clone();
+
+    let plan = FaultPlan::parse("slow@1:300").unwrap();
+    let cfg = ServeConfig::builder()
+        .backend(
+            BackendConfig::Native(NativeConfig { max_batch: 1, workers: 1, ..Default::default() })
+                .with_chaos(plan.clone()),
+        )
+        .batcher(
+            BatcherConfig::builder()
+                .max_batch(1)
+                .max_wait(Duration::from_secs(30))
+                .deadline_slack(Duration::ZERO)
+                .build(),
+        )
+        .build();
+    let server = Server::start(cfg, vec![VariantSpec::new("q6", qm.clone())]).unwrap();
+    let client = server.client();
+    let h = server.handle("q6").unwrap();
+
+    // The deadline-free victim flushes immediately (max_batch 1) into the
+    // scripted 300 ms stall; once the stall is observably underway, queue a
+    // 40 ms-budget request behind it — it can only expire.
+    let rx_slow = client.submit(&h, sample.clone()).unwrap();
+    let t0 = Instant::now();
+    while plan.slows_fired() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "scripted slow batch never fired");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let rx_dead = client.submit_within(&h, sample.clone(), Duration::from_millis(40)).unwrap();
+
+    let resp = recv_ok(rx_slow, "slowed response lost");
+    assert_eq!(resp.prediction, Prediction::Class(qm.classify(&sample)), "slow is not wrong");
+    let dead = rx_dead.recv_timeout(Duration::from_secs(10)).expect("expired must resolve");
+    assert!(matches!(dead, Err(Rejected::Deadline)), "expected Deadline, got {dead:?}");
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.expired, 1);
+    assert_eq!(report.metrics.requests, 1, "the expired request never reached the backend");
+    assert_eq!(report.metrics.rejected_internal, 0);
+    assert_eq!(report.metrics.restarts, 0, "slow is not dead: no restart");
+    assert_eq!(plan.batches_started(), 1, "the expired request must not start a pass");
+    // Exact billing: the meter saw the served request's pass and nothing else.
+    let steps = sample.inputs.rows() as u64;
+    let billed = report.macs_by_variant.iter().find(|(k, _)| k == "q6").unwrap().1;
+    assert_eq!(billed, steps * qm.macs_per_step() as u64);
+}
+
+/// Regression (satellite): an engine death must also resolve requests that
+/// were *resident in other variants' queues* — typed, with their admission
+/// slots released so the post-restart incarnation admits fresh work.
+#[test]
+fn chaos_engine_death_drains_resident_queues_typed() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qa = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let qb = QuantEsn::from_model(&m, &data, QuantSpec::bits(4));
+    let sample = data.test[0].clone();
+
+    // One shard serves both variants. "b"'s lone request can never flush on
+    // its own (max_batch 2, max_wait 30 s) — it is resident when "a"'s full
+    // batch panics the engine.
+    let plan = FaultPlan::parse("panic@1").unwrap();
+    let cfg = ServeConfig::builder()
+        .backend(
+            BackendConfig::Native(NativeConfig { max_batch: 2, workers: 1, ..Default::default() })
+                .with_chaos(plan.clone()),
+        )
+        .batcher(BatcherConfig::builder().max_batch(2).max_wait(Duration::from_secs(30)).build())
+        .queue_cap(2)
+        .restart_backoff(Duration::from_millis(1))
+        .build();
+    let server = Server::start(
+        cfg,
+        vec![VariantSpec::new("a", qa.clone()), VariantSpec::new("b", qb.clone())],
+    )
+    .unwrap();
+    let client = server.client();
+    let ha = server.handle("a").unwrap();
+    let hb = server.handle("b").unwrap();
+
+    let rx_resident = client.submit(&hb, sample.clone()).unwrap();
+    let rx_a1 = client.submit(&ha, sample.clone()).unwrap();
+    let rx_a2 = client.submit(&ha, sample.clone()).unwrap();
+    for (who, rx) in [("a1", rx_a1), ("a2", rx_a2), ("resident b", rx_resident)] {
+        let got = rx.recv_timeout(Duration::from_secs(10)).expect("receiver must resolve");
+        assert!(matches!(got, Err(Rejected::Internal)), "{who}: got {got:?}");
+    }
+
+    // Both post-restart submits clear the cap-2 queue: the drain released
+    // the dead resident's admission slot (a leak would reject the second).
+    let wave: Vec<_> = (0..2).map(|_| client.submit(&hb, sample.clone()).unwrap()).collect();
+    for rx in wave {
+        let resp = recv_ok(rx, "post-restart response lost");
+        assert_eq!(resp.prediction, Prediction::Class(qb.classify(&sample)));
+    }
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.rejected_internal, 3, "panicked batch + drained resident");
+    assert_eq!(report.metrics.restarts, 1);
+    assert_eq!(report.metrics.quarantined, 0);
+    assert_eq!(report.metrics.requests, 2);
+}
+
+/// Integrity gate (satellite): a corrupted model — here an out-of-range
+/// quantized weight — is refused by `Server::start` with a diagnosis naming
+/// the variant, instead of being discovered by a panicking executor.
+#[test]
+fn corrupted_variant_is_refused_at_startup() {
+    let data = melborn_sized(7, 40, 20);
+    let res = Reservoir::init(ReservoirSpec::paper(20, 1, 100, 0.9, 1.0, 5));
+    let m = EsnModel::fit(res, &data, ReadoutSpec { lambda: 0.1, ..Default::default() });
+    let qm = QuantEsn::from_model(&m, &data, QuantSpec::bits(6));
+    let mut evil = qm.clone();
+    evil.w_r_values[0] = rcx::quant::qmax(6) + 5;
+    let err = Server::start(
+        native_cfg(8, 1),
+        vec![VariantSpec::new("good", qm), VariantSpec::new("evil", evil)],
+    );
+    assert!(err.is_err(), "corrupted variant must fail Server::start");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("evil") && msg.contains("corrupted"), "unexpected error: {msg}");
 }
 
 #[test]
@@ -675,7 +959,7 @@ fn pjrt_backend_serves_if_artifacts_present() {
     let pending: Vec<_> =
         data.test.iter().map(|s| client.submit(&h, s.clone()).unwrap()).collect();
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        let resp = recv_ok(rx, "response lost");
         assert_eq!(resp.prediction, Prediction::Class(q4.classify(&data.test[i])), "sample {i}");
     }
     server.shutdown().unwrap();

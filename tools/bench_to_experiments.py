@@ -15,16 +15,20 @@ Rust toolchain. This tool closes the loop:
   degraded accounting plus the queue high-water vs cap gate, the L3-i
   compacted-vs-zeroed CSR grid with the sequential-vs-parallel DSE
   wall-clock, the L3-k prepared sliced-ELL plan vs CSR-oracle head-to-head
-  with its static indirection/convert cost model, and the L3-l lane-batched
+  with its static indirection/convert cost model, the L3-l lane-batched
   readout vs per-lane gather oracle with its strided-load/alloc cost
-  model).
+  model, and the L3-m chaos-recovery drill — scripted panic, supervised
+  restart, typed-reject/restart accounting, recovery latency).
 
 `--dry-run` validates the artifact schema and the document markers, prints
 the rendered block, and writes nothing — CI runs this mode on the artifact
 it just produced, so a bench-section rename or table drift fails the build
 instead of silently orphaning the tables. Validation also enforces the two
 hard perf gates: the prepared readout path must report **0** strided
-readout loads and 0 hot-loop allocations (l3l_readout), and every SIMD
+readout loads and 0 hot-loop allocations (l3l_readout), the chaos drill
+must balance exactly — bit-identical continued service, every offered
+request answered or typed-rejected, restarts equal to scripted panics
+unless the breaker quarantined (l3m_faults) — and every SIMD
 tier a runner advertises in `tiers_available` must actually be exercised
 (`tiers_run`) — the full grid on L3-h, the best available tier on the
 auto-dispatched L3-k/L3-l sections. `--require-tier avx512` additionally
@@ -65,6 +69,11 @@ SCHEMA = {
     "l3l_readout": {
         "rows", "bit_identical", "strided_readout_loads_prepared",
         "tiers_available", "tiers_run",
+    },
+    "l3m_faults": {
+        "requests", "answered", "internal_rejected", "restarts",
+        "quarantined", "plan_panics", "plan_fails", "bit_identical",
+        "recovery_us",
     },
 }
 L3B_ROW_KEYS = {
@@ -233,6 +242,25 @@ def validate(bench, require_tier=None):
                 f"l3l_readout row {row}: oracle strided-load count must be "
                 "positive (n x lanes) — the cost model drifted"
             )
+    fl = bench["l3m_faults"]
+    if not fl["bit_identical"]:
+        fail("l3m_faults.bit_identical is false — the bench should have aborted")
+    if fl["answered"] + fl["internal_rejected"] != fl["requests"]:
+        fail(
+            "l3m_faults leaks requests: answered + internal_rejected "
+            f"({fl['answered']} + {fl['internal_rejected']}) != offered "
+            f"({fl['requests']}) — a submitted receiver dangled"
+        )
+    if fl["quarantined"] == 0 and fl["restarts"] != fl["plan_panics"]:
+        fail(
+            f"l3m_faults restarts ({fl['restarts']}) != scripted panics "
+            f"({fl['plan_panics']}) with no quarantine — supervision drifted"
+        )
+    if fl["quarantined"] > 0 and fl["restarts"] > fl["plan_panics"]:
+        fail(
+            f"l3m_faults restarts ({fl['restarts']}) exceed scripted panics "
+            f"({fl['plan_panics']}) — something restarted without a fault"
+        )
     check_tiers(bench, require_tier)
 
 
@@ -383,6 +411,16 @@ def render_block(bench):
         "loads per unit), bit-identical. SIMD tiers available "
         f"{rl['tiers_available']}; exercised: L3-h {bench['l3h_simd']['tiers_run']}, "
         f"L3-k {bench['l3k_prepared']['tiers_run']}, L3-l {rl['tiers_run']}."
+    )
+    fl = bench["l3m_faults"]
+    out.append("")
+    out.append(
+        f"Chaos recovery (L3-m): {fl['plan_panics']} scripted panic(s) over "
+        f"{fl['requests']} offered requests — {fl['answered']} served "
+        f"bit-identically, {fl['internal_rejected']} typed internal rejects, "
+        f"{fl['restarts']} supervised restart(s), {fl['quarantined']} "
+        f"quarantine(s); {fl['recovery_us']} us from resubmission to the "
+        "first served answer across the engine rebuild."
     )
     return "\n".join(out)
 
